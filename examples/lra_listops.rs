@@ -1,0 +1,77 @@
+//! LRA-analog example: train the small classifier on ListOps-lite with
+//! MRA-2 attention and report held-out accuracy (one row of the Table 5
+//! substitute; `mra lra --task all` runs every task x attention variant).
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example lra_listops -- --steps 120
+//! ```
+
+use anyhow::Result;
+
+use mra::cli::Args;
+use mra::data::lra::LraTask;
+use mra::runtime::{self, HostTensor};
+use mra::tensor::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let steps = args.usize_or("steps", 120)?;
+    let attn = args.str_or("attention", "mra2");
+    let artifacts = args.str_or("artifacts", "artifacts");
+
+    let (rt, manifest) = runtime::spawn(&artifacts)?;
+    let tag = format!("cls_{attn}_n128_d64_l2_h2_v64");
+    let batch = 32usize;
+    let seq = 128usize;
+    let train_name = format!("train_{tag}_b{batch}");
+    let eval_name = format!("eval_{tag}_b{batch}");
+    let mut params = manifest.load_f32(&format!("{tag}.params.f32"))?;
+    let n = params.len();
+    let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let task = LraTask::ListOps;
+    let mut rng = Rng::new(0);
+
+    println!("training {tag} on ListOps-lite for {steps} steps");
+    let mut first_loss = None;
+    let mut last_loss = 0.0f32;
+    for step in 0..steps {
+        let b = task.batch(batch, seq, &mut rng);
+        let inputs = vec![
+            HostTensor::F32(params, vec![n]),
+            HostTensor::F32(m, vec![n]),
+            HostTensor::F32(v, vec![n]),
+            HostTensor::scalar_f32(step as f32),
+            HostTensor::I32(b.input_ids, vec![batch, seq]),
+            HostTensor::I32(b.labels, vec![batch]),
+        ];
+        let mut out = rt.execute(&train_name, inputs)?;
+        let acc = out.pop().unwrap().as_f32()?[0];
+        let loss = out.pop().unwrap().as_f32()?[0];
+        v = out.pop().unwrap().as_f32()?.to_vec();
+        m = out.pop().unwrap().as_f32()?.to_vec();
+        params = out.pop().unwrap().as_f32()?.to_vec();
+        first_loss.get_or_insert(loss);
+        last_loss = loss;
+        if step % 20 == 0 {
+            println!("step {step:>4}  loss {loss:.3}  train-acc {acc:.3}");
+        }
+    }
+    assert!(last_loss < first_loss.unwrap(), "loss did not decrease");
+
+    let mut eval_rng = Rng::new(0xE7A1);
+    let mut acc_sum = 0.0;
+    for _ in 0..4 {
+        let b = task.batch(batch, seq, &mut eval_rng);
+        let inputs = vec![
+            HostTensor::F32(params.clone(), vec![n]),
+            HostTensor::I32(b.input_ids, vec![batch, seq]),
+            HostTensor::I32(b.labels, vec![batch]),
+        ];
+        let out = rt.execute(&eval_name, inputs)?;
+        acc_sum += out[1].as_f32()?[0];
+    }
+    println!("held-out accuracy: {:.3}", acc_sum / 4.0);
+    println!("lra_listops OK");
+    Ok(())
+}

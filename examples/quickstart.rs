@@ -1,0 +1,72 @@
+//! Quickstart: the three-layer stack end to end on one attention call.
+//!
+//! 1. loads the AOT Pallas MRA-2 attention artifact (L1/L2, built by
+//!    `make artifacts`) through the PJRT runtime,
+//! 2. runs it on random Q/K/V from Rust (L3),
+//! 3. cross-checks the numbers against (a) the exact-attention artifact and
+//!    (b) the native Rust MRA-2 implementation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use mra::mra::{mra2_attention, Variant};
+use mra::runtime::{HostTensor, Runtime};
+use mra::tensor::{ops, Mat, Rng};
+
+fn main() -> Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // shapes must match the compiled artifact: (1, 2, 256, 64)
+    let (h, n, d) = (2usize, 256usize, 64usize);
+    let mut rng = Rng::new(0);
+    let mk = |rng: &mut Rng| -> Vec<f32> { (0..h * n * d).map(|_| rng.normal() * 0.5).collect() };
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let dims = vec![1, h, n, d];
+    let inputs = vec![
+        HostTensor::F32(q.clone(), dims.clone()),
+        HostTensor::F32(k.clone(), dims.clone()),
+        HostTensor::F32(v.clone(), dims.clone()),
+    ];
+
+    // --- L1 Pallas MRA-2 kernel through PJRT --------------------------------
+    let z_mra = rt.execute("attn_mra2_n256_h2_d64", &inputs)?;
+    let z_mra = z_mra[0].as_f32()?.to_vec();
+    // --- exact attention artifact -------------------------------------------
+    let z_exact = rt.execute("attn_exact_n256_h2_d64", &inputs)?;
+    let z_exact = z_exact[0].as_f32()?.to_vec();
+
+    let rel = rel_err(&z_mra, &z_exact);
+    println!("MRA-2 artifact vs exact artifact: rel error {rel:.4}");
+    assert!(rel < 0.6, "approximation unexpectedly poor");
+
+    // --- cross-check against the native Rust MRA core (per head) -----------
+    let nb = n / 32;
+    let mut worst = 0.0f64;
+    for head in 0..h {
+        let base = head * n * d;
+        let qm = Mat::from_vec(n, d, q[base..base + n * d].to_vec());
+        let km = Mat::from_vec(n, d, k[base..base + n * d].to_vec());
+        let vm = Mat::from_vec(n, d, v[base..base + n * d].to_vec());
+        let z_native = mra2_attention(&qm, &km, &vm, 32, 4 * nb, Variant::Full);
+        let z_art = Mat::from_vec(n, d, z_mra[base..base + n * d].to_vec());
+        worst = worst.max(ops::rel_fro_error(&z_art, &z_native));
+    }
+    println!("Pallas artifact vs native Rust MRA-2: rel diff {worst:.5}");
+    assert!(worst < 5e-2, "kernel and native implementation disagree");
+    println!("quickstart OK");
+    Ok(())
+}
+
+fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += ((x - y) as f64).powi(2);
+        den += (*y as f64).powi(2);
+    }
+    (num / den).sqrt()
+}

@@ -1,0 +1,76 @@
+//! Serving demo: start the coordinator (batcher -> bucket router -> PJRT
+//! worker) over the MRA-2 MLM model and fire concurrent requests, printing
+//! latency/throughput — the serving-paper shape of the evaluation.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example serve_batch -- --requests 64 --clients 4
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use mra::cli::Args;
+use mra::config::ServeConfig;
+use mra::coordinator::Server;
+use mra::data::{Corpus, CorpusConfig};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let requests = args.usize_or("requests", 64)?;
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let model = args.str_or("model", "mlm_mra2_n128_d128_l2_h2_v512");
+
+    let (rt, manifest) = mra::runtime::spawn(&artifacts)?;
+    let cfg = ServeConfig {
+        model: model.clone(),
+        artifacts_dir: artifacts,
+        max_batch: args.usize_or("max-batch", 8)?,
+        flush_us: args.usize_or("flush-us", 2000)? as u64,
+        workers: 2,
+        queue_depth: 256,
+    };
+    let model_cfg = manifest.load_cfg(&model)?;
+    let seq_len: usize = model_cfg["seq_len"].parse()?;
+    let vocab: usize = model_cfg["vocab"].parse()?;
+    println!("serving {model} (seq_len {seq_len}) with max_batch {}", cfg.max_batch);
+    let server = Arc::new(Server::start(rt, manifest, cfg)?);
+
+    let t0 = std::time::Instant::now();
+    let per_client = requests / clients;
+    std::thread::scope(|s| {
+        for c in 0..clients as u64 {
+            let server = server.clone();
+            s.spawn(move || {
+                let mut corpus = Corpus::new(
+                    CorpusConfig { vocab, seq_len, ..Default::default() },
+                    100 + c,
+                );
+                for r in 0..per_client {
+                    let toks = corpus.sequence();
+                    match server.infer(toks.clone()) {
+                        Ok(resp) => {
+                            assert_eq!(resp.predictions.len(), toks.len());
+                        }
+                        Err(e) => eprintln!("client {c} req {r}: {e:#}"),
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", server.metrics.summary());
+    println!(
+        "throughput {:.1} req/s ({} requests / {:.2}s wall)",
+        (per_client * clients) as f64 / wall,
+        per_client * clients,
+        wall
+    );
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    println!("serve_batch OK");
+    Ok(())
+}

@@ -1,0 +1,227 @@
+"""AOT pipeline: lower jitted JAX entry points to HLO text artifacts.
+
+``python -m compile.aot --out ../artifacts`` writes, for every registered
+entry point:
+
+* ``<name>.hlo.txt``      — HLO **text** (the interchange format: jax >= 0.5
+  serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+  rejects; the text parser reassigns ids and round-trips cleanly),
+* ``<tag>.params.f32``    — raw little-endian f32 initial parameter vector,
+* ``<tag>.cfg``           — ``key=value`` model config sidecar,
+* ``manifest.tsv``        — one row per artifact: name, file, input
+  signature, output arity (parsed by ``rust/src/runtime/artifacts.rs``).
+
+Python runs exactly once (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclasses.dataclass
+class Entry:
+    """One AOT entry point: a jittable fn + example argument shapes."""
+
+    name: str
+    fn: Callable
+    args: Sequence[jax.ShapeDtypeStruct]
+    n_outputs: int
+    tag: str = ""          # model tag (links to .params.f32 / .cfg)
+
+    def signature(self) -> str:
+        return ",".join(
+            f"{a.dtype}:{'x'.join(str(s) for s in a.shape) or 'scalar'}"
+            for a in self.args
+        )
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# registry of model variants and entry points
+# ---------------------------------------------------------------------------
+
+ATTENTIONS = ("exact", "mra2", "mra2s")
+
+
+def small_cfg(attn: str, use_pallas: bool = False) -> M.ModelConfig:
+    """RoBERTa-small-analog used by train_mlm / serve examples."""
+    return M.ModelConfig(
+        vocab=512, seq_len=128, d_model=128, n_heads=2, n_layers=2,
+        d_ff=512, attention=attn, block=32, num_blocks=8,
+        use_pallas=use_pallas,
+    )
+
+
+def long_cfg(attn: str, use_pallas: bool = False) -> M.ModelConfig:
+    """Longer-sequence variant for the serving latency demo (Tab. 3/4)."""
+    return M.ModelConfig(
+        vocab=512, seq_len=512, d_model=128, n_heads=2, n_layers=2,
+        d_ff=512, attention=attn, block=32, num_blocks=48,
+        use_pallas=use_pallas,
+    )
+
+
+def cls_cfg(attn: str) -> M.ModelConfig:
+    """LRA-analog classifier config (ListOps-lite / retrieval / image)."""
+    return M.ModelConfig(
+        vocab=64, seq_len=128, d_model=64, n_heads=2, n_layers=2,
+        d_ff=256, num_classes=10, attention=attn, block=32, num_blocks=8,
+    )
+
+
+def build_entries(quick: bool = False) -> Tuple[List[Entry], dict]:
+    entries: List[Entry] = []
+    configs: dict = {}
+    i32 = jnp.int32
+
+    def add_model(cfg: M.ModelConfig, kind: str, batches_fwd, batch_train):
+        tag = f"{kind}_{cfg.tag()}"
+        configs[tag] = cfg
+        plen = M.param_count(cfg)
+        n = cfg.seq_len
+        if kind == "mlm":
+            if batch_train:
+                b = batch_train
+                entries.append(Entry(
+                    f"train_{tag}_b{b}", M.make_train_step_mlm(cfg),
+                    [_sds((plen,)), _sds((plen,)), _sds((plen,)), _sds(()),
+                     _sds((b, n), i32), _sds((b, n), i32), _sds((b, n))],
+                    5, tag))
+                entries.append(Entry(
+                    f"eval_{tag}_b{b}", M.make_eval_mlm(cfg),
+                    [_sds((plen,)), _sds((b, n), i32), _sds((b, n), i32),
+                     _sds((b, n))],
+                    2, tag))
+            # inference path: Pallas kernels on for the MRA variants
+            icfg = dataclasses.replace(cfg, use_pallas=cfg.attention != "exact")
+            for b in batches_fwd:
+                entries.append(Entry(
+                    f"fwd_{tag}_b{b}",
+                    lambda vec, ids, c=icfg: M.mlm_logits(c, vec, ids),
+                    [_sds((plen,)), _sds((b, n), i32)], 1, tag))
+        else:  # classifier
+            if batch_train:
+                b = batch_train
+                entries.append(Entry(
+                    f"train_{tag}_b{b}", M.make_train_step_cls(cfg),
+                    [_sds((plen,)), _sds((plen,)), _sds((plen,)), _sds(()),
+                     _sds((b, n), i32), _sds((b,), i32)],
+                    5, tag))
+                entries.append(Entry(
+                    f"eval_{tag}_b{b}", M.make_eval_cls(cfg),
+                    [_sds((plen,)), _sds((b, n), i32), _sds((b,), i32)],
+                    2, tag))
+            for b in batches_fwd:
+                entries.append(Entry(
+                    f"fwd_{tag}_b{b}",
+                    lambda vec, ids, c=cfg: M.cls_logits(c, vec, ids),
+                    [_sds((plen,)), _sds((b, n), i32)], 1, tag))
+
+    # --- MLM models (Tables 1/2 analog; train_mlm example) ----------------
+    attns = ("exact", "mra2") if quick else ATTENTIONS
+    for attn in attns:
+        add_model(small_cfg(attn), "mlm", batches_fwd=(1, 8), batch_train=32)
+
+    # --- longer-sequence serving models (Tables 3/4 analog) ---------------
+    if not quick:
+        for attn in ("exact", "mra2", "mra2s"):
+            add_model(long_cfg(attn), "mlm", batches_fwd=(1, 4),
+                      batch_train=8)
+
+    # --- LRA-analog classifiers (Table 5) ----------------------------------
+    if not quick:
+        for attn in ATTENTIONS:
+            add_model(cls_cfg(attn), "cls", batches_fwd=(8,), batch_train=32)
+
+    # --- attention-only microbench artifacts (Fig. 4 / Tab. 7 e2e check) ---
+    h, dh = 2, 64
+    for attn in attns:
+        for n in (256,) if quick else (256, 512):
+            nb = n // 32
+            acfg = M.ModelConfig(
+                seq_len=n, attention=attn, block=32, num_blocks=4 * nb,
+                use_pallas=attn != "exact",
+            )
+            entries.append(Entry(
+                f"attn_{attn}_n{n}_h{h}_d{dh}",
+                M.make_attention_only(acfg),
+                [_sds((1, h, n, dh))] * 3, 1, ""))
+
+    return entries, configs
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def write_artifacts(out_dir: str, quick: bool = False,
+                    only: str = "") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    entries, configs = build_entries(quick)
+    manifest_rows = []
+
+    for tag, cfg in sorted(configs.items()):
+        vec = M.init_params(cfg, seed=0)
+        pfile = f"{tag}.params.f32"
+        vec.astype("<f4").tofile(os.path.join(out_dir, pfile))
+        with open(os.path.join(out_dir, f"{tag}.cfg"), "w") as f:
+            for k, v in dataclasses.asdict(cfg).items():
+                f.write(f"{k}={v}\n")
+            f.write(f"param_count={len(vec)}\n")
+        print(f"[aot] params {tag}: {len(vec)} f32 -> {pfile}")
+
+    for e in entries:
+        if only and only not in e.name:
+            continue
+        lowered = jax.jit(e.fn).lower(*e.args)
+        text = to_hlo_text(lowered)
+        fname = f"{e.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_rows.append(
+            f"{e.name}\t{fname}\t{e.signature()}\t{e.n_outputs}\t{e.tag}")
+        print(f"[aot] hlo {e.name}: {len(text) / 1024:.0f} KiB")
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tfile\tinputs(dtype:shape,...)\tn_outputs\ttag\n")
+        f.write("\n".join(manifest_rows) + "\n")
+    print(f"[aot] wrote {len(manifest_rows)} artifacts to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small subset for fast iteration")
+    ap.add_argument("--only", default="",
+                    help="substring filter on entry names")
+    args = ap.parse_args()
+    write_artifacts(args.out, args.quick, args.only)
+
+
+if __name__ == "__main__":
+    main()

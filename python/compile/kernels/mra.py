@@ -1,0 +1,295 @@
+"""Layer-1 Pallas kernels for MRA-2 approximate self-attention.
+
+This module implements the paper's practical scheme (Sec. 4) for the
+two-scale pyramid ``R = {b, 1}`` used by **MRA-2** and **MRA-2-s**:
+
+1. ``pool``          — Eq. (7): average-pool Q/K/V rows into the pyramid.
+2. ``lowres_scores`` — block-mean score matrix ``S = Q~ K~^T / sqrt(d)``
+                       whose exponential is the Jensen bound mu (Eq. 6).
+3. ``block_scores``  — exact ``b x b`` score tiles for the selected blocks
+                       (the scale-1 refinement of Alg. 1).
+4. ``block_attn``    — stabilized ``exp`` + value aggregation per selected
+                       block (the high-resolution half of Alg. 2).
+
+The data-dependent parts (``top_k`` selection, gathers, segment reductions)
+live between kernels as plain jnp/lax ops: on a real TPU they would be
+expressed through the BlockSpec index map (scalar prefetch), but they are
+memory movement, not FLOPs, and XLA lowers them natively.
+
+TPU adaptation (DESIGN.md §4): each kernel instance works on ``b x d`` tiles
+staged HBM->VMEM by its BlockSpec; the ``b x d @ d x b`` products are MXU
+shaped.  ``interpret=True`` everywhere — the CPU PJRT plugin cannot execute
+Mosaic custom calls, so interpret mode is the correctness (and AOT) path.
+
+All kernels are single-head; use :func:`mra2_attention` for batched
+multi-head inputs (vmapped).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT: Mosaic custom-calls are not executable.
+
+# A large additive boost that forces diagonal blocks to the front of the
+# top-k selection (Alg. 1's "initial J prespecified via priors").
+_DIAG_BOOST = 1e9
+
+
+# ---------------------------------------------------------------------------
+# kernel 1: pyramid pooling (Eq. 7)
+# ---------------------------------------------------------------------------
+
+def _pool_kernel(x_ref, o_ref, *, inv_b):
+    # x_ref: (b, d) tile; o_ref: (1, d).  Mean over the block's rows.
+    o_ref[...] = jnp.sum(x_ref[...], axis=0, keepdims=True) * inv_b
+
+
+def pool(x: jax.Array, b: int) -> jax.Array:
+    """Average-pool rows: ``(n, d) -> (n/b, d)`` (Pallas kernel)."""
+    n, d = x.shape
+    assert n % b == 0, f"block size {b} must divide n={n}"
+    nb = n // b
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, inv_b=1.0 / b),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((b, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, d), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# kernel 2: low-resolution scores  S[x, y] = q~_x . k~_y / sqrt(d)
+# ---------------------------------------------------------------------------
+
+def _scores_kernel(qt_ref, kt_ref, o_ref, *, scale):
+    # qt_ref: (tb, d); kt_ref: (nb, d); o_ref: (tb, nb).
+    o_ref[...] = jnp.dot(
+        qt_ref[...], kt_ref[...].T, preferred_element_type=jnp.float32
+    ) * scale
+
+
+def lowres_scores(qt: jax.Array, kt: jax.Array, tile: int = 0) -> jax.Array:
+    """``(nb, d) x (nb, d) -> (nb, nb)`` block-mean score matrix (Pallas)."""
+    nb, d = qt.shape
+    tile = tile or nb  # one MXU tile is plenty at bench sizes
+    assert nb % tile == 0
+    scale = 1.0 / math.sqrt(d)
+    return pl.pallas_call(
+        functools.partial(_scores_kernel, scale=scale),
+        grid=(nb // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((nb, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, nb), jnp.float32),
+        interpret=INTERPRET,
+    )(qt, kt)
+
+
+# ---------------------------------------------------------------------------
+# kernel 3: exact scores for the selected blocks
+# ---------------------------------------------------------------------------
+
+def _block_scores_kernel(qb_ref, kb_ref, o_ref, *, scale):
+    # qb_ref/kb_ref: (1, b, d); o_ref: (1, b, b).
+    o_ref[0] = jnp.dot(
+        qb_ref[0], kb_ref[0].T, preferred_element_type=jnp.float32
+    ) * scale
+
+
+def block_scores(qb: jax.Array, kb: jax.Array) -> jax.Array:
+    """Exact ``P`` tiles for gathered blocks: ``(m,b,d),(m,b,d)->(m,b,b)``."""
+    m, b, d = qb.shape
+    scale = 1.0 / math.sqrt(d)
+    return pl.pallas_call(
+        functools.partial(_block_scores_kernel, scale=scale),
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, b, b), jnp.float32),
+        interpret=INTERPRET,
+    )(qb, kb)
+
+
+# ---------------------------------------------------------------------------
+# kernel 4: stabilized exp + per-block value aggregation
+# ---------------------------------------------------------------------------
+
+def _block_attn_kernel(p_ref, vb_ref, mx_ref, num_ref, den_ref):
+    # p_ref: (1, b, b); vb_ref: (1, b, d); mx_ref: (1, 1) per-block max shift.
+    a = jnp.exp(p_ref[0] - mx_ref[0, 0])                     # (b, b)
+    num_ref[0] = jnp.dot(a, vb_ref[0], preferred_element_type=jnp.float32)
+    den_ref[0] = jnp.sum(a, axis=-1)
+
+
+def block_attn(p_hi: jax.Array, vb: jax.Array, mx: jax.Array):
+    """Per-block ``exp(P - mx)`` numerator/denominator.
+
+    ``p_hi (m,b,b)``, ``vb (m,b,d)``, ``mx (m,)`` -> ``num (m,b,d)``,
+    ``den (m,b)``.
+    """
+    m, b, _ = p_hi.shape
+    d = vb.shape[-1]
+    return pl.pallas_call(
+        _block_attn_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, b, d), jnp.float32),
+            jax.ShapeDtypeStruct((m, b), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(p_hi, vb, mx.reshape(m, 1))
+
+
+# ---------------------------------------------------------------------------
+# full MRA-2 head: Alg. 1 (two scales) + Alg. 2
+# ---------------------------------------------------------------------------
+
+def mra2_attention_head(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block: int = 32,
+    num_blocks: int = 0,
+    variant: str = "full",
+    use_pallas: bool = True,
+) -> jax.Array:
+    """MRA-2 (``variant='full'``) / MRA-2-s (``'sparse'``) for one head.
+
+    ``num_blocks`` is the Alg.-1 budget ``m_1`` (count of ``block x block``
+    regions refined to exact resolution); 0 means ``4 * n/block`` (the
+    paper's linear-budget regime ``O(m_1 n)``).  Differentiable when
+    ``use_pallas=False`` — training artifacts use the jnp path, inference
+    artifacts the Pallas path; both are validated equal in pytest.
+    """
+    n, d = q.shape
+    b = block
+    assert n % b == 0, f"block {b} must divide n={n}"
+    nb = n // b
+    m = num_blocks or 4 * nb
+    m = min(m, nb * nb)
+    q32 = q.astype(jnp.float32)
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+
+    if use_pallas:
+        qt, kt, vt = pool(q32, b), pool(k32, b), pool(v32, b)
+        s_low = lowres_scores(qt, kt)
+    else:
+        qt = q32.reshape(nb, b, d).mean(axis=1)
+        kt = k32.reshape(nb, b, d).mean(axis=1)
+        vt = v32.reshape(nb, b, d).mean(axis=1)
+        s_low = qt @ kt.T / math.sqrt(d)
+
+    # --- Alg. 1: pick the m blocks with the largest mu (diagonal seeded) ---
+    # NOTE: argsort (HLO `sort`) instead of lax.top_k — jax lowers top_k to
+    # the `topk` HLO custom op whose text form xla_extension 0.5.1 cannot
+    # parse (the AOT interchange constraint, see DESIGN.md §3).
+    # Selection is non-differentiable (gradients flow through the gathered
+    # values, not the choice) — stop_gradient *before* the sort so the
+    # train-step lowering never needs sort's JVP.
+    prio = s_low + _DIAG_BOOST * jnp.eye(nb, dtype=s_low.dtype)
+    prio = lax.stop_gradient(prio)
+    idx = jnp.argsort(-prio.reshape(-1))[:m]
+    bx, by = idx // nb, idx % nb
+    sel = jnp.zeros((nb * nb,), jnp.bool_).at[idx].set(True).reshape(nb, nb)
+
+    # --- gather the selected Q/K/V row-blocks -----------------------------
+    qb = q32.reshape(nb, b, d)[bx]            # (m, b, d)
+    kb = k32.reshape(nb, b, d)[by]
+    vb = v32.reshape(nb, b, d)[by]
+
+    if use_pallas:
+        p_hi = block_scores(qb, kb)           # (m, b, b)
+    else:
+        p_hi = jnp.einsum("mbd,mcd->mbc", qb, kb) / math.sqrt(d)
+
+    # --- shared per-query-block max for a stable exp ----------------------
+    hi_max = jax.ops.segment_max(
+        p_hi.max(axis=(1, 2)), bx, num_segments=nb
+    )                                                        # (nb,)
+    if variant == "full":
+        low_max = jnp.where(sel, -jnp.inf, s_low).max(axis=1)
+        mb = jnp.maximum(hi_max, low_max)
+    else:
+        mb = hi_max                           # diagonal seeding => finite
+
+    # --- high-resolution half of Alg. 2 ------------------------------------
+    if use_pallas:
+        num_hi, den_hi = block_attn(p_hi, vb, mb[bx])
+    else:
+        a_hi = jnp.exp(p_hi - mb[bx][:, None, None])
+        num_hi = jnp.einsum("mbc,mcd->mbd", a_hi, vb)
+        den_hi = a_hi.sum(axis=-1)
+    y_hi = jax.ops.segment_sum(num_hi, bx, num_segments=nb)  # (nb, b, d)
+    d_hi = jax.ops.segment_sum(den_hi, bx, num_segments=nb)  # (nb, b)
+
+    # --- low-resolution half (MRA-2 only) ----------------------------------
+    if variant == "full":
+        a_low = jnp.where(sel, 0.0, jnp.exp(s_low - mb[:, None]))  # (nb, nb)
+        y_low = (a_low @ vt) * b                                   # (nb, d)
+        d_low = a_low.sum(axis=1) * b                              # (nb,)
+        num = y_hi + y_low[:, None, :]
+        den = d_hi + d_low[:, None]
+    else:
+        num, den = y_hi, d_hi
+
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    return out.reshape(n, d).astype(q.dtype)
+
+
+def mra2_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block: int = 32,
+    num_blocks: int = 0,
+    variant: str = "full",
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Batched multi-head MRA-2: ``(..., n, d)`` inputs, vmapped per head."""
+    fn = functools.partial(
+        mra2_attention_head,
+        block=block,
+        num_blocks=num_blocks,
+        variant=variant,
+        use_pallas=use_pallas,
+    )
+    if q.ndim == 2:
+        return fn(q, k, v)
+    flat_fn = fn
+    for _ in range(q.ndim - 2):
+        flat_fn = jax.vmap(flat_fn)
+    return flat_fn(q, k, v)
+
+
+def exact_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Standard softmax attention over the same batched layout (baseline)."""
+    d = q.shape[-1]
+    p = jnp.einsum("...nd,...md->...nm", q, k) / math.sqrt(d)
+    a = jax.nn.softmax(p, axis=-1)
+    return jnp.einsum("...nm,...md->...nd", a, v)

@@ -1,0 +1,233 @@
+"""Pure-jnp / numpy oracles for the MRA attention kernels.
+
+Everything in this module is *reference* code: it materializes the dense
+``n x n`` attention matrix and the dense MRA approximation ``A_hat`` exactly
+as defined in the paper (Eqs. 1-6, Alg. 1, Alg. 2), with no regard for
+efficiency.  The Pallas kernels in :mod:`compile.kernels.mra` and the Rust
+implementation in ``rust/src/mra/`` are both validated against these
+semantics.
+
+Conventions (used across the whole repository):
+
+* ``P = Q @ K.T / sqrt(d)``  (we keep the standard ``1/sqrt(d)`` scaling the
+  paper omits "for notational simplicity").
+* ``A = exp(P)`` unnormalized, ``Z = D^-1 A V`` with row-sum normalization.
+* block size ``b`` divides ``n``; block ``(x, y)`` covers rows
+  ``[x*b, (x+1)*b)`` and columns ``[y*b, (y+1)*b)``  (0-based, unlike the
+  paper's 1-based ``(sx-s, sx]``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# exact attention
+# ---------------------------------------------------------------------------
+
+def exact_attention(q, k, v):
+    """Standard softmax attention ``softmax(QK^T/sqrt(d)) V`` (single head)."""
+    d = q.shape[-1]
+    p = q @ k.T / np.sqrt(d)
+    a = jnp.exp(p - p.max(axis=-1, keepdims=True))
+    return a @ v / a.sum(axis=-1, keepdims=True)
+
+
+def exact_unnormalized(q, k, v):
+    """Return ``(A, AV)`` without softmax normalization (A = exp(P))."""
+    d = q.shape[-1]
+    p = q @ k.T / np.sqrt(d)
+    a = jnp.exp(p)
+    return a, a @ v
+
+
+# ---------------------------------------------------------------------------
+# pyramid pooling (Eq. 7)
+# ---------------------------------------------------------------------------
+
+def pool_rows(x, b):
+    """Average ``b`` consecutive rows: (n, d) -> (n/b, d)."""
+    n, d = x.shape
+    assert n % b == 0, f"block {b} must divide n={n}"
+    return x.reshape(n // b, b, d).mean(axis=1)
+
+
+def pyramid(x, scales):
+    """Return ``{s: pooled x at scale s}`` for every s in `scales` (1 = x)."""
+    return {s: pool_rows(x, s) for s in scales}
+
+
+# ---------------------------------------------------------------------------
+# block scores mu (Eq. 6): exp of block-mean of P
+# ---------------------------------------------------------------------------
+
+def block_mean_scores(q, k, b):
+    """(n/b, n/b) matrix of block means of P (the log of Eq. 6's mu)."""
+    d = q.shape[-1]
+    qt = pool_rows(q, b)
+    kt = pool_rows(k, b)
+    return qt @ kt.T / np.sqrt(d)
+
+
+def mu_lower_bound(q, k, b):
+    """Eq. 6: mu_{b,x,y} = exp(<B, P>/b^2) (Jensen lower bound of Eq. 4)."""
+    return jnp.exp(block_mean_scores(q, k, b))
+
+
+def mu_exact(q, k, b):
+    """Eq. 4: mu*_{b,x,y} = block mean of exp(P)."""
+    d = q.shape[-1]
+    n = q.shape[0]
+    p = q @ k.T / np.sqrt(d)
+    a = jnp.exp(p)
+    nb = n // b
+    return a.reshape(nb, b, nb, b).mean(axis=(1, 3))
+
+
+# ---------------------------------------------------------------------------
+# block selection (Alg. 1 for R = {b, 1}) — MRA-2 / MRA-2-s
+# ---------------------------------------------------------------------------
+
+def select_blocks(q, k, b, m, include_diagonal=True):
+    """Greedy Alg. 1 selection at two scales R = {b, 1}.
+
+    Returns a boolean (n/b, n/b) mask of the blocks refined to scale 1
+    (i.e. computed *exactly*), chosen as the ``m`` largest low-resolution
+    scores.  ``include_diagonal`` force-includes the diagonal blocks (the
+    "initial J prespecified via priors" input of Alg. 1 — the official
+    implementation seeds the diagonal so every query block has at least one
+    exact key block, which also guarantees a nonzero softmax denominator for
+    the sparse MRA-2-s variant).
+    """
+    s = np.asarray(block_mean_scores(q, k, b))
+    nb = s.shape[0]
+    m = int(min(m, nb * nb))
+    prio = s.copy()
+    if include_diagonal:
+        prio[np.arange(nb), np.arange(nb)] = np.inf
+    flat = prio.reshape(-1)
+    top = np.argsort(-flat, kind="stable")[:m]
+    mask = np.zeros(nb * nb, dtype=bool)
+    mask[top] = True
+    return mask.reshape(nb, nb)
+
+
+# ---------------------------------------------------------------------------
+# dense MRA-2 approximation (Eqs. 5/6 + Alg. 2 semantics, materialized)
+# ---------------------------------------------------------------------------
+
+def dense_mra2(q, k, v, b, m, variant="full", include_diagonal=True):
+    """Materialize ``A_hat`` for R = {b, 1} and return ``(A_hat, Z_hat)``.
+
+    ``variant='full'`` is MRA-2: exact entries inside selected blocks and the
+    low-resolution constant ``mu_{b,x,y}`` elsewhere.  ``variant='sparse'``
+    is MRA-2-s: only the selected blocks (block-sparse exact attention).
+    ``Z_hat`` is row-normalized: ``D_hat^-1 A_hat V``.
+    """
+    n, d = q.shape
+    nb = n // b
+    p = np.asarray(q @ k.T) / np.sqrt(d)
+    sel = select_blocks(q, k, b, m, include_diagonal)
+    mu = np.exp(np.asarray(block_mean_scores(q, k, b)))
+
+    a_hat = np.zeros((n, n), dtype=np.float64)
+    for x in range(nb):
+        for y in range(nb):
+            rs, cs = slice(x * b, (x + 1) * b), slice(y * b, (y + 1) * b)
+            if sel[x, y]:
+                a_hat[rs, cs] = np.exp(p[rs, cs])
+            elif variant == "full":
+                a_hat[rs, cs] = mu[x, y]
+    den = a_hat.sum(axis=-1, keepdims=True)
+    den = np.where(den == 0.0, 1.0, den)
+    z_hat = a_hat @ np.asarray(v) / den
+    return a_hat, z_hat
+
+
+# ---------------------------------------------------------------------------
+# general multi-scale reference (Alg. 1 + Alg. 2 for arbitrary R)
+# ---------------------------------------------------------------------------
+
+def dense_mra_general(q, k, v, scales, budgets, include_diagonal=True):
+    """Dense reference for the general pyramid R = ``scales`` (descending).
+
+    ``budgets[i]`` is ``m_{i+1}`` — how many scale-``scales[i]`` regions are
+    refined into scale ``scales[i+1]`` blocks (Alg. 1).  Returns
+    ``(A_hat, Z_hat)``.  Selection uses exp-of-mean scores (Eq. 6) at every
+    scale, exactly like Alg. 1.
+    """
+    n, d = q.shape
+    assert list(scales) == sorted(scales, reverse=True)
+    assert len(budgets) == len(scales) - 1
+    p = np.asarray(q @ k.T) / np.sqrt(d)
+
+    def mean_scores(s):
+        nb = n // s
+        return p.reshape(nb, s, nb, s).mean(axis=(1, 3))
+
+    s0 = scales[0]
+    a_hat = np.zeros((n, n), dtype=np.float64)
+    raw0 = mean_scores(s0)
+    prio0 = raw0.copy()
+    if include_diagonal and len(scales) > 1:
+        for i in range(n // s0):
+            prio0[i, i] = np.inf
+
+    # `cur` maps surviving block (x, y) at the current scale to its selection
+    # priority; `raw` holds its true mean score (for the final exp()).
+    cur = {(x, y): prio0[x, y] for x in range(n // s0) for y in range(n // s0)}
+    scale_of = scales[0]
+    for level in range(1, len(scales)):
+        s_prev, s_new = scales[level - 1], scales[level]
+        raw_prev = mean_scores(s_prev)
+        m = min(budgets[level - 1], len(cur))
+        ranked = sorted(cur.items(), key=lambda kv: -kv[1])
+        popped = [xy for xy, _ in ranked[:m]]
+        # blocks NOT refined stay in J at scale s_prev
+        for (x, y) in cur:
+            if (x, y) not in set(popped):
+                rs = slice(x * s_prev, (x + 1) * s_prev)
+                cs = slice(y * s_prev, (y + 1) * s_prev)
+                a_hat[rs, cs] = np.exp(raw_prev[x, y])
+        ratio = s_prev // s_new
+        raw_new = mean_scores(s_new)
+        cur = {}
+        for (x, y) in popped:
+            for dx in range(ratio):
+                for dy in range(ratio):
+                    nx, ny = x * ratio + dx, y * ratio + dy
+                    cur[(nx, ny)] = raw_new[nx, ny]
+        scale_of = s_new
+    # finest-level members of J
+    raw_fin = mean_scores(scale_of)
+    for (x, y) in cur:
+        rs = slice(x * scale_of, (x + 1) * scale_of)
+        cs = slice(y * scale_of, (y + 1) * scale_of)
+        a_hat[rs, cs] = np.exp(raw_fin[x, y])
+    den = a_hat.sum(axis=-1, keepdims=True)
+    den = np.where(den == 0.0, 1.0, den)
+    return a_hat, a_hat @ np.asarray(v) / den
+
+
+# ---------------------------------------------------------------------------
+# error metrics
+# ---------------------------------------------------------------------------
+
+def rel_fro_error(approx, exact):
+    """||approx - exact||_F / ||exact||_F (the paper's relative error)."""
+    approx = np.asarray(approx, dtype=np.float64)
+    exact = np.asarray(exact, dtype=np.float64)
+    return float(np.linalg.norm(approx - exact) / np.linalg.norm(exact))
+
+
+def attention_entropy(q, k):
+    """Mean softmax row entropy — the x-axis of Fig. 5 / Fig. 7 (right)."""
+    d = q.shape[-1]
+    p = np.asarray(q @ k.T) / np.sqrt(d)
+    p = p - p.max(axis=-1, keepdims=True)
+    a = np.exp(p)
+    a /= a.sum(axis=-1, keepdims=True)
+    ent = -(a * np.log(np.clip(a, 1e-30, None))).sum(axis=-1)
+    return float(ent.mean())

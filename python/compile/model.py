@@ -1,0 +1,296 @@
+"""Layer-2 JAX model: RoBERTa-style encoder with pluggable attention.
+
+This is the compute graph the paper plugs MRA attention into (Sec. 5):
+a pre-LN transformer encoder with a masked-language-modeling head and a
+sequence-classification head, plus an inlined Adam train step.  Everything
+here is **build-time only** — :mod:`compile.aot` lowers jitted entry points
+to HLO text and the Rust coordinator executes them; Python never appears on
+the request path.
+
+Parameter interchange: all parameters (and Adam moments) travel as a single
+flat ``f32`` vector with a deterministic layout given by
+:func:`param_specs`.  The Rust side treats the vector as opaque, which keeps
+the PJRT call arity constant regardless of model size.
+
+Attention variants (``ModelConfig.attention``):
+
+* ``"exact"``  — standard softmax attention (the Transformer baseline row).
+* ``"mra2"``   — MRA-2, two-scale pyramid ``R = {block, 1}`` (paper Sec. 5).
+* ``"mra2s"``  — MRA-2-s, the block-sparse variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import mra
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + attention hyperparameters (mirrors paper Tab. 8)."""
+
+    vocab: int = 512
+    seq_len: int = 128
+    d_model: int = 128
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 512
+    num_classes: int = 10
+    attention: str = "mra2"       # exact | mra2 | mra2s
+    block: int = 32               # MRA-2 uses R = {32, 1} (paper Sec. 5)
+    num_blocks: int = 0           # m_1 budget; 0 => 4 * n/block
+    use_pallas: bool = False      # Pallas fwd for inference artifacts
+    lr: float = 1e-3
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def tag(self) -> str:
+        return (
+            f"{self.attention}_n{self.seq_len}_d{self.d_model}"
+            f"_l{self.n_layers}_h{self.n_heads}_v{self.vocab}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# parameter layout
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list defining the flat-vector layout."""
+    d, f, v, n = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (n, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1.g", (d,)), (p + "ln1.b", (d,)),
+            (p + "wq", (d, d)), (p + "bq", (d,)),
+            (p + "wk", (d, d)), (p + "bk", (d,)),
+            (p + "wv", (d, d)), (p + "bv", (d,)),
+            (p + "wo", (d, d)), (p + "bo", (d,)),
+            (p + "ln2.g", (d,)), (p + "ln2.b", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+        ]
+    specs += [
+        ("ln_f.g", (d,)), ("ln_f.b", (d,)),
+        ("mlm.w", (d, v)), ("mlm.b", (v,)),
+        ("cls.w1", (d, d)), ("cls.b1", (d,)),
+        ("cls.w2", (d, cfg.num_classes)), ("cls.b2", (cfg.num_classes,)),
+    ]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Initialize the flat parameter vector (truncated-normal-ish / zeros)."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_specs(cfg):
+        if name.endswith((".b", ".b1", ".b2", "bq", "bk", "bv", "bo")) or \
+                name.endswith(("ln1.b", "ln2.b", "ln_f.b", "mlm.b")):
+            x = np.zeros(shape, np.float32)
+        elif ".g" in name:
+            x = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else int(np.prod(shape))
+            x = rng.normal(0.0, 1.0 / math.sqrt(fan_in), shape)
+        chunks.append(np.asarray(x, np.float32).reshape(-1))
+    return np.concatenate(chunks)
+
+
+def unpack(vec: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Flat f32 vector -> named parameter dict (static slicing)."""
+    out, off = {}, 0
+    for name, shape in param_specs(cfg):
+        size = int(np.prod(shape))
+        out[name] = vec[off:off + size].reshape(shape)
+        off += size
+    return out
+
+
+def pack(params: Dict[str, np.ndarray], cfg: ModelConfig) -> np.ndarray:
+    return np.concatenate(
+        [np.asarray(params[n], np.float32).reshape(-1)
+         for n, _ in param_specs(cfg)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# model blocks
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu(x):
+    # tanh approximation — identical across jax/rust substrates
+    return 0.5 * x * (1.0 + jnp.tanh(
+        math.sqrt(2.0 / math.pi) * (x + 0.044715 * x ** 3)))
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    """Dispatch on cfg.attention; q/k/v are (B, H, n, d_head)."""
+    if cfg.attention == "exact":
+        return mra.exact_attention(q, k, v)
+    variant = "full" if cfg.attention == "mra2" else "sparse"
+    return mra.mra2_attention(
+        q, k, v,
+        block=cfg.block,
+        num_blocks=cfg.num_blocks,
+        variant=variant,
+        use_pallas=cfg.use_pallas,
+    )
+
+
+def _mha(cfg: ModelConfig, p: Dict[str, jax.Array], prefix: str, x):
+    bsz, n, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def proj(w, b):
+        y = x @ p[prefix + w] + p[prefix + b]
+        return y.reshape(bsz, n, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = proj("wq", "bq"), proj("wk", "bk"), proj("wv", "bv")
+    o = _attention(cfg, q, k, v)                      # (B, H, n, dh)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, n, d)
+    return o @ p[prefix + "wo"] + p[prefix + "bo"]
+
+
+def encode(cfg: ModelConfig, p: Dict[str, jax.Array], ids: jax.Array):
+    """Token ids (B, n) -> hidden states (B, n, d_model)."""
+    x = p["tok_emb"][ids] + p["pos_emb"][None, :, :]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = layer_norm(x, p[pre + "ln1.g"], p[pre + "ln1.b"])
+        x = x + _mha(cfg, p, pre, h)
+        h = layer_norm(x, p[pre + "ln2.g"], p[pre + "ln2.b"])
+        h = gelu(h @ p[pre + "w1"] + p[pre + "b1"])
+        x = x + h @ p[pre + "w2"] + p[pre + "b2"]
+    return layer_norm(x, p["ln_f.g"], p["ln_f.b"])
+
+
+def mlm_logits(cfg: ModelConfig, vec: jax.Array, ids: jax.Array):
+    p = unpack(vec, cfg)
+    h = encode(cfg, p, ids)
+    return h @ p["mlm.w"] + p["mlm.b"]                # (B, n, vocab)
+
+
+def cls_logits(cfg: ModelConfig, vec: jax.Array, ids: jax.Array):
+    p = unpack(vec, cfg)
+    h = encode(cfg, p, ids).mean(axis=1)              # mean pool
+    h = jnp.tanh(h @ p["cls.w1"] + p["cls.b1"])
+    return h @ p["cls.w2"] + p["cls.b2"]              # (B, C)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def _weighted_ce(logits, labels, weights):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    wsum = jnp.maximum(weights.sum(), 1e-6)
+    loss = -(ll * weights).sum() / wsum
+    acc = ((logits.argmax(-1) == labels) * weights).sum() / wsum
+    return loss, acc
+
+
+def mlm_loss(cfg: ModelConfig, vec, ids, labels, weights):
+    """Masked-LM loss; `weights` is 1.0 at masked positions, else 0."""
+    return _weighted_ce(mlm_logits(cfg, vec, ids), labels, weights)
+
+
+def cls_loss(cfg: ModelConfig, vec, ids, labels):
+    logits = cls_logits(cfg, vec, ids)
+    w = jnp.ones(labels.shape, jnp.float32)
+    return _weighted_ce(logits, labels, w)
+
+
+# ---------------------------------------------------------------------------
+# Adam train steps (state = flat vectors, elementwise update)
+# ---------------------------------------------------------------------------
+
+def _adam(cfg: ModelConfig, vec, g, m, v, step):
+    b1, b2, eps, lr = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.lr
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** (step + 1))
+    vh = v / (1 - b2 ** (step + 1))
+    return vec - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def make_train_step_mlm(cfg: ModelConfig):
+    """(vec, m, v, step, ids, labels, weights) -> (vec', m', v', loss, acc)."""
+
+    def step_fn(vec, m, v, step, ids, labels, weights):
+        (loss, acc), g = jax.value_and_grad(
+            lambda w: mlm_loss(cfg, w, ids, labels, weights), has_aux=True
+        )(vec)
+        vec2, m2, v2 = _adam(cfg, vec, g, m, v, step)
+        return vec2, m2, v2, loss, acc
+
+    return step_fn
+
+
+def make_train_step_cls(cfg: ModelConfig):
+    """(vec, m, v, step, ids, labels) -> (vec', m', v', loss, acc)."""
+
+    def step_fn(vec, m, v, step, ids, labels):
+        (loss, acc), g = jax.value_and_grad(
+            lambda w: cls_loss(cfg, w, ids, labels), has_aux=True
+        )(vec)
+        vec2, m2, v2 = _adam(cfg, vec, g, m, v, step)
+        return vec2, m2, v2, loss, acc
+
+    return step_fn
+
+
+def make_eval_mlm(cfg: ModelConfig):
+    """(vec, ids, labels, weights) -> (loss, acc)."""
+
+    def eval_fn(vec, ids, labels, weights):
+        return mlm_loss(cfg, vec, ids, labels, weights)
+
+    return eval_fn
+
+
+def make_eval_cls(cfg: ModelConfig):
+    def eval_fn(vec, ids, labels):
+        return cls_loss(cfg, vec, ids, labels)
+
+    return eval_fn
+
+
+def make_attention_only(cfg: ModelConfig):
+    """(q, k, v) -> z for a (B, H, n, d_head) microbench artifact."""
+
+    def attn_fn(q, k, v):
+        return _attention(cfg, q, k, v)
+
+    return attn_fn

@@ -1,0 +1,88 @@
+"""AOT pipeline tests: HLO text emission, manifest format, params dump."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+
+def test_to_hlo_text_simple_fn():
+    fn = lambda x, y: (x @ y + 1.0,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_entry_signature_format():
+    e = aot.Entry(
+        "x", lambda a: a,
+        [jax.ShapeDtypeStruct((2, 3), jnp.int32),
+         jax.ShapeDtypeStruct((), jnp.float32)], 1)
+    assert e.signature() == "int32:2x3,float32:scalar"
+
+
+def test_build_entries_quick_contains_core_set():
+    entries, configs = aot.build_entries(quick=True)
+    names = {e.name for e in entries}
+    assert any(n.startswith("train_mlm_exact") for n in names)
+    assert any(n.startswith("train_mlm_mra2") for n in names)
+    assert any(n.startswith("fwd_mlm_mra2") for n in names)
+    assert any(n.startswith("attn_mra2") for n in names)
+    assert all(isinstance(c, M.ModelConfig) for c in configs.values())
+
+
+def test_build_entries_full_has_all_variants():
+    entries, configs = aot.build_entries(quick=False)
+    names = {e.name for e in entries}
+    for attn in ("exact", "mra2", "mra2s"):
+        assert any(f"mlm_{attn}_n128" in n and n.startswith("train_")
+                   for n in names), attn
+        assert any(f"cls_{attn}" in n and n.startswith("train_")
+                   for n in names), attn
+        assert any(n == f"attn_{attn}_n512_h2_d64" for n in names), attn
+    # long-sequence serving variants present
+    assert any("mlm_exact_n512" in n for n in names)
+    assert any("mlm_mra2_n512" in n for n in names)
+
+
+def test_write_artifacts_quick(tmp_path):
+    out = str(tmp_path / "artifacts")
+    aot.write_artifacts(out, quick=True, only="attn_exact_n256")
+    files = os.listdir(out)
+    assert "manifest.tsv" in files
+    assert "attn_exact_n256_h2_d64.hlo.txt" in files
+    # params + cfg sidecars are written for every registered model
+    assert any(f.endswith(".params.f32") for f in files)
+    assert any(f.endswith(".cfg") for f in files)
+    rows = [l for l in open(os.path.join(out, "manifest.tsv"))
+            if l.strip() and not l.startswith("#")]
+    assert len(rows) == 1
+    name, fname, sig, nout, tag = rows[0].rstrip("\n").split("\t")
+    assert name == "attn_exact_n256_h2_d64"
+    assert sig == ",".join(["float32:1x2x256x64"] * 3)
+    assert nout == "1"
+
+
+def test_params_dump_roundtrip(tmp_path):
+    out = str(tmp_path / "a")
+    aot.write_artifacts(out, quick=True, only="__none__")
+    cfg = aot.small_cfg("exact")
+    tag = f"mlm_{cfg.tag()}"
+    vec = np.fromfile(os.path.join(out, f"{tag}.params.f32"), "<f4")
+    assert vec.shape == (M.param_count(cfg),)
+    np.testing.assert_array_equal(vec, M.init_params(cfg, seed=0))
+    cfg_lines = dict(
+        l.strip().split("=", 1)
+        for l in open(os.path.join(out, f"{tag}.cfg")))
+    assert cfg_lines["attention"] == "exact"
+    assert int(cfg_lines["param_count"]) == len(vec)
+
+
+def test_cfg_tags_unique():
+    _, configs = aot.build_entries(quick=False)
+    assert len(configs) == len(set(configs))

@@ -1,0 +1,254 @@
+"""Pallas MRA kernels vs the dense oracle (`compile.kernels.ref`).
+
+This is the core L1 correctness signal: every kernel and the assembled
+MRA-2 / MRA-2-s attention are checked against the paper-literal dense
+construction, over hypothesis-swept shapes and budgets.
+"""
+
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mra, ref
+
+SET = dict(deadline=None, max_examples=15, print_blob=True)
+
+
+def rand_qkv(seed, n, d, scale=1.0):
+    rng = np.random.default_rng(seed)
+    q = (rng.normal(size=(n, d)) * scale).astype(np.float32)
+    k = (rng.normal(size=(n, d)) * scale).astype(np.float32)
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# individual kernels
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    n=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([8, 16, 64]),
+    b=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pool_kernel_matches_ref(n, d, b, seed):
+    if n % b:
+        return
+    x = np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+    got = np.asarray(mra.pool(jnp.array(x), b))
+    want = np.asarray(ref.pool_rows(x, b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SET)
+@given(
+    nb=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lowres_scores_kernel(nb, d, seed):
+    rng = np.random.default_rng(seed)
+    qt = rng.normal(size=(nb, d)).astype(np.float32)
+    kt = rng.normal(size=(nb, d)).astype(np.float32)
+    got = np.asarray(mra.lowres_scores(jnp.array(qt), jnp.array(kt)))
+    want = qt @ kt.T / math.sqrt(d)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SET)
+@given(
+    m=st.sampled_from([1, 3, 8]),
+    b=st.sampled_from([8, 32]),
+    d=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_scores_kernel(m, b, d, seed):
+    rng = np.random.default_rng(seed)
+    qb = rng.normal(size=(m, b, d)).astype(np.float32)
+    kb = rng.normal(size=(m, b, d)).astype(np.float32)
+    got = np.asarray(mra.block_scores(jnp.array(qb), jnp.array(kb)))
+    want = np.einsum("mbd,mcd->mbc", qb, kb) / math.sqrt(d)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SET)
+@given(
+    m=st.sampled_from([1, 4]),
+    b=st.sampled_from([8, 16]),
+    d=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_attn_kernel(m, b, d, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.normal(size=(m, b, b)).astype(np.float32)
+    vb = rng.normal(size=(m, b, d)).astype(np.float32)
+    mx = p.max(axis=(1, 2))
+    num, den = mra.block_attn(jnp.array(p), jnp.array(vb), jnp.array(mx))
+    a = np.exp(p - mx[:, None, None])
+    np.testing.assert_allclose(np.asarray(num),
+                               np.einsum("mbc,mcd->mbd", a, vb),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(den), a.sum(-1),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# assembled MRA-2 vs dense oracle
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    n=st.sampled_from([64, 128, 256]),
+    d=st.sampled_from([16, 32]),
+    b=st.sampled_from([16, 32]),
+    frac=st.sampled_from([0.2, 0.5, 1.0]),
+    variant=st.sampled_from(["full", "sparse"]),
+    use_pallas=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mra2_matches_dense_oracle(n, d, b, frac, variant, use_pallas, seed):
+    nb = n // b
+    m = max(1, int(frac * nb * nb))
+    q, k, v = rand_qkv(seed, n, d)
+    _, z_ref = ref.dense_mra2(q, k, v, b, m, variant)
+    z = mra.mra2_attention(
+        jnp.array(q), jnp.array(k), jnp.array(v),
+        block=b, num_blocks=m, variant=variant, use_pallas=use_pallas)
+    np.testing.assert_allclose(np.asarray(z), z_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_mra2_full_budget_is_exact():
+    """When every block is selected, MRA-2 == exact softmax attention."""
+    q, k, v = rand_qkv(7, 128, 32)
+    nb = 128 // 32
+    z = mra.mra2_attention(jnp.array(q), jnp.array(k), jnp.array(v),
+                           block=32, num_blocks=nb * nb)
+    ze = np.asarray(ref.exact_attention(q, k, v))
+    np.testing.assert_allclose(np.asarray(z), ze, rtol=1e-4, atol=1e-5)
+
+
+def test_mra2s_full_budget_is_exact():
+    q, k, v = rand_qkv(8, 64, 16)
+    z = mra.mra2_attention(jnp.array(q), jnp.array(k), jnp.array(v),
+                           block=16, num_blocks=16, variant="sparse")
+    ze = np.asarray(ref.exact_attention(q, k, v))
+    np.testing.assert_allclose(np.asarray(z), ze, rtol=1e-4, atol=1e-5)
+
+
+def test_batched_multihead_layout():
+    """(B, H, n, d) batching is a per-head map of the single-head kernel."""
+    rng = np.random.default_rng(3)
+    q = rng.normal(size=(2, 3, 64, 16)).astype(np.float32)
+    k = rng.normal(size=(2, 3, 64, 16)).astype(np.float32)
+    v = rng.normal(size=(2, 3, 64, 16)).astype(np.float32)
+    z = np.asarray(mra.mra2_attention(
+        jnp.array(q), jnp.array(k), jnp.array(v), block=16, num_blocks=6))
+    for i in range(2):
+        for h in range(3):
+            zi = np.asarray(mra.mra2_attention(
+                jnp.array(q[i, h]), jnp.array(k[i, h]), jnp.array(v[i, h]),
+                block=16, num_blocks=6))
+            np.testing.assert_allclose(z[i, h], zi, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# paper semantics on the oracle itself
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    n=st.sampled_from([32, 64]),
+    d=st.sampled_from([8, 16]),
+    b=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_jensen_bound_direction(n, d, b, seed):
+    """Lemma 4.1: mu (exp of mean) <= mu* (mean of exp), elementwise."""
+    q, k, _ = rand_qkv(seed, n, d)
+    mu = np.asarray(ref.mu_lower_bound(q, k, b))
+    mu_star = np.asarray(ref.mu_exact(q, k, b))
+    assert (mu <= mu_star * (1 + 1e-5)).all()
+
+
+@settings(**SET)
+@given(
+    n=st.sampled_from([32, 64]),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lemma41_error_bound(n, d, seed):
+    """0 <= mu* - mu <= C_r mu with r the measured in-block range of P."""
+    b = 16
+    q, k, _ = rand_qkv(seed, n, d)
+    p = q @ k.T / math.sqrt(d)
+    nb = n // b
+    mu = np.asarray(ref.mu_lower_bound(q, k, b))
+    mu_star = np.asarray(ref.mu_exact(q, k, b))
+    pb = p.reshape(nb, b, nb, b)
+    r = pb.max(axis=(1, 3)) - pb.min(axis=(1, 3))
+    c_r = 1 + np.exp(r) - 2 * np.exp(r / 2)
+    gap = mu_star - mu
+    assert (gap >= -1e-5 * mu).all()
+    assert (gap <= c_r * mu * (1 + 1e-4) + 1e-6).all()
+
+
+def test_general_reference_matches_two_scale():
+    """dense_mra_general with R={b,1} reproduces dense_mra2 selection."""
+    q, k, v = rand_qkv(11, 64, 16)
+    b, m = 16, 6
+    a2, z2 = ref.dense_mra2(q, k, v, b, m, "full")
+    ag, zg = ref.dense_mra_general(q, k, v, [b, 1], [m])
+    np.testing.assert_allclose(ag, a2, rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(zg, z2, rtol=1e-6, atol=1e-9)
+
+
+def test_general_reference_three_scales_runs():
+    """R={16,4,1} pyramid: A_hat rows partition into disjoint supports."""
+    q, k, v = rand_qkv(13, 64, 16)
+    a_hat, z = ref.dense_mra_general(q, k, v, [16, 4, 1], [4, 8])
+    assert a_hat.shape == (64, 64)
+    assert np.isfinite(z).all()
+    assert (a_hat >= 0).all()
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_error_monotone_in_budget(seed):
+    """Approximation error decreases (weakly) as the budget m grows."""
+    q, k, v = rand_qkv(seed, 128, 16)
+    _, av = ref.exact_unnormalized(q, k, v)
+    z_exact = np.asarray(ref.exact_attention(q, k, v))
+    errs = []
+    for m in (4, 8, 16, 32, 64):
+        _, z = ref.dense_mra2(q, k, v, 16, m, "full")
+        errs.append(ref.rel_fro_error(z, z_exact))
+    assert errs[-1] <= errs[0] + 1e-9
+    assert errs[-1] < 1e-5  # m = nb^2 = 64 is the full budget -> exact
+
+
+def test_prop45_bound_holds():
+    """Prop. 4.5 relative error bound on the unnormalized A_hat."""
+    q, k, v = rand_qkv(5, 64, 8, scale=0.5)
+    b, m = 16, 6
+    n = 64
+    d = 8
+    p = q @ k.T / math.sqrt(d)
+    a = np.exp(p)
+    a_hat, _ = ref.dense_mra2(q, k, v, b, m, "full", include_diagonal=False)
+    nb = n // b
+    mu = np.asarray(ref.mu_lower_bound(q, k, b))
+    sel = ref.select_blocks(q, k, b, m, include_diagonal=False)
+    delta = np.sort(mu.reshape(-1))[-m]
+    pb = p.reshape(nb, b, nb, b)
+    r = float((pb.max(axis=(1, 3)) - pb.min(axis=(1, 3))).max())
+    c2r = 1 + np.exp(2 * r) - 2 * np.exp(r)
+    bound = math.sqrt(
+        (n * n - m * b * b) * c2r * delta**2 / np.exp(2 * p).sum())
+    err = np.linalg.norm(a_hat - a) / np.linalg.norm(a)
+    assert err <= bound * (1 + 1e-6), (err, bound)

@@ -1,0 +1,203 @@
+"""L2 model tests: shapes, parameter packing, losses, Adam, training."""
+
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+def tiny_cfg(attention="mra2", **kw):
+    base = dict(vocab=64, seq_len=64, d_model=32, n_heads=2, n_layers=2,
+                d_ff=64, num_classes=4, attention=attention, block=16,
+                num_blocks=6)
+    base.update(kw)
+    return M.ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# parameter layout
+# ---------------------------------------------------------------------------
+
+def test_param_pack_unpack_roundtrip():
+    cfg = tiny_cfg()
+    vec = M.init_params(cfg, seed=1)
+    assert vec.shape == (M.param_count(cfg),)
+    params = M.unpack(jnp.array(vec), cfg)
+    assert set(params) == {n for n, _ in M.param_specs(cfg)}
+    back = M.pack({k: np.asarray(v) for k, v in params.items()}, cfg)
+    np.testing.assert_array_equal(back, vec)
+
+
+def test_param_specs_deterministic():
+    cfg = tiny_cfg()
+    assert M.param_specs(cfg) == M.param_specs(cfg)
+
+
+def test_layernorm_gain_init():
+    cfg = tiny_cfg()
+    p = M.unpack(jnp.array(M.init_params(cfg)), cfg)
+    np.testing.assert_array_equal(np.asarray(p["ln_f.g"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(p["ln_f.b"]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# forward shapes, all attention variants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("attn", ["exact", "mra2", "mra2s"])
+def test_mlm_logits_shape(attn):
+    cfg = tiny_cfg(attn)
+    vec = jnp.array(M.init_params(cfg))
+    ids = jnp.zeros((3, cfg.seq_len), jnp.int32)
+    logits = M.mlm_logits(cfg, vec, ids)
+    assert logits.shape == (3, cfg.seq_len, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("attn", ["exact", "mra2", "mra2s"])
+def test_cls_logits_shape(attn):
+    cfg = tiny_cfg(attn)
+    vec = jnp.array(M.init_params(cfg))
+    ids = jnp.zeros((5, cfg.seq_len), jnp.int32)
+    logits = M.cls_logits(cfg, vec, ids)
+    assert logits.shape == (5, cfg.num_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_mra2_close_to_exact_at_init():
+    """At init the attention matrices are diffuse; MRA-2 with a generous
+    budget should produce nearly the same encoder output as exact."""
+    cfg_e = tiny_cfg("exact")
+    nb = cfg_e.seq_len // cfg_e.block
+    cfg_m = tiny_cfg("mra2", num_blocks=nb * nb)
+    vec = jnp.array(M.init_params(cfg_e))
+    ids = jnp.arange(cfg_e.seq_len, dtype=jnp.int32)[None, :] % cfg_e.vocab
+    le = np.asarray(M.mlm_logits(cfg_e, vec, ids))
+    lm = np.asarray(M.mlm_logits(cfg_m, vec, ids))
+    np.testing.assert_allclose(le, lm, rtol=1e-3, atol=1e-3)
+
+
+def test_pallas_fwd_matches_jnp_fwd():
+    cfg_j = tiny_cfg("mra2", use_pallas=False)
+    cfg_p = tiny_cfg("mra2", use_pallas=True)
+    vec = jnp.array(M.init_params(cfg_j))
+    ids = (jnp.arange(2 * cfg_j.seq_len, dtype=jnp.int32)
+           .reshape(2, cfg_j.seq_len) % cfg_j.vocab)
+    lj = np.asarray(M.mlm_logits(cfg_j, vec, ids))
+    lp = np.asarray(M.mlm_logits(cfg_p, vec, ids))
+    np.testing.assert_allclose(lj, lp, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def test_mlm_loss_uniform_at_init_is_log_vocab():
+    cfg = tiny_cfg("exact")
+    # zero params except embeddings -> logits ~ const -> loss ~ log(vocab)
+    vec = jnp.array(M.init_params(cfg))
+    rng = np.random.default_rng(0)
+    ids = jnp.array(rng.integers(0, cfg.vocab, (2, cfg.seq_len)), jnp.int32)
+    labels = jnp.array(rng.integers(0, cfg.vocab, (2, cfg.seq_len)),
+                       jnp.int32)
+    w = jnp.ones((2, cfg.seq_len), jnp.float32)
+    loss, acc = M.mlm_loss(cfg, vec, ids, labels, w)
+    assert abs(float(loss) - math.log(cfg.vocab)) < 1.5
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_mlm_loss_respects_weights():
+    cfg = tiny_cfg("exact")
+    vec = jnp.array(M.init_params(cfg, seed=2))
+    rng = np.random.default_rng(1)
+    ids = jnp.array(rng.integers(0, cfg.vocab, (1, cfg.seq_len)), jnp.int32)
+    labels = ids
+    w0 = jnp.zeros((1, cfg.seq_len), jnp.float32).at[0, 0].set(1.0)
+    w1 = jnp.zeros((1, cfg.seq_len), jnp.float32).at[0, 1].set(1.0)
+    l0, _ = M.mlm_loss(cfg, vec, ids, labels, w0)
+    l1, _ = M.mlm_loss(cfg, vec, ids, labels, w1)
+    # different masked positions -> generally different losses
+    assert not np.isclose(float(l0), float(l1))
+
+
+# ---------------------------------------------------------------------------
+# Adam + training
+# ---------------------------------------------------------------------------
+
+def test_adam_matches_numpy_reference():
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(0)
+    n = 64
+    vec = rng.normal(size=n).astype(np.float32)
+    g = rng.normal(size=n).astype(np.float32)
+    m = rng.normal(size=n).astype(np.float32) * 0.1
+    v = np.abs(rng.normal(size=n)).astype(np.float32) * 0.1
+    step = 3.0
+    got_vec, got_m, got_v = M._adam(
+        cfg, jnp.array(vec), jnp.array(g), jnp.array(m), jnp.array(v),
+        jnp.float32(step))
+    b1, b2 = cfg.adam_b1, cfg.adam_b2
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    mh = m2 / (1 - b1 ** (step + 1))
+    vh = v2 / (1 - b2 ** (step + 1))
+    want = vec - cfg.lr * mh / (np.sqrt(vh) + cfg.adam_eps)
+    np.testing.assert_allclose(np.asarray(got_vec), want, rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_m), m2, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(got_v), v2, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("attn", ["exact", "mra2", "mra2s"])
+def test_train_step_decreases_loss(attn):
+    """A few MLM steps on a fixed batch must reduce the loss."""
+    cfg = tiny_cfg(attn, lr=5e-3)
+    step_fn = jax.jit(M.make_train_step_mlm(cfg))
+    vec = jnp.array(M.init_params(cfg, seed=0))
+    m = jnp.zeros_like(vec)
+    v = jnp.zeros_like(vec)
+    rng = np.random.default_rng(0)
+    ids = jnp.array(rng.integers(0, cfg.vocab, (4, cfg.seq_len)), jnp.int32)
+    labels = ids
+    w = jnp.array(rng.random((4, cfg.seq_len)) < 0.15, jnp.float32)
+    losses = []
+    for step in range(8):
+        vec, m, v, loss, acc = step_fn(vec, m, v, jnp.float32(step), ids,
+                                       labels, w)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    assert np.isfinite(losses).all()
+
+
+def test_train_step_cls_decreases_loss():
+    cfg = tiny_cfg("mra2", lr=5e-3)
+    step_fn = jax.jit(M.make_train_step_cls(cfg))
+    vec = jnp.array(M.init_params(cfg, seed=0))
+    m = jnp.zeros_like(vec)
+    v = jnp.zeros_like(vec)
+    rng = np.random.default_rng(0)
+    ids = jnp.array(rng.integers(0, cfg.vocab, (8, cfg.seq_len)), jnp.int32)
+    labels = jnp.array(rng.integers(0, cfg.num_classes, (8,)), jnp.int32)
+    losses = []
+    for step in range(8):
+        vec, m, v, loss, acc = step_fn(vec, m, v, jnp.float32(step), ids,
+                                       labels)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_eval_fn_matches_loss():
+    cfg = tiny_cfg("mra2")
+    vec = jnp.array(M.init_params(cfg, seed=0))
+    rng = np.random.default_rng(0)
+    ids = jnp.array(rng.integers(0, cfg.vocab, (2, cfg.seq_len)), jnp.int32)
+    labels = ids
+    w = jnp.ones((2, cfg.seq_len), jnp.float32)
+    l1, a1 = M.make_eval_mlm(cfg)(vec, ids, labels, w)
+    l2, a2 = M.mlm_loss(cfg, vec, ids, labels, w)
+    assert float(l1) == pytest.approx(float(l2))
+    assert float(a1) == pytest.approx(float(a2))

@@ -1,0 +1,73 @@
+//! End-to-end artifact benchmarks (Tables 1-4 time/mem columns analog):
+//! per-step latency of the AOT fwd / train executables for each attention
+//! variant and sequence length, through the real PJRT runtime.
+//!
+//! Skips gracefully when `artifacts/` has not been built.
+
+use mra::bench::{time_it, Table};
+use mra::runtime::{HostTensor, Runtime};
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping bench_e2e: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    println!("== Tables 1-4 analog: AOT executable latency (PJRT cpu) ==");
+
+    // --- attention-only microbench (Fig. 4's e2e cross-check) -------------
+    let mut table = Table::new(&["artifact", "mean-ms", "p95-ms"]);
+    for n in [256usize, 512] {
+        for attn in ["exact", "mra2", "mra2s"] {
+            let name = format!("attn_{attn}_n{n}_h2_d64");
+            if rt.manifest.get(&name).is_err() {
+                continue;
+            }
+            let elems = 2 * n * 64;
+            let x = vec![0.1f32; elems];
+            let dims = vec![1, 2, n, 64];
+            let inputs = vec![
+                HostTensor::F32(x.clone(), dims.clone()),
+                HostTensor::F32(x.clone(), dims.clone()),
+                HostTensor::F32(x.clone(), dims.clone()),
+            ];
+            rt.load(&name).expect("compile");
+            let stats = time_it(2, 8, || {
+                rt.execute(&name, &inputs).expect("exec");
+            });
+            table.row(&[name, format!("{:.2}", stats.mean_ms), format!("{:.2}", stats.p95_ms)]);
+        }
+    }
+    table.print();
+
+    // --- model fwd latency (Tab. 3/4 serving shape) ------------------------
+    let mut table = Table::new(&["model fwd", "batch", "mean-ms"]);
+    for (nlen, batches) in [(128usize, vec![1usize, 8]), (512, vec![1, 4])] {
+        for attn in ["exact", "mra2", "mra2s"] {
+            let tag = format!("mlm_{attn}_n{nlen}_d128_l2_h2_v512");
+            let params = match rt.manifest.load_f32(&format!("{tag}.params.f32")) {
+                Ok(p) => p,
+                Err(_) => continue,
+            };
+            for &b in &batches {
+                let name = format!("fwd_{tag}_b{b}");
+                if rt.manifest.get(&name).is_err() {
+                    continue;
+                }
+                rt.load(&name).expect("compile");
+                let ids = vec![2i32; b * nlen];
+                let inputs = vec![
+                    HostTensor::F32(params.clone(), vec![params.len()]),
+                    HostTensor::I32(ids, vec![b, nlen]),
+                ];
+                let stats = time_it(1, 5, || {
+                    rt.execute(&name, &inputs).expect("exec");
+                });
+                table.row(&[name, b.to_string(), format!("{:.2}", stats.mean_ms)]);
+            }
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,118 @@
+//! Fig. 8: sparsity-support recovery.  For three structured attention
+//! patterns (diagonal band, block structure, global columns), compare the
+//! *optimal* 80%-sparsity support with the support found by MRA-2's block
+//! selection, reporting overlap (recall of the optimal mass).
+
+use mra::mra::{dense_mra2, Variant};
+use mra::tensor::{ops, topk, Mat, Rng};
+
+/// Three pattern generators mirroring the paper's typical self-attention
+/// structures.
+fn pattern(kind: usize, n: usize, d: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    match kind {
+        // diagonal band (local attention)
+        0 => {
+            let mut q = Mat::zeros(n, d);
+            let mut k = Mat::zeros(n, d);
+            for i in 0..n {
+                for j in 0..d {
+                    let pq = if i > 0 { q.get(i - 1, j) } else { 0.0 };
+                    q.set(i, j, 0.95 * pq + 0.3 * rng.normal());
+                    k.set(i, j, q.get(i, j) + 0.15 * rng.normal());
+                }
+            }
+            normalize_rows(&mut q, 4.5);
+            normalize_rows(&mut k, 4.5);
+            (q, k)
+        }
+        // block/cluster structure (topic segments)
+        1 => {
+            let clusters = 8;
+            let protos: Vec<Vec<f32>> = (0..clusters)
+                .map(|_| (0..d).map(|_| rng.normal()).collect())
+                .collect();
+            let mut q = Mat::zeros(n, d);
+            for i in 0..n {
+                let c = (i * clusters) / n;
+                for j in 0..d {
+                    q.set(i, j, protos[c][j] + 0.2 * rng.normal());
+                }
+            }
+            let k = q.clone();
+            let mut q = q;
+            normalize_rows(&mut q, 4.5);
+            let mut k = k;
+            normalize_rows(&mut k, 4.5);
+            (q, k)
+        }
+        // global columns: a few keys attract everything (CLS-like)
+        _ => {
+            let mut q = Mat::randn(n, d, 0.2, &mut rng);
+            let mut k = Mat::randn(n, d, 0.2, &mut rng);
+            let hot: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            for i in 0..n {
+                for j in 0..d {
+                    q.set(i, j, q.get(i, j) + hot[j]);
+                }
+            }
+            for &t in &[3usize, n / 2, n - 5] {
+                for j in 0..d {
+                    k.set(t, j, hot[j] * 2.0);
+                }
+            }
+            normalize_rows(&mut q, 4.0);
+            normalize_rows(&mut k, 4.0);
+            (q, k)
+        }
+    }
+}
+
+fn normalize_rows(m: &mut Mat, norm: f32) {
+    for i in 0..m.rows {
+        let s: f32 = m.row(i).iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+        let f = norm / s;
+        for v in m.row_mut(i) {
+            *v *= f;
+        }
+    }
+}
+
+fn main() {
+    let (n, d) = (256usize, 16usize);
+    let sparsity = 0.8; // keep 20% of entries
+    println!("== Fig. 8: optimal vs MRA-found sparsity support (80% sparse) ==");
+    for (kind, name) in [(0, "diagonal-band"), (1, "block-cluster"), (2, "global-columns")] {
+        let (q, k) = pattern(kind, n, d, 5);
+        let a = ops::exp(&ops::scores(&q, &k));
+        let keep = ((1.0 - sparsity) * (n * n) as f64) as usize;
+        // optimal support: top entries of A
+        let opt_idx = topk::top_k_indices(&a.data, keep);
+        let opt_mass: f64 = opt_idx.iter().map(|&i| (a.data[i] as f64).powi(2)).sum();
+        // MRA-2-s support at matched budget: m = keep / b^2 blocks
+        let b = 16;
+        let m = (keep / (b * b)).max(1);
+        let (a_mra, _) = dense_mra2(&q, &k, &Mat::zeros(n, d), b, m, Variant::Sparse);
+        let mra_mass: f64 = a_mra
+            .data
+            .iter()
+            .zip(a.data.iter())
+            .filter(|(hat, _)| **hat != 0.0)
+            .map(|(_, orig)| (*orig as f64).powi(2))
+            .sum();
+        let recall = mra_mass / opt_mass.max(1e-300);
+        // support overlap: fraction of optimal entries inside MRA blocks
+        let overlap = opt_idx
+            .iter()
+            .filter(|&&i| a_mra.data[i] != 0.0)
+            .count() as f64
+            / opt_idx.len() as f64;
+        println!(
+            "{name:<16} mass-recall {recall:.3}  support-overlap {overlap:.3}  (m = {m} blocks)"
+        );
+    }
+    println!(
+        "\nexpected (paper): high recovery on all three patterns — including\n\
+         the non-banded ones that Longformer/Big Bird's fixed structure misses."
+    );
+}

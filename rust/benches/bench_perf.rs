@@ -1,0 +1,37 @@
+//! §Perf probe: isolates the L3 MRA-2 hot path (the component the
+//! coordinator runs per head on the CPU fallback path) at bench scale.
+//! Used for the before/after iteration log in EXPERIMENTS.md §Perf.
+
+use mra::bench::time_it;
+use mra::mra::{mra2_attention, Variant};
+use mra::tensor::{ops, Mat, Rng};
+
+fn main() {
+    let d = 64;
+    for n in [1024usize, 2048, 4096] {
+        let mut rng = Rng::new(9);
+        let q = Mat::randn(n, d, 0.5, &mut rng);
+        let k = Mat::randn(n, d, 0.5, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let m = 4 * n / 32;
+        let s_full = time_it(1, 5, || {
+            let _ = mra2_attention(&q, &k, &v, 32, m, Variant::Full);
+        });
+        let s_sparse = time_it(1, 5, || {
+            let _ = mra2_attention(&q, &k, &v, 32, m, Variant::Sparse);
+        });
+        // exact attention for the speedup ratio (only at the small sizes)
+        let exact_ms = if n <= 2048 {
+            let s = time_it(0, 2, || {
+                let _ = ops::exact_attention(&q, &k, &v);
+            });
+            format!("{:.1}", s.mean_ms)
+        } else {
+            "-".into()
+        };
+        println!(
+            "n={n:>5}  mra2 {:.2} ms  mra2s {:.2} ms  exact {exact_ms} ms  (m={m})",
+            s_full.mean_ms, s_sparse.mean_ms
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! Table 7 / Fig. 4: approximation error vs runtime vs memory for every
+//! method across sequence lengths and per-method budget ladders.
+//!
+//! Workload: locality-structured Q/K (random walk, keys tracking queries —
+//! trained-model-like attention) + random V; error is the paper's
+//! `||Z_hat - Z||_F / ||Z||_F` on the normalized outputs.
+//!
+//! ```bash
+//! cargo bench --bench bench_table7                 # n in {256, 512}
+//! MRA_BENCH_FULL=1 cargo bench --bench bench_table7  # adds 1024/2048/4096
+//! ```
+
+use mra::baselines::*;
+use mra::bench::{mib, time_budget, Table};
+use mra::tensor::{ops, Mat, Rng};
+
+fn walk_qkv(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    let mut q = Mat::zeros(n, d);
+    let mut k = Mat::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            let pq = if i > 0 { q.get(i - 1, j) } else { 0.0 };
+            q.set(i, j, 0.9 * pq + 0.45 * rng.normal());
+            k.set(i, j, q.get(i, j) + 0.3 * rng.normal());
+        }
+    }
+    let v = Mat::randn(n, d, 1.0, &mut rng);
+    (q, k, v)
+}
+
+/// Budget ladder per method at sequence length `n` (mirrors Tab. 7's
+/// multiple rows per method).
+fn suite(n: usize) -> Vec<Box<dyn AttentionApprox>> {
+    let nb32 = n / 32;
+    let mut v: Vec<Box<dyn AttentionApprox>> = vec![Box::new(exact::Exact)];
+    for p in [n / 16, n / 8, n / 4] {
+        v.push(Box::new(linformer::Linformer::new(p, 1)));
+        v.push(Box::new(performer::Performer::new(p, 1)));
+    }
+    for l in [32usize, 64, 128] {
+        if l < n {
+            v.push(Box::new(nystromformer::Nystromformer::new(l, 6)));
+        }
+    }
+    for w in [n / 32, n / 16, n / 8] {
+        v.push(Box::new(longformer::Longformer::new(w.max(4), 1)));
+        v.push(Box::new(bigbird::BigBird::new(w.max(4) / 2, 1, 3, 1)));
+    }
+    for b in [n / 64, n / 32] {
+        v.push(Box::new(reformer::Reformer::new(b.max(2), 2, 1)));
+    }
+    v.push(Box::new(h1d::HTransformer1d::new(32.min(n / 4))));
+    for w in [n / 32, n / 16] {
+        v.push(Box::new(scatterbrain::Scatterbrain::new(w.max(4), n / 8, 1)));
+    }
+    for m in [nb32, 2 * nb32, 4 * nb32, 8 * nb32] {
+        v.push(Box::new(mra_adapter::Mra2::new(32, m.max(1), false)));
+        v.push(Box::new(mra_adapter::Mra2::new(32, m.max(1), true)));
+    }
+    v
+}
+
+fn main() {
+    let full = std::env::var("MRA_BENCH_FULL").is_ok();
+    let lengths: &[usize] = if full { &[256, 512, 1024, 2048, 4096] } else { &[256, 512] };
+    let d = 64;
+    for &n in lengths {
+        let (q, k, v) = walk_qkv(n, d, 42);
+        let z_exact = ops::exact_attention(&q, &k, &v);
+        println!("\n== Table 7 / Fig. 4 @ n = {n}, d = {d} ==");
+        let mut table = Table::new(&["method", "time-ms", "mem-MiB", "rel-err"]);
+        for method in suite(n) {
+            let mut z = Mat::zeros(1, 1);
+            let stats = time_budget(60.0, || {
+                z = method.compute(&q, &k, &v);
+            });
+            let err = ops::rel_fro_error(&z, &z_exact);
+            table.row(&[
+                method.name(),
+                format!("{:.2}", stats.mean_ms),
+                mib(method.memory_elems(n, d)),
+                format!("{err:.3}"),
+            ]);
+        }
+        table.print();
+    }
+}

@@ -1,0 +1,84 @@
+//! Fig. 7 (left): theoretical workload needed to reach a target relative
+//! error, as a function of sequence length, for optimal sparsity / optimal
+//! low rank / MRA-2.  The paper's point: low rank needs superlinear work;
+//! sparsity is fine on peaked attention; MRA stays near-linear.
+
+use mra::baselines::optimal::{OptimalLowRank, OptimalSparse};
+use mra::bench::Table;
+use mra::mra::{dense_mra2, MraConfig, Variant};
+use mra::tensor::{ops, Mat, Rng};
+
+fn walk_qk(n: usize, d: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    let mut q = Mat::zeros(n, d);
+    let mut k = Mat::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            let pq = if i > 0 { q.get(i - 1, j) } else { 0.0 };
+            q.set(i, j, 0.9 * pq + 0.45 * rng.normal());
+            k.set(i, j, q.get(i, j) + 0.3 * rng.normal());
+        }
+    }
+    (q, k)
+}
+
+/// Smallest budget (in its family's units) reaching `target` rel error,
+/// reported as equivalent entry-count workload.
+fn main() {
+    let d = 16;
+    println!("== Fig. 7 (left): workload to reach rel error <= target ==");
+    for target in [0.05f64, 0.10] {
+        println!("\n-- target rel error {target} --");
+        let mut table = Table::new(&["n", "sparse-opt", "lowrank-opt", "mra-2", "n^2 (exact)"]);
+        for n in [128usize, 256, 512] {
+            let (q, k) = walk_qk(n, d, 11);
+            let a = ops::exp(&ops::scores(&q, &k));
+            // sparsity: bisect on kept entries
+            let mut sp = n * n;
+            for frac in [1usize, 2, 4, 8, 16, 32, 64] {
+                let keep = n * n / frac;
+                let ah = OptimalSparse { keep }.a_hat(&q, &k);
+                if ops::rel_fro_error(&ah, &a) <= target {
+                    sp = keep;
+                } else {
+                    break;
+                }
+            }
+            // low rank: scan ranks; workload = 2 n r
+            let mut lr = n * n;
+            for r in [2usize, 4, 8, 16, 32, 64, 128, 256] {
+                if r >= n {
+                    break;
+                }
+                let ah = OptimalLowRank { rank: r, seed: 0 }.a_hat(&q, &k);
+                if ops::rel_fro_error(&ah, &a) <= target {
+                    lr = 2 * n * r;
+                    break;
+                }
+            }
+            // MRA-2: scan budgets; workload from the Sec. 4.4 formula
+            let b = 16;
+            let nb = n / b;
+            let mut mw = n * n;
+            for m in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+                if m > nb * nb {
+                    break;
+                }
+                let (ah, _) = dense_mra2(&q, &k, &Mat::zeros(n, d), b, m, Variant::Full);
+                if ops::rel_fro_error(&ah, &a) <= target {
+                    mw = MraConfig::mra2(b, m).workload(n);
+                    break;
+                }
+            }
+            table.row(&[
+                n.to_string(),
+                sp.to_string(),
+                lr.to_string(),
+                mw.to_string(),
+                (n * n).to_string(),
+            ]);
+        }
+        table.print();
+    }
+    println!("\nexpected shape (paper): MRA column grows ~linearly in n;\nlow rank grows superlinearly on peaked attention.");
+}

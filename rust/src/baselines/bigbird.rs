@@ -1,0 +1,109 @@
+//! Big Bird (Zaheer et al., 2020): sliding window + global tokens +
+//! uniformly random extra keys per query row.
+
+use crate::baselines::longformer::{normalize_support, sparse_attention};
+use crate::baselines::AttentionApprox;
+use crate::tensor::{Mat, Rng};
+
+pub struct BigBird {
+    pub window: usize,
+    pub globals: usize,
+    /// Random extra keys per row.
+    pub random: usize,
+    pub seed: u64,
+}
+
+impl BigBird {
+    pub fn new(window: usize, globals: usize, random: usize, seed: u64) -> Self {
+        BigBird { window, globals, random, seed }
+    }
+
+    pub fn support(&self, n: usize) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(self.seed ^ 0xB16B);
+        let mut rows: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let lo = i.saturating_sub(self.window);
+            let hi = (i + self.window + 1).min(n);
+            let mut cols: Vec<usize> = (lo..hi).collect();
+            cols.extend(0..self.globals.min(n));
+            for _ in 0..self.random {
+                cols.push(rng.below(n));
+            }
+            if i < self.globals {
+                cols = (0..n).collect();
+            }
+            rows.push(cols);
+        }
+        normalize_support(&mut rows);
+        rows
+    }
+}
+
+impl AttentionApprox for BigBird {
+    fn name(&self) -> String {
+        format!("bigbird(w={},r={})", self.window, self.random)
+    }
+
+    fn compute(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        sparse_attention(q, k, v, &self.support(q.rows))
+    }
+
+    fn workload(&self, n: usize, d: usize) -> usize {
+        n * (2 * self.window + 1 + self.globals + self.random) * 2 * d
+    }
+
+    fn memory_elems(&self, n: usize, _d: usize) -> usize {
+        n * (2 * self.window + 1 + self.globals + self.random)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+
+    #[test]
+    fn support_contains_window_globals_and_randoms() {
+        let bb = BigBird::new(1, 1, 3, 0);
+        let s = bb.support(32);
+        // row 16: window {15,16,17}, global {0}, up to 3 randoms
+        assert!(s[16].contains(&15) && s[16].contains(&16) && s[16].contains(&17));
+        assert!(s[16].contains(&0));
+        assert!(s[16].len() >= 4 && s[16].len() <= 7);
+    }
+
+    #[test]
+    fn random_keys_extend_reach_beyond_window() {
+        let bb = BigBird::new(1, 0, 4, 1);
+        let s = bb.support(64);
+        let far = s
+            .iter()
+            .enumerate()
+            .any(|(i, cols)| cols.iter().any(|&j| (j as i64 - i as i64).abs() > 2));
+        assert!(far);
+    }
+
+    #[test]
+    fn beats_pure_window_on_distant_dependency() {
+        // planted structure: every row attends strongly to key 0
+        let n = 64;
+        let mut rng = Rng::new(3);
+        let mut q = Mat::randn(n, 8, 0.1, &mut rng);
+        let mut k = Mat::randn(n, 8, 0.1, &mut rng);
+        for j in 0..8 {
+            k.set(0, j, 2.0); // hot key
+            for i in 0..n {
+                q.set(i, j, q.get(i, j) + 1.0);
+            }
+        }
+        let v = Mat::randn(n, 8, 1.0, &mut rng);
+        let exact = ops::exact_attention(&q, &k, &v);
+        let e_bb = ops::rel_fro_error(
+            &BigBird::new(2, 1, 2, 0).compute(&q, &k, &v), &exact);
+        let e_win = ops::rel_fro_error(
+            &crate::baselines::longformer::Longformer::new(2, 0).compute(&q, &k, &v),
+            &exact,
+        );
+        assert!(e_bb < e_win, "{e_bb} vs {e_win}");
+    }
+}

@@ -1,0 +1,50 @@
+//! Standard softmax attention — the "Transformer" row of every table.
+
+use crate::baselines::AttentionApprox;
+use crate::tensor::{ops, Mat};
+
+/// Exact `softmax(QK^T/sqrt(d)) V`.
+pub struct Exact;
+
+impl AttentionApprox for Exact {
+    fn name(&self) -> String {
+        "transformer".into()
+    }
+
+    fn compute(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        ops::exact_attention(q, k, v)
+    }
+
+    fn workload(&self, n: usize, d: usize) -> usize {
+        2 * n * n * d // scores + AV
+    }
+
+    fn memory_elems(&self, n: usize, _d: usize) -> usize {
+        n * n // the dense attention matrix
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn identity_values_recover_softmax_rows() {
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(8, 4, 1.0, &mut rng);
+        let k = Mat::randn(8, 4, 1.0, &mut rng);
+        let v = Mat::eye(8).row_block(0, 8); // identity as values
+        let z = Exact.compute(&q, &k, &v);
+        // rows of Z are then exactly the softmax rows: they sum to 1
+        for i in 0..8 {
+            let s: f32 = z.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn quadratic_workload() {
+        assert_eq!(Exact.workload(100, 8), 2 * 100 * 100 * 8);
+    }
+}

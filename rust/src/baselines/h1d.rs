@@ -1,0 +1,198 @@
+//! H-Transformer-1D (Zhu & Soricut, 2021): hierarchical attention with a
+//! *prespecified* multiresolution structure — exact on-diagonal blocks,
+//! progressively coarser (pooled) resolution for progressively more distant
+//! off-diagonal bands.
+//!
+//! This is the "fixed-structure MRA" the paper contrasts with: identical
+//! pyramid machinery, but the refinement pattern is data-independent, which
+//! is exactly why it struggles on attention with strong distant
+//! dependencies (Tab. 1/2, Fig. 8 discussion).
+
+use crate::baselines::AttentionApprox;
+use crate::mra::frame::Block;
+use crate::mra::pyramid::Pyramid;
+use crate::mra::select::Scored;
+use crate::mra::{self};
+use crate::tensor::{mat::dot, Mat};
+
+pub struct HTransformer1d {
+    /// Finest block size (diagonal blocks are exact at scale `block`;
+    /// bands at distance 2^t are approximated at scale `block * 2^t`).
+    pub block: usize,
+}
+
+impl HTransformer1d {
+    pub fn new(block: usize) -> Self {
+        HTransformer1d { block }
+    }
+
+    /// Build the fixed hierarchical block set: diagonal + first
+    /// off-diagonals exact at the base scale, then dyadically coarser
+    /// blocks outward (a standard H-matrix partition of the plane).
+    pub fn partition(&self, n: usize) -> Vec<Block> {
+        let mut blocks = Vec::new();
+        let b0 = self.block.min(n);
+        // recursive dyadic split of the [0,n)x[0,n) square
+        fn split(blocks: &mut Vec<Block>, scale: usize, x: usize, y: usize, b0: usize) {
+            let near = x == y || x + 1 == y || y + 1 == x;
+            if !near || scale == b0 {
+                blocks.push(Block { scale, x, y });
+                return;
+            }
+            for dx in 0..2 {
+                for dy in 0..2 {
+                    split(blocks, scale / 2, 2 * x + dx, 2 * y + dy, b0);
+                }
+            }
+        }
+        split(&mut blocks, n, 0, 0, b0);
+        blocks
+    }
+}
+
+impl AttentionApprox for HTransformer1d {
+    fn name(&self) -> String {
+        format!("h-transformer-1d(b={})", self.block)
+    }
+
+    fn compute(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        let n = q.rows;
+        let d = q.cols;
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        let blocks = self.partition(n);
+        // scales used by the partition
+        let mut scales: Vec<usize> = blocks.iter().map(|b| b.scale).collect();
+        scales.sort_unstable_by(|a, b| b.cmp(a));
+        scales.dedup();
+        let qp = Pyramid::build(q, &scales);
+        let kp = Pyramid::build(k, &scales);
+        let vp = Pyramid::build(v, &scales);
+        // H1D uses exact entries at the finest scale — reuse the MRA matvec
+        // by expanding finest blocks to scale-1 components
+        let mut scored: Vec<Scored> = Vec::new();
+        let mut fine_scales = scales.clone();
+        for blk in &blocks {
+            if blk.scale == self.block && self.block > 1 {
+                // exact block -> scale-1 entries
+                for child in blk.children(self.block) {
+                    let lm = dot(q.row(child.x), k.row(child.y)) * inv_sqrt_d;
+                    scored.push(Scored { block: child, log_mu: lm });
+                }
+            } else {
+                let qs = qp.at(blk.scale);
+                let ks = kp.at(blk.scale);
+                let lm = dot(qs.row(blk.x), ks.row(blk.y)) * inv_sqrt_d;
+                scored.push(Scored { block: *blk, log_mu: lm });
+            }
+        }
+        if self.block > 1 && !fine_scales.contains(&1) {
+            fine_scales.push(1);
+        }
+        let vp_fine = if self.block > 1 { Pyramid::build(v, &fine_scales) } else { vp };
+        mra::matvec::compute(&scored, &vp_fine, n, &fine_scales).normalized()
+    }
+
+    fn workload(&self, n: usize, d: usize) -> usize {
+        // ~3 blocks per level, each (n/s)... totals O(n log n)
+        let levels = (n / self.block).max(2).ilog2() as usize + 1;
+        3 * n * self.block * d * levels / self.block.max(1)
+            + n * self.block * d
+    }
+
+    fn memory_elems(&self, n: usize, _d: usize) -> usize {
+        n * self.block * 3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ops, Rng};
+
+    #[test]
+    fn partition_tiles_the_square() {
+        for n in [32usize, 64, 128] {
+            let h = HTransformer1d::new(8);
+            let blocks = h.partition(n);
+            let area: usize = blocks.iter().map(|b| b.area()).sum();
+            assert_eq!(area, n * n, "n={n}");
+            for (i, a) in blocks.iter().enumerate() {
+                for b in blocks.iter().skip(i + 1) {
+                    assert!(!a.overlaps(b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_diagonal_is_finest() {
+        let h = HTransformer1d::new(8);
+        let blocks = h.partition(64);
+        for b in &blocks {
+            if b.x == b.y {
+                assert_eq!(b.scale, 8, "{b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_block_size_is_exact() {
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(32, 8, 1.0, &mut rng);
+        let k = Mat::randn(32, 8, 1.0, &mut rng);
+        let v = Mat::randn(32, 8, 1.0, &mut rng);
+        // block = n -> single exact block = exact attention
+        let z = HTransformer1d::new(32).compute(&q, &k, &v);
+        let exact = ops::exact_attention(&q, &k, &v);
+        assert!(ops::rel_fro_error(&z, &exact) < 1e-4);
+    }
+
+    #[test]
+    fn local_attention_well_approximated() {
+        // diagonally-banded attention: H1D's prespecified structure fits
+        let n = 64;
+        let d = 8;
+        let mut rng = Rng::new(1);
+        let mut q = Mat::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                let angle = i as f32 / n as f32 * 3.0 + j as f32;
+                q.set(i, j, angle.sin() + 0.05 * rng.normal());
+            }
+        }
+        let k = q.clone();
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let exact = ops::exact_attention(&q, &k, &v);
+        let z = HTransformer1d::new(16).compute(&q, &k, &v);
+        let err = ops::rel_fro_error(&z, &exact);
+        assert!(err < 0.35, "err={err}");
+    }
+
+    #[test]
+    fn distant_dependency_hurts_h1d_more_than_mra() {
+        // a strong off-diagonal dependency: MRA refines it, H1D cannot
+        let n = 128;
+        let d = 8;
+        let mut rng = Rng::new(2);
+        let mut q = Mat::randn(n, d, 0.2, &mut rng);
+        let mut k = Mat::randn(n, d, 0.2, &mut rng);
+        // rows 0..16 attend strongly to keys 96..112
+        for i in 0..16 {
+            for j in 0..d {
+                q.set(i, j, 2.0);
+            }
+        }
+        for t in 96..112 {
+            for j in 0..d {
+                k.set(t, j, 2.0);
+            }
+        }
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let exact = ops::exact_attention(&q, &k, &v);
+        let e_h1d = ops::rel_fro_error(
+            &HTransformer1d::new(16).compute(&q, &k, &v), &exact);
+        let e_mra = ops::rel_fro_error(
+            &mra::mra2_attention(&q, &k, &v, 16, 24, mra::Variant::Full), &exact);
+        assert!(e_mra < e_h1d, "mra {e_mra} vs h1d {e_h1d}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Linformer (Wang et al., 2020): project the *sequence length* dimension
+//! of K and V to `p` rows with a (here: fixed random, as at init) linear
+//! projection, then run exact attention against the projected keys.
+
+use crate::baselines::AttentionApprox;
+use crate::tensor::ops;
+use crate::tensor::{Mat, Rng};
+
+pub struct Linformer {
+    /// Projection size `p` (the paper's knob; `O(p n)` complexity).
+    pub proj: usize,
+    pub seed: u64,
+}
+
+impl Linformer {
+    pub fn new(proj: usize, seed: u64) -> Self {
+        Linformer { proj, seed }
+    }
+
+    fn projection(&self, n: usize) -> Mat {
+        let mut rng = Rng::new(self.seed ^ 0x11f0);
+        // E in R^{p x n}, row-stochastic (softmax of Gaussian logits): each
+        // projected key/value is a convex combination of tokens.  The
+        // Linformer paper *learns* a dense E; an averaging initialization
+        // is the standard stand-in and keeps the projected attention on the
+        // simplex.  (That Linformer still diverges from exact attention is
+        // faithful — Tab. 1 shows it is incompatible with trained weights.)
+        let logits = Mat::randn(self.proj, n, 2.0, &mut rng);
+        ops::softmax_rows(&logits)
+    }
+}
+
+impl AttentionApprox for Linformer {
+    fn name(&self) -> String {
+        format!("linformer(p={})", self.proj)
+    }
+
+    fn compute(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        let e = self.projection(k.rows); // (p, n)
+        let kp = e.matmul(k); // (p, d)
+        let vp = e.matmul(v); // (p, d)
+        ops::softmax_rows(&ops::scores(q, &kp)).matmul(&vp)
+    }
+
+    fn workload(&self, n: usize, d: usize) -> usize {
+        2 * self.proj * n * d + 2 * n * self.proj * d
+    }
+
+    fn memory_elems(&self, n: usize, d: usize) -> usize {
+        self.proj * n + n * self.proj + 2 * self.proj * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_shape_and_finite() {
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(64, 8, 1.0, &mut rng);
+        let k = Mat::randn(64, 8, 1.0, &mut rng);
+        let v = Mat::randn(64, 8, 1.0, &mut rng);
+        let z = Linformer::new(16, 1).compute(&q, &k, &v);
+        assert_eq!((z.rows, z.cols), (64, 8));
+        assert!(z.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(1);
+        let q = Mat::randn(32, 4, 1.0, &mut rng);
+        let k = Mat::randn(32, 4, 1.0, &mut rng);
+        let v = Mat::randn(32, 4, 1.0, &mut rng);
+        let z1 = Linformer::new(8, 7).compute(&q, &k, &v);
+        let z2 = Linformer::new(8, 7).compute(&q, &k, &v);
+        assert_eq!(z1, z2);
+    }
+
+    #[test]
+    fn bigger_projection_reduces_error_on_average() {
+        let mut rng = Rng::new(2);
+        let (mut e_small, mut e_big) = (0.0, 0.0);
+        for seed in 0..5 {
+            let q = Mat::randn(64, 8, 0.4, &mut rng);
+            let k = Mat::randn(64, 8, 0.4, &mut rng);
+            let v = Mat::randn(64, 8, 1.0, &mut rng);
+            let exact = ops::exact_attention(&q, &k, &v);
+            e_small += ops::rel_fro_error(
+                &Linformer::new(4, seed).compute(&q, &k, &v), &exact);
+            e_big += ops::rel_fro_error(
+                &Linformer::new(48, seed).compute(&q, &k, &v), &exact);
+        }
+        assert!(e_big < e_small, "{e_big} vs {e_small}");
+    }
+}

@@ -1,0 +1,157 @@
+//! Longformer (Beltagy et al., 2020): sliding-window attention of width
+//! `w` plus `g` global tokens (attended by and attending to everything).
+//!
+//! Also hosts [`sparse_attention`], the shared row-support evaluator used
+//! by Big Bird and Reformer: attention computed only on an explicit
+//! per-row set of key indices, `O(sum |support|) * d`.
+
+use crate::baselines::AttentionApprox;
+use crate::tensor::{mat::dot, Mat};
+
+/// Evaluate attention restricted to `support[i]` (distinct key indices per
+/// row).  Numerically stabilized per row.
+pub fn sparse_attention(q: &Mat, k: &Mat, v: &Mat, support: &[Vec<usize>]) -> Mat {
+    let (n, d) = (q.rows, q.cols);
+    assert_eq!(support.len(), n);
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let mut out = Mat::zeros(n, d);
+    let mut scores: Vec<f32> = Vec::new();
+    for i in 0..n {
+        let cols = &support[i];
+        if cols.is_empty() {
+            continue;
+        }
+        scores.clear();
+        let mut mx = f32::NEG_INFINITY;
+        for &j in cols {
+            let s = dot(q.row(i), k.row(j)) * inv_sqrt_d;
+            mx = mx.max(s);
+            scores.push(s);
+        }
+        let mut den = 0.0f32;
+        let orow = out.row_mut(i);
+        for (t, &j) in cols.iter().enumerate() {
+            let a = (scores[t] - mx).exp();
+            den += a;
+            for (o, &vv) in orow.iter_mut().zip(v.row(j)) {
+                *o += a * vv;
+            }
+        }
+        let inv = 1.0 / den;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Deduplicate and sort a support row in place.
+pub fn normalize_support(rows: &mut [Vec<usize>]) {
+    for r in rows.iter_mut() {
+        r.sort_unstable();
+        r.dedup();
+    }
+}
+
+pub struct Longformer {
+    /// One-sided window size (total window `2w + 1`).
+    pub window: usize,
+    /// Number of leading global tokens.
+    pub globals: usize,
+}
+
+impl Longformer {
+    pub fn new(window: usize, globals: usize) -> Self {
+        Longformer { window, globals }
+    }
+
+    /// Build the sliding-window + global support sets.
+    pub fn support(&self, n: usize) -> Vec<Vec<usize>> {
+        let mut rows: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let lo = i.saturating_sub(self.window);
+            let hi = (i + self.window + 1).min(n);
+            let mut cols: Vec<usize> = (lo..hi).collect();
+            cols.extend(0..self.globals.min(n));
+            if i < self.globals {
+                // global tokens attend everywhere
+                cols = (0..n).collect();
+            }
+            rows.push(cols);
+        }
+        normalize_support(&mut rows);
+        rows
+    }
+}
+
+impl AttentionApprox for Longformer {
+    fn name(&self) -> String {
+        format!("longformer(w={})", self.window)
+    }
+
+    fn compute(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        sparse_attention(q, k, v, &self.support(q.rows))
+    }
+
+    fn workload(&self, n: usize, d: usize) -> usize {
+        n * (2 * self.window + 1 + self.globals) * 2 * d
+    }
+
+    fn memory_elems(&self, n: usize, _d: usize) -> usize {
+        n * (2 * self.window + 1 + self.globals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ops, Rng};
+
+    #[test]
+    fn full_window_is_exact() {
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(32, 8, 1.0, &mut rng);
+        let k = Mat::randn(32, 8, 1.0, &mut rng);
+        let v = Mat::randn(32, 8, 1.0, &mut rng);
+        let z = Longformer::new(32, 0).compute(&q, &k, &v);
+        let exact = ops::exact_attention(&q, &k, &v);
+        assert!(ops::rel_fro_error(&z, &exact) < 1e-4);
+    }
+
+    #[test]
+    fn support_shape() {
+        let s = Longformer::new(2, 1).support(8);
+        assert_eq!(s[0], (0..8).collect::<Vec<_>>()); // global row
+        assert_eq!(s[4], vec![0, 2, 3, 4, 5, 6]); // window +/-2 plus global 0
+    }
+
+    #[test]
+    fn sparse_attention_matches_dense_on_full_support() {
+        let mut rng = Rng::new(1);
+        let q = Mat::randn(16, 4, 1.0, &mut rng);
+        let k = Mat::randn(16, 4, 1.0, &mut rng);
+        let v = Mat::randn(16, 4, 1.0, &mut rng);
+        let support: Vec<Vec<usize>> = (0..16).map(|_| (0..16).collect()).collect();
+        let z = sparse_attention(&q, &k, &v, &support);
+        let exact = ops::exact_attention(&q, &k, &v);
+        assert!(ops::rel_fro_error(&z, &exact) < 1e-5);
+    }
+
+    #[test]
+    fn window_attention_is_local() {
+        // token far from i must not influence row i
+        let mut rng = Rng::new(2);
+        let q = Mat::randn(32, 4, 1.0, &mut rng);
+        let k = Mat::randn(32, 4, 1.0, &mut rng);
+        let mut v1 = Mat::randn(32, 4, 1.0, &mut rng);
+        let z1 = Longformer::new(2, 0).compute(&q, &k, &v1);
+        // perturb a value row far outside the window of row 16
+        for j in 0..4 {
+            v1.set(31, j, v1.get(31, j) + 100.0);
+        }
+        let z2 = Longformer::new(2, 0).compute(&q, &k, &v1);
+        for j in 0..4 {
+            assert!((z1.get(16, j) - z2.get(16, j)).abs() < 1e-6);
+        }
+    }
+}

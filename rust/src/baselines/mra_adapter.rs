@@ -1,0 +1,123 @@
+//! MRA-2 / MRA-2-s wrapped in the [`AttentionApprox`] trait so the paper's
+//! method rides through the same bench harness as every baseline.
+
+use crate::baselines::AttentionApprox;
+use crate::mra::{self, MraConfig, Variant};
+use crate::tensor::Mat;
+
+/// Two-scale MRA (the paper's MRA-2 / MRA-2-s).
+pub struct Mra2 {
+    pub block: usize,
+    /// Refinement budget `m_1`.
+    pub budget: usize,
+    /// `true` -> MRA-2-s (block-sparse only).
+    pub sparse: bool,
+}
+
+impl Mra2 {
+    pub fn new(block: usize, budget: usize, sparse: bool) -> Self {
+        Mra2 { block, budget, sparse }
+    }
+
+    fn variant(&self) -> Variant {
+        if self.sparse { Variant::Sparse } else { Variant::Full }
+    }
+}
+
+impl AttentionApprox for Mra2 {
+    fn name(&self) -> String {
+        format!(
+            "mra-2{}(b={},m={})",
+            if self.sparse { "-s" } else { "" },
+            self.block,
+            self.budget
+        )
+    }
+
+    fn compute(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        let block = self.block.min(q.rows);
+        mra::mra2_attention(q, k, v, block, self.budget, self.variant())
+    }
+
+    fn workload(&self, n: usize, d: usize) -> usize {
+        let cfg = if self.sparse {
+            MraConfig::mra2_sparse(self.block, self.budget)
+        } else {
+            MraConfig::mra2(self.block, self.budget)
+        };
+        cfg.workload(n) * d
+    }
+
+    fn memory_elems(&self, n: usize, d: usize) -> usize {
+        let nb = n / self.block.max(1);
+        let lowres = if self.sparse { 0 } else { nb * nb };
+        self.budget * self.block * self.block + lowres + 3 * nb * d
+    }
+}
+
+/// General multi-scale MRA (for the R = {16,4,1} style ablations).
+pub struct MraGeneral {
+    pub cfg: MraConfig,
+}
+
+impl AttentionApprox for MraGeneral {
+    fn name(&self) -> String {
+        format!("mra-general(R={:?},m={:?})", self.cfg.scales, self.cfg.budgets)
+    }
+
+    fn compute(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        mra::mra_attention(q, k, v, &self.cfg)
+    }
+
+    fn workload(&self, n: usize, d: usize) -> usize {
+        self.cfg.workload(n) * d
+    }
+
+    fn memory_elems(&self, n: usize, d: usize) -> usize {
+        let s0 = self.cfg.scales[0];
+        (n / s0) * (n / s0) + 3 * n / s0 * d + self.cfg.workload(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ops, Rng};
+
+    #[test]
+    fn adapter_matches_core_function() {
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(64, 8, 1.0, &mut rng);
+        let k = Mat::randn(64, 8, 1.0, &mut rng);
+        let v = Mat::randn(64, 8, 1.0, &mut rng);
+        let z1 = Mra2::new(16, 6, false).compute(&q, &k, &v);
+        let z2 = mra::mra2_attention(&q, &k, &v, 16, 6, Variant::Full);
+        assert_eq!(z1, z2);
+    }
+
+    #[test]
+    fn sparse_memory_smaller_than_full() {
+        let full = Mra2::new(32, 16, false);
+        let sparse = Mra2::new(32, 16, true);
+        assert!(sparse.memory_elems(1024, 64) < full.memory_elems(1024, 64));
+    }
+
+    #[test]
+    fn general_three_scale_runs() {
+        let mut rng = Rng::new(1);
+        let q = Mat::randn(64, 8, 1.0, &mut rng);
+        let k = Mat::randn(64, 8, 1.0, &mut rng);
+        let v = Mat::randn(64, 8, 1.0, &mut rng);
+        let g = MraGeneral {
+            cfg: MraConfig {
+                scales: vec![16, 4, 1],
+                budgets: vec![4, 16],
+                include_diagonal: true,
+                variant: Variant::Full,
+            },
+        };
+        let z = g.compute(&q, &k, &v);
+        let exact = ops::exact_attention(&q, &k, &v);
+        assert!(ops::rel_fro_error(&z, &exact) < 1.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Nyströmformer (Xiong et al., 2021): Nyström factorization of the
+//! softmax matrix using segment-mean landmarks and an iterative
+//! pseudo-inverse.
+//!
+//! `A ~ softmax(Q L_k^T) (softmax(L_q L_k^T))^+ softmax(L_q K^T)`
+//! with `L_q, L_k` the `l` segment means of Q and K, and the Moore–Penrose
+//! inverse approximated by the paper's Newton–Schulz-style iteration.
+
+use crate::baselines::AttentionApprox;
+use crate::tensor::{ops, Mat};
+
+pub struct Nystromformer {
+    /// Number of landmarks `l`.
+    pub landmarks: usize,
+    /// Pseudo-inverse iterations (paper uses 6).
+    pub pinv_iters: usize,
+}
+
+impl Nystromformer {
+    pub fn new(landmarks: usize, pinv_iters: usize) -> Self {
+        Nystromformer { landmarks, pinv_iters }
+    }
+
+    /// Segment-mean landmarks: split rows into `l` contiguous segments.
+    fn landmarks_of(&self, x: &Mat) -> Mat {
+        let l = self.landmarks.min(x.rows);
+        let n = x.rows;
+        let mut out = Mat::zeros(l, x.cols);
+        for s in 0..l {
+            let lo = s * n / l;
+            let hi = ((s + 1) * n / l).max(lo + 1);
+            let orow = out.row_mut(s);
+            for i in lo..hi {
+                for (o, &v) in orow.iter_mut().zip(x.row(i)) {
+                    *o += v;
+                }
+            }
+            let inv = 1.0 / (hi - lo) as f32;
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+        out
+    }
+
+    /// Iterative Moore–Penrose inverse (Razavi et al. scheme used by the
+    /// Nyströmformer paper).
+    fn pinv(&self, a: &Mat) -> Mat {
+        let n = a.rows;
+        // z0 = a^T / (||a||_1 ||a||_inf)
+        let max_rowsum = (0..n)
+            .map(|i| a.row(i).iter().map(|v| v.abs()).sum::<f32>())
+            .fold(0.0f32, f32::max);
+        let max_colsum = (0..n)
+            .map(|j| (0..n).map(|i| a.get(i, j).abs()).sum::<f32>())
+            .fold(0.0f32, f32::max);
+        let mut z = a.transpose().scale(1.0 / (max_rowsum * max_colsum).max(1e-20));
+        let eye13 = Mat::eye(n).scale(13.0);
+        let eye15 = Mat::eye(n).scale(15.0);
+        let eye7 = Mat::eye(n).scale(7.0);
+        for _ in 0..self.pinv_iters {
+            let az = a.matmul(&z);
+            // z <- 0.25 z (13 I - az (15 I - az (7 I - az)))
+            let inner = eye7.sub(&az);
+            let mid = eye15.sub(&az.matmul(&inner));
+            let outer = eye13.sub(&az.matmul(&mid));
+            z = z.matmul(&outer).scale(0.25);
+        }
+        z
+    }
+}
+
+impl AttentionApprox for Nystromformer {
+    fn name(&self) -> String {
+        format!("nystromformer(l={})", self.landmarks)
+    }
+
+    fn compute(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        let lq = self.landmarks_of(q);
+        let lk = self.landmarks_of(k);
+        let f = ops::softmax_rows(&ops::scores(q, &lk)); // (n, l)
+        let a_mid = ops::softmax_rows(&ops::scores(&lq, &lk)); // (l, l)
+        let b = ops::softmax_rows(&ops::scores(&lq, k)); // (l, n)
+        let a_pinv = self.pinv(&a_mid);
+        f.matmul(&a_pinv).matmul(&b.matmul(v))
+    }
+
+    fn workload(&self, n: usize, d: usize) -> usize {
+        let l = self.landmarks;
+        2 * n * l * d + self.pinv_iters * 3 * l * l * l + l * n * d
+    }
+
+    fn memory_elems(&self, n: usize, _d: usize) -> usize {
+        2 * n * self.landmarks + 4 * self.landmarks * self.landmarks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn pinv_of_identity_is_identity() {
+        let ny = Nystromformer::new(4, 8);
+        let z = ny.pinv(&Mat::eye(6));
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((z.get(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn pinv_inverts_well_conditioned_stochastic_matrix() {
+        // softmax matrices are row-stochastic: test on one
+        let mut rng = Rng::new(0);
+        let raw = Mat::randn(5, 5, 1.0, &mut rng);
+        let s = ops::softmax_rows(&raw);
+        let z = Nystromformer::new(4, 10).pinv(&s);
+        let prod = s.matmul(&z);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.get(i, j) - want).abs() < 0.05, "({i},{j})={}", prod.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn landmark_segments_average() {
+        let x = Mat::from_fn(8, 1, |i, _| i as f32);
+        let l = Nystromformer::new(2, 1).landmarks_of(&x);
+        assert!((l.get(0, 0) - 1.5).abs() < 1e-6);
+        assert!((l.get(1, 0) - 5.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn approximates_exact_on_smooth_attention() {
+        let mut rng = Rng::new(1);
+        let q = Mat::randn(64, 8, 0.3, &mut rng);
+        let k = Mat::randn(64, 8, 0.3, &mut rng);
+        let v = Mat::randn(64, 8, 1.0, &mut rng);
+        let exact = ops::exact_attention(&q, &k, &v);
+        let z = Nystromformer::new(32, 6).compute(&q, &k, &v);
+        let err = ops::rel_fro_error(&z, &exact);
+        assert!(err < 0.35, "err={err}");
+    }
+
+    #[test]
+    fn more_landmarks_reduce_error() {
+        let mut rng = Rng::new(2);
+        let q = Mat::randn(64, 8, 0.3, &mut rng);
+        let k = Mat::randn(64, 8, 0.3, &mut rng);
+        let v = Mat::randn(64, 8, 1.0, &mut rng);
+        let exact = ops::exact_attention(&q, &k, &v);
+        let e4 = ops::rel_fro_error(&Nystromformer::new(4, 6).compute(&q, &k, &v), &exact);
+        let e32 = ops::rel_fro_error(&Nystromformer::new(32, 6).compute(&q, &k, &v), &exact);
+        assert!(e32 < e4, "{e32} vs {e4}");
+    }
+}

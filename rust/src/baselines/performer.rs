@@ -1,0 +1,139 @@
+//! Performer (Choromanski et al., 2021): FAVOR+ positive random features.
+//!
+//! `exp(q.k/sqrt(d)) ~ phi(q) . phi(k)` with
+//! `phi(x) = exp(w^T x' - ||x'||^2 / 2) / sqrt(m)` over `m` Gaussian
+//! features `w` (`x' = x / d^{1/4}` absorbs the score scaling), so
+//! attention factorizes as `phi(Q) (phi(K)^T V)` in `O(n m d)`.
+
+use crate::baselines::AttentionApprox;
+use crate::tensor::{Mat, Rng};
+
+pub struct Performer {
+    /// Number of random features `m`.
+    pub features: usize,
+    pub seed: u64,
+}
+
+impl Performer {
+    pub fn new(features: usize, seed: u64) -> Self {
+        Performer { features, seed }
+    }
+
+    /// Positive random features.  `per_row` stabilization (subtract each
+    /// row's own max) is valid for *queries* only — it cancels in the row
+    /// normalization.  Keys must share a single global shift, otherwise
+    /// their relative weights are distorted.
+    fn phi(&self, x: &Mat, w: &Mat, per_row: bool) -> Mat {
+        // x: (n, d) pre-scaled; w: (m, d)
+        let n = x.rows;
+        let m = w.rows;
+        let logits = x.matmul_transb(w); // (n, m) = x . w
+        let mut out = Mat::zeros(n, m);
+        let inv_sqrt_m = 1.0 / (m as f32).sqrt();
+        let global_max = logits.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for i in 0..n {
+            let sq: f32 = x.row(i).iter().map(|&t| t * t).sum::<f32>() * 0.5;
+            let shift = if per_row {
+                logits.row(i).iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+            } else {
+                global_max
+            };
+            for j in 0..m {
+                out.set(i, j, (logits.get(i, j) - sq - shift).exp() * inv_sqrt_m);
+            }
+        }
+        out
+    }
+}
+
+impl AttentionApprox for Performer {
+    fn name(&self) -> String {
+        format!("performer(m={})", self.features)
+    }
+
+    fn compute(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        let d = q.cols;
+        let scale = 1.0 / (d as f32).powf(0.25);
+        let qs = q.scale(scale);
+        let ks = k.scale(scale);
+        let mut rng = Rng::new(self.seed ^ 0xFA50);
+        let w = Mat::randn(self.features, d, 1.0, &mut rng);
+        let pq = self.phi(&qs, &w, true); // (n, m)
+        let pk = self.phi(&ks, &w, false); // (n, m) — shared key shift
+        // numerator: pq (pk^T V); denominator: pq (pk^T 1)
+        let kv = pk.transpose().matmul(v); // (m, d)
+        let num = pq.matmul(&kv); // (n, d)
+        let ksum: Vec<f32> = (0..self.features)
+            .map(|j| (0..pk.rows).map(|i| pk.get(i, j)).sum())
+            .collect();
+        let mut out = num;
+        for i in 0..out.rows {
+            let den: f32 = pq
+                .row(i)
+                .iter()
+                .zip(ksum.iter())
+                .map(|(a, b)| a * b)
+                .sum::<f32>()
+                .max(1e-20);
+            let inv = 1.0 / den;
+            for x in out.row_mut(i) {
+                *x *= inv;
+            }
+        }
+        out
+    }
+
+    fn workload(&self, n: usize, d: usize) -> usize {
+        2 * n * self.features * d + 2 * self.features * n * d
+    }
+
+    fn memory_elems(&self, n: usize, d: usize) -> usize {
+        2 * n * self.features + self.features * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+
+    #[test]
+    fn approximates_exact_with_many_features() {
+        let mut rng = Rng::new(0);
+        let q = Mat::randn(48, 8, 0.4, &mut rng);
+        let k = Mat::randn(48, 8, 0.4, &mut rng);
+        let v = Mat::randn(48, 8, 1.0, &mut rng);
+        let exact = ops::exact_attention(&q, &k, &v);
+        let z = Performer::new(512, 3).compute(&q, &k, &v);
+        let err = ops::rel_fro_error(&z, &exact);
+        assert!(err < 0.35, "err={err}");
+    }
+
+    #[test]
+    fn more_features_help_on_average() {
+        let mut rng = Rng::new(1);
+        let (mut e8, mut e256) = (0.0, 0.0);
+        for seed in 0..6 {
+            let q = Mat::randn(32, 8, 0.4, &mut rng);
+            let k = Mat::randn(32, 8, 0.4, &mut rng);
+            let v = Mat::randn(32, 8, 1.0, &mut rng);
+            let exact = ops::exact_attention(&q, &k, &v);
+            e8 += ops::rel_fro_error(&Performer::new(8, seed).compute(&q, &k, &v), &exact);
+            e256 += ops::rel_fro_error(&Performer::new(256, seed).compute(&q, &k, &v), &exact);
+        }
+        assert!(e256 < e8, "{e256} vs {e8}");
+    }
+
+    #[test]
+    fn convexity_with_ones_values() {
+        let mut rng = Rng::new(2);
+        let q = Mat::randn(32, 8, 1.0, &mut rng);
+        let k = Mat::randn(32, 8, 1.0, &mut rng);
+        let v = Mat::full(32, 8, 1.0);
+        let z = Performer::new(64, 0).compute(&q, &k, &v);
+        // kernel estimators normalize exactly for constant values
+        for &x in z.data.iter() {
+            assert!((x - 1.0).abs() < 1e-4, "{x}");
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Bench harness (no `criterion` available offline): warmup + timed
+//! iterations with mean / p50 / p95 statistics and a tabular reporter used
+//! by every `rust/benches/bench_*.rs` target.
+
+use std::time::Instant;
+
+/// Timing statistics over the measured iterations.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    Stats {
+        iters: samples.len(),
+        mean_ms: mean,
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+        min_ms: samples[0],
+    }
+}
+
+/// Adaptive variant: run for at least `budget_ms` total measure time.
+pub fn time_budget<F: FnMut()>(budget_ms: f64, mut f: F) -> Stats {
+    // one calibration run
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_secs_f64() * 1e3;
+    let iters = ((budget_ms / one.max(1e-3)).ceil() as usize).clamp(3, 1000);
+    time_it(1, iters, f)
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a byte count as MiB with 2 decimals (Tab. 7 Mem column).
+pub fn mib(elems_f32: usize) -> String {
+    format!("{:.2}", elems_f32 as f64 * 4.0 / (1024.0 * 1024.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts_iters() {
+        let mut n = 0;
+        let s = time_it(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_ms >= 0.0);
+        assert!(s.p50_ms <= s.p95_ms + 1e-9);
+        assert!(s.min_ms <= s.mean_ms + 1e-9);
+    }
+
+    #[test]
+    fn time_budget_at_least_three_iters() {
+        let mut n = 0;
+        let s = time_budget(0.001, || n += 1);
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "ms"]);
+        t.row(&["transformer".into(), "1.0".into()]);
+        t.row(&["mra-2".into(), "0.5".into()]);
+        let r = t.render();
+        assert!(r.contains("transformer"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into()]);
+    }
+
+    #[test]
+    fn mib_formats() {
+        assert_eq!(mib(262144), "1.00");
+    }
+}

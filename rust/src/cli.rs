@@ -1,0 +1,118 @@
+//! Minimal CLI argument parser (no `clap` available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and error messages listing what was
+//! expected.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// First positional argument (the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_kv_and_positional() {
+        let a = parse("serve --port 8080 --mode fast extra");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.str_or("port", ""), "8080");
+        assert_eq!(a.str_or("mode", ""), "fast");
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn parses_equals_form_and_bools() {
+        let a = parse("run --n=512 --verbose --m 3");
+        assert_eq!(a.usize_or("n", 0).unwrap(), 512);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.usize_or("m", 0).unwrap(), 3);
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 0).is_err());
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse("x --fast --n 3");
+        assert!(a.bool("fast"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+}

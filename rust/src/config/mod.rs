@@ -1,0 +1,199 @@
+//! Config system: a TOML-subset parser (no `serde` offline) plus the typed
+//! launcher configs for the serving coordinator and the trainer.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (quoted), integer, float and boolean values, `#` comments.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed config: `section.key -> raw value string`.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}: expected float, got {v:?}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => bail!("{key}: expected true/false, got {v:?}"),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.values.contains_key(key)
+    }
+}
+
+/// Serving coordinator configuration (see `configs/serve.toml`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max requests per batch (also the artifact batch bucket ceiling).
+    pub max_batch: usize,
+    /// Flush a partial batch after this many microseconds.
+    pub flush_us: u64,
+    /// Worker threads (each owns a runtime executor handle).
+    pub workers: usize,
+    /// Bounded queue depth before back-pressure rejects.
+    pub queue_depth: usize,
+    /// Artifact name prefix to serve, e.g. `fwd_mlm_mra2_n128...`.
+    pub model: String,
+    pub artifacts_dir: String,
+}
+
+impl ServeConfig {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        Ok(ServeConfig {
+            max_batch: c.usize_or("serve.max_batch", 8)?,
+            flush_us: c.usize_or("serve.flush_us", 2000)? as u64,
+            workers: c.usize_or("serve.workers", 2)?,
+            queue_depth: c.usize_or("serve.queue_depth", 256)?,
+            model: c.str_or("serve.model", "mlm_mra2_n128_d128_l2_h2_v512"),
+            artifacts_dir: c.str_or("serve.artifacts_dir", "artifacts"),
+        })
+    }
+
+    pub fn default_config() -> Self {
+        Self::from_config(&Config::default()).unwrap()
+    }
+}
+
+/// Trainer configuration (see `configs/train.toml`).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub model: String,
+    pub artifacts_dir: String,
+    pub log_every: usize,
+}
+
+impl TrainConfig {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        Ok(TrainConfig {
+            steps: c.usize_or("train.steps", 200)?,
+            batch: c.usize_or("train.batch", 32)?,
+            eval_every: c.usize_or("train.eval_every", 50)?,
+            seed: c.usize_or("train.seed", 0)? as u64,
+            model: c.str_or("train.model", "mlm_mra2_n128_d128_l2_h2_v512"),
+            artifacts_dir: c.str_or("train.artifacts_dir", "artifacts"),
+            log_every: c.usize_or("train.log_every", 10)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[serve]
+max_batch = 16
+flush_us = 500
+model = "fwd_mlm_mra2"
+debug = true
+
+[train]
+steps = 100
+lr = 0.001
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("serve.max_batch", 0).unwrap(), 16);
+        assert_eq!(c.str_or("serve.model", ""), "fwd_mlm_mra2");
+        assert!(c.bool_or("serve.debug", false).unwrap());
+        assert_eq!(c.f64_or("train.lr", 0.0).unwrap(), 0.001);
+        assert_eq!(c.usize_or("missing.key", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn typed_errors_are_reported() {
+        let c = Config::parse("[a]\nx = hello\n").unwrap();
+        assert!(c.usize_or("a.x", 0).is_err());
+        assert!(c.bool_or("a.x", false).is_err());
+    }
+
+    #[test]
+    fn serve_config_defaults_and_overrides() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let s = ServeConfig::from_config(&c).unwrap();
+        assert_eq!(s.max_batch, 16);
+        assert_eq!(s.flush_us, 500);
+        assert_eq!(s.workers, 2); // default
+        let d = ServeConfig::default_config();
+        assert_eq!(d.max_batch, 8);
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        assert!(Config::parse("[a]\nnot a kv line\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let c = Config::parse("# only comments\n\n  # more\n").unwrap();
+        assert!(!c.has("anything"));
+    }
+}

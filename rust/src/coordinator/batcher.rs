@@ -1,0 +1,163 @@
+//! Dynamic batcher: groups requests into batches bounded by `max_batch`,
+//! flushing partial batches after `flush_after` (the latency/throughput
+//! knob of every serving system; tuned in EXPERIMENTS.md §Perf).
+//!
+//! Pure data structure — the server thread drives it with `push` /
+//! `poll_due`, so every invariant is unit-testable without threads.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One inference request (token ids, any length <= the model's seq_len).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub arrived: Instant,
+}
+
+/// A formed batch, FIFO order preserved.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Deadline-flushed dynamic batcher.
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    max_batch: usize,
+    flush_after: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, flush_after: Duration) -> Self {
+        assert!(max_batch > 0);
+        Batcher { queue: VecDeque::new(), max_batch, flush_after }
+    }
+
+    /// Enqueue a request; returns a full batch when `max_batch` is reached.
+    pub fn push(&mut self, req: Request) -> Option<Batch> {
+        self.queue.push_back(req);
+        if self.queue.len() >= self.max_batch {
+            return self.take(self.max_batch);
+        }
+        None
+    }
+
+    /// Flush a partial batch whose oldest request has exceeded the
+    /// deadline (called periodically by the server loop).
+    pub fn poll_due(&mut self, now: Instant) -> Option<Batch> {
+        let oldest = self.queue.front()?;
+        if now.duration_since(oldest.arrived) >= self.flush_after {
+            return self.take(self.max_batch);
+        }
+        None
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            self.take(self.queue.len())
+        }
+    }
+
+    fn take(&mut self, k: usize) -> Option<Batch> {
+        let k = k.min(self.queue.len());
+        if k == 0 {
+            return None;
+        }
+        let requests: Vec<Request> = self.queue.drain(..k).collect();
+        Some(Batch { requests })
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request { id, tokens: vec![2, 5, 6], arrived: Instant::now() }
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let mut b = Batcher::new(3, Duration::from_secs(10));
+        assert!(b.push(req(0)).is_none());
+        assert!(b.push(req(1)).is_none());
+        let batch = b.push(req(2)).expect("full batch");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(4, Duration::from_secs(10));
+        for i in 0..3 {
+            b.push(req(i));
+        }
+        let batch = b.push(req(3)).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn deadline_flush_releases_partial() {
+        let mut b = Batcher::new(8, Duration::from_micros(1));
+        b.push(req(0));
+        b.push(req(1));
+        std::thread::sleep(Duration::from_millis(1));
+        let batch = b.poll_due(Instant::now()).expect("due batch");
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn poll_not_due_returns_none() {
+        let mut b = Batcher::new(8, Duration::from_secs(60));
+        b.push(req(0));
+        assert!(b.poll_due(Instant::now()).is_none());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated_property() {
+        use crate::proptest::for_all_seeds;
+        for_all_seeds(25, |_, rng| {
+            let max_batch = 1 + rng.below(7);
+            let mut b = Batcher::new(max_batch, Duration::from_secs(100));
+            let n = 1 + rng.below(40);
+            let mut seen: Vec<u64> = Vec::new();
+            for i in 0..n as u64 {
+                if let Some(batch) = b.push(req(i)) {
+                    if batch.len() > max_batch {
+                        return Err(format!("batch too big: {}", batch.len()));
+                    }
+                    seen.extend(batch.requests.iter().map(|r| r.id));
+                }
+            }
+            if let Some(batch) = b.drain() {
+                seen.extend(batch.requests.iter().map(|r| r.id));
+            }
+            let want: Vec<u64> = (0..n as u64).collect();
+            if seen != want {
+                return Err(format!("lost/dup/reordered: {seen:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,154 @@
+//! Serving metrics: log-bucketed latency histogram + counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency histogram from 1us to ~17min (31 doubling buckets).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..31).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate percentile (upper edge of the containing bucket, us).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << self.buckets.len()
+    }
+}
+
+/// Coordinator-wide metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub request_latency: Histogram,
+    pub batch_exec: Histogram,
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub rejected: AtomicU64,
+    pub padded_slots: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc_requests(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_batches(&self, padded: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_slots.fetch_add(padded, Ordering::Relaxed);
+    }
+
+    pub fn inc_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One-line summary for logs / bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} rejected={} pad_slots={} latency_mean={:.2}ms p50={:.2}ms p95={:.2}ms batch_exec_mean={:.2}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.padded_slots.load(Ordering::Relaxed),
+            self.request_latency.mean_us() / 1e3,
+            self.request_latency.percentile_us(0.5) as f64 / 1e3,
+            self.request_latency.percentile_us(0.95) as f64 / 1e3,
+            self.batch_exec.mean_us() / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_us() - 200.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let h = Histogram::new();
+        for i in 1..100u64 {
+            h.record(Duration::from_micros(i * 10));
+        }
+        let p50 = h.percentile_us(0.5);
+        let p95 = h.percentile_us(0.95);
+        assert!(p50 <= p95);
+        assert!(p95 <= 2048, "p95={p95}"); // 990us rounds up to <=1024 bucket
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn metrics_summary_contains_counts() {
+        let m = Metrics::new();
+        m.inc_requests();
+        m.inc_batches(3);
+        m.inc_rejected();
+        let s = m.summary();
+        assert!(s.contains("requests=1"));
+        assert!(s.contains("pad_slots=3"));
+        assert!(s.contains("rejected=1"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the serving/training control plane that owns the
+//! request path (Python never appears here — only AOT artifacts executed
+//! through [`crate::runtime`]).
+//!
+//! * [`metrics`] — latency histograms + throughput counters.
+//! * [`batcher`] — dynamic batching with deadline flush.
+//! * [`router`]  — sequence-length / batch-size bucket routing + padding.
+//! * [`server`]  — thread/worker serving loop with backpressure.
+//! * [`trainer`] — training driver over the AOT `train_step` artifacts.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod trainer;
+
+pub use batcher::{Batch, Batcher, Request};
+pub use metrics::Metrics;
+pub use router::Router;
+pub use server::Server;
+pub use trainer::Trainer;

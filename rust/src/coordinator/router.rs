@@ -1,0 +1,149 @@
+//! Bucket router: maps a formed batch onto the AOT artifact grid.
+//!
+//! Artifacts are compiled per `(model tag, batch size)` bucket
+//! (`fwd_<tag>_b{B}`); the router picks the smallest bucket that fits,
+//! pads the token matrix to `(B, seq_len)`, and slices the outputs back to
+//! the real requests.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Manifest;
+
+/// Routing decision for one batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Route {
+    pub artifact: String,
+    pub bucket: usize,
+    pub padded_slots: usize,
+}
+
+/// Router over the `fwd_<tag>_b*` artifacts of one model.
+pub struct Router {
+    pub tag: String,
+    pub seq_len: usize,
+    /// Available batch buckets, ascending.
+    buckets: Vec<usize>,
+}
+
+impl Router {
+    /// Discover buckets for `tag` from the manifest.
+    pub fn new(manifest: &Manifest, tag: &str) -> Result<Self> {
+        let prefix = format!("fwd_{tag}_b");
+        let mut buckets: Vec<usize> = manifest
+            .names_matching(&prefix)
+            .iter()
+            .filter_map(|n| n.strip_prefix(&prefix).and_then(|b| b.parse().ok()))
+            .collect();
+        buckets.sort_unstable();
+        if buckets.is_empty() {
+            bail!("no fwd artifacts for tag {tag}");
+        }
+        let cfg = manifest.load_cfg(tag)?;
+        let seq_len = cfg
+            .get("seq_len")
+            .context("cfg missing seq_len")?
+            .parse()
+            .context("bad seq_len")?;
+        Ok(Router { tag: tag.to_string(), seq_len, buckets })
+    }
+
+    /// Construct directly (tests).
+    pub fn with_buckets(tag: &str, seq_len: usize, buckets: Vec<usize>) -> Self {
+        Router { tag: tag.to_string(), seq_len, buckets }
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Pick the smallest bucket >= `batch_len`.
+    pub fn route(&self, batch_len: usize) -> Result<Route> {
+        let bucket = *self
+            .buckets
+            .iter()
+            .find(|&&b| b >= batch_len)
+            .with_context(|| {
+                format!("batch {batch_len} exceeds largest bucket {}", self.max_bucket())
+            })?;
+        Ok(Route {
+            artifact: format!("fwd_{}_b{}", self.tag, bucket),
+            bucket,
+            padded_slots: bucket - batch_len,
+        })
+    }
+
+    /// Pad token rows (each <= seq_len) into a `(bucket, seq_len)` i32 grid.
+    pub fn pad_tokens(&self, rows: &[Vec<i32>], bucket: usize) -> Result<Vec<i32>> {
+        if rows.len() > bucket {
+            bail!("{} rows exceed bucket {bucket}", rows.len());
+        }
+        let n = self.seq_len;
+        let mut out = vec![0i32; bucket * n];
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() > n {
+                bail!("request length {} exceeds seq_len {n}", row.len());
+            }
+            out[i * n..i * n + row.len()].copy_from_slice(row);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::with_buckets("mlm_test", 8, vec![1, 4, 8])
+    }
+
+    #[test]
+    fn picks_smallest_fitting_bucket() {
+        let r = router();
+        assert_eq!(r.route(1).unwrap().bucket, 1);
+        assert_eq!(r.route(2).unwrap().bucket, 4);
+        assert_eq!(r.route(4).unwrap().bucket, 4);
+        assert_eq!(r.route(5).unwrap().bucket, 8);
+        assert_eq!(r.route(5).unwrap().padded_slots, 3);
+        assert!(r.route(9).is_err());
+    }
+
+    #[test]
+    fn artifact_name_format() {
+        let r = router();
+        assert_eq!(r.route(3).unwrap().artifact, "fwd_mlm_test_b4");
+    }
+
+    #[test]
+    fn pads_token_grid() {
+        let r = router();
+        let rows = vec![vec![2, 9, 9], vec![2, 7]];
+        let grid = r.pad_tokens(&rows, 4).unwrap();
+        assert_eq!(grid.len(), 4 * 8);
+        assert_eq!(&grid[0..4], &[2, 9, 9, 0]);
+        assert_eq!(&grid[8..12], &[2, 7, 0, 0]);
+        assert!(grid[16..].iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn rejects_oversized_requests() {
+        let r = router();
+        assert!(r.pad_tokens(&[vec![0; 9]], 1).is_err());
+        assert!(r.pad_tokens(&[vec![], vec![]], 1).is_err());
+    }
+
+    #[test]
+    fn manifest_discovery() {
+        use std::path::PathBuf;
+        let text = "fwd_mlm_x_b1\ta\tfloat32:4,int32:1x8\t1\tmlm_x\nfwd_mlm_x_b8\ta\tfloat32:4,int32:8x8\t1\tmlm_x\n";
+        let m = Manifest::parse(text, PathBuf::from("/tmp")).unwrap();
+        let prefix = "fwd_mlm_x_b";
+        let mut buckets: Vec<usize> = m
+            .names_matching(prefix)
+            .iter()
+            .filter_map(|n| n.strip_prefix(prefix).and_then(|b| b.parse().ok()))
+            .collect();
+        buckets.sort_unstable();
+        assert_eq!(buckets, vec![1, 8]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Serving loop: bounded ingress queue -> dynamic batcher -> bucket router
+//! -> PJRT worker pool.  Threads + channels (no async runtime available
+//! offline); the architecture mirrors a vLLM-style router with one
+//! compiled executable per `(model, batch-bucket)`.
+//!
+//! ```text
+//!  submit() --sync_channel(queue_depth)--> batcher thread --+--> worker 0
+//!     ^                                   (deadline flush)  +--> worker 1
+//!     `-- backpressure: TrySendError => Busy                ...
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::{Batch, Batcher, Request};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::Router;
+use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
+
+/// Per-request response: argmax token predictions for the request's
+/// positions (MLM head output).
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub predictions: Vec<i32>,
+    pub latency: Duration,
+}
+
+enum Ingress {
+    Req(Request, Sender<Result<Response, String>>),
+    Shutdown,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    ingress: SyncSender<Ingress>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spin up the batcher + worker threads over the runtime executor.
+    pub fn start(
+        runtime: RuntimeHandle,
+        manifest: Arc<Manifest>,
+        cfg: ServeConfig,
+    ) -> Result<Self> {
+        let metrics = Arc::new(Metrics::new());
+        let router = Arc::new(Router::new(&manifest, &cfg.model)?);
+        // model parameters are loaded once and shared by every worker
+        let params = Arc::new(
+            manifest
+                .load_f32(&format!("{}.params.f32", cfg.model))
+                .context("loading model params")?,
+        );
+        // warm the executable cache so first requests don't pay compile time
+        for b in [1usize, cfg.max_batch] {
+            if let Ok(route) = router.route(b) {
+                runtime.warm(&route.artifact)?;
+            }
+        }
+        let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_depth);
+        let (batch_tx, batch_rx) =
+            sync_channel::<(Batch, Vec<Sender<Result<Response, String>>>)>(cfg.workers * 2);
+        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+
+        let mut threads = Vec::new();
+        // batcher thread
+        {
+            let cfg = cfg.clone();
+            threads.push(std::thread::spawn(move || {
+                batcher_loop(ingress_rx, batch_tx, &cfg);
+            }));
+        }
+        // workers
+        for _ in 0..cfg.workers.max(1) {
+            let rx = batch_rx.clone();
+            let rt = runtime.clone();
+            let router = router.clone();
+            let params = params.clone();
+            let metrics = metrics.clone();
+            threads.push(std::thread::spawn(move || {
+                worker_loop(rx, rt, router, params, metrics);
+            }));
+        }
+        Ok(Server { ingress: ingress_tx, metrics, next_id: AtomicU64::new(0), threads })
+    }
+
+    /// Submit a request; blocks until the response arrives.
+    /// Returns `Err` on backpressure (queue full) or execution failure.
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = Request { id, tokens, arrived: Instant::now() };
+        self.metrics.inc_requests();
+        match self.ingress.try_send(Ingress::Req(req, tx)) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                self.metrics.inc_rejected();
+                bail!("server busy (queue full)");
+            }
+            Err(TrySendError::Disconnected(_)) => bail!("server stopped"),
+        }
+        rx.recv()
+            .context("server dropped request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Graceful shutdown: flush pending batches, join threads.
+    pub fn shutdown(mut self) {
+        let _ = self.ingress.send(Ingress::Shutdown);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    ingress: Receiver<Ingress>,
+    batch_tx: SyncSender<(Batch, Vec<Sender<Result<Response, String>>>)>,
+    cfg: &ServeConfig,
+) {
+    let mut batcher = Batcher::new(cfg.max_batch, Duration::from_micros(cfg.flush_us));
+    let mut responders: Vec<Sender<Result<Response, String>>> = Vec::new();
+    loop {
+        // wait up to the flush deadline for the next request
+        match ingress.recv_timeout(Duration::from_micros(cfg.flush_us.max(100))) {
+            Ok(Ingress::Req(req, resp)) => {
+                responders.push(resp);
+                if let Some(batch) = batcher.push(req) {
+                    let rs = responders.drain(..).collect();
+                    if batch_tx.send((batch, rs)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Ok(Ingress::Shutdown) => {
+                if let Some(batch) = batcher.drain() {
+                    let rs = responders.drain(..).collect();
+                    let _ = batch_tx.send((batch, rs));
+                }
+                return;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll_due(Instant::now()) {
+                    let rs = responders.drain(..).collect();
+                    if batch_tx.send((batch, rs)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                if let Some(batch) = batcher.drain() {
+                    let rs = responders.drain(..).collect();
+                    let _ = batch_tx.send((batch, rs));
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn worker_loop(
+    rx: Arc<std::sync::Mutex<Receiver<(Batch, Vec<Sender<Result<Response, String>>>)>>>,
+    rt: RuntimeHandle,
+    router: Arc<Router>,
+    params: Arc<Vec<f32>>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let item = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let (batch, responders) = match item {
+            Ok(x) => x,
+            Err(_) => return,
+        };
+        let result = run_batch(&rt, &router, &params, &batch, &metrics);
+        match result {
+            Ok(mut responses) => {
+                for (resp, tx) in responses.drain(..).zip(responders) {
+                    let _ = tx.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for tx in responders {
+                    let _ = tx.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Execute one batch through the routed artifact; slice outputs per request.
+fn run_batch(
+    rt: &RuntimeHandle,
+    router: &Router,
+    params: &[f32],
+    batch: &Batch,
+    metrics: &Metrics,
+) -> Result<Vec<Response>> {
+    let route = router.route(batch.len())?;
+    let rows: Vec<Vec<i32>> = batch.requests.iter().map(|r| r.tokens.clone()).collect();
+    let ids = router.pad_tokens(&rows, route.bucket)?;
+    let n = router.seq_len;
+    let inputs = vec![
+        HostTensor::F32(params.to_vec(), vec![params.len()]),
+        HostTensor::I32(ids, vec![route.bucket, n]),
+    ];
+    let t0 = Instant::now();
+    let outputs = rt.execute(&route.artifact, inputs)?;
+    metrics.batch_exec.record(t0.elapsed());
+    metrics.inc_batches(route.padded_slots as u64);
+    // logits: (bucket, n, vocab) -> per-request argmax over the vocab
+    let logits = outputs[0].as_f32()?;
+    let dims = outputs[0].dims();
+    let vocab = dims[2];
+    let mut out = Vec::with_capacity(batch.len());
+    for (bi, req) in batch.requests.iter().enumerate() {
+        let len = req.tokens.len();
+        let mut preds = Vec::with_capacity(len);
+        for pos in 0..len {
+            let base = (bi * n + pos) * vocab;
+            let row = &logits[base..base + vocab];
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (t, &v) in row.iter().enumerate() {
+                if v > best_v {
+                    best_v = v;
+                    best = t;
+                }
+            }
+            preds.push(best as i32);
+        }
+        let latency = req.arrived.elapsed();
+        metrics.request_latency.record(latency);
+        out.push(Response { id: req.id, predictions: preds, latency });
+    }
+    Ok(out)
+}
+
+// Integration tests that exercise Server against real artifacts live in
+// rust/tests/serve_integration.rs (skipped when artifacts/ is absent).

@@ -1,0 +1,194 @@
+//! Training driver: runs the AOT `train_<tag>_b{B}` step artifact in a loop
+//! over synthetic-corpus batches, holding parameters + Adam moments as flat
+//! host vectors (the artifact's interchange layout).
+//!
+//! The whole loop is Rust-side: Python produced the HLO once at build time.
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::corpus::{Corpus, CorpusConfig, MlmBatch};
+use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
+
+/// Loss/accuracy trace of a training run.
+#[derive(Debug, Default, Clone)]
+pub struct TrainLog {
+    pub steps: Vec<usize>,
+    pub losses: Vec<f32>,
+    pub accs: Vec<f32>,
+}
+
+impl TrainLog {
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    /// Mean of the first / last `k` recorded losses (trend check).
+    pub fn head_tail_means(&self, k: usize) -> (f32, f32) {
+        let k = k.min(self.losses.len());
+        let head: f32 = self.losses[..k].iter().sum::<f32>() / k as f32;
+        let tail: f32 =
+            self.losses[self.losses.len() - k..].iter().sum::<f32>() / k as f32;
+        (head, tail)
+    }
+}
+
+/// MLM trainer over one model tag.
+pub struct Trainer {
+    rt: RuntimeHandle,
+    #[allow(dead_code)]
+    manifest: std::sync::Arc<Manifest>,
+    pub cfg: TrainConfig,
+    pub params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: usize,
+    corpus: Corpus,
+    train_artifact: String,
+    eval_artifact: String,
+    seq_len: usize,
+}
+
+impl Trainer {
+    pub fn new(
+        rt: RuntimeHandle,
+        #[allow(dead_code)]
+    manifest: std::sync::Arc<Manifest>,
+        cfg: TrainConfig,
+    ) -> Result<Self> {
+        let params = manifest
+            .load_f32(&format!("{}.params.f32", cfg.model))
+            .context("loading initial params")?;
+        let model_cfg = manifest.load_cfg(&cfg.model)?;
+        let seq_len: usize = model_cfg
+            .get("seq_len")
+            .context("cfg missing seq_len")?
+            .parse()?;
+        let vocab: usize = model_cfg.get("vocab").context("cfg missing vocab")?.parse()?;
+        let train_artifact = format!("train_{}_b{}", cfg.model, cfg.batch);
+        let eval_artifact = format!("eval_{}_b{}", cfg.model, cfg.batch);
+        manifest.get(&train_artifact)?; // fail fast with a clear error
+        let corpus = Corpus::new(
+            CorpusConfig { vocab, seq_len, ..Default::default() },
+            cfg.seed,
+        );
+        let n = params.len();
+        Ok(Trainer {
+            rt,
+            manifest,
+            cfg,
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+            corpus,
+            train_artifact,
+            eval_artifact,
+            seq_len,
+        })
+    }
+
+    fn batch_tensors(&self, b: &MlmBatch) -> Vec<HostTensor> {
+        vec![
+            HostTensor::I32(b.input_ids.clone(), vec![b.batch, self.seq_len]),
+            HostTensor::I32(b.labels.clone(), vec![b.batch, self.seq_len]),
+            HostTensor::F32(b.weights.clone(), vec![b.batch, self.seq_len]),
+        ]
+    }
+
+    /// One optimizer step; returns `(loss, acc)`.
+    pub fn train_step(&mut self) -> Result<(f32, f32)> {
+        let batch = self.corpus.mlm_batch(self.cfg.batch);
+        let mut inputs = vec![
+            HostTensor::F32(std::mem::take(&mut self.params), vec![self.m.len()]),
+            HostTensor::F32(std::mem::take(&mut self.m), vec![self.v.len()]),
+            HostTensor::F32(std::mem::take(&mut self.v), vec![0]),
+        ];
+        // fix the placeholder dims (taken vectors know their own length)
+        if let HostTensor::F32(p, d) = &mut inputs[0] {
+            *d = vec![p.len()];
+        }
+        if let HostTensor::F32(p, d) = &mut inputs[1] {
+            *d = vec![p.len()];
+        }
+        if let HostTensor::F32(p, d) = &mut inputs[2] {
+            *d = vec![p.len()];
+        }
+        inputs.push(HostTensor::scalar_f32(self.step as f32));
+        inputs.extend(self.batch_tensors(&batch));
+        let mut out = self.rt.execute(&self.train_artifact, inputs)?;
+        // outputs: params', m', v', loss, acc
+        let acc = scalar(&out.pop().unwrap())?;
+        let loss = scalar(&out.pop().unwrap())?;
+        let v = out.pop().unwrap();
+        let m = out.pop().unwrap();
+        let p = out.pop().unwrap();
+        self.params = into_f32(p)?;
+        self.m = into_f32(m)?;
+        self.v = into_f32(v)?;
+        self.step += 1;
+        Ok((loss, acc))
+    }
+
+    /// Held-out evaluation batch (fresh seed stream).
+    pub fn eval(&mut self) -> Result<(f32, f32)> {
+        let mut held_out = Corpus::new(
+            CorpusConfig { vocab: 512, seq_len: self.seq_len, ..Default::default() },
+            self.cfg.seed ^ 0xEEE,
+        );
+        let batch = held_out.mlm_batch(self.cfg.batch);
+        let mut inputs =
+            vec![HostTensor::F32(self.params.clone(), vec![self.params.len()])];
+        inputs.extend(self.batch_tensors(&batch));
+        let out = self.rt.execute(&self.eval_artifact, inputs)?;
+        Ok((scalar(&out[0])?, scalar(&out[1])?))
+    }
+
+    /// Run the configured number of steps, logging every `log_every`.
+    pub fn run(&mut self) -> Result<TrainLog> {
+        let mut log = TrainLog::default();
+        for s in 0..self.cfg.steps {
+            let (loss, acc) = self.train_step()?;
+            if s % self.cfg.log_every == 0 || s + 1 == self.cfg.steps {
+                log.steps.push(s);
+                log.losses.push(loss);
+                log.accs.push(acc);
+                println!("step {s:>5}  loss {loss:.4}  masked-acc {acc:.3}");
+            }
+            if self.cfg.eval_every > 0 && s > 0 && s % self.cfg.eval_every == 0 {
+                let (el, ea) = self.eval()?;
+                println!("step {s:>5}  [eval] loss {el:.4}  masked-acc {ea:.3}");
+            }
+        }
+        Ok(log)
+    }
+}
+
+fn scalar(t: &HostTensor) -> Result<f32> {
+    Ok(t.as_f32()?[0])
+}
+
+fn into_f32(t: HostTensor) -> Result<Vec<f32>> {
+    match t {
+        HostTensor::F32(v, _) => Ok(v),
+        _ => anyhow::bail!("expected f32 output"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_log_trend_helpers() {
+        let log = TrainLog {
+            steps: vec![0, 1, 2, 3],
+            losses: vec![4.0, 3.0, 2.0, 1.0],
+            accs: vec![0.1, 0.2, 0.3, 0.4],
+        };
+        assert_eq!(log.final_loss(), 1.0);
+        let (head, tail) = log.head_tail_means(2);
+        assert!((head - 3.5).abs() < 1e-6);
+        assert!((tail - 1.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,431 @@
+//! LRA-analog classification tasks (Table 5 substitution, DESIGN.md §5).
+//!
+//! Each task generates `(token sequence, class label)` pairs in the
+//! vocabulary/shape expected by the `cls_*` AOT artifacts (vocab 64,
+//! 10 classes):
+//!
+//! * **ListOps-lite** — nested `MAX/MIN/MED` expressions over digits; the
+//!   label is the exact evaluation (long-range hierarchical dependency).
+//! * **ByteText** — "sentiment" over a token stream: class = which of the
+//!   class-keyed token groups dominates a weighted count (bag-of-tokens
+//!   with positional decay, mimicking byte-level text classification).
+//! * **Retrieval** — two segments separated by a marker; label = number of
+//!   shared rare tokens between them, bucketed (cross-segment matching).
+//! * **ImageGrid** — a 2D shapes task flattened to a sequence: a rectangle
+//!   or cross drawn on a grid of noise tokens; label encodes shape kind and
+//!   coarse position (the CIFAR/Pathfinder stand-in).
+
+use crate::tensor::Rng;
+
+/// Token ids: 0 = pad, 1..=9 digits/values, 10..=12 ops, 13 open, 14 close,
+/// 15 separator, 16.. vocabulary noise.
+const OP_MAX: i32 = 10;
+const OP_MIN: i32 = 11;
+const OP_MED: i32 = 12;
+const OPEN: i32 = 13;
+const CLOSE: i32 = 14;
+const SEP: i32 = 15;
+pub const VOCAB: usize = 64;
+pub const CLASSES: usize = 10;
+
+/// One classification batch (layout matches the `cls` artifacts).
+#[derive(Clone, Debug)]
+pub struct ClsBatch {
+    pub input_ids: Vec<i32>, // (batch, seq)
+    pub labels: Vec<i32>,    // (batch,)
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// The LRA-analog tasks plus the MNLI-analog entailment task (Tab. 1/2's
+/// downstream column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LraTask {
+    ListOps,
+    ByteText,
+    Retrieval,
+    ImageGrid,
+    /// MNLI substitute: 3-class premise/hypothesis containment.
+    Entailment,
+}
+
+impl LraTask {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "listops" => Some(LraTask::ListOps),
+            "text" => Some(LraTask::ByteText),
+            "retrieval" => Some(LraTask::Retrieval),
+            "image" => Some(LraTask::ImageGrid),
+            "entail" | "mnli" => Some(LraTask::Entailment),
+            _ => None,
+        }
+    }
+
+    /// The four LRA tasks (Tab. 5); entailment is separate (Tab. 1/2).
+    pub fn all() -> [LraTask; 4] {
+        [LraTask::ListOps, LraTask::ByteText, LraTask::Retrieval, LraTask::ImageGrid]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LraTask::ListOps => "listops",
+            LraTask::ByteText => "text",
+            LraTask::Retrieval => "retrieval",
+            LraTask::ImageGrid => "image",
+            LraTask::Entailment => "entail",
+        }
+    }
+
+    /// Generate one `(tokens, label)` example of length `n`.
+    pub fn example(&self, n: usize, rng: &mut Rng) -> (Vec<i32>, i32) {
+        match self {
+            LraTask::ListOps => listops(n, rng),
+            LraTask::ByteText => byte_text(n, rng),
+            LraTask::Retrieval => retrieval(n, rng),
+            LraTask::ImageGrid => image_grid(n, rng),
+            LraTask::Entailment => entailment(n, rng),
+        }
+    }
+
+    /// Generate a batch.
+    pub fn batch(&self, batch: usize, n: usize, rng: &mut Rng) -> ClsBatch {
+        let mut input_ids = Vec::with_capacity(batch * n);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (seq, label) = self.example(n, rng);
+            debug_assert_eq!(seq.len(), n);
+            input_ids.extend(seq);
+            labels.push(label);
+        }
+        ClsBatch { input_ids, labels, batch, seq_len: n }
+    }
+}
+
+/// Recursive ListOps expression; returns (tokens, value 1..=9).
+fn listops(n: usize, rng: &mut Rng) -> (Vec<i32>, i32) {
+    fn gen(depth: usize, budget: usize, rng: &mut Rng, out: &mut Vec<i32>) -> i32 {
+        if depth == 0 || budget < 5 || rng.uniform() < 0.35 {
+            let d = 1 + rng.below(9) as i32;
+            out.push(d);
+            return d;
+        }
+        let op = [OP_MAX, OP_MIN, OP_MED][rng.below(3)];
+        out.push(OPEN);
+        out.push(op);
+        let arity = 2 + rng.below(3);
+        let mut vals = Vec::with_capacity(arity);
+        for _ in 0..arity {
+            vals.push(gen(depth - 1, budget / arity, rng, out));
+        }
+        out.push(CLOSE);
+        vals.sort_unstable();
+        match op {
+            OP_MAX => vals[vals.len() - 1],
+            OP_MIN => vals[0],
+            _ => vals[vals.len() / 2],
+        }
+    }
+    let mut toks = Vec::new();
+    let val = gen(4, n - 2, rng, &mut toks);
+    toks.truncate(n);
+    while toks.len() < n {
+        toks.push(0);
+    }
+    (toks, val - 1) // classes 0..=8
+}
+
+/// Weighted token-group counting (text classification analog).
+fn byte_text(n: usize, rng: &mut Rng) -> (Vec<i32>, i32) {
+    let class = rng.below(CLASSES) as i32;
+    let group_base = 16 + class * 4; // 4 tokens per class group
+    let mut toks = Vec::with_capacity(n);
+    for _ in 0..n {
+        if rng.uniform() < 0.25 {
+            toks.push(group_base + rng.below(4) as i32);
+        } else {
+            toks.push(16 + rng.below(VOCAB - 16) as i32);
+        }
+    }
+    // the label is recoverable: group `class` has elevated frequency
+    (toks, class)
+}
+
+/// Cross-segment rare-token matching.
+fn retrieval(n: usize, rng: &mut Rng) -> (Vec<i32>, i32) {
+    let half = (n - 1) / 2;
+    let shared = rng.below(CLASSES); // label = number of shared rare tokens
+    let rare: Vec<i32> = (0..shared).map(|t| 48 + t as i32).collect();
+    let seg = |rng: &mut Rng| -> Vec<i32> {
+        let mut s: Vec<i32> = (0..half).map(|_| 16 + rng.below(28) as i32).collect();
+        for (t, &r) in rare.iter().enumerate() {
+            let pos = (t * 7 + rng.below(half / 2)) % half;
+            s[pos] = r;
+        }
+        s
+    };
+    let mut toks = seg(rng);
+    toks.push(SEP);
+    toks.extend(seg(rng));
+    while toks.len() < n {
+        toks.push(0);
+    }
+    toks.truncate(n);
+    (toks, shared as i32)
+}
+
+/// MNLI-analog entailment: premise segment + SEP + hypothesis segment.
+/// Label 0 = entailment (every hypothesis content token appears in the
+/// premise), 1 = contradiction (a *negation-marked* premise token appears
+/// in the hypothesis), 2 = neutral (hypothesis introduces novel tokens).
+/// Deciding the label requires matching tokens across the SEP boundary —
+/// the long-range dependency MNLI heads rely on.
+fn entailment(n: usize, rng: &mut Rng) -> (Vec<i32>, i32) {
+    let label = rng.below(3) as i32;
+    let prem_len = n * 2 / 3 - 1;
+    let hyp_len = n - prem_len - 1;
+    let neg_marker = 47i32; // "not" token
+    // premise: content tokens from 16..40 (+ optional negated token)
+    let mut premise: Vec<i32> = (0..prem_len).map(|_| 16 + rng.below(24) as i32).collect();
+    let hyp_take = 4.min(hyp_len);
+    let mut hypothesis: Vec<i32> = Vec::with_capacity(hyp_len);
+    match label {
+        0 => {
+            // entailment: copy premise tokens into the hypothesis
+            for _ in 0..hyp_len {
+                hypothesis.push(premise[rng.below(prem_len)]);
+            }
+        }
+        1 => {
+            // contradiction: premise negates a token the hypothesis asserts
+            let tok = 16 + rng.below(24) as i32;
+            let pos = rng.below(prem_len - 1);
+            premise[pos] = neg_marker;
+            premise[pos + 1] = tok;
+            for t in 0..hyp_len {
+                hypothesis.push(if t < hyp_take {
+                    tok
+                } else {
+                    premise[rng.below(prem_len)]
+                });
+            }
+        }
+        _ => {
+            // neutral: hypothesis introduces tokens outside the premise set
+            for t in 0..hyp_len {
+                hypothesis.push(if t < hyp_take {
+                    40 + rng.below(6) as i32 // novel range, disjoint from 16..40
+                } else {
+                    premise[rng.below(prem_len)]
+                });
+            }
+        }
+    }
+    let mut toks = premise;
+    toks.push(SEP);
+    toks.extend(hypothesis);
+    debug_assert_eq!(toks.len(), n);
+    (toks, label)
+}
+
+/// Flattened grid with a drawn shape; label = shape kind * quadrant.
+fn image_grid(n: usize, rng: &mut Rng) -> (Vec<i32>, i32) {
+    let side = (n as f64).sqrt() as usize;
+    let mut grid = vec![0i32; side * side];
+    for g in grid.iter_mut() {
+        *g = 16 + rng.below(8) as i32; // background noise tokens
+    }
+    let shape = rng.below(2); // 0 = rectangle, 1 = cross
+    let qx = rng.below(2);
+    let qy = rng.below(2);
+    let cx = side / 4 + qx * side / 2;
+    let cy = side / 4 + qy * side / 2;
+    let ink = 40i32;
+    let r = side / 6 + 1;
+    for t in 0..side {
+        for u in 0..side {
+            let dx = t as i64 - cx as i64;
+            let dy = u as i64 - cy as i64;
+            let on = match shape {
+                0 => dx.abs() <= r as i64 && dy.abs() <= r as i64
+                    && (dx.abs() == r as i64 || dy.abs() == r as i64),
+                _ => (dx == 0 || dy == 0) && dx.abs() + dy.abs() <= r as i64,
+            };
+            if on {
+                grid[t * side + u] = ink;
+            }
+        }
+    }
+    let mut toks = grid;
+    toks.resize(n, 0);
+    let label = (shape * 4 + qx * 2 + qy) as i32; // 8 classes
+    (toks, label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_produce_valid_batches() {
+        let mut rng = Rng::new(0);
+        for task in LraTask::all() {
+            let b = task.batch(8, 128, &mut rng);
+            assert_eq!(b.input_ids.len(), 8 * 128, "{}", task.name());
+            assert_eq!(b.labels.len(), 8);
+            assert!(b.input_ids.iter().all(|&t| t >= 0 && (t as usize) < VOCAB),
+                "{} token out of vocab", task.name());
+            assert!(b.labels.iter().all(|&l| l >= 0 && (l as usize) < CLASSES),
+                "{} label out of range", task.name());
+        }
+    }
+
+    #[test]
+    fn listops_labels_match_manual_eval() {
+        // evaluate the emitted token stream with an independent stack
+        // machine and compare with the generator's label
+        fn eval(toks: &[i32], pos: &mut usize) -> i32 {
+            if toks[*pos] != OPEN {
+                let v = toks[*pos];
+                *pos += 1;
+                return v;
+            }
+            *pos += 1; // OPEN
+            let op = toks[*pos];
+            *pos += 1;
+            let mut vals = Vec::new();
+            while toks[*pos] != CLOSE {
+                vals.push(eval(toks, pos));
+            }
+            *pos += 1; // CLOSE
+            vals.sort_unstable();
+            match op {
+                OP_MAX => vals[vals.len() - 1],
+                OP_MIN => vals[0],
+                _ => vals[vals.len() / 2],
+            }
+        }
+        let mut rng = Rng::new(1);
+        for _ in 0..30 {
+            let (toks, label) = listops(128, &mut rng);
+            // skip truncated expressions (unbalanced parens)
+            let open = toks.iter().filter(|&&t| t == OPEN).count();
+            let close = toks.iter().filter(|&&t| t == CLOSE).count();
+            if open != close {
+                continue;
+            }
+            let mut pos = 0;
+            let v = eval(&toks, &mut pos);
+            assert_eq!(v - 1, label);
+        }
+    }
+
+    #[test]
+    fn byte_text_class_group_dominates() {
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            let (toks, label) = byte_text(256, &mut rng);
+            let mut counts = vec![0usize; CLASSES];
+            for &t in &toks {
+                if (16..16 + 40).contains(&t) {
+                    let g = (t - 16) / 4;
+                    if (g as usize) < CLASSES {
+                        counts[g as usize] += 1;
+                    }
+                }
+            }
+            let best = counts
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &c)| c)
+                .unwrap()
+                .0;
+            assert_eq!(best as i32, label);
+        }
+    }
+
+    #[test]
+    fn retrieval_shared_tokens_present_in_both_halves() {
+        let mut rng = Rng::new(3);
+        let (toks, label) = retrieval(129, &mut rng);
+        let sep = toks.iter().position(|&t| t == SEP).unwrap();
+        let (a, b) = toks.split_at(sep);
+        for t in 0..label {
+            let r = 48 + t;
+            assert!(a.contains(&r), "token {r} missing from first half");
+            assert!(b[1..].contains(&r), "token {r} missing from second half");
+        }
+    }
+
+    #[test]
+    fn image_grid_has_ink_in_right_quadrant() {
+        let mut rng = Rng::new(4);
+        for _ in 0..10 {
+            let (toks, label) = image_grid(144, &mut rng); // 12x12
+            let side = 12;
+            let qx = (label / 2) % 2;
+            let qy = label % 2;
+            let mut ink_in_quadrant = 0;
+            for t in 0..side {
+                for u in 0..side {
+                    if toks[t * side + u] == 40 {
+                        let in_qx = (t >= side / 2) == (qx == 1);
+                        let in_qy = (u >= side / 2) == (qy == 1);
+                        if in_qx && in_qy {
+                            ink_in_quadrant += 1;
+                        }
+                    }
+                }
+            }
+            assert!(ink_in_quadrant > 0, "label {label} no ink in quadrant");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for task in LraTask::all() {
+            assert_eq!(task.example(64, &mut a), task.example(64, &mut b));
+        }
+    }
+
+    #[test]
+    fn entailment_labels_follow_rules() {
+        let mut rng = Rng::new(5);
+        for _ in 0..40 {
+            let (toks, label) = entailment(128, &mut rng);
+            assert_eq!(toks.len(), 128);
+            let sep = toks.iter().position(|&t| t == SEP).unwrap();
+            let (prem, hyp) = toks.split_at(sep);
+            let hyp = &hyp[1..];
+            match label {
+                0 => {
+                    // every hypothesis token appears in the premise
+                    for &h in hyp {
+                        assert!(prem.contains(&h), "entailed token {h} not in premise");
+                    }
+                }
+                1 => {
+                    // the negated premise token appears in the hypothesis
+                    let negpos = prem.iter().position(|&t| t == 47).unwrap();
+                    let negated = prem[negpos + 1];
+                    assert!(hyp.contains(&negated));
+                }
+                _ => {
+                    // at least one novel (>= 40, != SEP-ranges) token
+                    assert!(hyp.iter().any(|&t| (40..46).contains(&t)));
+                    assert!(!prem.iter().any(|&t| (40..46).contains(&t)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn entailment_batches_valid() {
+        let mut rng = Rng::new(6);
+        let b = LraTask::Entailment.batch(16, 96, &mut rng);
+        assert_eq!(b.input_ids.len(), 16 * 96);
+        assert!(b.labels.iter().all(|&l| (0..3).contains(&l)));
+        assert!(b.input_ids.iter().all(|&t| (t as usize) < VOCAB));
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic data substrates (DESIGN.md §5 substitutions):
+//!
+//! * [`corpus`] — Zipf token stream with local n-gram structure and planted
+//!   long-range copy dependencies + MLM masking (stands in for
+//!   Wikipedia/BookCorpus pretraining).
+//! * [`lra`] — LRA-analog classification tasks: ListOps-lite, byte-text,
+//!   retrieval pairs, and the image-grid shapes task.
+
+pub mod corpus;
+pub mod lra;
+
+pub use corpus::{Corpus, CorpusConfig, MlmBatch};
+pub use lra::{ClsBatch, LraTask};

@@ -1,0 +1,28 @@
+//! # mra-attention
+//!
+//! Production-grade reproduction of *"Multi Resolution Analysis (MRA) for
+//! Approximate Self-Attention"* (Zeng et al., ICML 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels for the MRA block
+//!   operators, lowered at build time.
+//! * **L2** (`python/compile/model.py`) — JAX transformer fwd/bwd calling
+//!   the kernels, AOT-lowered to HLO text artifacts.
+//! * **L3** (this crate) — the coordinator: PJRT runtime, serving batcher /
+//!   router, training driver, plus a complete native implementation of the
+//!   paper's algorithm and every baseline for CPU benchmarking.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `EXPERIMENTS.md` for reproduced tables/figures.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod mra;
+pub mod proptest;
+pub mod runtime;
+pub mod tensor;
+pub mod wavelet;

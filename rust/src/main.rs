@@ -1,0 +1,396 @@
+//! `mra` — coordinator CLI for the MRA-attention reproduction.
+//!
+//! Subcommands:
+//!
+//! * `serve`   — start the serving coordinator and run a self-test load.
+//! * `train`   — run the MLM training driver over an AOT train_step.
+//! * `lra`     — train + evaluate the LRA-analog classifier tasks (Tab. 5).
+//! * `table`   — scaled reproductions of Tables 1/2/4/6 rows.
+//! * `fig3`    — ASCII visualization of progressive refinement (Fig. 3/6).
+//! * `info`    — list artifacts and model configs.
+//!
+//! Bench-table reproductions of Fig. 4/5/7/8 + Tab. 7 live in
+//! `cargo bench` targets (see EXPERIMENTS.md).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use mra::cli::Args;
+use mra::config::{Config, ServeConfig, TrainConfig};
+use mra::coordinator::{Server, Trainer};
+use mra::data::lra::{LraTask, CLASSES};
+use mra::data::Corpus;
+use mra::runtime::{self, HostTensor};
+use mra::tensor::{ops, Mat, Rng};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand() {
+        Some("serve") => cmd_serve(&args),
+        Some("train") => cmd_train(&args),
+        Some("lra") => cmd_lra(&args),
+        Some("table") => cmd_table(&args),
+        Some("fig3") => cmd_fig3(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            println!(
+                "usage: mra <serve|train|lra|table|fig3|info> [--flags]\n\
+                 see README.md for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    match args.str_opt("config") {
+        Some(path) => Config::load(path),
+        None => Ok(Config::default()),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::from_config(&load_config(args)?)?;
+    if let Some(m) = args.str_opt("model") {
+        cfg.model = m.to_string();
+    }
+    cfg.artifacts_dir = args.str_or("artifacts", &cfg.artifacts_dir);
+    let requests = args.usize_or("requests", 64)?;
+    let (rt, manifest) = runtime::spawn(&cfg.artifacts_dir)?;
+    println!("starting server over model {} ({} artifacts)", cfg.model, manifest.artifacts.len());
+    let server = Server::start(rt, manifest.clone(), cfg.clone())?;
+
+    // self-test load: concurrent clients with synthetic sequences
+    let model_cfg = manifest.load_cfg(&cfg.model)?;
+    let seq_len: usize = model_cfg["seq_len"].parse()?;
+    let vocab: usize = model_cfg["vocab"].parse()?;
+    let server = Arc::new(server);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..4u64 {
+            let server = server.clone();
+            s.spawn(move || {
+                let mut corpus = Corpus::new(
+                    mra::data::CorpusConfig {
+                        vocab,
+                        seq_len,
+                        ..Default::default()
+                    },
+                    c,
+                );
+                for _ in 0..requests / 4 {
+                    let toks = corpus.sequence();
+                    if let Err(e) = server.infer(toks) {
+                        eprintln!("client {c}: {e:#}");
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", server.metrics.summary());
+    println!(
+        "throughput: {:.1} req/s over {:.2}s",
+        requests as f64 / wall,
+        wall
+    );
+    match Arc::try_unwrap(server) {
+        Ok(s) => s.shutdown(),
+        Err(_) => {}
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = TrainConfig::from_config(&load_config(args)?)?;
+    if let Some(m) = args.str_opt("model") {
+        cfg.model = m.to_string();
+    }
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.batch = args.usize_or("batch", cfg.batch)?;
+    cfg.artifacts_dir = args.str_or("artifacts", &cfg.artifacts_dir);
+    let (rt, manifest) = runtime::spawn(&cfg.artifacts_dir)?;
+    let mut trainer = Trainer::new(rt, manifest, cfg)?;
+    let log = trainer.run()?;
+    let (head, tail) = log.head_tail_means(3);
+    println!("loss {head:.3} -> {tail:.3} over {} logged points", log.losses.len());
+    Ok(())
+}
+
+/// Train an LRA-analog classifier from the `cls_*` artifacts and report
+/// test accuracy (Table 5 substitute).
+fn cmd_lra(args: &Args) -> Result<()> {
+    let artifacts_dir = args.str_or("artifacts", "artifacts");
+    let steps = args.usize_or("steps", 120)?;
+    let attn = args.str_or("attention", "mra2");
+    let task_name = args.str_or("task", "listops");
+    let tasks: Vec<LraTask> = if task_name == "all" {
+        LraTask::all().to_vec()
+    } else {
+        vec![LraTask::parse(&task_name).context("unknown task")?]
+    };
+    let (rt, manifest) = runtime::spawn(&artifacts_dir)?;
+    for task in tasks {
+        let acc = run_lra_task(&rt, &manifest, task, &attn, steps, 0)?;
+        println!("lra/{:<10} attention={attn:<6} test-acc {:.3}", task.name(), acc);
+    }
+    Ok(())
+}
+
+/// Shared LRA train/eval loop (also used by `table --id 5`-style runs).
+pub fn run_lra_task(
+    rt: &runtime::RuntimeHandle,
+    manifest: &runtime::Manifest,
+    task: LraTask,
+    attn: &str,
+    steps: usize,
+    seed: u64,
+) -> Result<f32> {
+    let tag = format!("cls_{attn}_n128_d64_l2_h2_v64");
+    let batch = 32usize;
+    let train_name = format!("train_{tag}_b{batch}");
+    let eval_name = format!("eval_{tag}_b{batch}");
+    manifest.get(&train_name)?;
+    let mut params = manifest.load_f32(&format!("{tag}.params.f32"))?;
+    let n = params.len();
+    let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let mut rng = Rng::new(seed ^ 0x14A);
+    let seq = 128usize;
+    for step in 0..steps {
+        let b = task.batch(batch, seq, &mut rng);
+        let inputs = vec![
+            HostTensor::F32(params, vec![n]),
+            HostTensor::F32(m, vec![n]),
+            HostTensor::F32(v, vec![n]),
+            HostTensor::scalar_f32(step as f32),
+            HostTensor::I32(b.input_ids, vec![batch, seq]),
+            HostTensor::I32(b.labels, vec![batch]),
+        ];
+        let mut out = rt.execute(&train_name, inputs)?;
+        let _acc = out.pop().unwrap();
+        let loss = out.pop().unwrap();
+        v = out.pop().unwrap().as_f32()?.to_vec();
+        m = out.pop().unwrap().as_f32()?.to_vec();
+        params = out.pop().unwrap().as_f32()?.to_vec();
+        if step % 20 == 0 {
+            println!("  {} step {step:>4} loss {:.3}", task.name(), loss.as_f32()?[0]);
+        }
+    }
+    // held-out accuracy over a few batches
+    let mut eval_rng = Rng::new(seed ^ 0xE7A1);
+    let mut acc_sum = 0.0f32;
+    let evals = 4;
+    for _ in 0..evals {
+        let b = task.batch(batch, seq, &mut eval_rng);
+        let inputs = vec![
+            HostTensor::F32(params.clone(), vec![n]),
+            HostTensor::I32(b.input_ids, vec![batch, seq]),
+            HostTensor::I32(b.labels, vec![batch]),
+        ];
+        let out = rt.execute(&eval_name, inputs)?;
+        acc_sum += out[1].as_f32()?[0];
+    }
+    let _ = CLASSES;
+    Ok(acc_sum / evals as f32)
+}
+
+/// Scaled Table 1/2/4/6 rows: train the small MLM models from scratch for
+/// each attention variant and report loss/accuracy + step timing.
+fn cmd_table(args: &Args) -> Result<()> {
+    let id = args.usize_or("id", 2)?;
+    let steps = args.usize_or("steps", 120)?;
+    let artifacts_dir = args.str_or("artifacts", "artifacts");
+    let (rt, manifest) = runtime::spawn(&artifacts_dir)?;
+    match id {
+        1 | 2 => {
+            println!("== Table {id} (scaled): 128-token MLM from scratch, {steps} steps ==");
+            let mut table = mra::bench::Table::new(&[
+                "method", "ms/step", "final-loss", "masked-acc",
+            ]);
+            for attn in ["exact", "mra2", "mra2s"] {
+                let cfg = TrainConfig {
+                    steps,
+                    batch: 32,
+                    eval_every: 0,
+                    seed: 0,
+                    model: format!("mlm_{attn}_n128_d128_l2_h2_v512"),
+                    artifacts_dir: artifacts_dir.clone(),
+                    log_every: steps.max(1) / 4,
+                };
+                let mut trainer = Trainer::new(rt.clone(), manifest.clone(), cfg)?;
+                let t0 = std::time::Instant::now();
+                let log = trainer.run()?;
+                let ms = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+                let (el, ea) = trainer.eval()?;
+                let _ = el;
+                table.row(&[
+                    display_name(attn).into(),
+                    format!("{ms:.1}"),
+                    format!("{:.3}", log.final_loss()),
+                    format!("{ea:.3}"),
+                ]);
+            }
+            table.print();
+            // MNLI-analog downstream column (entailment task on the cls
+            // artifacts — see data::lra::entailment)
+            println!("\n-- MNLI-analog (3-class entailment), {steps} steps --");
+            for attn in ["exact", "mra2", "mra2s"] {
+                let acc = run_lra_task(
+                    &rt, &manifest, LraTask::Entailment, attn, steps, 0)?;
+                println!("{:<12} entail-acc {:.3}", display_name(attn), acc);
+            }
+        }
+        3 | 4 => {
+            println!("== Table {id} (scaled): 512-token models, fwd latency ==");
+            let mut table = mra::bench::Table::new(&["method", "fwd ms (b=1)", "fwd ms (b=4)"]);
+            for attn in ["exact", "mra2", "mra2s"] {
+                let tag = format!("mlm_{attn}_n512_d128_l2_h2_v512");
+                let params = manifest.load_f32(&format!("{tag}.params.f32"))?;
+                let mut cells = vec![display_name(attn).to_string()];
+                for b in [1usize, 4] {
+                    let name = format!("fwd_{tag}_b{b}");
+                    rt.warm(&name)?;
+                    let ids = vec![2i32; b * 512];
+                    let stats = mra::bench::time_it(1, 5, || {
+                        let inputs = vec![
+                            HostTensor::F32(params.clone(), vec![params.len()]),
+                            HostTensor::I32(ids.clone(), vec![b, 512]),
+                        ];
+                        rt.execute(&name, inputs).expect("exec");
+                    });
+                    cells.push(format!("{:.1}", stats.mean_ms));
+                }
+                table.row(&cells);
+            }
+            table.print();
+        }
+        5 => {
+            println!("== Table 5 (scaled LRA): see `mra lra --task all` ==");
+            for attn in ["exact", "mra2", "mra2s"] {
+                for task in LraTask::all() {
+                    let acc = run_lra_task(&rt, &manifest, task, attn, steps, 0)?;
+                    println!("{:<12} {:<10} acc {:.3}", display_name(attn), task.name(), acc);
+                }
+            }
+        }
+        6 => {
+            println!("== Table 6 (scaled ImageNet-analog): image-grid task ==");
+            for attn in ["exact", "mra2", "mra2s"] {
+                let acc =
+                    run_lra_task(&rt, &manifest, LraTask::ImageGrid, attn, steps, 1)?;
+                println!("{:<12} top-1 {:.3}", display_name(attn), acc);
+            }
+        }
+        other => bail!("no table {other}; available: 1,2,3,4,5,6"),
+    }
+    Ok(())
+}
+
+fn display_name(attn: &str) -> &'static str {
+    match attn {
+        "exact" => "transformer",
+        "mra2" => "mra-2",
+        "mra2s" => "mra-2-s",
+        _ => "?",
+    }
+}
+
+/// ASCII rendering of the progressive multiresolution refinement (Fig. 3/6).
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 64)?;
+    let mut rng = Rng::new(args.usize_or("seed", 0)? as u64);
+    // locality-structured inputs (random walk, keys tracking queries)
+    let d = 16;
+    let mut q = Mat::zeros(n, d);
+    let mut k = Mat::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            let pq = if i > 0 { q.get(i - 1, j) } else { 0.0 };
+            q.set(i, j, 0.9 * pq + 0.5 * rng.normal());
+            k.set(i, j, q.get(i, j) + 0.3 * rng.normal());
+        }
+    }
+    let p = ops::scores(&q, &k);
+    let a = ops::softmax_rows(&p);
+    println!("exact attention (log scale):");
+    ascii_heat(&a, 32);
+    for (scales, budgets) in [
+        (vec![16usize, 4], vec![6usize]),
+        (vec![16, 4, 1], vec![6, 24]),
+    ] {
+        let cfg = mra::mra::MraConfig {
+            scales: scales.clone(),
+            budgets: budgets.clone(),
+            include_diagonal: true,
+            variant: mra::mra::Variant::Full,
+        };
+        let v = Mat::eye(n);
+        let z = mra::mra::mra_attention(&q, &k, &v, &cfg);
+        println!("\nMRA approximation R={scales:?} budgets={budgets:?}:");
+        ascii_heat(&z, 32);
+        let exact = ops::exact_attention(&q, &k, &v);
+        println!("rel error vs exact: {:.4}", ops::rel_fro_error(&z, &exact));
+    }
+    Ok(())
+}
+
+/// Coarse ASCII heatmap (log scale) of a matrix, downsampled to `px`.
+fn ascii_heat(m: &Mat, px: usize) {
+    let ramp: &[u8] = b" .:-=+*#%@";
+    let step = (m.rows / px).max(1);
+    let mut lines = Vec::new();
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    let mut cells = Vec::new();
+    for i in (0..m.rows).step_by(step) {
+        let mut row = Vec::new();
+        for j in (0..m.cols).step_by(step) {
+            let mut mx = 0.0f32;
+            for a in i..(i + step).min(m.rows) {
+                for b in j..(j + step).min(m.cols) {
+                    mx = mx.max(m.get(a, b));
+                }
+            }
+            let lg = (mx.max(1e-9)).ln();
+            lo = lo.min(lg);
+            hi = hi.max(lg);
+            row.push(lg);
+        }
+        cells.push(row);
+    }
+    for row in cells {
+        let mut line = String::new();
+        for lg in row {
+            let t = ((lg - lo) / (hi - lo).max(1e-6) * (ramp.len() - 1) as f32) as usize;
+            line.push(ramp[t.min(ramp.len() - 1)] as char);
+        }
+        lines.push(line);
+    }
+    for l in lines {
+        println!("  {l}");
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let manifest = runtime::Manifest::load(&dir)?;
+    let mut names: Vec<&String> = manifest.artifacts.keys().collect();
+    names.sort();
+    println!("{} artifacts in {dir}:", names.len());
+    for n in names {
+        let a = &manifest.artifacts[n.as_str()];
+        println!("  {n}  inputs={} outputs={} tag={}", a.inputs.len(), a.n_outputs, a.tag);
+    }
+    Ok(())
+}

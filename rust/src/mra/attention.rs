@@ -1,0 +1,428 @@
+//! End-to-end MRA attention: configuration, the general multi-scale path
+//! (Alg. 1 + Alg. 2), the optimized two-scale MRA-2 / MRA-2-s fast path,
+//! and the dense oracle used by tests and Fig. 8.
+
+use crate::mra::matvec;
+use crate::mra::pyramid::Pyramid;
+use crate::mra::select::{construct_j, Scored};
+use crate::tensor::{ops, topk, Mat};
+
+/// Which components of the approximation are kept (Sec. 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// MRA-2: low-resolution everywhere + exact refined blocks.
+    Full,
+    /// MRA-2-s: only the refined (finest-scale) blocks — block-sparse.
+    Sparse,
+}
+
+/// Configuration of the multiresolution approximation.
+#[derive(Clone, Debug)]
+pub struct MraConfig {
+    /// Descending scale ladder `R` (powers of two, last entry usually 1).
+    pub scales: Vec<usize>,
+    /// Refinement budgets `m_i`, one per adjacent scale pair.
+    pub budgets: Vec<usize>,
+    /// Seed diagonal blocks into the refinement set (Alg. 1 prior).
+    pub include_diagonal: bool,
+    pub variant: Variant,
+}
+
+impl MraConfig {
+    /// The paper's MRA-2: `R = {block, 1}` with budget `m` refined blocks.
+    pub fn mra2(block: usize, m: usize) -> Self {
+        MraConfig {
+            scales: vec![block, 1],
+            budgets: vec![m],
+            include_diagonal: true,
+            variant: Variant::Full,
+        }
+    }
+
+    /// MRA-2-s (block-sparse variant).
+    pub fn mra2_sparse(block: usize, m: usize) -> Self {
+        MraConfig { variant: Variant::Sparse, ..Self::mra2(block, m) }
+    }
+
+    pub fn validate(&self, n: usize) {
+        assert!(!self.scales.is_empty());
+        assert_eq!(self.budgets.len(), self.scales.len() - 1);
+        for &s in &self.scales {
+            assert!(s.is_power_of_two() && n % s == 0, "scale {s} vs n {n}");
+        }
+        for w in self.scales.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+
+    /// Theoretical workload (number of `mu` evaluations, Sec. 4.4):
+    /// `(n/s0)^2 + sum_i m_i (s_{i-1}/s_i)^2` plus the `O(n)` pyramid.
+    pub fn workload(&self, n: usize) -> usize {
+        let s0 = self.scales[0];
+        let mut total = (n / s0) * (n / s0) + 2 * n;
+        for (i, &m) in self.budgets.iter().enumerate() {
+            let ratio = self.scales[i] / self.scales[i + 1];
+            total += m * ratio * ratio;
+        }
+        total
+    }
+}
+
+/// General multi-scale MRA attention (arbitrary ladder) via
+/// Alg. 1 + Alg. 2.  Returns the row-normalized `Z_hat`.
+pub fn mra_attention(q: &Mat, k: &Mat, v: &Mat, cfg: &MraConfig) -> Mat {
+    let n = q.rows;
+    cfg.validate(n);
+    let qpyr = Pyramid::build(q, &cfg.scales);
+    let kpyr = Pyramid::build(k, &cfg.scales);
+    let vpyr = Pyramid::build(v, &cfg.scales);
+    let sel = construct_j(&qpyr, &kpyr, n, q.cols, &cfg.scales, &cfg.budgets, cfg.include_diagonal);
+    let blocks: Vec<Scored> = match cfg.variant {
+        Variant::Full => sel.blocks,
+        Variant::Sparse => sel.finest_only(*cfg.scales.last().unwrap()),
+    };
+    matvec::compute(&blocks, &vpyr, n, &cfg.scales).normalized()
+}
+
+/// Workload statistics of one MRA-2 invocation (feeds Fig. 7 left).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MraStats {
+    /// `mu` evaluations (low-res grid + refined entries).
+    pub mu_evals: usize,
+    /// Multiply–accumulate count on the hot path.
+    pub flops: usize,
+    /// Peak transient f32 buffer footprint (elements).
+    pub buffer_elems: usize,
+}
+
+/// Optimized two-scale fast path (MRA-2 / MRA-2-s): gathers the selected
+/// `b x b` blocks and computes them with block matmuls, mirroring the
+/// Pallas kernel schedule (DESIGN.md §4).  Returns `(Z_hat, stats)`.
+pub fn mra2_attention_stats(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    block: usize,
+    m: usize,
+    variant: Variant,
+) -> (Mat, MraStats) {
+    let (n, d) = (q.rows, q.cols);
+    assert!(n % block == 0, "block {block} must divide n={n}");
+    let b = block;
+    let nb = n / b;
+    let m = m.min(nb * nb).max(1);
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let mut stats = MraStats::default();
+
+    // --- pyramid + low-res scores (Eq. 7 / Eq. 6) --------------------------
+    let qt = ops::pool_rows(q, b);
+    let kt = ops::pool_rows(k, b);
+    let vt = ops::pool_rows(v, b);
+    let s_low = qt.matmul_transb(&kt).scale(inv_sqrt_d); // (nb, nb)
+    stats.mu_evals += nb * nb;
+    stats.flops += nb * nb * d + 3 * n * d;
+
+    // --- Alg. 1: top-m selection with diagonal prior -----------------------
+    let mut prio = s_low.data.clone();
+    for i in 0..nb {
+        prio[i * nb + i] = f32::INFINITY;
+    }
+    let chosen = topk::top_k_indices(&prio, m);
+    let mut selected = vec![false; nb * nb];
+    let mut per_row: Vec<Vec<usize>> = vec![Vec::new(); nb]; // y's per x
+    for &c in &chosen {
+        selected[c] = true;
+        per_row[c / nb].push(c % nb);
+    }
+
+    // --- refined blocks + Alg. 2 accumulation, per query block -------------
+    // §Perf: tiles are computed per query block into a single reusable
+    // buffer (no per-tile Mat allocations, no row_block clones); the
+    // two-pass max stabilization happens within the block's tile set, so
+    // peak transient memory is O(max_tiles_per_row * b^2) instead of
+    // O(m * b^2).  See EXPERIMENTS.md §Perf for the before/after.
+    let max_tiles = per_row.iter().map(Vec::len).max().unwrap_or(0);
+    let mut tilebuf = vec![0.0f32; max_tiles * b * b];
+    stats.mu_evals += m * b * b;
+    stats.buffer_elems = max_tiles * b * b + 3 * nb * d + nb * nb;
+    let mut mb = vec![f32::NEG_INFINITY; nb];
+    if variant == Variant::Full {
+        for x in 0..nb {
+            for y in 0..nb {
+                if !selected[x * nb + y] {
+                    mb[x] = mb[x].max(s_low.get(x, y));
+                }
+            }
+        }
+    }
+    let mut out = Mat::zeros(n, d);
+    let mut den = vec![0.0f32; n];
+    for x in 0..nb {
+        if per_row[x].is_empty() {
+            continue;
+        }
+        // pass 1: exact P tiles for this query block + running max
+        let mut block_max = mb[x];
+        for (t, &y) in per_row[x].iter().enumerate() {
+            let tile = &mut tilebuf[t * b * b..(t + 1) * b * b];
+            for r in 0..b {
+                let qrow = q.row(x * b + r);
+                for c in 0..b {
+                    let s = crate::tensor::mat::dot(qrow, k.row(y * b + c)) * inv_sqrt_d;
+                    tile[r * b + c] = s;
+                    if s > block_max {
+                        block_max = s;
+                    }
+                }
+            }
+            stats.flops += b * b * d;
+        }
+        mb[x] = block_max;
+        // pass 2: stabilized exp + value aggregation
+        for (t, &y) in per_row[x].iter().enumerate() {
+            let tile = &tilebuf[t * b * b..(t + 1) * b * b];
+            for r in 0..b {
+                let i = x * b + r;
+                let orow = out.row_mut(i);
+                let mut dsum = 0.0f32;
+                for c in 0..b {
+                    let a = (tile[r * b + c] - block_max).exp();
+                    dsum += a;
+                    let vrow = v.row(y * b + c);
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += a * vv;
+                    }
+                }
+                den[i] += dsum;
+            }
+            stats.flops += b * b * (d + 2);
+        }
+    }
+    if variant == Variant::Full {
+        // low-resolution contribution: mu * (block sum of V) per region
+        for x in 0..nb {
+            let shift = mb[x];
+            let mut yacc = vec![0.0f32; d];
+            let mut dacc = 0.0f32;
+            for y in 0..nb {
+                if selected[x * nb + y] {
+                    continue;
+                }
+                let mu = (s_low.get(x, y) - shift).exp();
+                dacc += mu * b as f32;
+                let vrow = vt.row(y);
+                for (o, &vv) in yacc.iter_mut().zip(vrow) {
+                    *o += mu * b as f32 * vv;
+                }
+                stats.flops += d + 2;
+            }
+            for r in 0..b {
+                let i = x * b + r;
+                den[i] += dacc;
+                let orow = out.row_mut(i);
+                for (o, &a) in orow.iter_mut().zip(&yacc) {
+                    *o += a;
+                }
+            }
+        }
+    }
+    for i in 0..n {
+        let inv = if den[i] > 0.0 { 1.0 / den[i] } else { 0.0 };
+        for vv in out.row_mut(i) {
+            *vv *= inv;
+        }
+    }
+    (out, stats)
+}
+
+/// Optimized MRA-2 / MRA-2-s attention (row-normalized output).
+pub fn mra2_attention(q: &Mat, k: &Mat, v: &Mat, block: usize, m: usize, variant: Variant) -> Mat {
+    mra2_attention_stats(q, k, v, block, m, variant).0
+}
+
+/// Dense oracle for the two-scale approximation: materializes
+/// `(A_hat, Z_hat)` with the same selection rule as the fast path.
+pub fn dense_mra2(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    block: usize,
+    m: usize,
+    variant: Variant,
+) -> (Mat, Mat) {
+    let (n, d) = (q.rows, q.cols);
+    let b = block;
+    let nb = n / b;
+    let m = m.min(nb * nb).max(1);
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let qt = ops::pool_rows(q, b);
+    let kt = ops::pool_rows(k, b);
+    let s_low = qt.matmul_transb(&kt).scale(inv_sqrt_d);
+    let p = ops::scores(q, k);
+    let mut prio = s_low.data.clone();
+    for i in 0..nb {
+        prio[i * nb + i] = f32::INFINITY;
+    }
+    let chosen = topk::top_k_indices(&prio, m);
+    let mut selected = vec![false; nb * nb];
+    for &c in &chosen {
+        selected[c] = true;
+    }
+    let mut a_hat = Mat::zeros(n, n);
+    for x in 0..nb {
+        for y in 0..nb {
+            if selected[x * nb + y] {
+                for i in x * b..(x + 1) * b {
+                    for j in y * b..(y + 1) * b {
+                        a_hat.set(i, j, p.get(i, j).exp());
+                    }
+                }
+            } else if variant == Variant::Full {
+                let mu = s_low.get(x, y).exp();
+                for i in x * b..(x + 1) * b {
+                    for j in y * b..(y + 1) * b {
+                        a_hat.set(i, j, mu);
+                    }
+                }
+            }
+        }
+    }
+    let den = ops::row_sums(&a_hat);
+    let z = ops::div_rows(&a_hat.matmul(v), &den);
+    let _ = d;
+    (a_hat, z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn setup(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(n, d, 1.0, &mut rng),
+            Mat::randn(n, d, 1.0, &mut rng),
+            Mat::randn(n, d, 1.0, &mut rng),
+        )
+    }
+
+    #[test]
+    fn fast_path_matches_dense_oracle_full() {
+        let (q, k, v) = setup(128, 16, 0);
+        for m in [5, 16, 40] {
+            let (_, z_dense) = dense_mra2(&q, &k, &v, 16, m, Variant::Full);
+            let z = mra2_attention(&q, &k, &v, 16, m, Variant::Full);
+            assert!(ops::rel_fro_error(&z, &z_dense) < 1e-4, "m={m}");
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_dense_oracle_sparse() {
+        let (q, k, v) = setup(128, 16, 1);
+        for m in [5, 16, 40] {
+            let (_, z_dense) = dense_mra2(&q, &k, &v, 16, m, Variant::Sparse);
+            let z = mra2_attention(&q, &k, &v, 16, m, Variant::Sparse);
+            assert!(ops::rel_fro_error(&z, &z_dense) < 1e-4, "m={m}");
+        }
+    }
+
+    #[test]
+    fn full_budget_equals_exact_attention() {
+        let (q, k, v) = setup(64, 8, 2);
+        let exact = ops::exact_attention(&q, &k, &v);
+        for variant in [Variant::Full, Variant::Sparse] {
+            let z = mra2_attention(&q, &k, &v, 16, 16, variant);
+            assert!(ops::rel_fro_error(&z, &exact) < 1e-4, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn general_path_agrees_with_fast_path_two_scales() {
+        let (q, k, v) = setup(64, 8, 3);
+        let m = 7;
+        let cfg = MraConfig::mra2(16, m);
+        let z_gen = mra_attention(&q, &k, &v, &cfg);
+        let z_fast = mra2_attention(&q, &k, &v, 16, m, Variant::Full);
+        assert!(ops::rel_fro_error(&z_gen, &z_fast) < 1e-3);
+    }
+
+    #[test]
+    fn general_path_three_scales_reasonable_error() {
+        let (q, k, v) = setup(64, 8, 4);
+        let cfg = MraConfig {
+            scales: vec![16, 4, 1],
+            budgets: vec![6, 24],
+            include_diagonal: true,
+            variant: Variant::Full,
+        };
+        let z = mra_attention(&q, &k, &v, &cfg);
+        let exact = ops::exact_attention(&q, &k, &v);
+        let err = ops::rel_fro_error(&z, &exact);
+        assert!(err < 0.8, "err={err}");
+    }
+
+    #[test]
+    fn error_decreases_with_budget() {
+        let (q, k, v) = setup(128, 16, 5);
+        let exact = ops::exact_attention(&q, &k, &v);
+        let errs: Vec<f64> = [2usize, 8, 24, 64]
+            .iter()
+            .map(|&m| {
+                let z = mra2_attention(&q, &k, &v, 16, m, Variant::Full);
+                ops::rel_fro_error(&z, &exact)
+            })
+            .collect();
+        assert!(errs[3] <= errs[0] + 1e-9, "{errs:?}");
+        assert!(errs[3] < 1e-4); // full budget
+    }
+
+    #[test]
+    fn full_variant_at_least_as_good_as_sparse_on_diffuse_attention() {
+        // with diffuse attention the low-res correction must help
+        let (q, k, v) = setup(128, 16, 6);
+        let q = q.scale(0.3);
+        let k = k.scale(0.3);
+        let exact = ops::exact_attention(&q, &k, &v);
+        let zf = mra2_attention(&q, &k, &v, 16, 10, Variant::Full);
+        let zs = mra2_attention(&q, &k, &v, 16, 10, Variant::Sparse);
+        let ef = ops::rel_fro_error(&zf, &exact);
+        let es = ops::rel_fro_error(&zs, &exact);
+        assert!(ef <= es + 0.02, "full {ef} vs sparse {es}");
+    }
+
+    #[test]
+    fn workload_formula() {
+        let cfg = MraConfig::mra2(32, 24);
+        // (n/32)^2 + 24*32^2 + 2n at n = 1024
+        assert_eq!(cfg.workload(1024), 32 * 32 + 24 * 1024 + 2048);
+        let cfg3 = MraConfig {
+            scales: vec![16, 4, 1],
+            budgets: vec![3, 5],
+            include_diagonal: true,
+            variant: Variant::Full,
+        };
+        assert_eq!(cfg3.workload(64), 16 + 3 * 16 + 5 * 16 + 128);
+    }
+
+    #[test]
+    fn stats_buffer_scales_with_m() {
+        let (q, k, v) = setup(128, 16, 7);
+        let (_, s1) = mra2_attention_stats(&q, &k, &v, 16, 8, Variant::Full);
+        let (_, s2) = mra2_attention_stats(&q, &k, &v, 16, 32, Variant::Full);
+        assert!(s2.buffer_elems > s1.buffer_elems);
+        assert!(s2.flops > s1.flops);
+    }
+
+    #[test]
+    fn output_rows_convex_with_ones_values() {
+        let (q, k, _) = setup(64, 8, 8);
+        let v = Mat::full(64, 8, 1.0);
+        for variant in [Variant::Full, Variant::Sparse] {
+            let z = mra2_attention(&q, &k, &v, 16, 6, variant);
+            for &x in z.data.iter() {
+                assert!((x - 1.0).abs() < 1e-4);
+            }
+        }
+    }
+}

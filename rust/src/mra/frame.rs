@@ -1,0 +1,185 @@
+//! The overcomplete frame `B^s_{x,y}` of Eq. (1) and its bookkeeping.
+//!
+//! A component is an axis-aligned `s x s` all-ones block supported on rows
+//! `[x*s, (x+1)*s)` and columns `[y*s, (y+1)*s)` (0-based; the paper is
+//! 1-based).  Fig. 2 counts 85 components at `n = 8` — asserted in the
+//! tests.
+
+/// One frame component `B^s_{x,y}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Block {
+    pub scale: usize,
+    pub x: usize,
+    pub y: usize,
+}
+
+impl Block {
+    /// Row range `[start, end)` of the support.
+    #[inline]
+    pub fn rows(&self) -> (usize, usize) {
+        (self.x * self.scale, (self.x + 1) * self.scale)
+    }
+
+    /// Column range `[start, end)` of the support.
+    #[inline]
+    pub fn cols(&self) -> (usize, usize) {
+        (self.y * self.scale, (self.y + 1) * self.scale)
+    }
+
+    /// Does the support contain entry `(i, j)`?
+    pub fn contains(&self, i: usize, j: usize) -> bool {
+        let (r0, r1) = self.rows();
+        let (c0, c1) = self.cols();
+        i >= r0 && i < r1 && j >= c0 && j < c1
+    }
+
+    /// Is `other`'s support a subset of this block's support?
+    /// (True iff `other` is a descendant in the refinement tree.)
+    pub fn covers(&self, other: &Block) -> bool {
+        let (r0, r1) = self.rows();
+        let (c0, c1) = self.cols();
+        let (or0, or1) = other.rows();
+        let (oc0, oc1) = other.cols();
+        or0 >= r0 && or1 <= r1 && oc0 >= c0 && oc1 <= c1
+    }
+
+    /// Do two supports intersect?
+    pub fn overlaps(&self, other: &Block) -> bool {
+        let (r0, r1) = self.rows();
+        let (c0, c1) = self.cols();
+        let (or0, or1) = other.rows();
+        let (oc0, oc1) = other.cols();
+        r0 < or1 && or0 < r1 && c0 < oc1 && oc0 < c1
+    }
+
+    /// The `(ratio)^2` children at `scale / ratio`.
+    pub fn children(&self, ratio: usize) -> Vec<Block> {
+        assert!(ratio >= 1 && self.scale % ratio == 0);
+        let s = self.scale / ratio;
+        let mut out = Vec::with_capacity(ratio * ratio);
+        for dx in 0..ratio {
+            for dy in 0..ratio {
+                out.push(Block { scale: s, x: self.x * ratio + dx, y: self.y * ratio + dy });
+            }
+        }
+        out
+    }
+
+    /// Support area `s^2`.
+    pub fn area(&self) -> usize {
+        self.scale * self.scale
+    }
+}
+
+/// Number of components in the frame of Eq. (1) for sequence length `n`
+/// (power of two): `sum_{s in {1,2,..,n}} (n/s)^2`.
+pub fn frame_size(n: usize) -> usize {
+    assert!(n.is_power_of_two());
+    let mut total = 0usize;
+    let mut s = 1usize;
+    while s <= n {
+        total += (n / s) * (n / s);
+        s *= 2;
+    }
+    total
+}
+
+/// Number of elements in the 2D Haar basis for comparison (Fig. 2 right:
+/// three detail orientations per level plus the constant).
+pub fn haar_basis_size(n: usize) -> usize {
+    assert!(n.is_power_of_two());
+    // 3 * sum_{level} (n/2^l)^2 over detail levels + 1 constant
+    let mut total = 1usize;
+    let mut s = 2usize;
+    while s <= n {
+        total += 3 * (n / s) * (n / s);
+        s *= 2;
+    }
+    total
+}
+
+/// All components at a given scale (row-major order).
+pub fn blocks_at_scale(n: usize, scale: usize) -> Vec<Block> {
+    assert_eq!(n % scale, 0);
+    let nb = n / scale;
+    let mut out = Vec::with_capacity(nb * nb);
+    for x in 0..nb {
+        for y in 0..nb {
+            out.push(Block { scale, x, y });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_frame_count_n8_is_85() {
+        // 64 + 16 + 4 + 1 (Fig. 2 left: "85 matrices for n = 8")
+        assert_eq!(frame_size(8), 85);
+    }
+
+    #[test]
+    fn fig2_haar_count_n8_is_64() {
+        // "three groups of 21 self-similar matrices plus a constant" = 64
+        assert_eq!(haar_basis_size(8), 64);
+    }
+
+    #[test]
+    fn frame_has_one_extra_scale_vs_haar() {
+        // the frame spans scales {1..n} (k+1 levels), Haar detail spans k
+        for n in [4usize, 8, 16, 32] {
+            assert!(frame_size(n) > haar_basis_size(n));
+        }
+    }
+
+    #[test]
+    fn contains_and_ranges() {
+        let b = Block { scale: 4, x: 1, y: 2 };
+        assert_eq!(b.rows(), (4, 8));
+        assert_eq!(b.cols(), (8, 12));
+        assert!(b.contains(5, 9));
+        assert!(!b.contains(3, 9));
+        assert!(!b.contains(5, 12));
+    }
+
+    #[test]
+    fn children_partition_parent() {
+        let b = Block { scale: 8, x: 1, y: 1 };
+        let kids = b.children(4);
+        assert_eq!(kids.len(), 16);
+        // children tile the parent support exactly: disjoint + covered
+        let mut covered = 0usize;
+        for (i, a) in kids.iter().enumerate() {
+            assert!(b.covers(a));
+            covered += a.area();
+            for c in kids.iter().skip(i + 1) {
+                assert!(!a.overlaps(c), "{a:?} vs {c:?}");
+            }
+        }
+        assert_eq!(covered, b.area());
+    }
+
+    #[test]
+    fn same_scale_blocks_disjoint() {
+        let blocks = blocks_at_scale(16, 4);
+        assert_eq!(blocks.len(), 16);
+        for (i, a) in blocks.iter().enumerate() {
+            for b in blocks.iter().skip(i + 1) {
+                assert!(!a.overlaps(b));
+            }
+        }
+    }
+
+    #[test]
+    fn covers_requires_subset() {
+        let big = Block { scale: 8, x: 0, y: 0 };
+        let inside = Block { scale: 2, x: 1, y: 3 };
+        let outside = Block { scale: 2, x: 4, y: 0 };
+        assert!(big.covers(&inside));
+        assert!(!big.covers(&outside));
+        assert!(!inside.covers(&big));
+    }
+}

@@ -1,0 +1,257 @@
+//! Alg. 2: compute `A_hat V` and the row sums `D_hat` without ever
+//! materializing the `n x n` matrix.
+//!
+//! Contributions are accumulated coarse-to-fine at block granularity
+//! (`Y_s[x] += mu * s * V~_s[y]`, then rows are duplicated when moving to
+//! the next finer scale), exactly the telescoping structure of Alg. 2.
+//! The `s` factor converts the *averaged* `V~_s` rows back to block sums.
+//!
+//! Numerical note: `mu = exp(log_mu)` is taken after subtracting the global
+//! max `log_mu` — a pure shift that cancels in the softmax normalization
+//! but keeps every `exp` in range (the CPU analog of the kernel's two-pass
+//! stabilization).
+
+use crate::mra::pyramid::Pyramid;
+use crate::mra::select::Scored;
+use crate::tensor::Mat;
+
+/// Unnormalized result of Alg. 2: numerator rows and the row sums, both
+/// computed under a shared exponent shift.
+pub struct MatVec {
+    /// `(n, d)` numerator `A_hat V` (scaled by `exp(-shift)`).
+    pub y: Mat,
+    /// `(n,)` row sums `D_hat` (same scaling).
+    pub d: Vec<f32>,
+    /// The exponent shift that was applied (for diagnostics).
+    pub shift: f32,
+}
+
+impl MatVec {
+    /// Row-normalized output `D_hat^{-1} A_hat V` (rows with an empty
+    /// support — possible for MRA-2-s without diagonal seeding — yield 0).
+    pub fn normalized(&self) -> Mat {
+        let mut out = self.y.clone();
+        for i in 0..out.rows {
+            let den = self.d[i];
+            let inv = if den > 0.0 { 1.0 / den } else { 0.0 };
+            for v in out.row_mut(i) {
+                *v *= inv;
+            }
+        }
+        out
+    }
+}
+
+/// Run Alg. 2 over the final set `J` (`blocks`) and the value pyramid.
+///
+/// `scales` must be the descending ladder used for selection; every block's
+/// scale must appear in it.
+pub fn compute(blocks: &[Scored], vpyr: &Pyramid, n: usize, scales: &[usize]) -> MatVec {
+    let d_model = vpyr.at(scales[0]).cols;
+    let shift = blocks
+        .iter()
+        .map(|s| s.log_mu)
+        .fold(f32::NEG_INFINITY, f32::max)
+        .max(0.0);
+
+    // group blocks by scale for the coarse-to-fine sweep
+    let mut by_scale: Vec<Vec<&Scored>> = vec![Vec::new(); scales.len()];
+    for b in blocks {
+        let li = scales
+            .iter()
+            .position(|&s| s == b.block.scale)
+            .unwrap_or_else(|| panic!("block scale {} not in ladder", b.block.scale));
+        by_scale[li].push(b);
+    }
+
+    // Y / D accumulators start at the coarsest scale
+    let s0 = scales[0];
+    let mut y = Mat::zeros(n / s0, d_model);
+    let mut dsum = vec![0.0f32; n / s0];
+
+    for (li, &s) in scales.iter().enumerate() {
+        if li > 0 {
+            // duplicate rows: previous scale -> current scale
+            let ratio = scales[li - 1] / s;
+            let mut y2 = Mat::zeros(n / s, d_model);
+            let mut d2 = vec![0.0f32; n / s];
+            for r in 0..y.rows {
+                for t in 0..ratio {
+                    y2.row_mut(r * ratio + t).copy_from_slice(y.row(r));
+                    d2[r * ratio + t] = dsum[r];
+                }
+            }
+            y = y2;
+            dsum = d2;
+        }
+        let vt = vpyr.at(s);
+        for sb in &by_scale[li] {
+            let mu = (sb.log_mu - shift).exp();
+            if mu == 0.0 {
+                continue;
+            }
+            let w = mu * s as f32; // block-sum of V rows = s * mean
+            let yrow = y.row_mut(sb.block.x);
+            for (o, &v) in yrow.iter_mut().zip(vt.row(sb.block.y)) {
+                *o += w * v;
+            }
+            dsum[sb.block.x] += mu * s as f32;
+        }
+    }
+
+    // expand to full resolution if the finest scale is > 1
+    let s_fin = *scales.last().unwrap();
+    if s_fin > 1 {
+        let mut y2 = Mat::zeros(n, d_model);
+        let mut d2 = vec![0.0f32; n];
+        for r in 0..y.rows {
+            for t in 0..s_fin {
+                y2.row_mut(r * s_fin + t).copy_from_slice(y.row(r));
+                d2[r * s_fin + t] = dsum[r];
+            }
+        }
+        y = y2;
+        dsum = d2;
+    }
+    MatVec { y, d: dsum, shift }
+}
+
+/// Dense oracle: materialize `A_hat` from the same block set (test / Fig. 8
+/// support visualization path).
+pub fn dense_a_hat(blocks: &[Scored], n: usize) -> Mat {
+    let mut a = Mat::zeros(n, n);
+    for sb in blocks {
+        let mu = sb.log_mu.exp();
+        let (r0, r1) = sb.block.rows();
+        let (c0, c1) = sb.block.cols();
+        for i in r0..r1 {
+            for j in c0..c1 {
+                a.set(i, j, mu);
+            }
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mra::select::construct_j;
+    use crate::tensor::{ops, Rng};
+
+    fn setup(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(n, d, 1.0, &mut rng),
+            Mat::randn(n, d, 1.0, &mut rng),
+            Mat::randn(n, d, 1.0, &mut rng),
+        )
+    }
+
+    #[test]
+    fn matvec_matches_dense_two_scale() {
+        let (n, d) = (64, 8);
+        let scales = [16usize, 1];
+        let (q, k, v) = setup(n, d, 0);
+        let qp = Pyramid::build(&q, &scales);
+        let kp = Pyramid::build(&k, &scales);
+        let vp = Pyramid::build(&v, &scales);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[5], true);
+        let mv = compute(&sel.blocks, &vp, n, &scales);
+        let a = dense_a_hat(&sel.blocks, n);
+        let want = a.matmul(&v);
+        let scale = mv.shift.exp();
+        for i in 0..n {
+            for j in 0..d {
+                let got = mv.y.get(i, j) * scale;
+                assert!(
+                    (got - want.get(i, j)).abs() < 1e-2 * want.get(i, j).abs().max(1.0),
+                    "({i},{j}): {got} vs {}",
+                    want.get(i, j)
+                );
+            }
+        }
+        // row sums match too
+        let dsum = ops::row_sums(&a);
+        for i in 0..n {
+            let got = mv.d[i] * scale;
+            assert!((got - dsum[i]).abs() < 1e-2 * dsum[i].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense_three_scale() {
+        let (n, d) = (64, 4);
+        let scales = [16usize, 4, 1];
+        let (q, k, v) = setup(n, d, 1);
+        let qp = Pyramid::build(&q, &scales);
+        let kp = Pyramid::build(&k, &scales);
+        let vp = Pyramid::build(&v, &scales);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[3, 6], true);
+        let mv = compute(&sel.blocks, &vp, n, &scales);
+        let a = dense_a_hat(&sel.blocks, n);
+        let z_dense = {
+            let den = ops::row_sums(&a);
+            ops::div_rows(&a.matmul(&v), &den)
+        };
+        let z = mv.normalized();
+        assert!(ops::rel_fro_error(&z, &z_dense) < 1e-4);
+    }
+
+    #[test]
+    fn normalized_rows_are_convex_combinations() {
+        // with V = all-ones, any row-normalized A_hat V must be exactly 1
+        let (n, d) = (32, 4);
+        let scales = [8usize, 1];
+        let (q, k, _) = setup(n, d, 2);
+        let v = Mat::full(n, d, 1.0);
+        let qp = Pyramid::build(&q, &scales);
+        let kp = Pyramid::build(&k, &scales);
+        let vp = Pyramid::build(&v, &scales);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[4], true);
+        let z = compute(&sel.blocks, &vp, n, &scales).normalized();
+        for &x in z.data.iter() {
+            assert!((x - 1.0).abs() < 1e-4, "{x}");
+        }
+    }
+
+    #[test]
+    fn shift_invariance() {
+        // the normalized output must not depend on the stabilization shift,
+        // which we exercise by scaling Q (shifting all log mu)
+        let (n, d) = (32, 4);
+        let scales = [8usize, 1];
+        let (q, k, v) = setup(n, d, 3);
+        let kp = Pyramid::build(&k, &scales);
+        let vp = Pyramid::build(&v, &scales);
+        let qp = Pyramid::build(&q, &scales);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[6], true);
+        let z1 = compute(&sel.blocks, &vp, n, &scales).normalized();
+        // manually shift all log_mu by a constant: normalization cancels it
+        let shifted: Vec<Scored> = sel
+            .blocks
+            .iter()
+            .map(|s| Scored { block: s.block, log_mu: s.log_mu + 7.5 })
+            .collect();
+        let z2 = compute(&shifted, &vp, n, &scales).normalized();
+        assert!(ops::rel_fro_error(&z2, &z1) < 1e-4);
+    }
+
+    #[test]
+    fn empty_rows_yield_zeros() {
+        use crate::mra::frame::Block;
+        // single block covering only rows [0, 8): remaining rows are zero
+        let n = 32;
+        let v = Mat::full(n, 2, 2.0);
+        let scales = [8usize, 1];
+        let vp = Pyramid::build(&v, &scales);
+        let blocks = vec![Scored { block: Block { scale: 8, x: 0, y: 1 }, log_mu: 0.3 }];
+        let z = compute(&blocks, &vp, n, &scales).normalized();
+        for i in 0..8 {
+            assert!((z.get(i, 0) - 2.0).abs() < 1e-5);
+        }
+        for i in 8..n {
+            assert_eq!(z.get(i, 0), 0.0);
+        }
+    }
+}

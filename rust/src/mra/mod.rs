@@ -1,0 +1,23 @@
+//! The paper's contribution: multi-resolution approximate self-attention.
+//!
+//! * [`pyramid`]   — Eq. (7): multi-scale average pooling of Q/K/V.
+//! * [`frame`]     — the overcomplete frame `B^s_{x,y}` of Eq. (1) and its
+//!   bookkeeping (Fig. 2 component counting, support logic).
+//! * [`select`]    — Alg. 1: greedy construction of the selected set `J`
+//!   for an arbitrary descending scale ladder `R`.
+//! * [`matvec`]    — Alg. 2: `A_hat V` + row sums without materializing
+//!   the `n x n` matrix.
+//! * [`attention`] — end-to-end MRA attention (MRA-2 / MRA-2-s fast paths,
+//!   dense oracle, workload accounting).
+//! * [`theory`]    — Lemma 4.1 / Prop. 4.5 quantities (`C_r`, bounds).
+
+pub mod attention;
+pub mod frame;
+pub mod matvec;
+pub mod pyramid;
+pub mod select;
+pub mod theory;
+
+pub use attention::{dense_mra2, mra2_attention, mra_attention, MraConfig, Variant};
+pub use frame::Block;
+pub use select::Selection;

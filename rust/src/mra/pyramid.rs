@@ -1,0 +1,135 @@
+//! Eq. (7): the multi-scale average-pooling pyramid over Q / K / V rows.
+//!
+//! `Q~_s` halves the row count level by level; building every scale in
+//! `{1, 2, 4, ..., n}` costs `O(n d)` total (the telescoping sum of
+//! Sec. 4.4).
+
+use crate::tensor::Mat;
+
+/// Pooled copies of a matrix at a descending ladder of scales.
+pub struct Pyramid {
+    /// `(scale, pooled matrix with n/scale rows)`, in the order given.
+    levels: Vec<(usize, Mat)>,
+}
+
+impl Pyramid {
+    /// Build pooled matrices for every scale in `scales` (descending or
+    /// not — each level is derived by halving from the nearest computed
+    /// finer scale, so the total cost stays `O(n d)`).
+    pub fn build(x: &Mat, scales: &[usize]) -> Self {
+        let n = x.rows;
+        let mut wanted: Vec<usize> = scales.to_vec();
+        wanted.sort_unstable();
+        wanted.dedup();
+        for &s in &wanted {
+            assert!(s >= 1 && n % s == 0, "scale {s} must divide n={n}");
+            assert!(s.is_power_of_two(), "scales must be powers of two");
+        }
+        // halve from scale 1 upwards, keeping only requested levels
+        let mut levels: Vec<(usize, Mat)> = Vec::new();
+        let mut cur = x.clone();
+        let mut cur_s = 1usize;
+        let max_s = *wanted.last().unwrap_or(&1);
+        while cur_s <= max_s {
+            if wanted.contains(&cur_s) {
+                levels.push((cur_s, cur.clone()));
+            }
+            if cur_s == max_s {
+                break;
+            }
+            cur = halve(&cur);
+            cur_s *= 2;
+        }
+        // return in the caller's order (descending ladder for Alg. 1)
+        let mut ordered = Vec::with_capacity(scales.len());
+        for &s in scales {
+            let m = levels.iter().find(|(ls, _)| *ls == s).unwrap().1.clone();
+            ordered.push((s, m));
+        }
+        Pyramid { levels: ordered }
+    }
+
+    /// Pooled matrix at `scale` (panics if the scale was not requested).
+    pub fn at(&self, scale: usize) -> &Mat {
+        &self
+            .levels
+            .iter()
+            .find(|(s, _)| *s == scale)
+            .unwrap_or_else(|| panic!("scale {scale} not in pyramid"))
+            .1
+    }
+
+    pub fn scales(&self) -> Vec<usize> {
+        self.levels.iter().map(|(s, _)| *s).collect()
+    }
+}
+
+/// Average adjacent row pairs: `(n, d) -> (n/2, d)` (one pyramid level).
+pub fn halve(x: &Mat) -> Mat {
+    assert_eq!(x.rows % 2, 0);
+    let mut out = Mat::zeros(x.rows / 2, x.cols);
+    for i in 0..out.rows {
+        let a = x.row(2 * i);
+        let b = x.row(2 * i + 1);
+        let o = out.row_mut(i);
+        for j in 0..a.len() {
+            o[j] = 0.5 * (a[j] + b[j]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ops, Rng};
+
+    #[test]
+    fn halve_is_pairwise_mean() {
+        let x = Mat::from_fn(4, 1, |i, _| i as f32);
+        let h = halve(&x);
+        assert_eq!(h.data, vec![0.5, 2.5]);
+    }
+
+    #[test]
+    fn pyramid_matches_direct_pooling() {
+        let mut rng = Rng::new(0);
+        let x = Mat::randn(64, 8, 1.0, &mut rng);
+        let p = Pyramid::build(&x, &[16, 4, 1]);
+        for &s in &[16usize, 4, 1] {
+            let want = ops::pool_rows(&x, s);
+            let got = p.at(s);
+            for (a, b) in got.data.iter().zip(want.data.iter()) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn pyramid_scale_one_is_input() {
+        let mut rng = Rng::new(1);
+        let x = Mat::randn(8, 3, 1.0, &mut rng);
+        let p = Pyramid::build(&x, &[1]);
+        assert_eq!(p.at(1), &x);
+    }
+
+    #[test]
+    fn pyramid_preserves_total_mean() {
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(32, 4, 1.0, &mut rng);
+        let p = Pyramid::build(&x, &[32]);
+        let top = p.at(32);
+        assert_eq!(top.rows, 1);
+        for j in 0..4 {
+            let mean: f32 = (0..32).map(|i| x.get(i, j)).sum::<f32>() / 32.0;
+            assert!((top.get(0, j) - mean).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn pyramid_rejects_non_dividing_scale() {
+        let x = Mat::zeros(12, 2);
+        let _ = Pyramid::build(&x, &[8]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Alg. 1: greedy construction of the selected component set `J`.
+//!
+//! The ladder `R = {s_0 > s_1 > ... > s_k}` starts from a full coarse grid
+//! at `s_0`; at every level the `m_i` surviving blocks with the largest
+//! `mu` (Eq. 6, computed as exp-of-mean from the pooled pyramid — we carry
+//! `log mu` to avoid overflow) are refined into their children at the next
+//! scale.  Blocks never popped become final members of `J`, so the final
+//! supports are pairwise disjoint and tile the full `n x n` matrix
+//! (Remark 4.4 — asserted in tests).
+
+use crate::mra::frame::Block;
+use crate::mra::pyramid::Pyramid;
+use crate::tensor::{mat::dot, topk, Mat};
+
+/// A final member of `J` with its (log) score `log mu = <B, P>/s^2`.
+#[derive(Clone, Copy, Debug)]
+pub struct Scored {
+    pub block: Block,
+    pub log_mu: f32,
+}
+
+/// The constructed set `J`.
+pub struct Selection {
+    pub blocks: Vec<Scored>,
+    /// Number of `mu` evaluations performed (the Sec. 4.4 workload figure).
+    pub mu_evals: usize,
+}
+
+/// Score a block from the pooled pyramids: `q~_s[x] . k~_s[y] / sqrt(d)`.
+#[inline]
+fn score(qp: &Mat, kp: &Mat, x: usize, y: usize, inv_sqrt_d: f32) -> f32 {
+    dot(qp.row(x), kp.row(y)) * inv_sqrt_d
+}
+
+/// Run Alg. 1.
+///
+/// * `scales`  — descending ladder `R` (powers of two dividing `n`).
+/// * `budgets` — `m_i` for each refinement step (`len = scales.len() - 1`).
+/// * `include_diagonal` — seed the diagonal blocks at `s_0` into the pop
+///   set ("initial J prespecified via priors"), guaranteeing every query
+///   row block has at least one finest-scale block (used by MRA-2-s).
+pub fn construct_j(
+    qpyr: &Pyramid,
+    kpyr: &Pyramid,
+    n: usize,
+    d: usize,
+    scales: &[usize],
+    budgets: &[usize],
+    include_diagonal: bool,
+) -> Selection {
+    assert!(!scales.is_empty());
+    assert_eq!(budgets.len(), scales.len() - 1, "one budget per refinement");
+    for w in scales.windows(2) {
+        assert!(w[0] > w[1], "scales must be strictly descending");
+    }
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+
+    let s0 = scales[0];
+    let nb0 = n / s0;
+    let qp0 = qpyr.at(s0);
+    let kp0 = kpyr.at(s0);
+    let mut mu_evals = nb0 * nb0;
+
+    // frontier: surviving blocks at the current scale with (log_mu, prio)
+    let mut frontier: Vec<(Block, f32, f32)> = Vec::with_capacity(nb0 * nb0);
+    for x in 0..nb0 {
+        for y in 0..nb0 {
+            let lm = score(qp0, kp0, x, y, inv_sqrt_d);
+            let prio = if include_diagonal && x == y && scales.len() > 1 {
+                f32::INFINITY
+            } else {
+                lm
+            };
+            frontier.push((Block { scale: s0, x, y }, lm, prio));
+        }
+    }
+
+    let mut final_blocks: Vec<Scored> = Vec::new();
+    for level in 1..scales.len() {
+        let (s_prev, s_new) = (scales[level - 1], scales[level]);
+        let ratio = s_prev / s_new;
+        assert!(ratio >= 2, "adjacent scales must differ");
+        let m = budgets[level - 1].min(frontier.len());
+        let prios: Vec<f32> = frontier.iter().map(|b| b.2).collect();
+        let popped_idx = topk::top_k_indices(&prios, m);
+        let mut popped_mark = vec![false; frontier.len()];
+        for &i in &popped_idx {
+            popped_mark[i] = true;
+        }
+        let qp = qpyr.at(s_new);
+        let kp = kpyr.at(s_new);
+        let mut next: Vec<(Block, f32, f32)> =
+            Vec::with_capacity(m * ratio * ratio);
+        for (i, (block, lm, _)) in frontier.iter().enumerate() {
+            if popped_mark[i] {
+                for child in block.children(ratio) {
+                    let clm = score(qp, kp, child.x, child.y, inv_sqrt_d);
+                    next.push((child, clm, clm));
+                    mu_evals += 1;
+                }
+            } else {
+                final_blocks.push(Scored { block: *block, log_mu: *lm });
+            }
+        }
+        frontier = next;
+    }
+    for (block, lm, _) in frontier {
+        final_blocks.push(Scored { block, log_mu: lm });
+    }
+    Selection { blocks: final_blocks, mu_evals }
+}
+
+impl Selection {
+    /// Only the blocks at the finest scale of the ladder (MRA-2-s keeps
+    /// exactly these — the `A_hat_1` of Sec. 5).
+    pub fn finest_only(&self, finest: usize) -> Vec<Scored> {
+        self.blocks.iter().copied().filter(|s| s.block.scale == finest).collect()
+    }
+
+    /// Total covered area (must equal `n^2` by construction).
+    pub fn covered_area(&self) -> usize {
+        self.blocks.iter().map(|s| s.block.area()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn setup(n: usize, d: usize, scales: &[usize], seed: u64) -> (Pyramid, Pyramid) {
+        let mut rng = Rng::new(seed);
+        let q = Mat::randn(n, d, 1.0, &mut rng);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        (Pyramid::build(&q, scales), Pyramid::build(&k, scales))
+    }
+
+    #[test]
+    fn selection_tiles_the_matrix() {
+        let (n, d) = (64, 8);
+        let scales = [16usize, 4, 1];
+        let (qp, kp) = setup(n, d, &scales, 0);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[3, 5], true);
+        assert_eq!(sel.covered_area(), n * n);
+        // pairwise disjoint
+        for (i, a) in sel.blocks.iter().enumerate() {
+            for b in sel.blocks.iter().skip(i + 1) {
+                assert!(!a.block.overlaps(&b.block), "{:?} {:?}", a.block, b.block);
+            }
+        }
+    }
+
+    #[test]
+    fn block_count_formula() {
+        // |J| = (n/s0)^2 + sum_i m_i (ratio^2 - 1)
+        let (n, d) = (64, 4);
+        let scales = [16usize, 4, 1];
+        let budgets = [3usize, 5];
+        let (qp, kp) = setup(n, d, &scales, 1);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &budgets, false);
+        let expect = 16 + 3 * (16 - 1) + 5 * (16 - 1);
+        assert_eq!(sel.blocks.len(), expect);
+    }
+
+    #[test]
+    fn mu_evals_matches_sec44_formula() {
+        let (n, d) = (64, 4);
+        let scales = [16usize, 4, 1];
+        let budgets = [3usize, 5];
+        let (qp, kp) = setup(n, d, &scales, 2);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &budgets, false);
+        // (n/s0)^2 + m_1 (s0/s1)^2 + m_2 (s1/s2)^2
+        assert_eq!(sel.mu_evals, 16 + 3 * 16 + 5 * 16);
+    }
+
+    #[test]
+    fn diagonal_seeding_refines_all_diagonal_blocks() {
+        let (n, d) = (64, 8);
+        let scales = [16usize, 1];
+        let (qp, kp) = setup(n, d, &scales, 3);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[4], true);
+        // with budget = nb = 4 and diagonal priority, every popped block is
+        // on the diagonal -> all finest blocks lie in diagonal regions
+        for s in sel.finest_only(1) {
+            assert_eq!(s.block.x / 16, s.block.y / 16);
+        }
+    }
+
+    #[test]
+    fn greedy_pops_largest_scores() {
+        let (n, d) = (32, 4);
+        let scales = [8usize, 1];
+        let (qp, kp) = setup(n, d, &scales, 4);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[2], false);
+        // every refined (finest) region must have a parent score >= any
+        // surviving coarse block's score
+        let coarse_max = sel
+            .blocks
+            .iter()
+            .filter(|s| s.block.scale == 8)
+            .map(|s| s.log_mu)
+            .fold(f32::NEG_INFINITY, f32::max);
+        // reconstruct parent scores of refined children via pooled mats
+        let qp8 = qp.at(8);
+        let kp8 = kp.at(8);
+        let inv = 1.0 / (d as f32).sqrt();
+        let mut parents: std::collections::HashSet<(usize, usize)> =
+            std::collections::HashSet::new();
+        for s in sel.finest_only(1) {
+            parents.insert((s.block.x / 8, s.block.y / 8));
+        }
+        for (x, y) in parents {
+            let ps = dot(qp8.row(x), kp8.row(y)) * inv;
+            assert!(ps >= coarse_max - 1e-5, "popped {ps} < kept {coarse_max}");
+        }
+    }
+
+    #[test]
+    fn budget_zero_keeps_everything_coarse() {
+        let (n, d) = (32, 4);
+        let scales = [8usize, 1];
+        let (qp, kp) = setup(n, d, &scales, 5);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[0], false);
+        assert!(sel.blocks.iter().all(|s| s.block.scale == 8));
+        assert_eq!(sel.blocks.len(), 16);
+    }
+
+    #[test]
+    fn oversized_budget_is_clamped() {
+        let (n, d) = (32, 4);
+        let scales = [8usize, 1];
+        let (qp, kp) = setup(n, d, &scales, 6);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[1000], false);
+        // everything refined to scale 1
+        assert!(sel.blocks.iter().all(|s| s.block.scale == 1));
+        assert_eq!(sel.blocks.len(), n * n);
+    }
+}

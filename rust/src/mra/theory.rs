@@ -1,0 +1,246 @@
+//! Lemma 4.1 / Prop. 4.5 quantities: the Jensen-gap constant `C_r`, the
+//! measured numerical range of `P` over block supports, and the relative
+//! error bound.  These are validated empirically by property tests: for
+//! random Q/K the *measured* approximation error must respect the bounds.
+
+use crate::tensor::{ops, topk, Mat};
+
+/// `C_r = 1 + exp(r) - 2 exp(r/2)` (Lemma 4.1).
+pub fn c_r(r: f64) -> f64 {
+    1.0 + r.exp() - 2.0 * (r / 2.0).exp()
+}
+
+/// `C_{2r} = 1 + exp(2r) - 2 exp(r)` (Prop. 4.5).
+pub fn c_2r(r: f64) -> f64 {
+    1.0 + (2.0 * r).exp() - 2.0 * r.exp()
+}
+
+/// Numerical range (max - min) of `P` within each `b x b` block:
+/// returns an `(n/b, n/b)` matrix of ranges.  Test/diagnostic path: needs
+/// the dense `P`.
+pub fn block_ranges(p: &Mat, b: usize) -> Mat {
+    let n = p.rows;
+    assert_eq!(n % b, 0);
+    let nb = n / b;
+    let mut out = Mat::zeros(nb, nb);
+    for x in 0..nb {
+        for y in 0..nb {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for i in x * b..(x + 1) * b {
+                for j in y * b..(y + 1) * b {
+                    let v = p.get(i, j);
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+            }
+            out.set(x, y, hi - lo);
+        }
+    }
+    out
+}
+
+/// Hölder bound on the in-block range (Lemma 4.1 hypothesis):
+/// `r <= 2 beta1 beta2` with `beta1` the max L2 norm of Q/K rows in the
+/// block and `beta2` the max pairwise L2 spread.  Includes the `1/sqrt(d)`
+/// scaling used throughout the repo.
+pub fn holder_range_bound(q: &Mat, k: &Mat, b: usize, x: usize, y: usize) -> f64 {
+    let d = q.cols;
+    let rows = |m: &Mat, g: usize| -> Vec<Vec<f32>> {
+        (g * b..(g + 1) * b).map(|i| m.row(i).to_vec()).collect()
+    };
+    let qs = rows(q, x);
+    let ks = rows(k, y);
+    let norm = |v: &[f32]| v.iter().map(|&t| (t as f64) * (t as f64)).sum::<f64>().sqrt();
+    let beta1 = qs
+        .iter()
+        .chain(ks.iter())
+        .map(|r| norm(r))
+        .fold(0.0f64, f64::max);
+    let spread = |set: &[Vec<f32>]| -> f64 {
+        let mut worst = 0.0f64;
+        for i in 0..set.len() {
+            for j in i + 1..set.len() {
+                let diff: f64 = set[i]
+                    .iter()
+                    .zip(&set[j])
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                worst = worst.max(diff);
+            }
+        }
+        worst
+    };
+    let beta2 = spread(&qs).max(spread(&ks));
+    2.0 * beta1 * beta2 / (d as f64).sqrt()
+}
+
+/// Prop. 4.5 relative-error bound for `R = {b, 1}` with budget `m`:
+/// `sqrt((n^2 - m b^2) C_{2r} delta^2 / sum exp(2 P))`.
+///
+/// `delta` is the `m`-th largest `mu_{b,x,y}`; `r` is the max in-block
+/// range of `P` (measured).  Diagnostic path: materializes `P`.
+pub fn prop45_bound(q: &Mat, k: &Mat, b: usize, m: usize) -> f64 {
+    let n = q.rows;
+    let p = ops::scores(q, k);
+    let mu = {
+        let qt = ops::pool_rows(q, b);
+        let kt = ops::pool_rows(k, b);
+        qt.matmul_transb(&kt).scale(1.0 / (q.cols as f32).sqrt())
+    };
+    let mu_exp: Vec<f32> = mu.data.iter().map(|&v| v.exp()).collect();
+    let delta = topk::kth_largest(&mu_exp, m.min(mu_exp.len())) as f64;
+    let r = block_ranges(&p, b)
+        .data
+        .iter()
+        .cloned()
+        .fold(f32::NEG_INFINITY, f32::max) as f64;
+    let sum_exp2p: f64 = p.data.iter().map(|&v| (2.0 * v as f64).exp()).sum();
+    let numer = ((n * n) as f64 - (m * b * b) as f64).max(0.0) * c_2r(r) * delta * delta;
+    (numer / sum_exp2p).sqrt()
+}
+
+/// Measured unnormalized relative error `||A_hat - A||_F / ||A||_F` for the
+/// two-scale approximation **without** diagonal seeding (the Prop. 4.5
+/// setting).
+pub fn measured_rel_error_no_diag(q: &Mat, k: &Mat, b: usize, m: usize) -> f64 {
+    let n = q.rows;
+    let nb = n / b;
+    let p = ops::scores(q, k);
+    let a = ops::exp(&p);
+    let mu = {
+        let qt = ops::pool_rows(q, b);
+        let kt = ops::pool_rows(k, b);
+        qt.matmul_transb(&kt).scale(1.0 / (q.cols as f32).sqrt())
+    };
+    let chosen = topk::top_k_indices(&mu.data, m.min(nb * nb));
+    let mut selected = vec![false; nb * nb];
+    for &c in &chosen {
+        selected[c] = true;
+    }
+    let mut a_hat = Mat::zeros(n, n);
+    for x in 0..nb {
+        for y in 0..nb {
+            if selected[x * nb + y] {
+                for i in x * b..(x + 1) * b {
+                    for j in y * b..(y + 1) * b {
+                        a_hat.set(i, j, a.get(i, j));
+                    }
+                }
+            } else {
+                let muv = mu.get(x, y).exp();
+                for i in x * b..(x + 1) * b {
+                    for j in y * b..(y + 1) * b {
+                        a_hat.set(i, j, muv);
+                    }
+                }
+            }
+        }
+    }
+    ops::rel_fro_error(&a_hat, &a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn c_r_properties() {
+        assert!(c_r(0.0).abs() < 1e-12); // zero range -> exact
+        assert!(c_r(1.0) > 0.0);
+        assert!(c_r(2.0) > c_r(1.0)); // monotone in r
+        assert!(c_2r(1.0) > c_r(1.0));
+    }
+
+    #[test]
+    fn block_ranges_zero_for_constant_p() {
+        let p = Mat::full(16, 16, 3.0);
+        let r = block_ranges(&p, 4);
+        assert!(r.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn lemma41_gap_bounded_by_cr_mu() {
+        // 0 <= mu* - mu <= C_r mu over random Q/K at several seeds
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed);
+            let (n, d, b) = (32usize, 8usize, 8usize);
+            let q = Mat::randn(n, d, 0.7, &mut rng);
+            let k = Mat::randn(n, d, 0.7, &mut rng);
+            let p = ops::scores(&q, &k);
+            let a = ops::exp(&p);
+            let nb = n / b;
+            let ranges = block_ranges(&p, b);
+            let qt = ops::pool_rows(&q, b);
+            let kt = ops::pool_rows(&k, b);
+            let s_low = qt.matmul_transb(&kt).scale(1.0 / (d as f32).sqrt());
+            for x in 0..nb {
+                for y in 0..nb {
+                    let mu = (s_low.get(x, y) as f64).exp();
+                    let mut mu_star = 0.0f64;
+                    for i in x * b..(x + 1) * b {
+                        for j in y * b..(y + 1) * b {
+                            mu_star += a.get(i, j) as f64;
+                        }
+                    }
+                    mu_star /= (b * b) as f64;
+                    let gap = mu_star - mu;
+                    assert!(gap >= -1e-6 * mu, "jensen violated: {gap}");
+                    let cr = c_r(ranges.get(x, y) as f64);
+                    assert!(gap <= cr * mu * (1.0 + 1e-4) + 1e-9, "gap {gap} > C_r mu {}", cr * mu);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn holder_bound_dominates_measured_range() {
+        let mut rng = Rng::new(3);
+        let (n, d, b) = (32usize, 8usize, 8usize);
+        let q = Mat::randn(n, d, 1.0, &mut rng);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let p = ops::scores(&q, &k);
+        let ranges = block_ranges(&p, b);
+        for x in 0..n / b {
+            for y in 0..n / b {
+                let bound = holder_range_bound(&q, &k, b, x, y);
+                assert!(
+                    (ranges.get(x, y) as f64) <= bound * (1.0 + 1e-4),
+                    "range {} > holder {}",
+                    ranges.get(x, y),
+                    bound
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop45_bound_dominates_measured_error() {
+        for seed in 0..5 {
+            let mut rng = Rng::new(100 + seed);
+            let (n, d, b) = (64usize, 8usize, 16usize);
+            let q = Mat::randn(n, d, 0.5, &mut rng);
+            let k = Mat::randn(n, d, 0.5, &mut rng);
+            for m in [2usize, 6, 12] {
+                let bound = prop45_bound(&q, &k, b, m);
+                let measured = measured_rel_error_no_diag(&q, &k, b, m);
+                assert!(
+                    measured <= bound * (1.0 + 1e-6),
+                    "seed {seed} m {m}: measured {measured} > bound {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bound_tightens_with_budget() {
+        let mut rng = Rng::new(42);
+        let q = Mat::randn(64, 8, 0.5, &mut rng);
+        let k = Mat::randn(64, 8, 0.5, &mut rng);
+        let b1 = prop45_bound(&q, &k, 16, 2);
+        let b2 = prop45_bound(&q, &k, 16, 14);
+        assert!(b2 <= b1 * (1.0 + 1e-6), "{b2} vs {b1}");
+    }
+}

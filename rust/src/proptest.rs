@@ -1,0 +1,56 @@
+//! Tiny property-testing helper (no `proptest` crate offline): run a
+//! predicate over `cases` seeded inputs, reporting the first failing seed
+//! so it can be replayed deterministically.
+
+use crate::tensor::Rng;
+
+/// Run `prop(seed, rng)` for `cases` seeds; panic with the failing seed.
+pub fn for_all_seeds(cases: u64, mut prop: impl FnMut(u64, &mut Rng) -> Result<(), String>) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(seed, &mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        for_all_seeds(20, |_, rng| {
+            let u = rng.uniform();
+            if (0.0..1.0).contains(&u) { Ok(()) } else { Err(format!("{u}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed 3")]
+    fn reports_failing_seed() {
+        for_all_seeds(10, |seed, _| if seed == 3 { Err("boom".into()) } else { Ok(()) });
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(&[1.0], &[1.0005], 0.0, 1e-3).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 0.0, 1e-3).is_err());
+        assert!(assert_close(&[0.0], &[1e-6], 1e-5, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

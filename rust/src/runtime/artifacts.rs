@@ -1,0 +1,289 @@
+//! Artifact manifest parsing (`artifacts/manifest.tsv` written by
+//! `python/compile/aot.py`) and host-side tensor descriptions.
+//!
+//! The manifest is the contract between the build-time Python layer and the
+//! runtime Rust layer: one row per AOT entry point with the input
+//! signature, output arity and the owning model tag.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an artifact input (the subset the models use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    /// Parse `float32:8x128` / `int32:scalar`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dt, dims) = s.split_once(':').context("missing ':' in spec")?;
+        let dtype = DType::parse(dt)?;
+        let dims = if dims == "scalar" {
+            vec![]
+        } else {
+            dims.split('x')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype, dims })
+    }
+}
+
+/// One manifest row: an AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub n_outputs: usize,
+    /// Model tag linking to `<tag>.params.f32` / `<tag>.cfg` (may be empty).
+    pub tag: String,
+}
+
+/// The parsed artifacts directory.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, Artifact>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut artifacts = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            // trim only the line ending: a trailing tab (empty tag column)
+            // is significant
+            let line = line.trim_end_matches(['\r', '\n']);
+            if line.trim().is_empty() || line.trim_start().starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                bail!("manifest line {}: want 5 columns, got {}", lineno + 1, cols.len());
+            }
+            let inputs = cols[2]
+                .split(',')
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("line {}", lineno + 1))?;
+            let art = Artifact {
+                name: cols[0].to_string(),
+                file: PathBuf::from(cols[1]),
+                inputs,
+                n_outputs: cols[3].parse().context("bad n_outputs")?,
+                tag: cols[4].to_string(),
+            };
+            artifacts.insert(art.name.clone(), art);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts.get(name).with_context(|| {
+            let mut names: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+            names.sort_unstable();
+            format!("artifact {name:?} not in manifest; available: {names:?}")
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, art: &Artifact) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+
+    /// Load a raw little-endian f32 file (e.g. `<tag>.params.f32`).
+    pub fn load_f32(&self, file: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{path:?}: length {} not divisible by 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Parse a `<tag>.cfg` sidecar into key -> value.
+    pub fn load_cfg(&self, tag: &str) -> Result<HashMap<String, String>> {
+        let path = self.dir.join(format!("{tag}.cfg"));
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        Ok(text
+            .lines()
+            .filter_map(|l| l.split_once('='))
+            .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+            .collect())
+    }
+
+    /// Artifact names matching a predicate (e.g. all `fwd_mlm_mra2` buckets).
+    pub fn names_matching(&self, pat: &str) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .keys()
+            .filter(|n| n.contains(pat))
+            .cloned()
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// A host-side tensor handed to / received from the runtime.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, d) | HostTensor::I32(_, d) => d,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v, _) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    /// Validate against a spec (dtype + element count + dims).
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("dtype mismatch: {:?} vs {:?}", self.dtype(), spec.dtype);
+        }
+        if self.dims() != spec.dims.as_slice() {
+            bail!("shape mismatch: {:?} vs {:?}", self.dims(), spec.dims);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name\tfile\tinputs\tn_outputs\ttag
+attn_exact_n256\tattn.hlo.txt\tfloat32:1x2x256x64,float32:1x2x256x64,float32:1x2x256x64\t1\t
+train_mlm\ttrain.hlo.txt\tfloat32:562570,float32:562570,float32:562570,float32:scalar,int32:32x128,int32:32x128,float32:32x128\t5\tmlm_exact
+";
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("attn_exact_n256").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].dims, vec![1, 2, 256, 64]);
+        assert_eq!(a.n_outputs, 1);
+        let t = m.get("train_mlm").unwrap();
+        assert_eq!(t.inputs[3].dims, Vec::<usize>::new());
+        assert_eq!(t.inputs[4].dtype, DType::I32);
+        assert_eq!(t.tag, "mlm_exact");
+    }
+
+    #[test]
+    fn unknown_artifact_error_lists_names() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let err = format!("{:#}", m.get("nope").unwrap_err());
+        assert!(err.contains("attn_exact_n256"), "{err}");
+    }
+
+    #[test]
+    fn tensor_spec_roundtrip() {
+        let s = TensorSpec::parse("float32:8x128").unwrap();
+        assert_eq!(s.dims, vec![8, 128]);
+        assert_eq!(s.elems(), 1024);
+        let sc = TensorSpec::parse("int32:scalar").unwrap();
+        assert!(sc.dims.is_empty());
+        assert_eq!(sc.elems(), 1);
+        assert!(TensorSpec::parse("bfloat16:2").is_err());
+    }
+
+    #[test]
+    fn host_tensor_check() {
+        let spec = TensorSpec::parse("float32:2x2").unwrap();
+        let good = HostTensor::F32(vec![0.0; 4], vec![2, 2]);
+        assert!(good.check(&spec).is_ok());
+        let bad_shape = HostTensor::F32(vec![0.0; 4], vec![4]);
+        assert!(bad_shape.check(&spec).is_err());
+        let bad_ty = HostTensor::I32(vec![0; 4], vec![2, 2]);
+        assert!(bad_ty.check(&spec).is_err());
+    }
+
+    #[test]
+    fn names_matching_filters() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.names_matching("attn"), vec!["attn_exact_n256".to_string()]);
+        assert!(m.names_matching("zzz").is_empty());
+    }
+
+    #[test]
+    fn malformed_rows_rejected() {
+        assert!(Manifest::parse("a\tb\tc\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("a\tb\tfloat32:x\t1\t\n", PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense `f32` linear-algebra substrate.
+//!
+//! No external linear-algebra crates are available in the offline build, so
+//! everything the coordinator, the MRA core, and the baselines need is
+//! implemented here from scratch: a row-major matrix type with a cache-tiled
+//! matmul, elementwise/reduction ops, a deterministic PRNG, randomized
+//! truncated SVD, and partial top-k selection.
+
+pub mod mat;
+pub mod ops;
+pub mod rng;
+pub mod svd;
+pub mod topk;
+
+pub use mat::Mat;
+pub use rng::Rng;

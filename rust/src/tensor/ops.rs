@@ -1,0 +1,210 @@
+//! Elementwise / reduction operations shared by the MRA core and baselines.
+
+use crate::tensor::Mat;
+
+/// Row-wise softmax (numerically stabilized).
+pub fn softmax_rows(m: &Mat) -> Mat {
+    let mut out = m.clone();
+    for i in 0..m.rows {
+        let row = out.row_mut(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum.max(1e-30);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// Elementwise `exp`.
+pub fn exp(m: &Mat) -> Mat {
+    m.map(f32::exp)
+}
+
+/// Per-row sums as a vector.
+pub fn row_sums(m: &Mat) -> Vec<f32> {
+    (0..m.rows).map(|i| m.row(i).iter().sum()).collect()
+}
+
+/// Divide each row by the matching entry of `d` (row normalization).
+pub fn div_rows(m: &Mat, d: &[f32]) -> Mat {
+    assert_eq!(m.rows, d.len());
+    let mut out = m.clone();
+    for i in 0..m.rows {
+        let inv = 1.0 / d[i].max(1e-30);
+        for v in out.row_mut(i) {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// Relative Frobenius error `||a - b||_F / ||b||_F` (the paper's metric).
+pub fn rel_fro_error(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.data.iter().zip(b.data.iter()) {
+        let d = (*x as f64) - (*y as f64);
+        num += d * d;
+        den += (*y as f64) * (*y as f64);
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Mean softmax row entropy (x-axis of Fig. 5 / Fig. 7 right).
+pub fn attention_entropy(p: &Mat) -> f64 {
+    let a = softmax_rows(p);
+    let mut total = 0.0f64;
+    for i in 0..a.rows {
+        for &v in a.row(i) {
+            if v > 1e-30 {
+                total -= (v as f64) * (v as f64).ln();
+            }
+        }
+    }
+    total / a.rows as f64
+}
+
+/// Average-pool groups of `b` consecutive rows: `(n, d) -> (n/b, d)`.
+pub fn pool_rows(x: &Mat, b: usize) -> Mat {
+    assert_eq!(x.rows % b, 0, "block must divide rows");
+    let nb = x.rows / b;
+    let inv = 1.0 / b as f32;
+    let mut out = Mat::zeros(nb, x.cols);
+    for g in 0..nb {
+        let orow = out.row_mut(g);
+        for r in 0..b {
+            for (o, &v) in orow.iter_mut().zip(x.row(g * b + r)) {
+                *o += v;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Scaled score matrix `P = Q K^T / sqrt(d)`.
+pub fn scores(q: &Mat, k: &Mat) -> Mat {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    q.matmul_transb(k).scale(scale)
+}
+
+/// Exact attention `softmax(QK^T/sqrt(d)) V` — the gold standard everything
+/// else is measured against.
+pub fn exact_attention(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    softmax_rows(&scores(q, k)).matmul(v)
+}
+
+/// LayerNorm over the last axis (gain 1, bias 0) — substrate for baselines.
+pub fn layer_norm_rows(x: &Mat, eps: f32) -> Mat {
+    let mut out = x.clone();
+    for i in 0..x.rows {
+        let row = out.row_mut(i);
+        let n = row.len() as f32;
+        let mu: f32 = row.iter().sum::<f32>() / n;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+        let inv = 1.0 / (var + eps).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mu) * inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(0);
+        let m = Mat::randn(6, 10, 3.0, &mut rng);
+        let s = softmax_rows(&m);
+        for i in 0..6 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(s.row(i).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let m = Mat::from_vec(1, 3, vec![1000.0, 1000.0, -1000.0]);
+        let s = softmax_rows(&m);
+        assert!((s.get(0, 0) - 0.5).abs() < 1e-5);
+        assert!(s.get(0, 2) < 1e-6);
+    }
+
+    #[test]
+    fn rel_fro_error_zero_for_identical() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(4, 4, 1.0, &mut rng);
+        assert!(rel_fro_error(&m, &m) < 1e-12);
+    }
+
+    #[test]
+    fn rel_fro_error_scale_invariance() {
+        let mut rng = Rng::new(2);
+        let b = Mat::randn(8, 8, 1.0, &mut rng);
+        let a = b.scale(1.1);
+        let e1 = rel_fro_error(&a, &b);
+        let a2 = b.scale(2.0).scale(1.1);
+        let b2 = b.scale(2.0);
+        let e2 = rel_fro_error(&a2, &b2);
+        assert!((e1 - e2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pool_rows_means() {
+        let x = Mat::from_fn(4, 2, |i, _| i as f32);
+        let p = pool_rows(&x, 2);
+        assert_eq!(p.rows, 2);
+        assert!((p.get(0, 0) - 0.5).abs() < 1e-6);
+        assert!((p.get(1, 0) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        // uniform scores -> entropy = ln(n); peaked scores -> ~0
+        let n = 16;
+        let uniform = Mat::zeros(n, n);
+        let e_u = attention_entropy(&uniform);
+        assert!((e_u - (n as f64).ln()).abs() < 1e-4);
+        let peaked = Mat::from_fn(n, n, |i, j| if i == j { 50.0 } else { 0.0 });
+        assert!(attention_entropy(&peaked) < 1e-3);
+    }
+
+    #[test]
+    fn exact_attention_rows_are_convex_combos() {
+        let mut rng = Rng::new(3);
+        let q = Mat::randn(8, 4, 1.0, &mut rng);
+        let k = Mat::randn(8, 4, 1.0, &mut rng);
+        let v = Mat::full(8, 4, 1.0);
+        let z = exact_attention(&q, &k, &v);
+        for &x in z.data.iter() {
+            assert!((x - 1.0).abs() < 1e-5); // convex combo of ones = 1
+        }
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut rng = Rng::new(4);
+        let x = Mat::randn(3, 32, 5.0, &mut rng);
+        let y = layer_norm_rows(&x, 1e-5);
+        for i in 0..3 {
+            let mu: f32 = y.row(i).iter().sum::<f32>() / 32.0;
+            let var: f32 = y.row(i).iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 32.0;
+            assert!(mu.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Partial top-k selection (quickselect) — Alg. 1's "pop m elements with the
+//! largest mu" without a full sort.
+
+/// Indices of the `k` largest values (descending by value, ties by index).
+///
+/// `O(n)` average via quickselect on a scratch index vector, then only the
+/// selected prefix is sorted (`O(k log k)`).
+pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let n = values.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    if k < n {
+        // descending comparator: largest k to the front
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            values[b]
+                .partial_cmp(&values[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(|&a, &b| {
+        values[b]
+            .partial_cmp(&values[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// The `k`-th largest value (1-based: `k = 1` is the max) — the
+/// `delta` of Prop. 4.5.
+pub fn kth_largest(values: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= values.len());
+    let mut v = values.to_vec();
+    let pos = k - 1;
+    v.select_nth_unstable_by(pos, |a, b| {
+        b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    v[pos]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn top_k_known() {
+        let v = [3.0f32, 1.0, 4.0, 1.5, 9.0, 2.6];
+        assert_eq!(top_k_indices(&v, 3), vec![4, 2, 0]);
+    }
+
+    #[test]
+    fn top_k_full_is_argsort_desc() {
+        let v = [0.5f32, -1.0, 2.0, 2.0, 0.0];
+        // ties broken by index
+        assert_eq!(top_k_indices(&v, 5), vec![2, 3, 0, 4, 1]);
+    }
+
+    #[test]
+    fn top_k_zero_and_overflow() {
+        let v = [1.0f32, 2.0];
+        assert!(top_k_indices(&v, 0).is_empty());
+        assert_eq!(top_k_indices(&v, 10), vec![1, 0]);
+    }
+
+    #[test]
+    fn top_k_matches_sort_random() {
+        let mut rng = Rng::new(8);
+        for _ in 0..20 {
+            let v: Vec<f32> = (0..200).map(|_| rng.normal()).collect();
+            let got = top_k_indices(&v, 17);
+            let mut all: Vec<usize> = (0..v.len()).collect();
+            all.sort_by(|&a, &b| {
+                v[b].partial_cmp(&v[a]).unwrap().then(a.cmp(&b))
+            });
+            assert_eq!(got, all[..17].to_vec());
+        }
+    }
+
+    #[test]
+    fn kth_largest_known() {
+        let v = [5.0f32, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(kth_largest(&v, 1), 5.0);
+        assert_eq!(kth_largest(&v, 3), 3.0);
+        assert_eq!(kth_largest(&v, 5), 1.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! 1D / 2D Haar wavelet transform — the classical MRA machinery of Sec. 2.2
+//! and the comparator of Fig. 1 (coefficient histogram, top-coefficient
+//! reconstruction).
+//!
+//! The orthonormal Haar filters are `L = (1/sqrt2, 1/sqrt2)` and
+//! `H = (1/sqrt2, -1/sqrt2)`; the analysis operator is a linear isometry
+//! (Parseval — asserted in tests).
+
+use crate::tensor::Mat;
+
+const INV_SQRT2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+
+/// One analysis level in place: `x[..n]` -> `[approx | detail]`, each `n/2`.
+fn haar1d_step(x: &mut [f32], n: usize, scratch: &mut [f32]) {
+    let half = n / 2;
+    for i in 0..half {
+        scratch[i] = (x[2 * i] + x[2 * i + 1]) * INV_SQRT2;
+        scratch[half + i] = (x[2 * i] - x[2 * i + 1]) * INV_SQRT2;
+    }
+    x[..n].copy_from_slice(&scratch[..n]);
+}
+
+/// One synthesis level in place (inverse of [`haar1d_step`]).
+fn haar1d_inv_step(x: &mut [f32], n: usize, scratch: &mut [f32]) {
+    let half = n / 2;
+    for i in 0..half {
+        scratch[2 * i] = (x[i] + x[half + i]) * INV_SQRT2;
+        scratch[2 * i + 1] = (x[i] - x[half + i]) * INV_SQRT2;
+    }
+    x[..n].copy_from_slice(&scratch[..n]);
+}
+
+/// Full 1D Haar analysis (length must be a power of two).
+pub fn haar1d(x: &[f32]) -> Vec<f32> {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "length must be a power of two");
+    let mut out = x.to_vec();
+    let mut scratch = vec![0.0f32; n];
+    let mut len = n;
+    while len >= 2 {
+        haar1d_step(&mut out, len, &mut scratch);
+        len /= 2;
+    }
+    out
+}
+
+/// Full 1D Haar synthesis (inverse of [`haar1d`]).
+pub fn haar1d_inverse(c: &[f32]) -> Vec<f32> {
+    let n = c.len();
+    assert!(n.is_power_of_two());
+    let mut out = c.to_vec();
+    let mut scratch = vec![0.0f32; n];
+    let mut len = 2;
+    while len <= n {
+        haar1d_inv_step(&mut out, len, &mut scratch);
+        len *= 2;
+    }
+    out
+}
+
+/// 2D Haar analysis: standard (non-separable-level) square decomposition —
+/// alternate one level on all rows then all columns, down to 1x1.
+pub fn haar2d(a: &Mat) -> Mat {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "square matrices only");
+    assert!(n.is_power_of_two());
+    let mut out = a.clone();
+    let mut scratch = vec![0.0f32; n];
+    let mut len = n;
+    while len >= 2 {
+        for i in 0..len {
+            let row = &mut out.data[i * n..i * n + len];
+            haar1d_step(row, len, &mut scratch);
+        }
+        let mut col = vec![0.0f32; len];
+        for j in 0..len {
+            for i in 0..len {
+                col[i] = out.data[i * n + j];
+            }
+            haar1d_step(&mut col, len, &mut scratch);
+            for i in 0..len {
+                out.data[i * n + j] = col[i];
+            }
+        }
+        len /= 2;
+    }
+    out
+}
+
+/// Inverse of [`haar2d`].
+pub fn haar2d_inverse(c: &Mat) -> Mat {
+    let n = c.rows;
+    assert_eq!(c.rows, c.cols);
+    assert!(n.is_power_of_two());
+    let mut out = c.clone();
+    let mut scratch = vec![0.0f32; n];
+    let mut len = 2;
+    while len <= n {
+        let mut col = vec![0.0f32; len];
+        for j in 0..len {
+            for i in 0..len {
+                col[i] = out.data[i * n + j];
+            }
+            haar1d_inv_step(&mut col, len, &mut scratch);
+            for i in 0..len {
+                out.data[i * n + j] = col[i];
+            }
+        }
+        for i in 0..len {
+            let row = &mut out.data[i * n..i * n + len];
+            haar1d_inv_step(row, len, &mut scratch);
+        }
+        len *= 2;
+    }
+    out
+}
+
+/// Keep only the `k` largest-magnitude coefficients (the Fig. 1
+/// "top p% of coefficients" reconstruction), zeroing the rest.
+pub fn threshold_top_k(c: &Mat, k: usize) -> Mat {
+    let mags: Vec<f32> = c.data.iter().map(|v| v.abs()).collect();
+    let keep = crate::tensor::topk::top_k_indices(&mags, k);
+    let mut out = Mat::zeros(c.rows, c.cols);
+    for idx in keep {
+        out.data[idx] = c.data[idx];
+    }
+    out
+}
+
+/// Histogram of |coefficient| in log10 bins — the Fig. 1 left panel.
+/// Returns `(bin_edges, counts)` over `[10^lo, 10^hi]` with `bins` bins.
+pub fn coeff_histogram(c: &Mat, lo: f64, hi: f64, bins: usize) -> (Vec<f64>, Vec<usize>) {
+    let mut counts = vec![0usize; bins];
+    let width = (hi - lo) / bins as f64;
+    for &v in c.data.iter() {
+        let lg = (v.abs().max(1e-30) as f64).log10();
+        let b = ((lg - lo) / width).floor();
+        let b = b.clamp(0.0, bins as f64 - 1.0) as usize;
+        counts[b] += 1;
+    }
+    let edges = (0..=bins).map(|i| lo + i as f64 * width).collect();
+    (edges, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ops::rel_fro_error, Rng};
+
+    #[test]
+    fn haar1d_roundtrip() {
+        let mut rng = Rng::new(0);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let c = haar1d(&x);
+        let y = haar1d_inverse(&c);
+        for (a, b) in x.iter().zip(y.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn haar1d_constant_signal_single_coeff() {
+        let x = vec![3.0f32; 8];
+        let c = haar1d(&x);
+        // all energy in the approximation coefficient
+        assert!((c[0] - 3.0 * (8.0f32).sqrt()).abs() < 1e-4);
+        for &v in &c[1..] {
+            assert!(v.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn haar1d_parseval() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
+        let c = haar1d(&x);
+        let ex: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        let ec: f64 = c.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!((ex - ec).abs() / ex < 1e-5);
+    }
+
+    #[test]
+    fn haar2d_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(32, 32, 1.0, &mut rng);
+        let c = haar2d(&a);
+        let b = haar2d_inverse(&c);
+        assert!(rel_fro_error(&b, &a) < 1e-5);
+    }
+
+    #[test]
+    fn haar2d_parseval() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(16, 16, 2.0, &mut rng);
+        let c = haar2d(&a);
+        assert!((a.fro_norm() - c.fro_norm()).abs() / a.fro_norm() < 1e-5);
+    }
+
+    #[test]
+    fn threshold_reconstruction_error_decreases_with_k() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(32, 32, 1.0, &mut rng);
+        let c = haar2d(&a);
+        let mut prev = f64::INFINITY;
+        for k in [64, 256, 1024] {
+            let rec = haar2d_inverse(&threshold_top_k(&c, k));
+            let e = rel_fro_error(&rec, &a);
+            assert!(e <= prev + 1e-6);
+            prev = e;
+        }
+        // full coefficient set -> exact
+        let rec = haar2d_inverse(&threshold_top_k(&c, 32 * 32));
+        assert!(rel_fro_error(&rec, &a) < 1e-5);
+    }
+
+    #[test]
+    fn histogram_counts_all_entries() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(16, 16, 1.0, &mut rng);
+        let (_edges, counts) = coeff_histogram(&a, -6.0, 2.0, 24);
+        assert_eq!(counts.iter().sum::<usize>(), 256);
+    }
+}

@@ -1,0 +1,205 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! Every test skips (with a notice) when `artifacts/` has not been built —
+//! run `make artifacts` first for full coverage.
+
+use std::sync::Arc;
+
+use mra::config::{ServeConfig, TrainConfig};
+use mra::coordinator::{Server, Trainer};
+use mra::mra::{mra2_attention, Variant};
+use mra::runtime::{self, HostTensor, Runtime};
+use mra::tensor::{ops, Mat, Rng};
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.tsv").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn artifact_exact_attention_matches_native() {
+    require_artifacts!();
+    let rt = Runtime::new("artifacts").unwrap();
+    let (h, n, d) = (2usize, 256usize, 64usize);
+    let mut rng = Rng::new(1);
+    let mk = |rng: &mut Rng| -> Vec<f32> { (0..h * n * d).map(|_| rng.normal() * 0.5).collect() };
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let dims = vec![1, h, n, d];
+    let out = rt
+        .execute(
+            "attn_exact_n256_h2_d64",
+            &[
+                HostTensor::F32(q.clone(), dims.clone()),
+                HostTensor::F32(k.clone(), dims.clone()),
+                HostTensor::F32(v.clone(), dims.clone()),
+            ],
+        )
+        .unwrap();
+    let z = out[0].as_f32().unwrap();
+    for head in 0..h {
+        let base = head * n * d;
+        let qm = Mat::from_vec(n, d, q[base..base + n * d].to_vec());
+        let km = Mat::from_vec(n, d, k[base..base + n * d].to_vec());
+        let vm = Mat::from_vec(n, d, v[base..base + n * d].to_vec());
+        let want = ops::exact_attention(&qm, &km, &vm);
+        let got = Mat::from_vec(n, d, z[base..base + n * d].to_vec());
+        assert!(ops::rel_fro_error(&got, &want) < 1e-4, "head {head}");
+    }
+}
+
+#[test]
+fn artifact_mra2_matches_native_rust_mra2() {
+    // THE cross-language correctness check: Pallas kernel (L1, lowered via
+    // L2 and executed through PJRT) == native Rust MRA core (L3).
+    require_artifacts!();
+    let rt = Runtime::new("artifacts").unwrap();
+    let (h, n, d) = (2usize, 256usize, 64usize);
+    let nb = n / 32;
+    let mut rng = Rng::new(2);
+    let mk = |rng: &mut Rng| -> Vec<f32> { (0..h * n * d).map(|_| rng.normal() * 0.5).collect() };
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let dims = vec![1, h, n, d];
+    for (artifact, variant) in [
+        ("attn_mra2_n256_h2_d64", Variant::Full),
+        ("attn_mra2s_n256_h2_d64", Variant::Sparse),
+    ] {
+        let out = rt
+            .execute(
+                artifact,
+                &[
+                    HostTensor::F32(q.clone(), dims.clone()),
+                    HostTensor::F32(k.clone(), dims.clone()),
+                    HostTensor::F32(v.clone(), dims.clone()),
+                ],
+            )
+            .unwrap();
+        let z = out[0].as_f32().unwrap();
+        for head in 0..h {
+            let base = head * n * d;
+            let qm = Mat::from_vec(n, d, q[base..base + n * d].to_vec());
+            let km = Mat::from_vec(n, d, k[base..base + n * d].to_vec());
+            let vm = Mat::from_vec(n, d, v[base..base + n * d].to_vec());
+            let want = mra2_attention(&qm, &km, &vm, 32, 4 * nb, variant);
+            let got = Mat::from_vec(n, d, z[base..base + n * d].to_vec());
+            let err = ops::rel_fro_error(&got, &want);
+            assert!(err < 5e-2, "{artifact} head {head}: {err}");
+        }
+    }
+}
+
+#[test]
+fn trainer_loss_decreases_over_artifact_steps() {
+    require_artifacts!();
+    let (rt, manifest) = runtime::spawn("artifacts").unwrap();
+    let cfg = TrainConfig {
+        steps: 12,
+        batch: 32,
+        eval_every: 0,
+        seed: 3,
+        model: "mlm_mra2_n128_d128_l2_h2_v512".into(),
+        artifacts_dir: "artifacts".into(),
+        log_every: 4,
+    };
+    let mut trainer = Trainer::new(rt, manifest, cfg).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let (loss, acc) = trainer.train_step().unwrap();
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+        losses.push(loss);
+    }
+    assert!(
+        losses[11] < losses[0],
+        "loss did not decrease: {:.3} -> {:.3}",
+        losses[0],
+        losses[11]
+    );
+}
+
+#[test]
+fn server_round_trip_under_concurrency() {
+    require_artifacts!();
+    let (rt, manifest) = runtime::spawn("artifacts").unwrap();
+    let cfg = ServeConfig {
+        model: "mlm_mra2_n128_d128_l2_h2_v512".into(),
+        artifacts_dir: "artifacts".into(),
+        max_batch: 8,
+        flush_us: 1000,
+        workers: 2,
+        queue_depth: 64,
+    };
+    let server = Arc::new(Server::start(rt, manifest, cfg).unwrap());
+    std::thread::scope(|s| {
+        for c in 0..3u64 {
+            let server = server.clone();
+            s.spawn(move || {
+                for r in 0..6u64 {
+                    let len = 16 + ((c * 7 + r) % 100) as usize;
+                    let toks: Vec<i32> = (0..len).map(|t| 4 + (t as i32 % 500)).collect();
+                    let resp = server.infer(toks.clone()).expect("infer");
+                    assert_eq!(resp.predictions.len(), toks.len());
+                    assert!(resp.predictions.iter().all(|&p| p >= 0 && p < 512));
+                }
+            });
+        }
+    });
+    assert_eq!(
+        server.metrics.requests.load(std::sync::atomic::Ordering::Relaxed),
+        18
+    );
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn cls_artifact_train_step_runs() {
+    require_artifacts!();
+    let (rt, manifest) = runtime::spawn("artifacts").unwrap();
+    let tag = "cls_mra2_n128_d64_l2_h2_v64";
+    let params = manifest.load_f32(&format!("{tag}.params.f32")).unwrap();
+    let n = params.len();
+    let mut rng = Rng::new(4);
+    let task = mra::data::lra::LraTask::ListOps;
+    let b = task.batch(32, 128, &mut rng);
+    let inputs = vec![
+        HostTensor::F32(params, vec![n]),
+        HostTensor::F32(vec![0.0; n], vec![n]),
+        HostTensor::F32(vec![0.0; n], vec![n]),
+        HostTensor::scalar_f32(0.0),
+        HostTensor::I32(b.input_ids, vec![32, 128]),
+        HostTensor::I32(b.labels, vec![32]),
+    ];
+    let out = rt.execute(&format!("train_{tag}_b32"), inputs).unwrap();
+    assert_eq!(out.len(), 5);
+    let loss = out[3].as_f32().unwrap()[0];
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn runtime_rejects_bad_shapes() {
+    require_artifacts!();
+    let rt = Runtime::new("artifacts").unwrap();
+    let bad = vec![HostTensor::F32(vec![0.0; 4], vec![2, 2])];
+    assert!(rt.execute("attn_exact_n256_h2_d64", &bad).is_err());
+    assert!(rt.execute("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn manifest_covers_expected_artifact_families() {
+    require_artifacts!();
+    let manifest = runtime::Manifest::load("artifacts").unwrap();
+    for pat in ["attn_exact", "attn_mra2", "train_mlm_mra2", "fwd_mlm_mra2", "train_cls_"] {
+        assert!(
+            !manifest.names_matching(pat).is_empty(),
+            "no artifacts matching {pat}"
+        );
+    }
+}
