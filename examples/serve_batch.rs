@@ -1,10 +1,14 @@
-//! Serving demo: start the coordinator (batcher -> bucket router -> PJRT
-//! worker) over the MRA-2 MLM model and fire concurrent requests, printing
-//! latency/throughput — the serving-paper shape of the evaluation.
+//! Serving demo: start the coordinator (batcher -> workers) over the MRA-2
+//! MLM model and fire concurrent requests, printing latency/throughput —
+//! the serving-paper shape of the evaluation.
+//!
+//! With `artifacts/` built the workers execute the AOT model through PJRT;
+//! without it (or without the `pjrt` feature) batches route through the
+//! native parallel batched engine instead, so the demo always runs.
 //!
 //! ```bash
-//! make artifacts
 //! cargo run --release --example serve_batch -- --requests 64 --clients 4
+//! # optional: make artifacts   (switches to the AOT path)
 //! ```
 
 use std::sync::Arc;
@@ -13,8 +17,9 @@ use anyhow::Result;
 
 use mra::cli::Args;
 use mra::config::ServeConfig;
-use mra::coordinator::Server;
+use mra::coordinator::{NativeMlmConfig, Server};
 use mra::data::{Corpus, CorpusConfig};
+use mra::engine::pool;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -22,21 +27,47 @@ fn main() -> Result<()> {
     let clients = args.usize_or("clients", 4)?.max(1);
     let artifacts = args.str_or("artifacts", "artifacts");
     let model = args.str_or("model", "mlm_mra2_n128_d128_l2_h2_v512");
+    let threads = args.usize_or("threads", pool::default_threads())?;
 
-    let (rt, manifest) = mra::runtime::spawn(&artifacts)?;
     let cfg = ServeConfig {
         model: model.clone(),
-        artifacts_dir: artifacts,
+        artifacts_dir: artifacts.clone(),
         max_batch: args.usize_or("max-batch", 8)?,
         flush_us: args.usize_or("flush-us", 2000)? as u64,
-        workers: 2,
+        workers: args.usize_or("workers", 2)?,
         queue_depth: 256,
     };
-    let model_cfg = manifest.load_cfg(&model)?;
-    let seq_len: usize = model_cfg["seq_len"].parse()?;
-    let vocab: usize = model_cfg["vocab"].parse()?;
-    println!("serving {model} (seq_len {seq_len}) with max_batch {}", cfg.max_batch);
-    let server = Arc::new(Server::start(rt, manifest, cfg)?);
+    // the AOT path needs both artifacts/ *and* a PJRT-capable build; the
+    // default (no `pjrt` feature) stub runtime can parse manifests but not
+    // execute HLO, so route straight to the native engine in that case
+    let spawned = if cfg!(feature = "pjrt") {
+        mra::runtime::spawn(&artifacts).map_err(|e| format!("{e:#}"))
+    } else {
+        Err("built without the `pjrt` feature".to_string())
+    };
+    let (server, seq_len, vocab) = match spawned {
+        Ok((rt, manifest)) => {
+            let model_cfg = manifest.load_cfg(&model)?;
+            let seq_len: usize = model_cfg["seq_len"].parse()?;
+            let vocab: usize = model_cfg["vocab"].parse()?;
+            println!(
+                "serving {model} from AOT artifacts (seq_len {seq_len}, max_batch {})",
+                cfg.max_batch
+            );
+            (Server::start(rt, manifest, cfg.clone())?, seq_len, vocab)
+        }
+        Err(why) => {
+            let mcfg = NativeMlmConfig::from_tag(&model);
+            let (seq_len, vocab) = (mcfg.seq_len, mcfg.vocab);
+            println!(
+                "AOT path unavailable ({why});\nserving {model} through the native \
+                 batched engine ({threads} attention threads, max_batch {})",
+                cfg.max_batch
+            );
+            (Server::start_native(cfg.clone(), mcfg, threads)?, seq_len, vocab)
+        }
+    };
+    let server = Arc::new(server);
 
     let t0 = std::time::Instant::now();
     let per_client = requests / clients;

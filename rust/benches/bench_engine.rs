@@ -1,0 +1,99 @@
+//! Engine thread-scaling bench: batched multi-head MRA-2 throughput vs
+//! worker count on the acceptance workload `batch=4, heads=8, n=2048,
+//! d=64` (block 32, budget 4 * nb).
+//!
+//! Every measured configuration is first checked against the sequential
+//! single-head `mra2_attention` reference (must match within 1e-6 relative
+//! Frobenius error — the engine's parallel schedule is bitwise identical).
+//!
+//! ```bash
+//! cargo bench --bench bench_engine                     # 1/2/4/8 + all cores
+//! MRA_BENCH_SMALL=1 cargo bench --bench bench_engine   # quick smoke sizes
+//! ```
+
+use mra::bench::{time_it, Table};
+use mra::engine::{pool, rel_fro_error_flat, BatchedTensor, Engine, Mra2Kernel};
+use mra::mra::{mra2_attention, Variant};
+use mra::tensor::Rng;
+
+fn main() {
+    let small = std::env::var("MRA_BENCH_SMALL").is_ok();
+    let (batch, heads, n, d) = if small { (2, 4, 512, 32) } else { (4, 8, 2048, 64) };
+    let block = 32usize;
+    let m = 4 * (n / block); // 4 refined blocks per query block on average
+    println!(
+        "engine bench: batch={batch} heads={heads} n={n} d={d} block={block} m={m} \
+         ({} machine cores)\n",
+        pool::default_threads()
+    );
+
+    let mut rng = Rng::new(0xE26);
+    let q = BatchedTensor::randn(batch, heads, n, d, 1.0, &mut rng);
+    let k = BatchedTensor::randn(batch, heads, n, d, 1.0, &mut rng);
+    let v = BatchedTensor::randn(batch, heads, n, d, 1.0, &mut rng);
+
+    // sequential per-head reference through the public fast path
+    let mut reference = BatchedTensor::zeros(batch, heads, n, d);
+    for b in 0..batch {
+        for h in 0..heads {
+            let z = mra2_attention(
+                &q.head_mat(b, h),
+                &k.head_mat(b, h),
+                &v.head_mat(b, h),
+                block,
+                m,
+                Variant::Full,
+            );
+            reference.head_mut(b, h).copy_from_slice(&z.data);
+        }
+    }
+
+    let mut threads: Vec<usize> = vec![1, 2, 4, 8];
+    let avail = pool::default_threads();
+    if !threads.contains(&avail) {
+        threads.push(avail);
+    }
+    threads.sort_unstable();
+    threads.dedup();
+
+    let iters = if small { 5 } else { 3 };
+    let mut table =
+        Table::new(&["threads", "mean ms", "p50 ms", "p95 ms", "heads/s", "speedup", "rel err"]);
+    let mut base_ms = 0.0f64;
+    let mut ms_at = std::collections::HashMap::new();
+    for &t in &threads {
+        let engine = Engine::new(Box::new(Mra2Kernel::new(block, m, Variant::Full)), t);
+        let out = engine.forward(&q, &k, &v);
+        let err = rel_fro_error_flat(&out.data, &reference.data);
+        assert!(
+            err <= 1e-6,
+            "parallel engine diverged from sequential reference at {t} threads: {err}"
+        );
+        let stats = time_it(1, iters, || {
+            let _ = engine.forward(&q, &k, &v);
+        });
+        if t == 1 {
+            base_ms = stats.mean_ms;
+        }
+        ms_at.insert(t, stats.mean_ms);
+        table.row(&[
+            format!("{t}"),
+            format!("{:.2}", stats.mean_ms),
+            format!("{:.2}", stats.p50_ms),
+            format!("{:.2}", stats.p95_ms),
+            format!("{:.0}", stats.throughput(batch * heads)),
+            format!("{:.2}x", base_ms / stats.mean_ms.max(1e-9)),
+            format!("{err:.2e}"),
+        ]);
+    }
+    table.print();
+
+    if let (Some(&one), Some(&four)) = (ms_at.get(&1), ms_at.get(&4)) {
+        let speedup = one / four.max(1e-9);
+        println!(
+            "\n4-thread speedup over 1-thread engine path: {speedup:.2}x \
+             (acceptance target: >= 2x on a >= 4-core machine)"
+        );
+    }
+    println!("bench_engine OK (all outputs within 1e-6 of the sequential reference)");
+}

@@ -14,6 +14,14 @@ pub struct Stats {
     pub min_ms: f64,
 }
 
+impl Stats {
+    /// Throughput in items/sec given `items` processed per iteration
+    /// (e.g. `batch * heads` attention heads per engine forward).
+    pub fn throughput(&self, items: usize) -> f64 {
+        items as f64 / (self.mean_ms.max(1e-9) / 1e3)
+    }
+}
+
 /// Time `f` with `warmup` unmeasured and `iters` measured runs.
 pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
     for _ in 0..warmup {
@@ -113,6 +121,13 @@ mod tests {
         assert!(s.mean_ms >= 0.0);
         assert!(s.p50_ms <= s.p95_ms + 1e-9);
         assert!(s.min_ms <= s.mean_ms + 1e-9);
+    }
+
+    #[test]
+    fn throughput_scales_with_items() {
+        let s = Stats { iters: 3, mean_ms: 10.0, p50_ms: 10.0, p95_ms: 10.0, min_ms: 10.0 };
+        assert!((s.throughput(1) - 100.0).abs() < 1e-9);
+        assert!((s.throughput(32) - 3200.0).abs() < 1e-6);
     }
 
     #[test]

@@ -64,6 +64,16 @@ impl Batcher {
         None
     }
 
+    /// Time remaining until the *oldest* pending request's flush deadline
+    /// (zero if already overdue); `None` when the queue is empty.  The
+    /// server loop bounds its `recv_timeout` with this so a steady trickle
+    /// of arrivals cannot keep resetting the wait and starve the oldest
+    /// request (§bugfix).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        let oldest = self.queue.front()?;
+        Some(self.flush_after.saturating_sub(now.duration_since(oldest.arrived)))
+    }
+
     /// Drain everything (shutdown path).
     pub fn drain(&mut self) -> Option<Batch> {
         if self.queue.is_empty() {
@@ -132,6 +142,22 @@ mod tests {
         b.push(req(0));
         assert!(b.poll_due(Instant::now()).is_none());
         assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_request() {
+        let mut b = Batcher::new(8, Duration::from_millis(50));
+        assert!(b.next_deadline(Instant::now()).is_none());
+        let t0 = Instant::now();
+        b.push(Request { id: 0, tokens: vec![2], arrived: t0 });
+        std::thread::sleep(Duration::from_millis(2));
+        b.push(Request { id: 1, tokens: vec![2], arrived: Instant::now() });
+        // deadline follows the oldest request, not the newest
+        let d = b.next_deadline(Instant::now()).unwrap();
+        assert!(d <= Duration::from_millis(49), "{d:?}");
+        // overdue -> zero, never panics
+        let d = b.next_deadline(t0 + Duration::from_millis(500)).unwrap();
+        assert_eq!(d, Duration::ZERO);
     }
 
     #[test]

@@ -1,21 +1,27 @@
 //! Layer-3 coordinator: the serving/training control plane that owns the
 //! request path (Python never appears here — only AOT artifacts executed
-//! through [`crate::runtime`]).
+//! through [`crate::runtime`], or the native batched engine when artifacts
+//! are absent).
 //!
 //! * [`metrics`] — latency histograms + throughput counters.
 //! * [`batcher`] — dynamic batching with deadline flush.
 //! * [`router`]  — sequence-length / batch-size bucket routing + padding.
-//! * [`server`]  — thread/worker serving loop with backpressure.
-//! * [`trainer`] — training driver over the AOT `train_step` artifacts.
+//! * [`server`]  — thread/worker serving loop with backpressure, over the
+//!   artifact runtime or the native engine fallback.
+//! * [`native`]  — deterministic native MLM forward on the batched engine.
+//! * [`trainer`] — training driver over the AOT `train_step` artifacts,
+//!   plus a native batched-engine evaluation fallback.
 
 pub mod batcher;
 pub mod metrics;
+pub mod native;
 pub mod router;
 pub mod server;
 pub mod trainer;
 
 pub use batcher::{Batch, Batcher, Request};
 pub use metrics::Metrics;
+pub use native::{NativeMlm, NativeMlmConfig};
 pub use router::Router;
 pub use server::Server;
 pub use trainer::Trainer;

@@ -1,0 +1,343 @@
+//! Native-fallback MLM model: a deterministic (untrained) mini-transformer
+//! whose attention runs through the batched engine
+//! ([`crate::engine::Engine`]).
+//!
+//! When `artifacts/` has not been built (or the crate is compiled without
+//! the `pjrt` feature), the serving coordinator cannot execute AOT HLO —
+//! this model keeps the whole request path (batcher -> workers -> batched
+//! multi-head attention -> per-position argmax) exercisable end to end on
+//! pure CPU.  Weights are derived from a seed, so predictions are
+//! reproducible across runs and across engine thread counts (the MRA-2
+//! parallel path is bitwise deterministic).
+
+use anyhow::{bail, Result};
+
+use crate::data::corpus::MlmBatch;
+use crate::engine::{kernel_by_name, pool, BatchedTensor, Engine};
+use crate::tensor::{ops, Mat, Rng};
+
+/// Shape/knob description of the native model, parseable from the model
+/// tags used by the artifact grid (`mlm_mra2_n128_d128_l2_h2_v512`).
+#[derive(Clone, Debug)]
+pub struct NativeMlmConfig {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub layers: usize,
+    /// MRA-2 block size (clamped to divide `seq_len`).
+    pub block: usize,
+    /// MRA refinement budget; 0 = auto (`2 * seq_len / block`).
+    pub budget: usize,
+    /// Attention kernel short name: `mra2`, `mra2s` or `exact`.
+    pub attention: String,
+    pub seed: u64,
+}
+
+impl Default for NativeMlmConfig {
+    fn default() -> Self {
+        NativeMlmConfig {
+            vocab: 512,
+            seq_len: 128,
+            d_model: 128,
+            heads: 2,
+            layers: 2,
+            block: 32,
+            budget: 0,
+            attention: "mra2".to_string(),
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl NativeMlmConfig {
+    /// Parse an artifact model tag (`mlm_mra2_n128_d128_l2_h2_v512`);
+    /// unrecognized segments keep their defaults.
+    pub fn from_tag(tag: &str) -> Self {
+        let mut cfg = Self::default();
+        for seg in tag.split('_') {
+            match seg {
+                "exact" | "mra2" | "mra2s" => cfg.attention = seg.to_string(),
+                _ => {
+                    if let Some(v) = seg.strip_prefix('n').and_then(|s| s.parse::<usize>().ok()) {
+                        cfg.seq_len = v;
+                    } else if let Some(v) =
+                        seg.strip_prefix('d').and_then(|s| s.parse::<usize>().ok())
+                    {
+                        cfg.d_model = v;
+                    } else if let Some(v) =
+                        seg.strip_prefix('l').and_then(|s| s.parse::<usize>().ok())
+                    {
+                        cfg.layers = v;
+                    } else if let Some(v) =
+                        seg.strip_prefix('h').and_then(|s| s.parse::<usize>().ok())
+                    {
+                        cfg.heads = v;
+                    } else if let Some(v) =
+                        seg.strip_prefix('v').and_then(|s| s.parse::<usize>().ok())
+                    {
+                        cfg.vocab = v;
+                    }
+                }
+            }
+        }
+        cfg
+    }
+}
+
+struct LayerWeights {
+    wq: Vec<Mat>,
+    wk: Vec<Mat>,
+    wv: Vec<Mat>,
+}
+
+/// Deterministic native MLM forward pass over the batched engine.
+pub struct NativeMlm {
+    cfg: NativeMlmConfig,
+    /// Token embeddings `(vocab, d_model)`; also the tied output head.
+    embed: Mat,
+    layers: Vec<LayerWeights>,
+    engine: Engine,
+}
+
+impl NativeMlm {
+    /// Build the model with `threads` engine workers.
+    pub fn new(cfg: NativeMlmConfig, threads: usize) -> Self {
+        let mut cfg = cfg;
+        assert!(cfg.vocab > 0 && cfg.seq_len > 0 && cfg.heads > 0 && cfg.layers > 0);
+        assert_eq!(cfg.d_model % cfg.heads, 0, "d_model must split across heads");
+        cfg.block = cfg.block.min(cfg.seq_len).max(1);
+        while cfg.seq_len % cfg.block != 0 {
+            cfg.block /= 2;
+        }
+        let nb = cfg.seq_len / cfg.block;
+        if cfg.budget == 0 {
+            cfg.budget = 2 * nb;
+        }
+        let d_head = cfg.d_model / cfg.heads;
+        let mut rng = Rng::new(cfg.seed);
+        let embed = Mat::randn(cfg.vocab, cfg.d_model, 0.5, &mut rng);
+        let proj_scale = 1.0 / (cfg.d_model as f32).sqrt();
+        let layers = (0..cfg.layers)
+            .map(|_| LayerWeights {
+                wq: (0..cfg.heads)
+                    .map(|_| Mat::randn(cfg.d_model, d_head, proj_scale, &mut rng))
+                    .collect(),
+                wk: (0..cfg.heads)
+                    .map(|_| Mat::randn(cfg.d_model, d_head, proj_scale, &mut rng))
+                    .collect(),
+                wv: (0..cfg.heads)
+                    .map(|_| Mat::randn(cfg.d_model, d_head, proj_scale, &mut rng))
+                    .collect(),
+            })
+            .collect();
+        let kernel = kernel_by_name(&cfg.attention, cfg.block, cfg.budget)
+            .unwrap_or_else(|| kernel_by_name("mra2", cfg.block, cfg.budget).unwrap());
+        let engine = Engine::new(kernel, threads);
+        NativeMlm { cfg, embed, layers, engine }
+    }
+
+    pub fn config(&self) -> &NativeMlmConfig {
+        &self.cfg
+    }
+
+    pub fn kernel_name(&self) -> String {
+        self.engine.kernel_name()
+    }
+
+    /// Per-sequence MLM logits `(row_len, vocab)` for a batch of token
+    /// rows (each `<= seq_len`; shorter rows are PAD-extended internally).
+    pub fn logits(&self, rows: &[Vec<i32>]) -> Result<Vec<Mat>> {
+        let n = self.cfg.seq_len;
+        let dm = self.cfg.d_model;
+        let heads = self.cfg.heads;
+        let d_head = dm / heads;
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() > n {
+                bail!("request {i} length {} exceeds seq_len {n}", row.len());
+            }
+        }
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let bsz = rows.len();
+        // token embedding (PAD = id 0 beyond each row's length)
+        let mut hidden: Vec<Mat> = rows
+            .iter()
+            .map(|row| {
+                Mat::from_fn(n, dm, |i, j| {
+                    let tok = if i < row.len() { row[i] } else { 0 };
+                    let t = (tok.max(0) as usize).min(self.cfg.vocab - 1);
+                    self.embed.get(t, j)
+                })
+            })
+            .collect();
+        for lw in &self.layers {
+            // project every sequence into the batched (b, h, n, d_head)
+            // layout — per-(sequence, head) matmuls drain through the same
+            // worker pool as the attention itself
+            let mut qb = BatchedTensor::zeros(bsz, heads, n, d_head);
+            let mut kb = BatchedTensor::zeros(bsz, heads, n, d_head);
+            let mut vb = BatchedTensor::zeros(bsz, heads, n, d_head);
+            self.project_into(&hidden, &lw.wq, &mut qb);
+            self.project_into(&hidden, &lw.wk, &mut kb);
+            self.project_into(&hidden, &lw.wv, &mut vb);
+            let attn = self.engine.forward(&qb, &kb, &vb);
+            // concat heads + residual + layer norm
+            for (bi, hmat) in hidden.iter_mut().enumerate() {
+                let mut cat = Mat::zeros(n, dm);
+                for h in 0..heads {
+                    let hv = attn.view(bi, h);
+                    for i in 0..n {
+                        cat.row_mut(i)[h * d_head..(h + 1) * d_head].copy_from_slice(hv.row(i));
+                    }
+                }
+                *hmat = ops::layer_norm_rows(&cat.add(hmat), 1e-5);
+            }
+        }
+        // tied output head: logits = hidden @ embed^T, truncated per row —
+        // the largest matmul of the forward (n * d_model * vocab), one task
+        // per sequence
+        let mut logits: Vec<Option<Mat>> = Vec::with_capacity(bsz);
+        logits.resize_with(bsz, || None);
+        let slots = logits.iter_mut().enumerate().collect::<Vec<_>>();
+        pool::run(self.engine.threads(), slots, |(bi, slot): (usize, &mut Option<Mat>)| {
+            *slot = Some(hidden[bi].matmul_transb(&self.embed).row_block(0, rows[bi].len()));
+        });
+        Ok(logits.into_iter().map(|m| m.expect("logit slot filled")).collect())
+    }
+
+    /// Project every `(sequence, head)` pair (`hidden[bi] @ w[h]`) into the
+    /// batched tensor, parallel over the engine's worker pool.
+    fn project_into(&self, hidden: &[Mat], w: &[Mat], out: &mut BatchedTensor) {
+        let heads = out.heads;
+        let head_len = out.head_len();
+        let tasks = out.data.chunks_mut(head_len).enumerate().collect::<Vec<_>>();
+        pool::run(self.engine.threads(), tasks, |(p, chunk): (usize, &mut [f32])| {
+            let (bi, h) = (p / heads, p % heads);
+            chunk.copy_from_slice(&hidden[bi].matmul(&w[h]).data);
+        });
+    }
+
+    /// Per-position argmax token predictions for each row.
+    pub fn predict(&self, rows: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        Ok(self
+            .logits(rows)?
+            .iter()
+            .map(|lg| (0..lg.rows).map(|i| ops::argmax(lg.row(i)) as i32).collect())
+            .collect())
+    }
+
+    /// Masked-LM cross-entropy loss and accuracy of the (untrained) model
+    /// on one corpus batch — the native analog of the AOT `eval_*`
+    /// artifacts, used by `Trainer::eval_native`.
+    pub fn masked_eval(&self, batch: &MlmBatch) -> Result<(f32, f32)> {
+        let n = batch.seq_len;
+        if n != self.cfg.seq_len {
+            bail!("batch seq_len {n} != model seq_len {}", self.cfg.seq_len);
+        }
+        let rows: Vec<Vec<i32>> = batch.input_ids.chunks(n).map(|c| c.to_vec()).collect();
+        let logits = self.logits(&rows)?;
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        let mut count = 0usize;
+        for (bi, lg) in logits.iter().enumerate() {
+            let probs = ops::softmax_rows(lg);
+            for pos in 0..lg.rows {
+                let idx = bi * n + pos;
+                if batch.weights[idx] <= 0.0 {
+                    continue;
+                }
+                let label = batch.labels[idx].max(0) as usize;
+                if label >= self.cfg.vocab {
+                    continue;
+                }
+                count += 1;
+                loss -= (probs.get(pos, label).max(1e-30) as f64).ln();
+                if ops::argmax(probs.row(pos)) == label {
+                    correct += 1;
+                }
+            }
+        }
+        let count = count.max(1);
+        Ok(((loss / count as f64) as f32, correct as f32 / count as f32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Corpus, CorpusConfig};
+
+    fn small_cfg() -> NativeMlmConfig {
+        NativeMlmConfig {
+            vocab: 64,
+            seq_len: 64,
+            d_model: 32,
+            heads: 2,
+            layers: 1,
+            block: 16,
+            budget: 0,
+            attention: "mra2".to_string(),
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn tag_parsing_covers_the_artifact_grid() {
+        let cfg = NativeMlmConfig::from_tag("mlm_mra2s_n256_d64_l3_h4_v1024");
+        assert_eq!(cfg.attention, "mra2s");
+        assert_eq!(cfg.seq_len, 256);
+        assert_eq!(cfg.d_model, 64);
+        assert_eq!(cfg.layers, 3);
+        assert_eq!(cfg.heads, 4);
+        assert_eq!(cfg.vocab, 1024);
+        // unknown segments keep defaults
+        let d = NativeMlmConfig::from_tag("garbage_tag");
+        assert_eq!(d.seq_len, NativeMlmConfig::default().seq_len);
+    }
+
+    #[test]
+    fn predictions_have_request_shape_and_vocab_range() {
+        let model = NativeMlm::new(small_cfg(), 2);
+        let rows = vec![vec![2, 5, 9, 11], vec![2; 64], vec![3]];
+        let preds = model.predict(&rows).unwrap();
+        assert_eq!(preds.len(), 3);
+        for (row, p) in rows.iter().zip(&preds) {
+            assert_eq!(p.len(), row.len());
+            assert!(p.iter().all(|&t| t >= 0 && (t as usize) < 64));
+        }
+        // over-long requests are rejected, not truncated
+        assert!(model.predict(&[vec![0; 65]]).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let rows = vec![vec![2, 8, 4, 4, 19, 33], vec![2, 60, 1, 7]];
+        let p1 = NativeMlm::new(small_cfg(), 1).predict(&rows).unwrap();
+        let p4 = NativeMlm::new(small_cfg(), 4).predict(&rows).unwrap();
+        assert_eq!(p1, p4);
+    }
+
+    #[test]
+    fn masked_eval_is_finite_and_bounded() {
+        let model = NativeMlm::new(small_cfg(), 2);
+        let mut corpus = Corpus::new(
+            CorpusConfig { vocab: 64, seq_len: 64, ..Default::default() },
+            3,
+        );
+        let batch = corpus.mlm_batch(4);
+        let (loss, acc) = model.masked_eval(&batch).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+        assert!((0.0..=1.0).contains(&acc), "acc={acc}");
+    }
+
+    #[test]
+    fn block_clamps_to_divide_seq_len() {
+        let cfg = NativeMlmConfig { seq_len: 48, block: 32, ..small_cfg() };
+        let model = NativeMlm::new(cfg, 1);
+        // 32 does not divide 48; halved to 16 which does
+        assert_eq!(model.config().block, 16);
+        assert!(model.kernel_name().contains("mra-2"));
+    }
+}

@@ -1,13 +1,18 @@
-//! Serving loop: bounded ingress queue -> dynamic batcher -> bucket router
-//! -> PJRT worker pool.  Threads + channels (no async runtime available
-//! offline); the architecture mirrors a vLLM-style router with one
-//! compiled executable per `(model, batch-bucket)`.
+//! Serving loop: bounded ingress queue -> dynamic batcher -> worker pool.
+//! Threads + channels (no async runtime available offline); the
+//! architecture mirrors a vLLM-style router with one compiled executable
+//! per `(model, batch-bucket)`.
 //!
 //! ```text
 //!  submit() --sync_channel(queue_depth)--> batcher thread --+--> worker 0
 //!     ^                                   (deadline flush)  +--> worker 1
 //!     `-- backpressure: TrySendError => Busy                ...
 //! ```
+//!
+//! Workers execute batches through a [`BatchRunner`]: either the AOT
+//! artifact path (PJRT runtime + bucket router, [`Server::start`]) or the
+//! native fallback ([`Server::start_native`]) that routes the batch through
+//! the parallel batched engine when `artifacts/` is absent.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
@@ -20,6 +25,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::ServeConfig;
 use crate::coordinator::batcher::{Batch, Batcher, Request};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::native::{NativeMlm, NativeMlmConfig};
 use crate::coordinator::router::Router;
 use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
 
@@ -32,9 +38,17 @@ pub struct Response {
     pub latency: Duration,
 }
 
+type Responder = Sender<Result<Response, String>>;
+
 enum Ingress {
-    Req(Request, Sender<Result<Response, String>>),
+    Req(Request, Responder),
     Shutdown,
+}
+
+/// Executes one formed batch; implemented by the artifact path and the
+/// native engine fallback.  Each worker owns its runner.
+trait BatchRunner: Send {
+    fn run(&self, batch: &Batch, metrics: &Metrics) -> Result<Vec<Response>>;
 }
 
 /// Handle to a running server.
@@ -46,13 +60,12 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spin up the batcher + worker threads over the runtime executor.
+    /// Spin up the batcher + worker threads over the AOT artifact runtime.
     pub fn start(
         runtime: RuntimeHandle,
         manifest: Arc<Manifest>,
         cfg: ServeConfig,
     ) -> Result<Self> {
-        let metrics = Arc::new(Metrics::new());
         let router = Arc::new(Router::new(&manifest, &cfg.model)?);
         // model parameters are loaded once and shared by every worker
         let params = Arc::new(
@@ -66,9 +79,40 @@ impl Server {
                 runtime.warm(&route.artifact)?;
             }
         }
+        Self::start_with(cfg, move || -> Box<dyn BatchRunner> {
+            Box::new(ArtifactRunner {
+                rt: runtime.clone(),
+                router: router.clone(),
+                params: params.clone(),
+            })
+        })
+    }
+
+    /// Spin up the batcher + worker threads over the native batched engine
+    /// (no artifacts required): each worker routes its batches through a
+    /// shared deterministic [`NativeMlm`] whose attention runs on the
+    /// parallel engine with `engine_threads` workers.
+    pub fn start_native(
+        cfg: ServeConfig,
+        model_cfg: NativeMlmConfig,
+        engine_threads: usize,
+    ) -> Result<Self> {
+        let model = Arc::new(NativeMlm::new(model_cfg, engine_threads));
+        Self::start_with(cfg, move || -> Box<dyn BatchRunner> {
+            Box::new(NativeRunner { model: model.clone() })
+        })
+    }
+
+    /// Shared startup: batcher thread + `cfg.workers` workers, one runner
+    /// per worker from `make_runner`.
+    fn start_with(
+        cfg: ServeConfig,
+        make_runner: impl Fn() -> Box<dyn BatchRunner>,
+    ) -> Result<Self> {
+        let metrics = Arc::new(Metrics::new());
         let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_depth);
         let (batch_tx, batch_rx) =
-            sync_channel::<(Batch, Vec<Sender<Result<Response, String>>>)>(cfg.workers * 2);
+            sync_channel::<(Batch, Vec<Responder>)>(cfg.workers.max(1) * 2);
         let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
 
         let mut threads = Vec::new();
@@ -82,12 +126,10 @@ impl Server {
         // workers
         for _ in 0..cfg.workers.max(1) {
             let rx = batch_rx.clone();
-            let rt = runtime.clone();
-            let router = router.clone();
-            let params = params.clone();
+            let runner = make_runner();
             let metrics = metrics.clone();
             threads.push(std::thread::spawn(move || {
-                worker_loop(rx, rt, router, params, metrics);
+                worker_loop(rx, runner, metrics);
             }));
         }
         Ok(Server { ingress: ingress_tx, metrics, next_id: AtomicU64::new(0), threads })
@@ -124,17 +166,31 @@ impl Server {
 
 fn batcher_loop(
     ingress: Receiver<Ingress>,
-    batch_tx: SyncSender<(Batch, Vec<Sender<Result<Response, String>>>)>,
+    batch_tx: SyncSender<(Batch, Vec<Responder>)>,
     cfg: &ServeConfig,
 ) {
     let mut batcher = Batcher::new(cfg.max_batch, Duration::from_micros(cfg.flush_us));
-    let mut responders: Vec<Sender<Result<Response, String>>> = Vec::new();
+    let mut responders: Vec<Responder> = Vec::new();
+    let idle_wait = Duration::from_micros(cfg.flush_us.max(100));
     loop {
-        // wait up to the flush deadline for the next request
-        match ingress.recv_timeout(Duration::from_micros(cfg.flush_us.max(100))) {
+        // §bugfix: bound the wait by the *oldest* pending request's
+        // remaining deadline.  The old `recv_timeout(flush_us)` reset on
+        // every arrival, so a steady trickle of sub-`max_batch` requests
+        // (inter-arrival < flush_us) postponed the flush indefinitely and
+        // the oldest request waited unboundedly.
+        let wait = match batcher.next_deadline(Instant::now()) {
+            Some(d) => d.min(idle_wait),
+            None => idle_wait,
+        };
+        match ingress.recv_timeout(wait) {
             Ok(Ingress::Req(req, resp)) => {
                 responders.push(resp);
-                if let Some(batch) = batcher.push(req) {
+                // check the deadline after every push, not only on idle gaps
+                let due = match batcher.push(req) {
+                    Some(batch) => Some(batch),
+                    None => batcher.poll_due(Instant::now()),
+                };
+                if let Some(batch) = due {
                     let rs = responders.drain(..).collect();
                     if batch_tx.send((batch, rs)).is_err() {
                         return;
@@ -169,10 +225,8 @@ fn batcher_loop(
 
 #[allow(clippy::type_complexity)]
 fn worker_loop(
-    rx: Arc<std::sync::Mutex<Receiver<(Batch, Vec<Sender<Result<Response, String>>>)>>>,
-    rt: RuntimeHandle,
-    router: Arc<Router>,
-    params: Arc<Vec<f32>>,
+    rx: Arc<std::sync::Mutex<Receiver<(Batch, Vec<Responder>)>>>,
+    runner: Box<dyn BatchRunner>,
     metrics: Arc<Metrics>,
 ) {
     loop {
@@ -184,7 +238,7 @@ fn worker_loop(
             Ok(x) => x,
             Err(_) => return,
         };
-        let result = run_batch(&rt, &router, &params, &batch, &metrics);
+        let result = runner.run(&batch, &metrics);
         match result {
             Ok(mut responses) => {
                 for (resp, tx) in responses.drain(..).zip(responders) {
@@ -201,53 +255,174 @@ fn worker_loop(
     }
 }
 
-/// Execute one batch through the routed artifact; slice outputs per request.
-fn run_batch(
-    rt: &RuntimeHandle,
-    router: &Router,
-    params: &[f32],
-    batch: &Batch,
-    metrics: &Metrics,
-) -> Result<Vec<Response>> {
-    let route = router.route(batch.len())?;
-    let rows: Vec<Vec<i32>> = batch.requests.iter().map(|r| r.tokens.clone()).collect();
-    let ids = router.pad_tokens(&rows, route.bucket)?;
-    let n = router.seq_len;
-    let inputs = vec![
-        HostTensor::F32(params.to_vec(), vec![params.len()]),
-        HostTensor::I32(ids, vec![route.bucket, n]),
-    ];
-    let t0 = Instant::now();
-    let outputs = rt.execute(&route.artifact, inputs)?;
-    metrics.batch_exec.record(t0.elapsed());
-    metrics.inc_batches(route.padded_slots as u64);
-    // logits: (bucket, n, vocab) -> per-request argmax over the vocab
-    let logits = outputs[0].as_f32()?;
-    let dims = outputs[0].dims();
-    let vocab = dims[2];
-    let mut out = Vec::with_capacity(batch.len());
-    for (bi, req) in batch.requests.iter().enumerate() {
-        let len = req.tokens.len();
-        let mut preds = Vec::with_capacity(len);
-        for pos in 0..len {
-            let base = (bi * n + pos) * vocab;
-            let row = &logits[base..base + vocab];
-            let mut best = 0usize;
-            let mut best_v = f32::NEG_INFINITY;
-            for (t, &v) in row.iter().enumerate() {
-                if v > best_v {
-                    best_v = v;
-                    best = t;
-                }
+/// AOT artifact path: route the batch to a bucket executable, execute
+/// through PJRT, slice the logits back per request.
+struct ArtifactRunner {
+    rt: RuntimeHandle,
+    router: Arc<Router>,
+    params: Arc<Vec<f32>>,
+}
+
+impl BatchRunner for ArtifactRunner {
+    fn run(&self, batch: &Batch, metrics: &Metrics) -> Result<Vec<Response>> {
+        let route = self.router.route(batch.len())?;
+        let rows: Vec<Vec<i32>> = batch.requests.iter().map(|r| r.tokens.clone()).collect();
+        let ids = self.router.pad_tokens(&rows, route.bucket)?;
+        let n = self.router.seq_len;
+        let inputs = vec![
+            HostTensor::F32(self.params.to_vec(), vec![self.params.len()]),
+            HostTensor::I32(ids, vec![route.bucket, n]),
+        ];
+        let t0 = Instant::now();
+        let outputs = self.rt.execute(&route.artifact, inputs)?;
+        metrics.batch_exec.record(t0.elapsed());
+        metrics.inc_batches(route.padded_slots as u64);
+        // logits: (bucket, n, vocab) -> per-request argmax over the vocab
+        let logits = outputs[0].as_f32()?;
+        let dims = outputs[0].dims();
+        let vocab = dims[2];
+        let mut out = Vec::with_capacity(batch.len());
+        for (bi, req) in batch.requests.iter().enumerate() {
+            let len = req.tokens.len();
+            let mut preds = Vec::with_capacity(len);
+            for pos in 0..len {
+                let base = (bi * n + pos) * vocab;
+                preds.push(crate::tensor::ops::argmax(&logits[base..base + vocab]) as i32);
             }
-            preds.push(best as i32);
+            let latency = req.arrived.elapsed();
+            metrics.request_latency.record(latency);
+            out.push(Response { id: req.id, predictions: preds, latency });
         }
-        let latency = req.arrived.elapsed();
-        metrics.request_latency.record(latency);
-        out.push(Response { id: req.id, predictions: preds, latency });
+        Ok(out)
     }
-    Ok(out)
+}
+
+/// Native fallback: run the whole batch through the deterministic
+/// [`NativeMlm`] forward (batched multi-head attention on the engine).
+struct NativeRunner {
+    model: Arc<NativeMlm>,
+}
+
+impl BatchRunner for NativeRunner {
+    fn run(&self, batch: &Batch, metrics: &Metrics) -> Result<Vec<Response>> {
+        let rows: Vec<Vec<i32>> = batch.requests.iter().map(|r| r.tokens.clone()).collect();
+        let t0 = Instant::now();
+        let preds = self.model.predict(&rows)?;
+        metrics.batch_exec.record(t0.elapsed());
+        metrics.inc_batches(0);
+        let mut out = Vec::with_capacity(batch.len());
+        for (req, predictions) in batch.requests.iter().zip(preds) {
+            let latency = req.arrived.elapsed();
+            metrics.request_latency.record(latency);
+            out.push(Response { id: req.id, predictions, latency });
+        }
+        Ok(out)
+    }
 }
 
 // Integration tests that exercise Server against real artifacts live in
-// rust/tests/serve_integration.rs (skipped when artifacts/ is absent).
+// rust/tests/ (skipped when artifacts/ is absent); the native path and the
+// batcher loop are covered below without artifacts.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serve_cfg(max_batch: usize, flush_us: u64) -> ServeConfig {
+        ServeConfig {
+            max_batch,
+            flush_us,
+            workers: 1,
+            queue_depth: 64,
+            model: "mlm_mra2_n64_d32_l1_h2_v64".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+
+    /// Regression for the deadline-starvation bug: requests arriving
+    /// steadily but slower than `max_batch` fills must still flush once
+    /// the *oldest* request exceeds `flush_us`, not only on an idle gap.
+    #[test]
+    fn batcher_loop_flushes_oldest_under_steady_trickle() {
+        let cfg = serve_cfg(64, 20_000); // flush after 20ms, never fills 64
+        let (in_tx, in_rx) = sync_channel::<Ingress>(64);
+        let (b_tx, b_rx) = sync_channel::<(Batch, Vec<Responder>)>(16);
+        let loop_cfg = cfg.clone();
+        let handle = std::thread::spawn(move || batcher_loop(in_rx, b_tx, &loop_cfg));
+
+        // steady trickle: 50 requests, one every 2ms (inter-arrival far
+        // below flush_us) — the old loop only flushed after the last send
+        let mut keep_alive = Vec::new();
+        for id in 0..50u64 {
+            let (tx, rx) = std::sync::mpsc::channel();
+            keep_alive.push(rx);
+            let req = Request { id, tokens: vec![2, 3], arrived: Instant::now() };
+            in_tx.send(Ingress::Req(req, tx)).unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        drop(in_tx); // disconnect -> final drain
+
+        let mut batches = Vec::new();
+        while let Ok((batch, rs)) = b_rx.recv_timeout(Duration::from_secs(5)) {
+            assert_eq!(batch.len(), rs.len(), "responders must track requests");
+            batches.push(batch);
+        }
+        handle.join().unwrap();
+
+        // every request accounted for, FIFO order preserved
+        let ids: Vec<u64> = batches.iter().flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(ids, (0..50).collect::<Vec<u64>>());
+        // the fix: the first flush happens at the ~20ms deadline (a dozen
+        // requests in), not after the full 100ms trickle
+        assert!(batches.len() >= 2, "single batch => oldest request starved");
+        assert!(
+            batches[0].len() < 40,
+            "first flush held {} requests — deadline ignored under trickle",
+            batches[0].len()
+        );
+        assert_eq!(batches[0].requests[0].id, 0);
+    }
+
+    /// End-to-end native serving: batcher -> worker -> batched engine.
+    #[test]
+    fn native_server_round_trip_under_concurrency() {
+        let cfg = serve_cfg(4, 500);
+        let model_cfg = NativeMlmConfig::from_tag(&cfg.model);
+        let server =
+            Arc::new(Server::start_native(cfg, model_cfg, 2).expect("native server"));
+        std::thread::scope(|s| {
+            for c in 0..3u64 {
+                let server = server.clone();
+                s.spawn(move || {
+                    for r in 0..4u64 {
+                        let len = 8 + ((c * 7 + r) % 40) as usize;
+                        let toks: Vec<i32> = (0..len).map(|t| 4 + (t as i32 % 60)).collect();
+                        let resp = server.infer(toks.clone()).expect("infer");
+                        assert_eq!(resp.predictions.len(), toks.len());
+                        assert!(resp.predictions.iter().all(|&p| p >= 0 && p < 64));
+                    }
+                });
+            }
+        });
+        assert_eq!(server.metrics.requests.load(Ordering::Relaxed), 12);
+        assert!(server.metrics.batches.load(Ordering::Relaxed) >= 1);
+        if let Ok(s) = Arc::try_unwrap(server) {
+            s.shutdown();
+        }
+    }
+
+    /// Over-long requests error cleanly instead of poisoning the batch
+    /// pipeline for other requests.
+    #[test]
+    fn native_server_rejects_oversized_requests() {
+        let cfg = serve_cfg(2, 300);
+        let model_cfg = NativeMlmConfig::from_tag(&cfg.model);
+        let server = Server::start_native(cfg, model_cfg, 1).expect("native server");
+        let err = server.infer(vec![2; 65]).unwrap_err();
+        assert!(format!("{err:#}").contains("seq_len"), "{err:#}");
+        // server still serves well-formed requests afterwards
+        let ok = server.infer(vec![2, 9, 11]).expect("infer after error");
+        assert_eq!(ok.predictions.len(), 3);
+        server.shutdown();
+    }
+}

@@ -7,6 +7,7 @@
 use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
+use crate::coordinator::native::{NativeMlm, NativeMlmConfig};
 use crate::data::corpus::{Corpus, CorpusConfig, MlmBatch};
 use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
 
@@ -144,6 +145,24 @@ impl Trainer {
         Ok((scalar(&out[0])?, scalar(&out[1])?))
     }
 
+    /// Native-fallback evaluation for when `artifacts/` has not been built:
+    /// score one held-out MLM batch through the batched engine
+    /// ([`NativeMlm`], untrained deterministic weights) with
+    /// `engine_threads` attention workers.  Returns `(loss, masked-acc)` —
+    /// a smoke-level analog of [`Trainer::eval`] that keeps the evaluation
+    /// path exercisable offline.
+    pub fn eval_native(cfg: &TrainConfig, engine_threads: usize) -> Result<(f32, f32)> {
+        let model_cfg = NativeMlmConfig::from_tag(&cfg.model);
+        let (vocab, seq_len) = (model_cfg.vocab, model_cfg.seq_len);
+        let model = NativeMlm::new(model_cfg, engine_threads);
+        let mut held_out = Corpus::new(
+            CorpusConfig { vocab, seq_len, ..Default::default() },
+            cfg.seed ^ 0xEEE,
+        );
+        let batch = held_out.mlm_batch(cfg.batch.clamp(1, 8));
+        model.masked_eval(&batch)
+    }
+
     /// Run the configured number of steps, logging every `log_every`.
     pub fn run(&mut self) -> Result<TrainLog> {
         let mut log = TrainLog::default();
@@ -178,6 +197,25 @@ fn into_f32(t: HostTensor) -> Result<Vec<f32>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn eval_native_runs_without_artifacts() {
+        let cfg = TrainConfig {
+            steps: 1,
+            batch: 2,
+            eval_every: 0,
+            seed: 5,
+            model: "mlm_mra2_n64_d32_l1_h2_v64".to_string(),
+            artifacts_dir: "no-such-dir".to_string(),
+            log_every: 1,
+        };
+        let (loss, acc) = Trainer::eval_native(&cfg, 2).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+        assert!((0.0..=1.0).contains(&acc), "acc={acc}");
+        // deterministic across engine thread counts (bitwise engine)
+        let again = Trainer::eval_native(&cfg, 4).unwrap();
+        assert_eq!((loss, acc), again);
+    }
 
     #[test]
     fn train_log_trend_helpers() {

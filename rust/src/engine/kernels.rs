@@ -1,0 +1,236 @@
+//! Attention kernels the engine schedules: the paper's MRA-2 / MRA-2-s fast
+//! path (query-block sharded), exact attention (row sharded), and
+//! `mra_adapter`-style shims that lift any [`AttentionApprox`] baseline into
+//! the batched engine.
+
+// compute_range carries the full (plan, q, k, v, range, out) context
+#![allow(clippy::too_many_arguments)]
+
+use std::any::Any;
+
+use crate::baselines::longformer::Longformer;
+use crate::baselines::nystromformer::Nystromformer;
+use crate::baselines::AttentionApprox;
+use crate::engine::tensor4::MatView;
+use crate::mra::{mra2_apply_blocks, mra2_plan, Mra2Plan, Variant};
+use crate::tensor::mat::dot;
+
+/// Opaque per-head state produced by [`AttnKernel::plan_head`] and shared
+/// read-only by every row shard of that head.
+pub type HeadPlan = Box<dyn Any + Send + Sync>;
+
+/// A batched attention kernel: computes `Z_hat ~ softmax(QK^T/sqrt(d)) V`
+/// for one `(batch, head)` pair, optionally split into independent
+/// query-row ranges so the engine can parallelize *within* a head.
+pub trait AttnKernel: Send + Sync {
+    /// Display name including budget knobs (for bench tables).
+    fn name(&self) -> String;
+
+    /// Row granularity when one head is split across workers; `None` means
+    /// the head must be computed whole (single shard).
+    fn shard_rows(&self, _n: usize) -> Option<usize> {
+        None
+    }
+
+    /// Precompute per-head state (selection, pooling, ...) shared by every
+    /// shard.  Kernels without shared state return the default `()` plan.
+    fn plan_head(&self, _q: MatView, _k: MatView, _v: MatView) -> HeadPlan {
+        Box::new(())
+    }
+
+    /// Compute the row-normalized output rows `[r0, r1)` of one head into
+    /// `out` (length `(r1 - r0) * d`, zero-initialized by the engine).
+    fn compute_range(
+        &self,
+        plan: &HeadPlan,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    );
+}
+
+/// The paper's MRA-2 / MRA-2-s fast path.  Plans once per head (pyramid +
+/// Alg. 1 selection), then computes query blocks independently — the
+/// per-block loop in `mra::attention` is embarrassingly parallel once the
+/// output is sharded by query block, and the parallel result is bitwise
+/// identical to the sequential one.
+pub struct Mra2Kernel {
+    pub block: usize,
+    /// Refinement budget `m` (coverage rule may refine more; see
+    /// [`mra2_plan`]).
+    pub m: usize,
+    pub variant: Variant,
+}
+
+impl Mra2Kernel {
+    pub fn new(block: usize, m: usize, variant: Variant) -> Self {
+        Mra2Kernel { block, m, variant }
+    }
+
+    fn clamped_block(&self, n: usize) -> usize {
+        self.block.min(n).max(1)
+    }
+}
+
+impl AttnKernel for Mra2Kernel {
+    fn name(&self) -> String {
+        format!(
+            "mra-2{}(b={},m={})",
+            if self.variant == Variant::Sparse { "-s" } else { "" },
+            self.block,
+            self.m
+        )
+    }
+
+    fn shard_rows(&self, n: usize) -> Option<usize> {
+        Some(self.clamped_block(n))
+    }
+
+    fn plan_head(&self, q: MatView, k: MatView, v: MatView) -> HeadPlan {
+        let block = self.clamped_block(q.rows);
+        Box::new(mra2_plan(q.data, k.data, v.data, q.rows, q.cols, block, self.m, self.variant))
+    }
+
+    fn compute_range(
+        &self,
+        plan: &HeadPlan,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
+        let plan = plan.downcast_ref::<Mra2Plan>().expect("Mra2Kernel plan");
+        let b = plan.block;
+        debug_assert!(r0 % b == 0 && r1 % b == 0, "shard not block-aligned");
+        mra2_apply_blocks(plan, q.data, k.data, v.data, r0 / b, r1 / b, out);
+    }
+}
+
+/// Exact softmax attention, sharded by query rows (each row's softmax and
+/// value aggregation is independent).
+pub struct ExactKernel;
+
+impl AttnKernel for ExactKernel {
+    fn name(&self) -> String {
+        "transformer(exact)".to_string()
+    }
+
+    fn shard_rows(&self, n: usize) -> Option<usize> {
+        Some(64.min(n).max(1))
+    }
+
+    fn compute_range(
+        &self,
+        _plan: &HeadPlan,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
+        let n = k.rows;
+        let d = v.cols;
+        let inv_sqrt_d = 1.0 / (q.cols as f32).sqrt();
+        let mut scores = vec![0.0f32; n];
+        for i in r0..r1 {
+            let qrow = q.row(i);
+            let mut mx = f32::NEG_INFINITY;
+            for (j, s) in scores.iter_mut().enumerate() {
+                *s = dot(qrow, k.row(j)) * inv_sqrt_d;
+                if *s > mx {
+                    mx = *s;
+                }
+            }
+            let orow = &mut out[(i - r0) * d..(i - r0 + 1) * d];
+            orow.fill(0.0);
+            let mut den = 0.0f32;
+            for (j, &s) in scores.iter().enumerate() {
+                let a = (s - mx).exp();
+                den += a;
+                for (o, &vv) in orow.iter_mut().zip(v.row(j)) {
+                    *o += a * vv;
+                }
+            }
+            let inv = 1.0 / den.max(1e-30);
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+}
+
+/// Lift any [`AttentionApprox`] baseline into the engine (whole-head
+/// granularity: baselines parallelize across `(batch, head)` pairs only).
+pub struct ApproxShim<A: AttentionApprox + Send + Sync> {
+    pub inner: A,
+}
+
+impl<A: AttentionApprox + Send + Sync> ApproxShim<A> {
+    pub fn new(inner: A) -> Self {
+        ApproxShim { inner }
+    }
+}
+
+impl<A: AttentionApprox + Send + Sync> AttnKernel for ApproxShim<A> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn compute_range(
+        &self,
+        _plan: &HeadPlan,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
+        assert!(r0 == 0 && r1 == q.rows, "approx shims compute whole heads");
+        let z = self.inner.compute(&q.to_mat(), &k.to_mat(), &v.to_mat());
+        out.copy_from_slice(&z.data);
+    }
+}
+
+/// Construct a kernel by short name (`exact`, `mra2`, `mra2s`,
+/// `longformer`, `nystromformer`) with MRA-style `block` / `m` knobs.
+pub fn kernel_by_name(name: &str, block: usize, m: usize) -> Option<Box<dyn AttnKernel>> {
+    match name {
+        "exact" => Some(Box::new(ExactKernel)),
+        "mra2" => Some(Box::new(Mra2Kernel::new(block, m, Variant::Full))),
+        "mra2s" => Some(Box::new(Mra2Kernel::new(block, m, Variant::Sparse))),
+        "longformer" => Some(Box::new(ApproxShim::new(Longformer::new(block.max(4), 1)))),
+        "nystromformer" => {
+            Some(Box::new(ApproxShim::new(Nystromformer::new((2 * block).max(8), 6))))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_by_name_covers_the_suite() {
+        for name in ["exact", "mra2", "mra2s", "longformer", "nystromformer"] {
+            let k = kernel_by_name(name, 16, 8).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(!k.name().is_empty());
+        }
+        assert!(kernel_by_name("no-such-kernel", 16, 8).is_none());
+    }
+
+    #[test]
+    fn mra2_kernel_shards_align_to_blocks() {
+        let k = Mra2Kernel::new(32, 8, Variant::Full);
+        assert_eq!(k.shard_rows(256), Some(32));
+        // block clamps to n for short sequences
+        assert_eq!(k.shard_rows(16), Some(16));
+    }
+}

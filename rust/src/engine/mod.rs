@@ -1,0 +1,239 @@
+//! Parallel batched multi-head attention engine.
+//!
+//! The native serving/bench core of the repo: a [`BatchedTensor`] holds the
+//! contiguous `(batch, heads, n, d)` Q/K/V buffers, an [`AttnKernel`]
+//! implements one attention algorithm (MRA-2 / MRA-2-s, exact, or any
+//! [`crate::baselines::AttentionApprox`] via [`kernels::ApproxShim`]), and
+//! [`Engine::forward`] schedules the work over a scoped-thread pool
+//! ([`pool`], std only):
+//!
+//! 1. **plan phase** — one task per `(batch, head)` pair builds the
+//!    kernel's read-only per-head plan (for MRA-2: pyramid pooling + Alg. 1
+//!    selection);
+//! 2. **compute phase** — each head's output is split into disjoint
+//!    query-row shards (for MRA-2: query-block ranges of the fast path,
+//!    which are fully independent — see `mra::attention::mra2_apply_blocks`)
+//!    and all shards across all pairs drain through one work queue.
+//!
+//! Shards own disjoint `&mut` slices of the output buffer, so the whole
+//! scheduler is safe Rust, and every shard computes exactly the same float
+//! sequence as the sequential path — the parallel output is **bitwise
+//! identical** at any thread count (asserted in tests and
+//! `benches/bench_engine.rs`).
+//!
+//! See DESIGN.md §Engine for the schedule and EXPERIMENTS.md §Engine for
+//! measured thread scaling.
+
+pub mod kernels;
+pub mod pool;
+pub mod tensor4;
+
+pub use kernels::{kernel_by_name, ApproxShim, AttnKernel, ExactKernel, HeadPlan, Mra2Kernel};
+pub use tensor4::{rel_fro_error_flat, BatchedTensor, MatView};
+
+/// Batched multi-head attention executor over one kernel.
+pub struct Engine {
+    kernel: Box<dyn AttnKernel>,
+    threads: usize,
+}
+
+/// One unit of compute-phase work: a disjoint output shard of one head.
+struct ShardTask<'a> {
+    pair: usize,
+    r0: usize,
+    out: &'a mut [f32],
+}
+
+impl Engine {
+    /// Engine over `kernel` with an explicit worker count (1 = sequential).
+    pub fn new(kernel: Box<dyn AttnKernel>, threads: usize) -> Self {
+        Engine { kernel, threads: threads.max(1) }
+    }
+
+    /// Engine sized to the machine's available parallelism.
+    pub fn with_default_threads(kernel: Box<dyn AttnKernel>) -> Self {
+        Self::new(kernel, pool::default_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn kernel_name(&self) -> String {
+        self.kernel.name()
+    }
+
+    /// Batched attention forward: `(batch, heads, n, d)` Q/K/V in, the
+    /// row-normalized `Z_hat` of the same shape out.
+    pub fn forward(
+        &self,
+        q: &BatchedTensor,
+        k: &BatchedTensor,
+        v: &BatchedTensor,
+    ) -> BatchedTensor {
+        assert_eq!(q.shape(), k.shape(), "q/k shape mismatch");
+        assert_eq!(q.shape(), v.shape(), "q/v shape mismatch");
+        let (batch, heads, n, d) = q.shape();
+        let pairs = batch * heads;
+        let head_len = n * d;
+
+        // phase 1: per-(batch, head) plans, parallel across pairs
+        let mut plans: Vec<Option<HeadPlan>> = Vec::with_capacity(pairs);
+        plans.resize_with(pairs, || None);
+        {
+            let slots = plans.iter_mut().enumerate().collect::<Vec<_>>();
+            pool::run(self.threads, slots, |(p, slot): (usize, &mut Option<HeadPlan>)| {
+                let (b, h) = (p / heads, p % heads);
+                *slot = Some(self.kernel.plan_head(q.view(b, h), k.view(b, h), v.view(b, h)));
+            });
+        }
+
+        // phase 2: disjoint output shards across all pairs drain one queue
+        let mut out = BatchedTensor::zeros(batch, heads, n, d);
+        let shard_rows = self.kernel.shard_rows(n);
+        let mut tasks: Vec<ShardTask<'_>> = Vec::new();
+        for (p, head_out) in out.data.chunks_mut(head_len).enumerate() {
+            match shard_rows {
+                Some(rows) if rows < n => {
+                    for (si, sub) in head_out.chunks_mut(rows * d).enumerate() {
+                        tasks.push(ShardTask { pair: p, r0: si * rows, out: sub });
+                    }
+                }
+                _ => tasks.push(ShardTask { pair: p, r0: 0, out: head_out }),
+            }
+        }
+        let plans = &plans;
+        pool::run(self.threads, tasks, |t| {
+            let (b, h) = (t.pair / heads, t.pair % heads);
+            let rows = t.out.len() / d;
+            let plan = plans[t.pair].as_ref().expect("plan built in phase 1");
+            self.kernel.compute_range(
+                plan,
+                q.view(b, h),
+                k.view(b, h),
+                v.view(b, h),
+                t.r0,
+                t.r0 + rows,
+                t.out,
+            );
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::longformer::Longformer;
+    use crate::baselines::nystromformer::Nystromformer;
+    use crate::baselines::AttentionApprox;
+    use crate::mra::{mra2_attention, Variant};
+    use crate::tensor::{ops, Mat, Rng};
+
+    fn qkv(batch: usize, heads: usize, n: usize, d: usize, seed: u64) -> [BatchedTensor; 3] {
+        let mut rng = Rng::new(seed);
+        [
+            BatchedTensor::randn(batch, heads, n, d, 1.0, &mut rng),
+            BatchedTensor::randn(batch, heads, n, d, 1.0, &mut rng),
+            BatchedTensor::randn(batch, heads, n, d, 1.0, &mut rng),
+        ]
+    }
+
+    #[test]
+    fn mra2_parallel_is_bitwise_sequential_at_every_thread_count() {
+        let [q, k, v] = qkv(2, 3, 128, 16, 0);
+        for variant in [Variant::Full, Variant::Sparse] {
+            // per-head sequential reference through the public fast path
+            let mut reference = BatchedTensor::zeros(2, 3, 128, 16);
+            for b in 0..2 {
+                for h in 0..3 {
+                    let z = mra2_attention(
+                        &q.head_mat(b, h),
+                        &k.head_mat(b, h),
+                        &v.head_mat(b, h),
+                        16,
+                        6,
+                        variant,
+                    );
+                    reference.head_mut(b, h).copy_from_slice(&z.data);
+                }
+            }
+            for threads in [1, 2, 4, 8] {
+                let engine =
+                    Engine::new(Box::new(Mra2Kernel::new(16, 6, variant)), threads);
+                let out = engine.forward(&q, &k, &v);
+                assert_eq!(
+                    out.data, reference.data,
+                    "{variant:?} diverged at {threads} threads"
+                );
+                // the acceptance-criterion form of the same statement
+                assert!(rel_fro_error_flat(&out.data, &reference.data) <= 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_kernel_matches_dense_reference() {
+        let [q, k, v] = qkv(2, 2, 96, 8, 1);
+        let engine = Engine::new(Box::new(ExactKernel), 3);
+        let out = engine.forward(&q, &k, &v);
+        for b in 0..2 {
+            for h in 0..2 {
+                let want =
+                    ops::exact_attention(&q.head_mat(b, h), &k.head_mat(b, h), &v.head_mat(b, h));
+                let got = out.head_mat(b, h);
+                assert!(ops::rel_fro_error(&got, &want) < 1e-5, "head ({b},{h})");
+            }
+        }
+    }
+
+    #[test]
+    fn approx_shims_match_their_single_head_baselines() {
+        let [q, k, v] = qkv(1, 2, 128, 16, 2);
+        let shims: Vec<Box<dyn AttnKernel>> = vec![
+            Box::new(ApproxShim::new(Longformer::new(8, 1))),
+            Box::new(ApproxShim::new(Nystromformer::new(16, 6))),
+        ];
+        let directs: Vec<Box<dyn AttentionApprox>> = vec![
+            Box::new(Longformer::new(8, 1)),
+            Box::new(Nystromformer::new(16, 6)),
+        ];
+        for (shim, direct) in shims.into_iter().zip(directs) {
+            let engine = Engine::new(shim, 4);
+            let out = engine.forward(&q, &k, &v);
+            for h in 0..2 {
+                let want =
+                    direct.compute(&q.head_mat(0, h), &k.head_mat(0, h), &v.head_mat(0, h));
+                assert_eq!(out.head_mat(0, h), want, "{} head {h}", direct.name());
+            }
+        }
+    }
+
+    #[test]
+    fn engine_output_rows_stay_convex_under_tiny_budgets() {
+        // batched form of the zero-row regression: m = 2 with nb = 8
+        let mut rng = Rng::new(3);
+        let q = BatchedTensor::randn(2, 2, 128, 16, 1.0, &mut rng);
+        let k = BatchedTensor::randn(2, 2, 128, 16, 1.0, &mut rng);
+        let mut v = BatchedTensor::zeros(2, 2, 128, 16);
+        v.data.fill(1.0);
+        for variant in [Variant::Full, Variant::Sparse] {
+            let engine = Engine::new(Box::new(Mra2Kernel::new(16, 2, variant)), 4);
+            let out = engine.forward(&q, &k, &v);
+            for &x in out.data.iter() {
+                assert!((x - 1.0).abs() < 1e-4, "{variant:?}: {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_accessors() {
+        let engine = Engine::with_default_threads(Box::new(ExactKernel));
+        assert!(engine.threads() >= 1);
+        assert!(engine.kernel_name().contains("exact"));
+        let m = Engine::new(Box::new(Mra2Kernel::new(32, 8, Variant::Full)), 2);
+        assert!(m.kernel_name().contains("mra-2"));
+        let mat = Mat::eye(4);
+        assert_eq!(MatView::from_mat(&mat).get(2, 2), 1.0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Scoped-thread worker pool (std only — no rayon offline).
+//!
+//! [`run`] drains an explicit work list through `threads` scoped workers
+//! pulling from a shared queue, so uneven task costs (e.g. MRA-2 query
+//! blocks with different refined-tile counts) self-balance.  Tasks carry
+//! their own disjoint `&mut` output shards, which keeps the whole scheme
+//! safe-Rust: no worker ever aliases another worker's output.
+
+use std::sync::Mutex;
+
+/// Default worker count: the machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f` over every item using up to `threads` scoped workers.
+///
+/// Items are pulled from a shared queue (work stealing by contention);
+/// with `threads <= 1` everything runs inline on the caller's thread, so
+/// the sequential path has zero synchronization overhead.
+pub fn run<T: Send>(threads: usize, items: Vec<T>, f: impl Fn(T) + Sync) {
+    let workers = threads.max(1).min(items.len().max(1));
+    if workers <= 1 {
+        for item in items {
+            f(item);
+        }
+        return;
+    }
+    let queue = Mutex::new(items.into_iter());
+    let queue = &queue;
+    let f = &f;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(move || loop {
+                let item = queue.lock().unwrap().next();
+                match item {
+                    Some(item) => f(item),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_item_exactly_once_at_any_thread_count() {
+        for threads in [1, 2, 4, 8, 32] {
+            let sum = AtomicUsize::new(0);
+            let count = AtomicUsize::new(0);
+            let items: Vec<usize> = (1..=100).collect();
+            run(threads, items, |i| {
+                sum.fetch_add(i, Ordering::Relaxed);
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 5050, "threads={threads}");
+            assert_eq!(count.load(Ordering::Relaxed), 100, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn disjoint_mut_shards_are_safe() {
+        let mut out = vec![0.0f32; 64];
+        let items: Vec<(usize, &mut [f32])> = out.chunks_mut(8).enumerate().collect();
+        run(4, items, |(i, chunk)| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (i * 8 + j) as f32;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn empty_work_list_is_a_no_op() {
+        run(4, Vec::<usize>::new(), |_| panic!("no items expected"));
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,196 @@
+//! Batched attention tensors: one contiguous `(batch, heads, n, d)` buffer
+//! with cheap per-`(b, h)` matrix views.
+//!
+//! The engine never copies per-head data on the hot path — [`MatView`] is a
+//! borrowed `(rows, cols, &[f32])` triple straight into the batched buffer,
+//! and output heads are handed to workers as disjoint `&mut [f32]` chunks
+//! of the same layout.
+
+use crate::tensor::{Mat, Rng};
+
+/// Contiguous `(batch, heads, n, d)` f32 tensor, row-major in every axis
+/// (the layout the AOT artifacts and the Pallas kernels use).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchedTensor {
+    pub batch: usize,
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+    pub data: Vec<f32>,
+}
+
+impl BatchedTensor {
+    /// All-zeros tensor.
+    pub fn zeros(batch: usize, heads: usize, n: usize, d: usize) -> Self {
+        BatchedTensor { batch, heads, n, d, data: vec![0.0; batch * heads * n * d] }
+    }
+
+    /// i.i.d. standard-normal entries scaled by `scale`.
+    pub fn randn(
+        batch: usize,
+        heads: usize,
+        n: usize,
+        d: usize,
+        scale: f32,
+        rng: &mut Rng,
+    ) -> Self {
+        let mut t = Self::zeros(batch, heads, n, d);
+        for v in t.data.iter_mut() {
+            *v = rng.normal() * scale;
+        }
+        t
+    }
+
+    /// Assemble from per-head matrices in `(batch, head)` row-major order
+    /// (`mats.len() == batch * heads`, each `(n, d)`).
+    pub fn from_heads(batch: usize, heads: usize, mats: &[Mat]) -> Self {
+        assert_eq!(mats.len(), batch * heads, "head count mismatch");
+        let (n, d) = (mats[0].rows, mats[0].cols);
+        let mut t = Self::zeros(batch, heads, n, d);
+        for (p, m) in mats.iter().enumerate() {
+            assert_eq!((m.rows, m.cols), (n, d), "ragged head shapes");
+            t.data[p * n * d..(p + 1) * n * d].copy_from_slice(&m.data);
+        }
+        t
+    }
+
+    /// Elements in one `(b, h)` head.
+    #[inline(always)]
+    pub fn head_len(&self) -> usize {
+        self.n * self.d
+    }
+
+    /// Total `(batch, head)` pairs.
+    #[inline(always)]
+    pub fn pairs(&self) -> usize {
+        self.batch * self.heads
+    }
+
+    /// Flat offset of head `(b, h)`.
+    #[inline(always)]
+    pub fn offset(&self, b: usize, h: usize) -> usize {
+        debug_assert!(b < self.batch && h < self.heads);
+        (b * self.heads + h) * self.head_len()
+    }
+
+    /// Borrowed `(n, d)` view of head `(b, h)` — no copy.
+    #[inline(always)]
+    pub fn view(&self, b: usize, h: usize) -> MatView<'_> {
+        let o = self.offset(b, h);
+        MatView { rows: self.n, cols: self.d, data: &self.data[o..o + self.head_len()] }
+    }
+
+    /// Mutable flat slice of head `(b, h)`.
+    pub fn head_mut(&mut self, b: usize, h: usize) -> &mut [f32] {
+        let o = self.offset(b, h);
+        let l = self.head_len();
+        &mut self.data[o..o + l]
+    }
+
+    /// Owned copy of head `(b, h)` as a [`Mat`].
+    pub fn head_mat(&self, b: usize, h: usize) -> Mat {
+        self.view(b, h).to_mat()
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize, usize) {
+        (self.batch, self.heads, self.n, self.d)
+    }
+}
+
+/// Borrowed row-major `(rows, cols)` matrix view (e.g. one head of a
+/// [`BatchedTensor`], or a whole [`Mat`]).
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatView<'a> {
+    pub fn from_mat(m: &'a Mat) -> Self {
+        MatView { rows: m.rows, cols: m.cols, data: &m.data }
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Owned copy (for shims whose inner implementation needs a `Mat`).
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.to_vec())
+    }
+}
+
+impl<'a> From<&'a Mat> for MatView<'a> {
+    fn from(m: &'a Mat) -> Self {
+        MatView::from_mat(m)
+    }
+}
+
+/// Relative Frobenius error between two equal-length flat buffers
+/// (`||a - b||_F / ||b||_F`, the paper's metric lifted to batched tensors).
+pub fn rel_fro_error_flat(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "buffer length mismatch");
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = (*x as f64) - (*y as f64);
+        num += d * d;
+        den += (*y as f64) * (*y as f64);
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_index_the_right_head() {
+        let mut t = BatchedTensor::zeros(2, 3, 4, 2);
+        for (i, v) in t.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let v = t.view(1, 2);
+        assert_eq!((v.rows, v.cols), (4, 2));
+        // head (1, 2) is pair index 5, so its first element is 5 * 8
+        assert_eq!(v.get(0, 0), 40.0);
+        assert_eq!(v.row(3), &[46.0, 47.0]);
+        assert_eq!(t.head_mut(0, 1)[0], 8.0);
+    }
+
+    #[test]
+    fn from_heads_round_trips() {
+        let mut rng = Rng::new(0);
+        let mats: Vec<Mat> = (0..6).map(|_| Mat::randn(4, 3, 1.0, &mut rng)).collect();
+        let t = BatchedTensor::from_heads(2, 3, &mats);
+        for b in 0..2 {
+            for h in 0..3 {
+                assert_eq!(t.head_mat(b, h), mats[b * 3 + h]);
+            }
+        }
+    }
+
+    #[test]
+    fn matview_from_mat_borrows() {
+        let m = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+        let v = MatView::from_mat(&m);
+        assert_eq!(v.get(2, 1), 5.0);
+        assert_eq!(v.to_mat(), m);
+    }
+
+    #[test]
+    fn rel_fro_flat_basics() {
+        let a = [3.0f32, 4.0];
+        let b = [0.0f32, 0.0];
+        assert!(rel_fro_error_flat(&a, &a) < 1e-12);
+        assert!(rel_fro_error_flat(&b, &a) > 0.99);
+    }
+}

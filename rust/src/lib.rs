@@ -8,12 +8,15 @@
 //!   operators, lowered at build time.
 //! * **L2** (`python/compile/model.py`) — JAX transformer fwd/bwd calling
 //!   the kernels, AOT-lowered to HLO text artifacts.
-//! * **L3** (this crate) — the coordinator: PJRT runtime, serving batcher /
-//!   router, training driver, plus a complete native implementation of the
-//!   paper's algorithm and every baseline for CPU benchmarking.
+//! * **L3** (this crate) — the coordinator: PJRT runtime (feature `pjrt`),
+//!   serving batcher / router, training driver, the parallel batched
+//!   multi-head attention engine ([`engine`]), plus a complete native
+//!   implementation of the paper's algorithm and every baseline for CPU
+//!   benchmarking.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index, and
-//! `EXPERIMENTS.md` for reproduced tables/figures.
+//! See `DESIGN.md` (repo root) for the full system inventory and the
+//! engine schedule, and `EXPERIMENTS.md` for reproduced tables/figures and
+//! the perf methodology.
 
 pub mod baselines;
 pub mod bench;
@@ -21,6 +24,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod mra;
 pub mod proptest;
 pub mod runtime;

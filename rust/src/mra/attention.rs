@@ -1,6 +1,13 @@
 //! End-to-end MRA attention: configuration, the general multi-scale path
 //! (Alg. 1 + Alg. 2), the optimized two-scale MRA-2 / MRA-2-s fast path,
 //! and the dense oracle used by tests and Fig. 8.
+//!
+//! The fast path is factored into a per-head [`Mra2Plan`] (pyramid, Alg. 1
+//! selection, stabilization floors) plus [`mra2_apply_blocks`], which
+//! computes any contiguous range of query blocks independently — every
+//! query block owns its output rows and denominators outright, so the
+//! engine ([`crate::engine`]) can shard one head across workers and still
+//! produce bitwise-identical results to the sequential path.
 
 use crate::mra::matvec;
 use crate::mra::pyramid::Pyramid;
@@ -95,6 +102,220 @@ pub struct MraStats {
     pub buffer_elems: usize,
 }
 
+/// Precomputed per-head state of the MRA-2 / MRA-2-s fast path: pyramid
+/// pooling, Alg. 1 selection, and stabilization floors.  Read-only once
+/// built — any number of [`mra2_apply_blocks`] calls (one per query-block
+/// range, possibly on different threads) share one plan.
+pub struct Mra2Plan {
+    pub block: usize,
+    pub nb: usize,
+    pub d: usize,
+    pub variant: Variant,
+    pub inv_sqrt_d: f32,
+    /// Refined key-block columns per query block, ascending.  Never empty:
+    /// the diagonal-coverage rule guarantees at least the diagonal block.
+    pub per_row: Vec<Vec<usize>>,
+    /// Dense `(nb, nb)` selection mask.
+    pub selected: Vec<bool>,
+    /// Total refined blocks (>= nb under the coverage rule).
+    pub tiles: usize,
+    /// Low-resolution scores `(nb, nb)` (Eq. 7 / Eq. 6).
+    pub s_low: Mat,
+    /// Block-pooled values `(nb, d)` — the low-res contribution operand.
+    pub vt: Mat,
+    /// Per-query-block stabilization floor: max low-res score over
+    /// non-refined blocks (`-inf` for MRA-2-s and fully refined rows).
+    pub mb: Vec<f32>,
+}
+
+impl Mra2Plan {
+    /// Workload statistics for one full application of this plan.
+    pub fn stats(&self, n: usize) -> MraStats {
+        let (b, nb, d) = (self.block, self.nb, self.d);
+        let max_tiles = self.per_row.iter().map(Vec::len).max().unwrap_or(0);
+        let mut s = MraStats {
+            mu_evals: nb * nb + self.tiles * b * b,
+            flops: nb * nb * d + 3 * n * d + self.tiles * b * b * (2 * d + 2),
+            buffer_elems: max_tiles * b * b + 3 * nb * d + nb * nb,
+        };
+        if self.variant == Variant::Full {
+            for yset in &self.per_row {
+                s.flops += (nb - yset.len()) * (d + 2);
+            }
+        }
+        s
+    }
+}
+
+/// Build the per-head plan: pyramid, low-res scores, Alg. 1 selection.
+///
+/// Selection guarantees per-query-block coverage (§bugfix): every diagonal
+/// block is always refined — with `m < nb` the old `+inf`-diagonal-prior
+/// tie-break could leave query blocks with no refined block at all, making
+/// `den == 0` and silently zeroing whole output rows — and the remaining
+/// `m - nb` budget goes to the best off-diagonal blocks by low-res score.
+/// For `m >= nb` this selects exactly the same set as the original rule.
+#[allow(clippy::too_many_arguments)]
+pub fn mra2_plan(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    block: usize,
+    m: usize,
+    variant: Variant,
+) -> Mra2Plan {
+    assert!(block > 0 && n % block == 0, "block {block} must divide n={n}");
+    assert_eq!(q.len(), n * d, "q buffer/shape mismatch");
+    assert_eq!(k.len(), n * d, "k buffer/shape mismatch");
+    assert_eq!(v.len(), n * d, "v buffer/shape mismatch");
+    let b = block;
+    let nb = n / b;
+    let m = m.min(nb * nb).max(1);
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+
+    // --- pyramid + low-res scores (Eq. 7 / Eq. 6) --------------------------
+    let qt = ops::pool_rows_slice(q, n, d, b);
+    let kt = ops::pool_rows_slice(k, n, d, b);
+    let vt = ops::pool_rows_slice(v, n, d, b);
+    let s_low = qt.matmul_transb(&kt).scale(inv_sqrt_d); // (nb, nb)
+
+    // --- Alg. 1: diagonal coverage + off-diagonal top-k --------------------
+    let mut selected = vec![false; nb * nb];
+    for i in 0..nb {
+        selected[i * nb + i] = true;
+    }
+    let extra = m.saturating_sub(nb);
+    if extra > 0 {
+        let mut prio = s_low.data.clone();
+        for i in 0..nb {
+            prio[i * nb + i] = f32::NEG_INFINITY;
+        }
+        for &c in &topk::top_k_indices(&prio, extra) {
+            selected[c] = true;
+        }
+    }
+    let mut per_row: Vec<Vec<usize>> = vec![Vec::new(); nb];
+    let mut tiles = 0usize;
+    for x in 0..nb {
+        for y in 0..nb {
+            if selected[x * nb + y] {
+                per_row[x].push(y);
+                tiles += 1;
+            }
+        }
+    }
+    let mut mb = vec![f32::NEG_INFINITY; nb];
+    if variant == Variant::Full {
+        for x in 0..nb {
+            for y in 0..nb {
+                if !selected[x * nb + y] {
+                    mb[x] = mb[x].max(s_low.get(x, y));
+                }
+            }
+        }
+    }
+    Mra2Plan { block: b, nb, d, variant, inv_sqrt_d, per_row, selected, tiles, s_low, vt, mb }
+}
+
+/// Apply a plan to the query-block range `[x0, x1)`, writing the
+/// row-normalized output rows `[x0*b, x1*b)` into `out` (length
+/// `(x1 - x0) * b * d`).
+///
+/// §Perf: tiles are computed per query block into a single reusable buffer
+/// (no per-tile `Mat` allocations); the two-pass max stabilization happens
+/// within the block's tile set, so peak transient memory is
+/// `O(max_tiles_per_row * b^2)` instead of `O(m * b^2)`.  Every query block
+/// is fully self-contained (scores, denominators, low-res correction and
+/// normalization), which is what makes the range embarrassingly parallel.
+#[allow(clippy::too_many_arguments)]
+pub fn mra2_apply_blocks(
+    plan: &Mra2Plan,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    x0: usize,
+    x1: usize,
+    out: &mut [f32],
+) {
+    let (b, d, nb) = (plan.block, plan.d, plan.nb);
+    assert!(x0 <= x1 && x1 <= nb, "query-block range {x0}..{x1} out of 0..{nb}");
+    assert_eq!(out.len(), (x1 - x0) * b * d, "out shard size mismatch");
+    let max_tiles = plan.per_row[x0..x1].iter().map(Vec::len).max().unwrap_or(0);
+    let mut tilebuf = vec![0.0f32; max_tiles * b * b];
+    let mut den = vec![0.0f32; b];
+    for x in x0..x1 {
+        let obase = (x - x0) * b * d;
+        out[obase..obase + b * d].fill(0.0);
+        den.fill(0.0);
+        let yset = &plan.per_row[x];
+        // pass 1: exact P tiles for this query block + running max
+        let mut block_max = plan.mb[x];
+        for (t, &y) in yset.iter().enumerate() {
+            let tile = &mut tilebuf[t * b * b..(t + 1) * b * b];
+            for r in 0..b {
+                let qrow = &q[(x * b + r) * d..(x * b + r + 1) * d];
+                for c in 0..b {
+                    let krow = &k[(y * b + c) * d..(y * b + c + 1) * d];
+                    let s = crate::tensor::mat::dot(qrow, krow) * plan.inv_sqrt_d;
+                    tile[r * b + c] = s;
+                    if s > block_max {
+                        block_max = s;
+                    }
+                }
+            }
+        }
+        // pass 2: stabilized exp + value aggregation
+        for (t, &y) in yset.iter().enumerate() {
+            let tile = &tilebuf[t * b * b..(t + 1) * b * b];
+            for r in 0..b {
+                let orow = &mut out[obase + r * d..obase + (r + 1) * d];
+                let mut dsum = 0.0f32;
+                for c in 0..b {
+                    let a = (tile[r * b + c] - block_max).exp();
+                    dsum += a;
+                    let vrow = &v[(y * b + c) * d..(y * b + c + 1) * d];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += a * vv;
+                    }
+                }
+                den[r] += dsum;
+            }
+        }
+        // low-resolution contribution: mu * (block sum of V) per region
+        if plan.variant == Variant::Full {
+            let mut yacc = vec![0.0f32; d];
+            let mut dacc = 0.0f32;
+            for y in 0..nb {
+                if plan.selected[x * nb + y] {
+                    continue;
+                }
+                let mu = (plan.s_low.get(x, y) - block_max).exp();
+                dacc += mu * b as f32;
+                let vrow = plan.vt.row(y);
+                for (o, &vv) in yacc.iter_mut().zip(vrow) {
+                    *o += mu * b as f32 * vv;
+                }
+            }
+            for r in 0..b {
+                den[r] += dacc;
+                let orow = &mut out[obase + r * d..obase + (r + 1) * d];
+                for (o, &a) in orow.iter_mut().zip(&yacc) {
+                    *o += a;
+                }
+            }
+        }
+        // row normalization (denominators are local to this query block)
+        for r in 0..b {
+            let inv = if den[r] > 0.0 { 1.0 / den[r] } else { 0.0 };
+            for o in out[obase + r * d..obase + (r + 1) * d].iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+}
+
 /// Optimized two-scale fast path (MRA-2 / MRA-2-s): gathers the selected
 /// `b x b` blocks and computes them with block matmuls, mirroring the
 /// Pallas kernel schedule (DESIGN.md §4).  Returns `(Z_hat, stats)`.
@@ -107,131 +328,10 @@ pub fn mra2_attention_stats(
     variant: Variant,
 ) -> (Mat, MraStats) {
     let (n, d) = (q.rows, q.cols);
-    assert!(n % block == 0, "block {block} must divide n={n}");
-    let b = block;
-    let nb = n / b;
-    let m = m.min(nb * nb).max(1);
-    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-    let mut stats = MraStats::default();
-
-    // --- pyramid + low-res scores (Eq. 7 / Eq. 6) --------------------------
-    let qt = ops::pool_rows(q, b);
-    let kt = ops::pool_rows(k, b);
-    let vt = ops::pool_rows(v, b);
-    let s_low = qt.matmul_transb(&kt).scale(inv_sqrt_d); // (nb, nb)
-    stats.mu_evals += nb * nb;
-    stats.flops += nb * nb * d + 3 * n * d;
-
-    // --- Alg. 1: top-m selection with diagonal prior -----------------------
-    let mut prio = s_low.data.clone();
-    for i in 0..nb {
-        prio[i * nb + i] = f32::INFINITY;
-    }
-    let chosen = topk::top_k_indices(&prio, m);
-    let mut selected = vec![false; nb * nb];
-    let mut per_row: Vec<Vec<usize>> = vec![Vec::new(); nb]; // y's per x
-    for &c in &chosen {
-        selected[c] = true;
-        per_row[c / nb].push(c % nb);
-    }
-
-    // --- refined blocks + Alg. 2 accumulation, per query block -------------
-    // §Perf: tiles are computed per query block into a single reusable
-    // buffer (no per-tile Mat allocations, no row_block clones); the
-    // two-pass max stabilization happens within the block's tile set, so
-    // peak transient memory is O(max_tiles_per_row * b^2) instead of
-    // O(m * b^2).  See EXPERIMENTS.md §Perf for the before/after.
-    let max_tiles = per_row.iter().map(Vec::len).max().unwrap_or(0);
-    let mut tilebuf = vec![0.0f32; max_tiles * b * b];
-    stats.mu_evals += m * b * b;
-    stats.buffer_elems = max_tiles * b * b + 3 * nb * d + nb * nb;
-    let mut mb = vec![f32::NEG_INFINITY; nb];
-    if variant == Variant::Full {
-        for x in 0..nb {
-            for y in 0..nb {
-                if !selected[x * nb + y] {
-                    mb[x] = mb[x].max(s_low.get(x, y));
-                }
-            }
-        }
-    }
+    let plan = mra2_plan(&q.data, &k.data, &v.data, n, d, block, m, variant);
     let mut out = Mat::zeros(n, d);
-    let mut den = vec![0.0f32; n];
-    for x in 0..nb {
-        if per_row[x].is_empty() {
-            continue;
-        }
-        // pass 1: exact P tiles for this query block + running max
-        let mut block_max = mb[x];
-        for (t, &y) in per_row[x].iter().enumerate() {
-            let tile = &mut tilebuf[t * b * b..(t + 1) * b * b];
-            for r in 0..b {
-                let qrow = q.row(x * b + r);
-                for c in 0..b {
-                    let s = crate::tensor::mat::dot(qrow, k.row(y * b + c)) * inv_sqrt_d;
-                    tile[r * b + c] = s;
-                    if s > block_max {
-                        block_max = s;
-                    }
-                }
-            }
-            stats.flops += b * b * d;
-        }
-        mb[x] = block_max;
-        // pass 2: stabilized exp + value aggregation
-        for (t, &y) in per_row[x].iter().enumerate() {
-            let tile = &tilebuf[t * b * b..(t + 1) * b * b];
-            for r in 0..b {
-                let i = x * b + r;
-                let orow = out.row_mut(i);
-                let mut dsum = 0.0f32;
-                for c in 0..b {
-                    let a = (tile[r * b + c] - block_max).exp();
-                    dsum += a;
-                    let vrow = v.row(y * b + c);
-                    for (o, &vv) in orow.iter_mut().zip(vrow) {
-                        *o += a * vv;
-                    }
-                }
-                den[i] += dsum;
-            }
-            stats.flops += b * b * (d + 2);
-        }
-    }
-    if variant == Variant::Full {
-        // low-resolution contribution: mu * (block sum of V) per region
-        for x in 0..nb {
-            let shift = mb[x];
-            let mut yacc = vec![0.0f32; d];
-            let mut dacc = 0.0f32;
-            for y in 0..nb {
-                if selected[x * nb + y] {
-                    continue;
-                }
-                let mu = (s_low.get(x, y) - shift).exp();
-                dacc += mu * b as f32;
-                let vrow = vt.row(y);
-                for (o, &vv) in yacc.iter_mut().zip(vrow) {
-                    *o += mu * b as f32 * vv;
-                }
-                stats.flops += d + 2;
-            }
-            for r in 0..b {
-                let i = x * b + r;
-                den[i] += dacc;
-                let orow = out.row_mut(i);
-                for (o, &a) in orow.iter_mut().zip(&yacc) {
-                    *o += a;
-                }
-            }
-        }
-    }
-    for i in 0..n {
-        let inv = if den[i] > 0.0 { 1.0 / den[i] } else { 0.0 };
-        for vv in out.row_mut(i) {
-            *vv *= inv;
-        }
-    }
+    mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut out.data);
+    let stats = plan.stats(n);
     (out, stats)
 }
 
@@ -259,14 +359,21 @@ pub fn dense_mra2(
     let kt = ops::pool_rows(k, b);
     let s_low = qt.matmul_transb(&kt).scale(inv_sqrt_d);
     let p = ops::scores(q, k);
-    let mut prio = s_low.data.clone();
-    for i in 0..nb {
-        prio[i * nb + i] = f32::INFINITY;
-    }
-    let chosen = topk::top_k_indices(&prio, m);
+    // same coverage rule as the fast path: all diagonal blocks + the best
+    // off-diagonal blocks with the remaining budget
     let mut selected = vec![false; nb * nb];
-    for &c in &chosen {
-        selected[c] = true;
+    for i in 0..nb {
+        selected[i * nb + i] = true;
+    }
+    let extra = m.saturating_sub(nb);
+    if extra > 0 {
+        let mut prio = s_low.data.clone();
+        for i in 0..nb {
+            prio[i * nb + i] = f32::NEG_INFINITY;
+        }
+        for &c in &topk::top_k_indices(&prio, extra) {
+            selected[c] = true;
+        }
     }
     let mut a_hat = Mat::zeros(n, n);
     for x in 0..nb {
@@ -310,7 +417,7 @@ mod tests {
     #[test]
     fn fast_path_matches_dense_oracle_full() {
         let (q, k, v) = setup(128, 16, 0);
-        for m in [5, 16, 40] {
+        for m in [2, 5, 16, 40] {
             let (_, z_dense) = dense_mra2(&q, &k, &v, 16, m, Variant::Full);
             let z = mra2_attention(&q, &k, &v, 16, m, Variant::Full);
             assert!(ops::rel_fro_error(&z, &z_dense) < 1e-4, "m={m}");
@@ -320,7 +427,7 @@ mod tests {
     #[test]
     fn fast_path_matches_dense_oracle_sparse() {
         let (q, k, v) = setup(128, 16, 1);
-        for m in [5, 16, 40] {
+        for m in [2, 5, 16, 40] {
             let (_, z_dense) = dense_mra2(&q, &k, &v, 16, m, Variant::Sparse);
             let z = mra2_attention(&q, &k, &v, 16, m, Variant::Sparse);
             assert!(ops::rel_fro_error(&z, &z_dense) < 1e-4, "m={m}");
@@ -423,6 +530,59 @@ mod tests {
             for &x in z.data.iter() {
                 assert!((x - 1.0).abs() < 1e-4);
             }
+        }
+    }
+
+    #[test]
+    fn sparse_small_budget_has_no_zero_rows() {
+        // regression: with m = 2 and nb = 8 the old +inf diagonal-prior
+        // tie-break left six query blocks with no refined block, so their
+        // denominators were 0 and whole output rows silently became zero.
+        // With ones-values every row must remain a convex combination (= 1).
+        let (q, k, _) = setup(128, 16, 9);
+        let v = Mat::full(128, 16, 1.0);
+        for variant in [Variant::Full, Variant::Sparse] {
+            let z = mra2_attention(&q, &k, &v, 16, 2, variant);
+            for (i, &x) in z.data.iter().enumerate() {
+                assert!(
+                    (x - 1.0).abs() < 1e-4,
+                    "{variant:?}: row {} drifted ({x})",
+                    i / 16
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_guarantees_query_block_coverage() {
+        let (q, k, v) = setup(128, 16, 10);
+        for m in [1, 2, 5, 8, 20, 64] {
+            for variant in [Variant::Full, Variant::Sparse] {
+                let plan = mra2_plan(&q.data, &k.data, &v.data, 128, 16, 16, m, variant);
+                for (x, ys) in plan.per_row.iter().enumerate() {
+                    assert!(!ys.is_empty(), "m={m}: query block {x} uncovered");
+                    assert!(ys.contains(&x), "m={m}: diagonal missing at {x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_blocks_sharding_is_exact() {
+        // the engine shards one head by query-block ranges; shard
+        // boundaries must not change a single bit of the output
+        let (q, k, v) = setup(128, 16, 11);
+        for variant in [Variant::Full, Variant::Sparse] {
+            let plan = mra2_plan(&q.data, &k.data, &v.data, 128, 16, 16, 6, variant);
+            let mut full = vec![0.0f32; 128 * 16];
+            mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut full);
+            let mut sharded = vec![0.0f32; 128 * 16];
+            let rows_per_block = plan.block * plan.d;
+            for (x0, x1) in [(0usize, 3usize), (3, 4), (4, 8)] {
+                let shard = &mut sharded[x0 * rows_per_block..x1 * rows_per_block];
+                mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, x0, x1, shard);
+            }
+            assert_eq!(full, sharded, "{variant:?}");
         }
     }
 }

@@ -18,6 +18,9 @@ pub mod pyramid;
 pub mod select;
 pub mod theory;
 
-pub use attention::{dense_mra2, mra2_attention, mra_attention, MraConfig, Variant};
+pub use attention::{
+    dense_mra2, mra2_apply_blocks, mra2_attention, mra2_attention_stats, mra2_plan,
+    mra_attention, Mra2Plan, MraConfig, MraStats, Variant,
+};
 pub use frame::Block;
 pub use select::Selection;

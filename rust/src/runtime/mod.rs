@@ -1,106 +1,91 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute from the
-//! coordinator hot path.
+//! Artifact runtime: manifest-validated execution of the AOT HLO artifacts.
 //!
-//! HLO **text** is the interchange format (jax >= 0.5 serialized protos use
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids).  Every executable is compiled at most once and cached;
-//! execution marshals [`HostTensor`]s to PJRT literals and unpacks the
-//! return tuple (`aot.py` lowers with `return_tuple=True`).
+//! Two backends share one API surface:
+//!
+//! * **`pjrt` feature on** — [`pjrt::Runtime`] compiles `artifacts/*.hlo.txt`
+//!   through the PJRT CPU client (compile-once executable cache, literal
+//!   marshalling).
+//! * **default (offline)** — a native stub [`Runtime`] that parses the same
+//!   manifest and shape-checks inputs but cannot execute HLO; `execute`
+//!   returns a descriptive error so callers (the serving coordinator, the
+//!   examples) fall back to the native batched engine
+//!   ([`crate::engine::Engine`]).
+//!
+//! Either way the coordinator talks to a single executor thread through the
+//! cloneable [`RuntimeHandle`] (the PJRT client types are neither `Send` nor
+//! `Sync`; serialized dispatch is not the bottleneck because PJRT CPU
+//! parallelizes *inside* one execute call — see EXPERIMENTS.md §Perf).
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifacts::{Artifact, DType, HostTensor, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
 
-use anyhow::{bail, Context, Result};
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use anyhow::{bail, Context, Result};
 
-/// A PJRT CPU runtime with an executable cache over one artifacts dir.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    use crate::runtime::{HostTensor, Manifest};
+
+    /// Manifest-only runtime used when the `pjrt` feature is disabled.
+    ///
+    /// It performs the same artifact lookup and input shape/dtype checks as
+    /// the PJRT backend so error paths stay testable offline, but it cannot
+    /// run HLO — `execute` always fails with a pointer at the native engine.
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        /// Parse the manifest in `dir` (no PJRT client is created).
+        pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            Ok(Runtime { manifest })
+        }
+
+        /// Platform string (diagnostics).
+        pub fn platform(&self) -> String {
+            "native-stub (enable feature `pjrt` for HLO execution)".to_string()
+        }
+
+        /// Validate that the artifact exists ("compilation" is a no-op).
+        pub fn load(&self, name: &str) -> Result<()> {
+            self.manifest.get(name).map(|_| ())
+        }
+
+        /// Shape/dtype-check inputs, then fail: HLO execution needs `pjrt`.
+        pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            let art = self.manifest.get(name)?.clone();
+            if inputs.len() != art.inputs.len() {
+                bail!("{name}: want {} inputs, got {}", art.inputs.len(), inputs.len());
+            }
+            for (i, (t, spec)) in inputs.iter().zip(&art.inputs).enumerate() {
+                t.check(spec).with_context(|| format!("{name} input {i}"))?;
+            }
+            bail!(
+                "artifact {name:?} cannot be executed: built without the `pjrt` \
+                 feature — route this batch through the native engine instead"
+            )
+        }
+
+        /// Number of artifacts compiled so far (always 0 for the stub).
+        pub fn compiled_count(&self) -> usize {
+            0
+        }
+    }
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client and parse the manifest in `dir`.
-    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let manifest = Manifest::load(dir)?;
-        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
-    }
-
-    /// Platform string (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) the named artifact.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
-        }
-        let art = self.manifest.get(name)?;
-        let path = self.manifest.hlo_path(art);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Execute an artifact with shape/dtype-checked host inputs; returns the
-    /// unpacked output tuple as host tensors.
-    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let art = self.manifest.get(name)?.clone();
-        if inputs.len() != art.inputs.len() {
-            bail!("{name}: want {} inputs, got {}", art.inputs.len(), inputs.len());
-        }
-        for (i, (t, spec)) in inputs.iter().zip(&art.inputs).enumerate() {
-            t.check(spec).with_context(|| format!("{name} input {i}"))?;
-        }
-        let exe = self.load(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(to_literal)
-            .collect::<Result<Vec<_>>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {name}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = tuple.to_tuple().context("unpacking result tuple")?;
-        if parts.len() != art.n_outputs {
-            bail!("{name}: want {} outputs, got {}", art.n_outputs, parts.len());
-        }
-        parts.into_iter().map(from_literal).collect()
-    }
-
-    /// Number of artifacts compiled so far (tests / metrics).
-    pub fn compiled_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-}
+use anyhow::{Context, Result};
 
 // ---------------------------------------------------------------------------
 // executor thread + Send/Sync handle
 // ---------------------------------------------------------------------------
-//
-// The `xla` crate's client/executable types hold `Rc`s and raw pointers and
-// are neither `Send` nor `Sync`, so the `Runtime` lives on one dedicated
-// executor thread; the coordinator talks to it through a cloneable
-// channel-backed [`RuntimeHandle`].  PJRT CPU parallelizes *inside* one
-// execute call, so serialized dispatch is not the bottleneck (measured in
-// EXPERIMENTS.md §Perf).
 
 enum Job {
     Execute {
@@ -142,7 +127,9 @@ impl RuntimeHandle {
 
 /// Spawn the executor thread over an artifacts dir; returns the handle and
 /// an independently parsed manifest (plain data, freely shareable).
-pub fn spawn(dir: impl AsRef<std::path::Path>) -> Result<(RuntimeHandle, std::sync::Arc<Manifest>)> {
+pub fn spawn(
+    dir: impl AsRef<std::path::Path>,
+) -> Result<(RuntimeHandle, std::sync::Arc<Manifest>)> {
     let manifest = std::sync::Arc::new(Manifest::load(&dir)?);
     let dir = dir.as_ref().to_path_buf();
     let (tx, rx) = std::sync::mpsc::channel::<Job>();
@@ -173,62 +160,69 @@ pub fn spawn(dir: impl AsRef<std::path::Path>) -> Result<(RuntimeHandle, std::sy
     Ok((RuntimeHandle { tx }, manifest))
 }
 
-/// Host tensor -> PJRT literal.
-fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
-    let lit = match t {
-        HostTensor::F32(v, _) => xla::Literal::vec1(v),
-        HostTensor::I32(v, _) => xla::Literal::vec1(v),
-    };
-    // jax lowers 0-d params as scalars; vec1 gives [1], reshape to []
-    Ok(lit.reshape(&dims)?)
-}
-
-/// PJRT literal -> host tensor.
-fn from_literal(lit: xla::Literal) -> Result<HostTensor> {
-    let shape = lit.array_shape().context("output array shape")?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    match shape.ty() {
-        xla::ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims)),
-        xla::ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims)),
-        other => bail!("unsupported output element type {other:?}"),
-    }
-}
-
-#[cfg(test)]
+#[cfg(all(test, not(feature = "pjrt")))]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
-    // Runtime tests that need real artifacts live in rust/tests/ (they are
-    // skipped when artifacts/ has not been built); here we cover the
-    // literal marshalling.
+    // The stub backend is exercised through a toy manifest written to a
+    // scratch directory (no tempfile crate offline).
 
-    #[test]
-    fn literal_roundtrip_f32() {
-        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
-        let lit = to_literal(&t).unwrap();
-        let back = from_literal(lit).unwrap();
-        assert_eq!(back, t);
+    static SCRATCH_ID: AtomicUsize = AtomicUsize::new(0);
+
+    fn scratch_manifest() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mra-runtime-stub-{}-{}",
+            std::process::id(),
+            SCRATCH_ID.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "toy\ttoy.hlo.txt\tfloat32:2x2\t1\t\n",
+        )
+        .unwrap();
+        dir
     }
 
     #[test]
-    fn literal_roundtrip_i32() {
-        let t = HostTensor::I32(vec![5, -3, 7], vec![3]);
-        let lit = to_literal(&t).unwrap();
-        let back = from_literal(lit).unwrap();
-        assert_eq!(back, t);
+    fn stub_checks_shapes_then_reports_missing_backend() {
+        let dir = scratch_manifest();
+        let rt = Runtime::new(&dir).unwrap();
+        assert!(rt.platform().contains("native-stub"));
+        assert_eq!(rt.compiled_count(), 0);
+        // unknown artifact -> manifest error
+        assert!(rt.execute("nope", &[]).is_err());
+        // bad shape -> spec error (checked before the backend error)
+        let bad = vec![HostTensor::F32(vec![0.0; 4], vec![4])];
+        let err = format!("{:#}", rt.execute("toy", &bad).unwrap_err());
+        assert!(err.contains("shape mismatch"), "{err}");
+        // well-formed input -> clear missing-backend error
+        let good = vec![HostTensor::F32(vec![0.0; 4], vec![2, 2])];
+        let err = format!("{:#}", rt.execute("toy", &good).unwrap_err());
+        assert!(err.contains("pjrt"), "{err}");
+        // warm path validates manifest membership only
+        assert!(rt.load("toy").is_ok());
+        assert!(rt.load("nope").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
-    fn literal_scalar() {
-        let t = HostTensor::scalar_f32(2.5);
-        let lit = to_literal(&t).unwrap();
-        match from_literal(lit).unwrap() {
-            HostTensor::F32(v, d) => {
-                assert_eq!(v, vec![2.5]);
-                assert!(d.is_empty());
-            }
-            _ => panic!("wrong type"),
-        }
+    fn spawn_fails_cleanly_without_artifacts() {
+        let err = spawn("no-such-artifacts-dir");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn handle_round_trips_through_executor_thread() {
+        let dir = scratch_manifest();
+        let (rt, manifest) = spawn(&dir).unwrap();
+        assert!(manifest.get("toy").is_ok());
+        assert!(rt.warm("toy").is_ok());
+        assert!(rt.warm("nope").is_err());
+        let err = rt.execute("toy", vec![HostTensor::F32(vec![0.0; 4], vec![2, 2])]);
+        assert!(err.is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,150 @@
+//! PJRT-backed executor (feature `pjrt`): load `artifacts/*.hlo.txt`,
+//! compile once, execute from the coordinator hot path.
+//!
+//! HLO **text** is the interchange format (jax >= 0.5 serialized protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids).  Every executable is compiled at most once and cached;
+//! execution marshals [`HostTensor`]s to PJRT literals and unpacks the
+//! return tuple (`aot.py` lowers with `return_tuple=True`).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{HostTensor, Manifest};
+
+/// A PJRT CPU runtime with an executable cache over one artifacts dir.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse the manifest in `dir`.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let art = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(art);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with shape/dtype-checked host inputs; returns the
+    /// unpacked output tuple as host tensors.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let art = self.manifest.get(name)?.clone();
+        if inputs.len() != art.inputs.len() {
+            bail!("{name}: want {} inputs, got {}", art.inputs.len(), inputs.len());
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&art.inputs).enumerate() {
+            t.check(spec).with_context(|| format!("{name} input {i}"))?;
+        }
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("unpacking result tuple")?;
+        if parts.len() != art.n_outputs {
+            bail!("{name}: want {} outputs, got {}", art.n_outputs, parts.len());
+        }
+        parts.into_iter().map(from_literal).collect()
+    }
+
+    /// Number of artifacts compiled so far (tests / metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Host tensor -> PJRT literal.
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        HostTensor::F32(v, _) => xla::Literal::vec1(v),
+        HostTensor::I32(v, _) => xla::Literal::vec1(v),
+    };
+    // jax lowers 0-d params as scalars; vec1 gives [1], reshape to []
+    Ok(lit.reshape(&dims)?)
+}
+
+/// PJRT literal -> host tensor.
+fn from_literal(lit: xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape().context("output array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims)),
+        xla::ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims)),
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need real artifacts live in rust/tests/ (they are
+    // skipped when artifacts/ has not been built); here we cover the
+    // literal marshalling.
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::I32(vec![5, -3, 7], vec![3]);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_scalar() {
+        let t = HostTensor::scalar_f32(2.5);
+        let lit = to_literal(&t).unwrap();
+        match from_literal(lit).unwrap() {
+            HostTensor::F32(v, d) => {
+                assert_eq!(v, vec![2.5]);
+                assert!(d.is_empty());
+            }
+            _ => panic!("wrong type"),
+        }
+    }
+}

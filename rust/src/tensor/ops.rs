@@ -73,14 +73,22 @@ pub fn attention_entropy(p: &Mat) -> f64 {
 
 /// Average-pool groups of `b` consecutive rows: `(n, d) -> (n/b, d)`.
 pub fn pool_rows(x: &Mat, b: usize) -> Mat {
-    assert_eq!(x.rows % b, 0, "block must divide rows");
-    let nb = x.rows / b;
+    pool_rows_slice(&x.data, x.rows, x.cols, b)
+}
+
+/// [`pool_rows`] over a flat row-major `(rows, cols)` buffer (the form the
+/// batched engine's per-head views use).
+pub fn pool_rows_slice(x: &[f32], rows: usize, cols: usize, b: usize) -> Mat {
+    assert_eq!(x.len(), rows * cols, "buffer/shape mismatch");
+    assert_eq!(rows % b, 0, "block must divide rows");
+    let nb = rows / b;
     let inv = 1.0 / b as f32;
-    let mut out = Mat::zeros(nb, x.cols);
+    let mut out = Mat::zeros(nb, cols);
     for g in 0..nb {
         let orow = out.row_mut(g);
         for r in 0..b {
-            for (o, &v) in orow.iter_mut().zip(x.row(g * b + r)) {
+            let xrow = &x[(g * b + r) * cols..(g * b + r + 1) * cols];
+            for (o, &v) in orow.iter_mut().zip(xrow) {
                 *o += v;
             }
         }
@@ -89,6 +97,20 @@ pub fn pool_rows(x: &Mat, b: usize) -> Mat {
         }
     }
     out
+}
+
+/// Index of the largest element (first on ties; 0 for an empty slice) —
+/// the shared prediction argmax of the serving paths.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
 }
 
 /// Scaled score matrix `P = Q K^T / sqrt(d)`.
@@ -170,6 +192,15 @@ mod tests {
         assert_eq!(p.rows, 2);
         assert!((p.get(0, 0) - 0.5).abs() < 1e-6);
         assert!((p.get(1, 0) - 2.5).abs() < 1e-6);
+        // the flat-slice form is the same computation
+        assert_eq!(pool_rows_slice(&x.data, 4, 2, 2), p);
+    }
+
+    #[test]
+    fn argmax_first_on_ties_and_empty_safe() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, -2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+        assert_eq!(argmax(&[]), 0);
     }
 
     #[test]
