@@ -38,12 +38,12 @@ fn main() -> Result<()> {
         queue_depth: 256,
     };
     // the AOT path needs both artifacts/ *and* a PJRT-capable build; the
-    // default (no `pjrt` feature) stub runtime can parse manifests but not
+    // stub runtime (no `pjrt-xla` backend) can parse manifests but not
     // execute HLO, so route straight to the native engine in that case
-    let spawned = if cfg!(feature = "pjrt") {
+    let spawned = if cfg!(feature = "pjrt-xla") {
         mra::runtime::spawn(&artifacts).map_err(|e| format!("{e:#}"))
     } else {
-        Err("built without the `pjrt` feature".to_string())
+        Err("built without the `pjrt-xla` backend".to_string())
     };
     let (server, seq_len, vocab) = match spawned {
         Ok((rt, manifest)) => {

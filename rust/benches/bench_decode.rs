@@ -1,0 +1,193 @@
+//! Incremental decode bench: tokens/sec of the causal MRA-2 decode path
+//! ([`DecodeState`]) vs exact causal attention over the same growing KV
+//! prefix, correctness-gated before any timing:
+//!
+//! * incremental state must be **bitwise identical** to recomputing the
+//!   full causal prefix from scratch (`causal_row_attention`);
+//! * the fast path must match the dense per-row causal oracle
+//!   (`causal_row_oracle`) within 1e-5 max abs error;
+//! * at n = 1024 the MRA-2 decode must beat exact causal decode in
+//!   tokens/sec (the acceptance gate; `O(b + m b + n/b)` vs `O(n)` per
+//!   token — DESIGN.md §7).
+//!
+//! ```bash
+//! cargo bench --bench bench_decode                    # n in {256, 1024}
+//! MRA_BENCH_SMALL=1 cargo bench --bench bench_decode  # fewer measured steps
+//! MRA_BENCH_JSON=1 cargo bench --bench bench_decode   # write BENCH_decode.json
+//! ```
+
+use std::time::Instant;
+
+use mra::bench::{BenchJson, Table};
+use mra::engine::{causal_row_attention, causal_row_oracle, DecodeState};
+use mra::mra::Variant;
+use mra::tensor::mat::dot;
+use mra::tensor::Rng;
+
+const D: usize = 64;
+const BLOCK: usize = 32;
+/// Refined complete past blocks per step (per-row Alg. 1 budget).
+const BUDGET: usize = 4;
+
+fn gen_rows(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n * D).map(|_| rng.normal()).collect()
+}
+
+/// Exact causal attention for the newest position over the raw prefix —
+/// the `O(n)`-per-token baseline every serving stack pays without a
+/// multiresolution cache.
+fn exact_decode_row(q_row: &[f32], k_rows: &[f32], v_rows: &[f32], len: usize) -> Vec<f32> {
+    let inv_sqrt_d = 1.0 / (D as f32).sqrt();
+    let mut mx = f32::NEG_INFINITY;
+    let mut scores = vec![0.0f32; len];
+    for (j, s) in scores.iter_mut().enumerate() {
+        *s = dot(q_row, &k_rows[j * D..(j + 1) * D]) * inv_sqrt_d;
+        if *s > mx {
+            mx = *s;
+        }
+    }
+    let mut out = vec![0.0f32; D];
+    let mut den = 0.0f32;
+    for (j, &s) in scores.iter().enumerate() {
+        let a = (s - mx).exp();
+        den += a;
+        for (o, &vv) in out.iter_mut().zip(&v_rows[j * D..(j + 1) * D]) {
+            *o += a * vv;
+        }
+    }
+    let inv = 1.0 / den.max(1e-30);
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+fn main() {
+    let small = std::env::var("MRA_BENCH_SMALL").is_ok();
+    let steps = if small { 64 } else { 256 };
+    let iters = if small { 3 } else { 5 };
+    println!(
+        "decode bench: d={D} block={BLOCK} refined-past-blocks={BUDGET} \
+         measured-steps={steps} (best of {iters})\n"
+    );
+
+    let mut table = Table::new(&["kernel", "n", "us/token", "tokens/s", "speedup"]);
+    let mut json = BenchJson::new("decode");
+    let mut sink = 0.0f32;
+    for &n in &[256usize, 1024] {
+        let mut rng = Rng::new(0xDEC0DE ^ n as u64);
+        let total = n + steps;
+        let q = gen_rows(total, &mut rng);
+        let k = gen_rows(total, &mut rng);
+        let v = gen_rows(total, &mut rng);
+
+        // prefill the MRA-2 cache with the first n tokens
+        let mut base = DecodeState::new(BLOCK, BUDGET, Variant::Full, D);
+        for t in 0..n {
+            base.append(&k[t * D..(t + 1) * D], &v[t * D..(t + 1) * D]);
+        }
+
+        // --- correctness gates (before any timing) ----------------------
+        {
+            let qrow = &q[(n - 1) * D..n * D];
+            let fast = base.attend_last(qrow);
+            let scratch = causal_row_attention(
+                qrow,
+                &k[..n * D],
+                &v[..n * D],
+                BLOCK,
+                BUDGET,
+                Variant::Full,
+            );
+            assert_eq!(
+                fast, scratch,
+                "incremental decode diverged from prefix recompute at n={n}"
+            );
+            let oracle =
+                causal_row_oracle(qrow, &k[..n * D], &v[..n * D], BLOCK, BUDGET, Variant::Full);
+            let max_abs = fast
+                .iter()
+                .zip(&oracle)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_abs <= 1e-5,
+                "decode vs dense causal oracle at n={n}: max abs {max_abs}"
+            );
+        }
+
+        // --- MRA-2 causal incremental decode ----------------------------
+        let mut best_mra = f64::INFINITY;
+        for _ in 0..iters {
+            let mut st = base.clone();
+            let t0 = Instant::now();
+            for s in 0..steps {
+                let t = n + s;
+                let out = st.step(
+                    &q[t * D..(t + 1) * D],
+                    &k[t * D..(t + 1) * D],
+                    &v[t * D..(t + 1) * D],
+                );
+                sink += out[0];
+            }
+            best_mra = best_mra.min(t0.elapsed().as_secs_f64());
+        }
+
+        // --- exact causal decode (full row every token) ------------------
+        let mut best_exact = f64::INFINITY;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            for s in 0..steps {
+                let t = n + s;
+                let len = t + 1;
+                let out =
+                    exact_decode_row(&q[t * D..(t + 1) * D], &k[..len * D], &v[..len * D], len);
+                sink += out[0];
+            }
+            best_exact = best_exact.min(t0.elapsed().as_secs_f64());
+        }
+
+        let tps_mra = steps as f64 / best_mra;
+        let tps_exact = steps as f64 / best_exact;
+        let speedup = tps_mra / tps_exact.max(1e-12);
+        table.row(&[
+            "mra2-causal-decode".to_string(),
+            format!("{n}"),
+            format!("{:.1}", best_mra / steps as f64 * 1e6),
+            format!("{tps_mra:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        table.row(&[
+            "exact-causal-decode".to_string(),
+            format!("{n}"),
+            format!("{:.1}", best_exact / steps as f64 * 1e6),
+            format!("{tps_exact:.0}"),
+            "1.00x".to_string(),
+        ]);
+        json.row(&[
+            ("kernel", BenchJson::str_field("mra2-causal-decode")),
+            ("n", format!("{n}")),
+            ("threads", "1".to_string()),
+            ("tokens_per_sec", format!("{tps_mra:.1}")),
+            ("speedup_vs_exact", format!("{speedup:.3}")),
+        ]);
+        json.row(&[
+            ("kernel", BenchJson::str_field("exact-causal-decode")),
+            ("n", format!("{n}")),
+            ("threads", "1".to_string()),
+            ("tokens_per_sec", format!("{tps_exact:.1}")),
+            ("speedup_vs_exact", "1.0".to_string()),
+        ]);
+        if n == 1024 {
+            assert!(
+                tps_mra > tps_exact,
+                "acceptance gate: MRA-2 causal decode must beat exact causal decode in \
+                 tokens/sec at n=1024 ({tps_mra:.0} vs {tps_exact:.0})"
+            );
+        }
+    }
+    table.print();
+    json.write_if_requested();
+    println!("\n(anti-DCE sink {sink:.3})");
+    println!("bench_decode OK (bitwise prefix-recompute, <= 1e-5 oracle, n=1024 tokens/sec gates)");
+}

@@ -9,9 +9,10 @@
 //! ```bash
 //! cargo bench --bench bench_engine                     # 1/2/4/8 + all cores
 //! MRA_BENCH_SMALL=1 cargo bench --bench bench_engine   # quick smoke sizes
+//! MRA_BENCH_JSON=1 cargo bench --bench bench_engine    # write BENCH_engine.json
 //! ```
 
-use mra::bench::{time_it, Table};
+use mra::bench::{time_it, BenchJson, Table};
 use mra::engine::{pool, rel_fro_error_flat, BatchedTensor, Engine, Mra2Kernel};
 use mra::mra::{mra2_attention, Variant};
 use mra::tensor::Rng;
@@ -59,6 +60,7 @@ fn main() {
     let iters = if small { 5 } else { 3 };
     let mut table =
         Table::new(&["threads", "mean ms", "p50 ms", "p95 ms", "heads/s", "speedup", "rel err"]);
+    let mut json = BenchJson::new("engine");
     let mut base_ms = 0.0f64;
     let mut ms_at = std::collections::HashMap::new();
     for &t in &threads {
@@ -85,8 +87,17 @@ fn main() {
             format!("{:.2}x", base_ms / stats.mean_ms.max(1e-9)),
             format!("{err:.2e}"),
         ]);
+        json.row(&[
+            ("kernel", BenchJson::str_field(&engine.kernel_name())),
+            ("n", format!("{n}")),
+            ("threads", format!("{t}")),
+            ("mean_ms", format!("{:.3}", stats.mean_ms)),
+            ("heads_per_sec", format!("{:.1}", stats.throughput(batch * heads))),
+            ("tokens_per_sec", format!("{:.1}", stats.throughput(batch * heads * n))),
+        ]);
     }
     table.print();
+    json.write_if_requested();
 
     if let (Some(&one), Some(&four)) = (ms_at.get(&1), ms_at.get(&4)) {
         let speedup = one / four.max(1e-9);

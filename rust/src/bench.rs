@@ -108,6 +108,66 @@ pub fn mib(elems_f32: usize) -> String {
     format!("{:.2}", elems_f32 as f64 * 4.0 / (1024.0 * 1024.0))
 }
 
+/// Minimal JSON emitter for the CI perf artifacts (`BENCH_<name>.json`,
+/// uploaded by the `bench-smoke` job — see EXPERIMENTS.md §CI perf
+/// trajectory).  No serde offline: values are pre-encoded by the caller
+/// — [`BenchJson::str_field`] for strings, plain `format!` for numbers.
+/// ASCII-only field names and values (Rust's `{:?}` escaping is JSON-safe
+/// for ASCII).
+pub struct BenchJson {
+    bench: String,
+    rows: Vec<String>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> Self {
+        BenchJson { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    /// Append one row object from `(key, json-encoded value)` pairs.
+    pub fn row(&mut self, fields: &[(&str, String)]) {
+        let body = fields
+            .iter()
+            .map(|(k, v)| format!("{k:?}: {v}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        self.rows.push(format!("{{{body}}}"));
+    }
+
+    /// JSON-encode a string value.
+    pub fn str_field(s: &str) -> String {
+        format!("{s:?}")
+    }
+
+    /// Render the full document: `{"bench": ..., "rows": [...]}`.
+    pub fn render(&self) -> String {
+        format!(
+            "{{\"bench\": {:?}, \"rows\": [\n  {}\n]}}\n",
+            self.bench,
+            self.rows.join(",\n  ")
+        )
+    }
+
+    /// Write `BENCH_<bench>.json` when the `MRA_BENCH_JSON` env var is set
+    /// (`1` = current directory, anything else = target directory).
+    /// Returns the path written, if any.
+    pub fn write_if_requested(&self) -> Option<std::path::PathBuf> {
+        let dir = std::env::var("MRA_BENCH_JSON").ok()?;
+        let dir = if dir == "1" { ".".to_string() } else { dir };
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{}.json", self.bench));
+        match std::fs::write(&path, self.render()) {
+            Ok(()) => {
+                println!("wrote {}", path.display());
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("failed to write {}: {e}", path.display());
+                None
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +217,21 @@ mod tests {
     #[test]
     fn mib_formats() {
         assert_eq!(mib(262144), "1.00");
+    }
+
+    #[test]
+    fn bench_json_renders_rows() {
+        let mut j = BenchJson::new("decode");
+        j.row(&[
+            ("kernel", BenchJson::str_field("mra2-causal-decode")),
+            ("n", "1024".to_string()),
+            ("tokens_per_sec", "123.4".to_string()),
+        ]);
+        let doc = j.render();
+        assert!(doc.starts_with("{\"bench\": \"decode\""), "{doc}");
+        assert!(doc.contains("\"kernel\": \"mra2-causal-decode\""), "{doc}");
+        assert!(doc.contains("\"n\": 1024"), "{doc}");
+        assert!(doc.contains("\"tokens_per_sec\": 123.4"), "{doc}");
+        assert!(doc.trim_end().ends_with("]}"), "{doc}");
     }
 }

@@ -13,6 +13,10 @@ use std::time::{Duration, Instant};
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
+    /// Autoregressive decode request: how many tokens to generate from
+    /// `tokens` as a prompt.  `0` = MLM predict-all-positions request;
+    /// LM runners clamp it to at least 1 (`Server::generate`).
+    pub gen_tokens: usize,
     pub arrived: Instant,
 }
 
@@ -102,7 +106,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> Request {
-        Request { id, tokens: vec![2, 5, 6], arrived: Instant::now() }
+        Request { id, tokens: vec![2, 5, 6], gen_tokens: 0, arrived: Instant::now() }
     }
 
     #[test]
@@ -149,9 +153,9 @@ mod tests {
         let mut b = Batcher::new(8, Duration::from_millis(50));
         assert!(b.next_deadline(Instant::now()).is_none());
         let t0 = Instant::now();
-        b.push(Request { id: 0, tokens: vec![2], arrived: t0 });
+        b.push(Request { id: 0, tokens: vec![2], gen_tokens: 0, arrived: t0 });
         std::thread::sleep(Duration::from_millis(2));
-        b.push(Request { id: 1, tokens: vec![2], arrived: Instant::now() });
+        b.push(Request { id: 1, tokens: vec![2], gen_tokens: 0, arrived: Instant::now() });
         // deadline follows the oldest request, not the newest
         let d = b.next_deadline(Instant::now()).unwrap();
         assert!(d <= Duration::from_millis(49), "{d:?}");

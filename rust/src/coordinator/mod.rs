@@ -7,8 +7,11 @@
 //! * [`batcher`] — dynamic batching with deadline flush.
 //! * [`router`]  — sequence-length / batch-size bucket routing + padding.
 //! * [`server`]  — thread/worker serving loop with backpressure, over the
-//!   artifact runtime or the native engine fallback.
-//! * [`native`]  — deterministic native MLM forward on the batched engine.
+//!   artifact runtime or the native engine fallback (MLM inference and
+//!   causal-LM generation share the batcher).
+//! * [`native`]  — deterministic native models on the batched engine:
+//!   [`NativeMlm`] (bidirectional) and [`NativeLm`] (causal scoring +
+//!   incremental decode).
 //! * [`trainer`] — training driver over the AOT `train_step` artifacts,
 //!   plus a native batched-engine evaluation fallback.
 
@@ -21,7 +24,7 @@ pub mod trainer;
 
 pub use batcher::{Batch, Batcher, Request};
 pub use metrics::Metrics;
-pub use native::{NativeMlm, NativeMlmConfig};
+pub use native::{NativeLm, NativeMlm, NativeMlmConfig};
 pub use router::Router;
 pub use server::Server;
 pub use trainer::Trainer;

@@ -1,0 +1,459 @@
+//! Incremental causal decode: a per-(batch, head) KV cache that reuses the
+//! MRA-2 pyramid across steps.
+//!
+//! [`DecodeState::append`] maintains the pooled key/value pyramid
+//! incrementally — partial-block sums accumulate in arrival order and are
+//! finalized (scaled by `1/block`) exactly when a block completes, the
+//! same float sequence as pooling the full prefix from scratch, so the
+//! incremental path is **bitwise identical** to recomputing the causal
+//! prefix ([`causal_row_attention`]; asserted in tests and
+//! `benches/bench_decode.rs`).
+//!
+//! [`DecodeState::attend_last`] runs a strictly per-row causal MRA-2 for
+//! the newest position: exact attention over the current (possibly
+//! partial) block and the `budget` best complete past blocks by pooled
+//! score, low-resolution `mu` correction over the remaining past blocks
+//! (Full variant).  Cost per generated token is
+//! `O(block + budget * block + n / block)` against `O(n)` for exact causal
+//! decode — the tokens/sec gap `benches/bench_decode.rs` measures.
+//!
+//! This per-row selection is the decode-time analog of the causal batch
+//! plan's per-query-block budget (`mra::attention::mra2_plan` with
+//! [`Causality::Causal`][crate::mra::Causality]); see DESIGN.md §7 for how
+//! the two schedules relate.
+
+use crate::mra::Variant;
+use crate::tensor::mat::dot;
+use crate::tensor::{ops, topk};
+
+/// Incremental KV cache + pooled pyramid for one `(batch, head)` pair of
+/// an autoregressive decode stream.
+#[derive(Clone, Debug)]
+pub struct DecodeState {
+    block: usize,
+    /// Refined complete past blocks per step (per-row Alg. 1 budget).
+    budget: usize,
+    variant: Variant,
+    d: usize,
+    len: usize,
+    /// Raw appended key/value rows, `(len, d)` row-major.
+    k_rows: Vec<f32>,
+    v_rows: Vec<f32>,
+    /// Pooled (mean) rows of every *completed* block, `(len / block, d)`.
+    kt: Vec<f32>,
+    vt: Vec<f32>,
+    /// Running sums of the current partial block.
+    ksum: Vec<f32>,
+    vsum: Vec<f32>,
+}
+
+impl DecodeState {
+    pub fn new(block: usize, budget: usize, variant: Variant, d: usize) -> Self {
+        assert!(block > 0, "block must be positive");
+        assert!(d > 0, "head dim must be positive");
+        DecodeState {
+            block,
+            budget,
+            variant,
+            d,
+            len: 0,
+            k_rows: Vec::new(),
+            v_rows: Vec::new(),
+            kt: Vec::new(),
+            vt: Vec::new(),
+            ksum: vec![0.0; d],
+            vsum: vec![0.0; d],
+        }
+    }
+
+    /// Number of cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Append one key/value row to the cache, maintaining the pooled
+    /// pyramid incrementally.  Rows accumulate into the partial-block sums
+    /// in arrival order and are finalized exactly when the block completes
+    /// — the same float sequence as `ops::pool_rows_slice` over the full
+    /// prefix, which is what makes incremental decode bitwise identical to
+    /// a from-scratch recompute.
+    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert_eq!(k_row.len(), self.d, "k row width");
+        assert_eq!(v_row.len(), self.d, "v row width");
+        self.k_rows.extend_from_slice(k_row);
+        self.v_rows.extend_from_slice(v_row);
+        for (s, &x) in self.ksum.iter_mut().zip(k_row) {
+            *s += x;
+        }
+        for (s, &x) in self.vsum.iter_mut().zip(v_row) {
+            *s += x;
+        }
+        self.len += 1;
+        if self.len % self.block == 0 {
+            let inv = 1.0 / self.block as f32;
+            self.kt.extend(self.ksum.iter().map(|&s| s * inv));
+            self.vt.extend(self.vsum.iter().map(|&s| s * inv));
+            self.ksum.fill(0.0);
+            self.vsum.fill(0.0);
+        }
+    }
+
+    /// Causal MRA-2 attention of `q_row` (the newest position, `len - 1`)
+    /// over the cached prefix; returns the row-normalized output row.
+    pub fn attend_last(&self, q_row: &[f32]) -> Vec<f32> {
+        assert!(self.len > 0, "attend_last on an empty cache");
+        assert_eq!(q_row.len(), self.d, "q row width");
+        attend_row_core(
+            q_row,
+            &self.k_rows,
+            &self.v_rows,
+            self.len,
+            &self.kt,
+            &self.vt,
+            self.block,
+            self.budget,
+            self.variant,
+        )
+    }
+
+    /// One decode step: `append` + `attend_last`.
+    pub fn step(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32]) -> Vec<f32> {
+        self.append(k_row, v_row);
+        self.attend_last(q_row)
+    }
+}
+
+/// Shared row-attention core: the position `len - 1` attends the `len`
+/// cached k/v rows, with pooled complete-block mats `kt` / `vt` holding at
+/// least `(len - 1) / block` rows each.
+#[allow(clippy::too_many_arguments)]
+fn attend_row_core(
+    q_row: &[f32],
+    k_rows: &[f32],
+    v_rows: &[f32],
+    len: usize,
+    kt: &[f32],
+    vt: &[f32],
+    block: usize,
+    budget: usize,
+    variant: Variant,
+) -> Vec<f32> {
+    let d = q_row.len();
+    let b = block;
+    let i = len - 1;
+    let x = i / b; // current (query) block
+    debug_assert!(kt.len() >= x * d && vt.len() >= x * d, "pooled pyramid too short");
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+
+    // per-row Alg. 1: score every complete past block at low resolution
+    let s_low: Vec<f32> =
+        (0..x).map(|y| dot(q_row, &kt[y * d..(y + 1) * d]) * inv_sqrt_d).collect();
+    let mut refined = topk::top_k_indices(&s_low, budget.min(x));
+    refined.sort_unstable();
+    let mut is_refined = vec![false; x];
+    for &y in &refined {
+        is_refined[y] = true;
+    }
+
+    // stabilization floor: best non-refined low-res score (Full only)
+    let mut mx = f32::NEG_INFINITY;
+    if variant == Variant::Full {
+        for (y, &s) in s_low.iter().enumerate() {
+            if !is_refined[y] && s > mx {
+                mx = s;
+            }
+        }
+    }
+
+    // pass 1: exact scores for the refined past blocks + the current block
+    let cur_start = x * b;
+    let exact_count = refined.len() * b + (len - cur_start);
+    let mut scores: Vec<f32> = Vec::with_capacity(exact_count);
+    let mut positions: Vec<usize> = Vec::with_capacity(exact_count);
+    for &y in &refined {
+        for j in y * b..(y + 1) * b {
+            let s = dot(q_row, &k_rows[j * d..(j + 1) * d]) * inv_sqrt_d;
+            if s > mx {
+                mx = s;
+            }
+            scores.push(s);
+            positions.push(j);
+        }
+    }
+    for j in cur_start..len {
+        let s = dot(q_row, &k_rows[j * d..(j + 1) * d]) * inv_sqrt_d;
+        if s > mx {
+            mx = s;
+        }
+        scores.push(s);
+        positions.push(j);
+    }
+
+    // pass 2: stabilized exp + value aggregation
+    let mut out = vec![0.0f32; d];
+    let mut den = 0.0f32;
+    for (&s, &j) in scores.iter().zip(&positions) {
+        let a = (s - mx).exp();
+        den += a;
+        let vrow = &v_rows[j * d..(j + 1) * d];
+        for (o, &vv) in out.iter_mut().zip(vrow) {
+            *o += a * vv;
+        }
+    }
+
+    // low-resolution contribution of the non-refined past blocks
+    if variant == Variant::Full {
+        for (y, &s) in s_low.iter().enumerate() {
+            if is_refined[y] {
+                continue;
+            }
+            let mu = (s - mx).exp() * b as f32;
+            den += mu;
+            let vrow = &vt[y * d..(y + 1) * d];
+            for (o, &vv) in out.iter_mut().zip(vrow) {
+                *o += mu * vv;
+            }
+        }
+    }
+
+    let inv = if den > 0.0 { 1.0 / den } else { 0.0 };
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+/// Attention output of the *last* position of a causal prefix, computed
+/// from scratch (no incremental state): pools the complete blocks of the
+/// prefix and runs the same row core as [`DecodeState::attend_last`].
+/// Bitwise identical to an incrementally maintained [`DecodeState`] — the
+/// regression surface for KV-cache bookkeeping bugs.
+pub fn causal_row_attention(
+    q_row: &[f32],
+    k_prefix: &[f32],
+    v_prefix: &[f32],
+    block: usize,
+    budget: usize,
+    variant: Variant,
+) -> Vec<f32> {
+    let d = q_row.len();
+    assert!(!k_prefix.is_empty() && k_prefix.len() % d == 0, "k prefix shape");
+    assert_eq!(k_prefix.len(), v_prefix.len(), "k/v prefix mismatch");
+    let len = k_prefix.len() / d;
+    let x = (len - 1) / block;
+    let kt = ops::pool_rows_slice(&k_prefix[..x * block * d], x * block, d, block);
+    let vt = ops::pool_rows_slice(&v_prefix[..x * block * d], x * block, d, block);
+    attend_row_core(q_row, k_prefix, v_prefix, len, &kt.data, &vt.data, block, budget, variant)
+}
+
+/// Dense oracle for one decode row: materialize the full score vector over
+/// the prefix under the same per-row selection rule (exact for the current
+/// block and refined past blocks, pooled `mu` scores elsewhere, `-inf`
+/// for dropped blocks in the sparse variant), softmax-normalize, and
+/// aggregate values position by position.  Tests and
+/// `benches/bench_decode.rs` gate the fast path against this (<= 1e-5 max
+/// abs error).
+pub fn causal_row_oracle(
+    q_row: &[f32],
+    k_prefix: &[f32],
+    v_prefix: &[f32],
+    block: usize,
+    budget: usize,
+    variant: Variant,
+) -> Vec<f32> {
+    let d = q_row.len();
+    assert!(!k_prefix.is_empty() && k_prefix.len() % d == 0, "k prefix shape");
+    assert_eq!(k_prefix.len(), v_prefix.len(), "k/v prefix mismatch");
+    let len = k_prefix.len() / d;
+    let b = block;
+    let x = (len - 1) / b;
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    let kt = ops::pool_rows_slice(&k_prefix[..x * b * d], x * b, d, b);
+
+    let s_low: Vec<f32> = (0..x).map(|y| dot(q_row, kt.row(y)) * inv_sqrt_d).collect();
+    let refined = topk::top_k_indices(&s_low, budget.min(x));
+    let mut is_refined = vec![false; x];
+    for &y in &refined {
+        is_refined[y] = true;
+    }
+
+    let mut s = vec![f32::NEG_INFINITY; len];
+    for y in 0..x {
+        for j in y * b..(y + 1) * b {
+            s[j] = if is_refined[y] {
+                dot(q_row, &k_prefix[j * d..(j + 1) * d]) * inv_sqrt_d
+            } else if variant == Variant::Full {
+                s_low[y]
+            } else {
+                f32::NEG_INFINITY
+            };
+        }
+    }
+    for (j, sj) in s.iter_mut().enumerate().skip(x * b) {
+        *sj = dot(q_row, &k_prefix[j * d..(j + 1) * d]) * inv_sqrt_d;
+    }
+
+    let mx = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut out = vec![0.0f32; d];
+    let mut den = 0.0f32;
+    for (j, &sj) in s.iter().enumerate() {
+        let a = (sj - mx).exp();
+        if a == 0.0 {
+            continue;
+        }
+        den += a;
+        for (o, &vv) in out.iter_mut().zip(&v_prefix[j * d..(j + 1) * d]) {
+            *o += a * vv;
+        }
+    }
+    let inv = 1.0 / den.max(1e-30);
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{assert_close, for_all_seeds};
+    use crate::tensor::Rng;
+
+    fn rows(n: usize, d: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n * d).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn incremental_decode_is_bitwise_identical_to_prefix_recompute() {
+        let (d, b) = (16usize, 8usize);
+        for variant in [Variant::Full, Variant::Sparse] {
+            let mut rng = Rng::new(11);
+            let n = 70; // crosses several block boundaries + a partial tail
+            let q = rows(n, d, &mut rng);
+            let k = rows(n, d, &mut rng);
+            let v = rows(n, d, &mut rng);
+            let mut st = DecodeState::new(b, 2, variant, d);
+            for t in 0..n {
+                st.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+                let inc = st.attend_last(&q[t * d..(t + 1) * d]);
+                let scratch = causal_row_attention(
+                    &q[t * d..(t + 1) * d],
+                    &k[..(t + 1) * d],
+                    &v[..(t + 1) * d],
+                    b,
+                    2,
+                    variant,
+                );
+                assert_eq!(inc, scratch, "{variant:?} step {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_matches_dense_oracle() {
+        for_all_seeds(8, |seed, rng| {
+            let (d, b) = (8usize, 8usize);
+            let n = 1 + rng.below(64);
+            let budget = rng.below(4);
+            let variant = if seed % 2 == 0 {
+                Variant::Full
+            } else {
+                Variant::Sparse
+            };
+            let q = rows(n, d, rng);
+            let k = rows(n, d, rng);
+            let v = rows(n, d, rng);
+            let mut st = DecodeState::new(b, budget, variant, d);
+            for t in 0..n {
+                st.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+                let fast = st.attend_last(&q[t * d..(t + 1) * d]);
+                let oracle = causal_row_oracle(
+                    &q[t * d..(t + 1) * d],
+                    &k[..(t + 1) * d],
+                    &v[..(t + 1) * d],
+                    b,
+                    budget,
+                    variant,
+                );
+                assert_close(&fast, &oracle, 1e-5, 1e-4)
+                    .map_err(|e| format!("{variant:?} budget={budget} step {t}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn first_token_attends_only_itself() {
+        let mut rng = Rng::new(3);
+        let d = 8;
+        let q = rows(1, d, &mut rng);
+        let k = rows(1, d, &mut rng);
+        let v = rows(1, d, &mut rng);
+        let mut st = DecodeState::new(4, 2, Variant::Full, d);
+        st.append(&k, &v);
+        let out = st.attend_last(&q);
+        assert_close(&out, &v, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn decode_rows_are_convex_with_ones_values() {
+        let (d, b) = (8usize, 8usize);
+        for variant in [Variant::Full, Variant::Sparse] {
+            let mut rng = Rng::new(5);
+            let n = 40;
+            let q = rows(n, d, &mut rng);
+            let k = rows(n, d, &mut rng);
+            let v = vec![1.0f32; n * d];
+            let mut st = DecodeState::new(b, 1, variant, d);
+            for t in 0..n {
+                let out = st.step(
+                    &q[t * d..(t + 1) * d],
+                    &k[t * d..(t + 1) * d],
+                    &v[t * d..(t + 1) * d],
+                );
+                for &x in &out {
+                    assert!((x - 1.0).abs() < 1e-4, "{variant:?} step {t}: {x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_is_append_plus_attend() {
+        let d = 4;
+        let mut rng = Rng::new(7);
+        let q = rows(3, d, &mut rng);
+        let k = rows(3, d, &mut rng);
+        let v = rows(3, d, &mut rng);
+        let mut a = DecodeState::new(2, 1, Variant::Full, d);
+        let mut b2 = DecodeState::new(2, 1, Variant::Full, d);
+        for t in 0..3 {
+            let stepped = a.step(
+                &q[t * d..(t + 1) * d],
+                &k[t * d..(t + 1) * d],
+                &v[t * d..(t + 1) * d],
+            );
+            b2.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            let split = b2.attend_last(&q[t * d..(t + 1) * d]);
+            assert_eq!(stepped, split, "step {t}");
+        }
+        assert_eq!(a.len(), 3);
+        assert!(!a.is_empty());
+        assert_eq!(a.block(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty cache")]
+    fn attend_on_empty_cache_panics() {
+        let st = DecodeState::new(4, 1, Variant::Full, 4);
+        let _ = st.attend_last(&[0.0; 4]);
+    }
+}

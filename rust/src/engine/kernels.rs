@@ -8,11 +8,13 @@
 
 use std::any::Any;
 
+use anyhow::{bail, Result};
+
 use crate::baselines::longformer::Longformer;
 use crate::baselines::nystromformer::Nystromformer;
 use crate::baselines::AttentionApprox;
 use crate::engine::tensor4::MatView;
-use crate::mra::{mra2_apply_blocks, mra2_plan, Mra2Plan, Variant};
+use crate::mra::{mra2_apply_blocks, mra2_plan, Causality, Mra2Plan, Variant};
 use crate::tensor::mat::dot;
 
 /// Opaque per-head state produced by [`AttnKernel::plan_head`] and shared
@@ -63,11 +65,19 @@ pub struct Mra2Kernel {
     /// [`mra2_plan`]).
     pub m: usize,
     pub variant: Variant,
+    /// Bidirectional (MLM) or causal (autoregressive) plan path.
+    pub causality: Causality,
 }
 
 impl Mra2Kernel {
     pub fn new(block: usize, m: usize, variant: Variant) -> Self {
-        Mra2Kernel { block, m, variant }
+        Mra2Kernel { block, m, variant, causality: Causality::Bidirectional }
+    }
+
+    /// Causal MRA-2: lower-triangular selection + masked diagonal tiles
+    /// (DESIGN.md §7).
+    pub fn new_causal(block: usize, m: usize, variant: Variant) -> Self {
+        Mra2Kernel { block, m, variant, causality: Causality::Causal }
     }
 
     fn clamped_block(&self, n: usize) -> usize {
@@ -77,12 +87,14 @@ impl Mra2Kernel {
 
 impl AttnKernel for Mra2Kernel {
     fn name(&self) -> String {
-        format!(
-            "mra-2{}(b={},m={})",
-            if self.variant == Variant::Sparse { "-s" } else { "" },
-            self.block,
-            self.m
-        )
+        let mut tag = String::from("mra-2");
+        if self.variant == Variant::Sparse {
+            tag.push_str("-s");
+        }
+        if self.causality == Causality::Causal {
+            tag.push_str("-causal");
+        }
+        format!("{tag}(b={},m={})", self.block, self.m)
     }
 
     fn shard_rows(&self, n: usize) -> Option<usize> {
@@ -91,7 +103,17 @@ impl AttnKernel for Mra2Kernel {
 
     fn plan_head(&self, q: MatView, k: MatView, v: MatView) -> HeadPlan {
         let block = self.clamped_block(q.rows);
-        Box::new(mra2_plan(q.data, k.data, v.data, q.rows, q.cols, block, self.m, self.variant))
+        Box::new(mra2_plan(
+            q.data,
+            k.data,
+            v.data,
+            q.rows,
+            q.cols,
+            block,
+            self.m,
+            self.variant,
+            self.causality,
+        ))
     }
 
     fn compute_range(
@@ -165,6 +187,60 @@ impl AttnKernel for ExactKernel {
     }
 }
 
+/// Exact causal softmax attention (query row `i` attends keys `j <= i`),
+/// sharded by query rows — the decode-path baseline and the reference for
+/// the causal MRA-2 kernels.
+pub struct CausalExactKernel;
+
+impl AttnKernel for CausalExactKernel {
+    fn name(&self) -> String {
+        "transformer(exact-causal)".to_string()
+    }
+
+    fn shard_rows(&self, n: usize) -> Option<usize> {
+        Some(64.min(n).max(1))
+    }
+
+    fn compute_range(
+        &self,
+        _plan: &HeadPlan,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
+        let d = v.cols;
+        let inv_sqrt_d = 1.0 / (q.cols as f32).sqrt();
+        let mut scores = vec![0.0f32; k.rows];
+        for i in r0..r1 {
+            let qrow = q.row(i);
+            let mut mx = f32::NEG_INFINITY;
+            for (j, s) in scores.iter_mut().enumerate().take(i + 1) {
+                *s = dot(qrow, k.row(j)) * inv_sqrt_d;
+                if *s > mx {
+                    mx = *s;
+                }
+            }
+            let orow = &mut out[(i - r0) * d..(i - r0 + 1) * d];
+            orow.fill(0.0);
+            let mut den = 0.0f32;
+            for (j, &s) in scores.iter().enumerate().take(i + 1) {
+                let a = (s - mx).exp();
+                den += a;
+                for (o, &vv) in orow.iter_mut().zip(v.row(j)) {
+                    *o += a * vv;
+                }
+            }
+            let inv = 1.0 / den.max(1e-30);
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+}
+
 /// Lift any [`AttentionApprox`] baseline into the engine (whole-head
 /// granularity: baselines parallelize across `(batch, head)` pairs only).
 pub struct ApproxShim<A: AttentionApprox + Send + Sync> {
@@ -198,19 +274,37 @@ impl<A: AttentionApprox + Send + Sync> AttnKernel for ApproxShim<A> {
     }
 }
 
-/// Construct a kernel by short name (`exact`, `mra2`, `mra2s`,
-/// `longformer`, `nystromformer`) with MRA-style `block` / `m` knobs.
-pub fn kernel_by_name(name: &str, block: usize, m: usize) -> Option<Box<dyn AttnKernel>> {
-    match name {
-        "exact" => Some(Box::new(ExactKernel)),
-        "mra2" => Some(Box::new(Mra2Kernel::new(block, m, Variant::Full))),
-        "mra2s" => Some(Box::new(Mra2Kernel::new(block, m, Variant::Sparse))),
-        "longformer" => Some(Box::new(ApproxShim::new(Longformer::new(block.max(4), 1)))),
-        "nystromformer" => {
-            Some(Box::new(ApproxShim::new(Nystromformer::new((2 * block).max(8), 6))))
-        }
-        _ => None,
-    }
+/// Every short name [`kernel_by_name`] accepts (bench/CLI discovery).
+pub const KERNEL_NAMES: [&str; 8] = [
+    "exact",
+    "exact-causal",
+    "mra2",
+    "mra2s",
+    "mra2-causal",
+    "mra2s-causal",
+    "longformer",
+    "nystromformer",
+];
+
+/// Construct a kernel by short name (see [`KERNEL_NAMES`]) with MRA-style
+/// `block` / `m` knobs.  Unknown names return a descriptive error listing
+/// the known suite — config typos surface at construction time instead of
+/// an uninformative `unwrap` panic downstream.
+pub fn kernel_by_name(name: &str, block: usize, m: usize) -> Result<Box<dyn AttnKernel>> {
+    Ok(match name {
+        "exact" => Box::new(ExactKernel),
+        "exact-causal" => Box::new(CausalExactKernel),
+        "mra2" => Box::new(Mra2Kernel::new(block, m, Variant::Full)),
+        "mra2s" => Box::new(Mra2Kernel::new(block, m, Variant::Sparse)),
+        "mra2-causal" => Box::new(Mra2Kernel::new_causal(block, m, Variant::Full)),
+        "mra2s-causal" => Box::new(Mra2Kernel::new_causal(block, m, Variant::Sparse)),
+        "longformer" => Box::new(ApproxShim::new(Longformer::new(block.max(4), 1))),
+        "nystromformer" => Box::new(ApproxShim::new(Nystromformer::new((2 * block).max(8), 6))),
+        other => bail!(
+            "unknown attention kernel {other:?}; known kernels: {}",
+            KERNEL_NAMES.join(", ")
+        ),
+    })
 }
 
 #[cfg(test)]
@@ -219,11 +313,27 @@ mod tests {
 
     #[test]
     fn kernel_by_name_covers_the_suite() {
-        for name in ["exact", "mra2", "mra2s", "longformer", "nystromformer"] {
-            let k = kernel_by_name(name, 16, 8).unwrap_or_else(|| panic!("missing {name}"));
+        for name in KERNEL_NAMES {
+            let k = kernel_by_name(name, 16, 8).unwrap_or_else(|e| panic!("{e}"));
             assert!(!k.name().is_empty());
         }
-        assert!(kernel_by_name("no-such-kernel", 16, 8).is_none());
+    }
+
+    #[test]
+    fn kernel_by_name_rejects_unknown_names_with_a_useful_error() {
+        // regression: kernel_by_name used to return Option, so unknown
+        // names surfaced as an uninformative unwrap panic at the caller
+        let err = kernel_by_name("no-such-kernel", 16, 8).err().expect("must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no-such-kernel"), "{msg}");
+        assert!(msg.contains("mra2-causal"), "should list the known suite: {msg}");
+    }
+
+    #[test]
+    fn causal_kernel_names_are_tagged() {
+        assert!(Mra2Kernel::new_causal(16, 8, Variant::Full).name().contains("-causal"));
+        assert!(CausalExactKernel.name().contains("exact-causal"));
+        assert!(!Mra2Kernel::new(16, 8, Variant::Full).name().contains("causal"));
     }
 
     #[test]

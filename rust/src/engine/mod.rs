@@ -24,11 +24,16 @@
 //! See DESIGN.md §Engine for the schedule and EXPERIMENTS.md §Engine for
 //! measured thread scaling.
 
+pub mod decode;
 pub mod kernels;
 pub mod pool;
 pub mod tensor4;
 
-pub use kernels::{kernel_by_name, ApproxShim, AttnKernel, ExactKernel, HeadPlan, Mra2Kernel};
+pub use decode::{causal_row_attention, causal_row_oracle, DecodeState};
+pub use kernels::{
+    kernel_by_name, ApproxShim, AttnKernel, CausalExactKernel, ExactKernel, HeadPlan, Mra2Kernel,
+    KERNEL_NAMES,
+};
 pub use tensor4::{rel_fro_error_flat, BatchedTensor, MatView};
 
 /// Batched multi-head attention executor over one kernel.
@@ -127,7 +132,7 @@ mod tests {
     use crate::baselines::longformer::Longformer;
     use crate::baselines::nystromformer::Nystromformer;
     use crate::baselines::AttentionApprox;
-    use crate::mra::{mra2_attention, Variant};
+    use crate::mra::{mra2_attention, mra2_attention_causal, Variant};
     use crate::tensor::{ops, Mat, Rng};
 
     fn qkv(batch: usize, heads: usize, n: usize, d: usize, seed: u64) -> [BatchedTensor; 3] {
@@ -169,6 +174,56 @@ mod tests {
                 // the acceptance-criterion form of the same statement
                 assert!(rel_fro_error_flat(&out.data, &reference.data) <= 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn causal_mra2_parallel_is_bitwise_sequential() {
+        let [q, k, v] = qkv(2, 2, 128, 16, 7);
+        for variant in [Variant::Full, Variant::Sparse] {
+            let mut reference = BatchedTensor::zeros(2, 2, 128, 16);
+            for b in 0..2 {
+                for h in 0..2 {
+                    let z = mra2_attention_causal(
+                        &q.head_mat(b, h),
+                        &k.head_mat(b, h),
+                        &v.head_mat(b, h),
+                        16,
+                        8,
+                        variant,
+                    );
+                    reference.head_mut(b, h).copy_from_slice(&z.data);
+                }
+            }
+            for threads in [1, 4] {
+                let engine =
+                    Engine::new(Box::new(Mra2Kernel::new_causal(16, 8, variant)), threads);
+                let out = engine.forward(&q, &k, &v);
+                assert_eq!(
+                    out.data, reference.data,
+                    "causal {variant:?} diverged at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn causal_exact_kernel_masks_the_future() {
+        let [q, k, _] = qkv(1, 1, 96, 8, 8);
+        // ones-values: every causal row is a convex combination -> exactly 1
+        let mut v = BatchedTensor::zeros(1, 1, 96, 8);
+        v.data.fill(1.0);
+        let engine = Engine::new(Box::new(CausalExactKernel), 3);
+        let out = engine.forward(&q, &k, &v);
+        for &x in out.data.iter() {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+        // row 0 attends only itself: output row 0 == v row 0 for random v
+        let mut rng = Rng::new(9);
+        let v = BatchedTensor::randn(1, 1, 96, 8, 1.0, &mut rng);
+        let out = engine.forward(&q, &k, &v);
+        for c in 0..8 {
+            assert!((out.view(0, 0).get(0, c) - v.view(0, 0).get(0, c)).abs() < 1e-5);
         }
     }
 

@@ -8,6 +8,12 @@
 //! query block owns its output rows and denominators outright, so the
 //! engine ([`crate::engine`]) can shard one head across workers and still
 //! produce bitwise-identical results to the sequential path.
+//!
+//! Both the plan and the oracles support a [`Causality`] mode: in causal
+//! mode Alg. 1 selection is restricted to the lower-triangular block set
+//! (diagonal coverage intact), refined tiles straddling the diagonal get
+//! per-row triangular masking, and the low-res correction covers only the
+//! strictly-lower blocks — see DESIGN.md §7.
 
 use crate::mra::matvec;
 use crate::mra::pyramid::Pyramid;
@@ -21,6 +27,18 @@ pub enum Variant {
     Full,
     /// MRA-2-s: only the refined (finest-scale) blocks — block-sparse.
     Sparse,
+}
+
+/// Attention direction: bidirectional (MLM) or causal (autoregressive).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Causality {
+    /// Every query attends to every key (the paper's MLM setting).
+    #[default]
+    Bidirectional,
+    /// Query `i` attends only to keys `j <= i`: Alg. 1 runs over the
+    /// lower-triangular block set and the refined diagonal tiles are
+    /// masked per row (DESIGN.md §7).
+    Causal,
 }
 
 /// Configuration of the multiresolution approximation.
@@ -111,6 +129,7 @@ pub struct Mra2Plan {
     pub nb: usize,
     pub d: usize,
     pub variant: Variant,
+    pub causality: Causality,
     pub inv_sqrt_d: f32,
     /// Refined key-block columns per query block, ascending.  Never empty:
     /// the diagonal-coverage rule guarantees at least the diagonal block.
@@ -139,12 +158,65 @@ impl Mra2Plan {
             buffer_elems: max_tiles * b * b + 3 * nb * d + nb * nb,
         };
         if self.variant == Variant::Full {
-            for yset in &self.per_row {
-                s.flops += (nb - yset.len()) * (d + 2);
+            for (x, yset) in self.per_row.iter().enumerate() {
+                // causal rows only see the lower-triangular blocks
+                let visible = match self.causality {
+                    Causality::Bidirectional => nb,
+                    Causality::Causal => x + 1,
+                };
+                s.flops += (visible - yset.len()) * (d + 2);
             }
         }
         s
     }
+}
+
+/// Alg. 1 block selection shared by the fast path and the dense oracles:
+/// every diagonal block is always refined (coverage rule), and the
+/// remaining budget goes to the best off-diagonal blocks by low-res score.
+///
+/// In causal mode the budget is split evenly across query blocks —
+/// diagonal plus up to `ceil((m - nb) / nb)` strictly-lower blocks each —
+/// so the selection for query block `x` depends only on pooled statistics
+/// of blocks `<= x`.  That keeps the causal path strictly block-causal
+/// (rows before any block-aligned cut are bitwise invariant to the
+/// future; property-tested in `proptest`), and it is exactly the per-row
+/// rule the incremental decode path (`engine::decode`) applies.
+fn mra2_select(s_low: &Mat, nb: usize, m: usize, causality: Causality) -> Vec<bool> {
+    let mut selected = vec![false; nb * nb];
+    for i in 0..nb {
+        selected[i * nb + i] = true;
+    }
+    match causality {
+        Causality::Bidirectional => {
+            let extra = m.saturating_sub(nb);
+            if extra > 0 {
+                let mut prio = s_low.data.clone();
+                for i in 0..nb {
+                    prio[i * nb + i] = f32::NEG_INFINITY;
+                }
+                for &c in &topk::top_k_indices(&prio, extra) {
+                    selected[c] = true;
+                }
+            }
+        }
+        Causality::Causal => {
+            // per-block extra budget: ceil((m - nb) / nb), which for the
+            // clamped m >= 1 equals (m - 1) / nb
+            let extra = (m - 1) / nb;
+            for x in 1..nb {
+                let e = extra.min(x);
+                if e == 0 {
+                    continue;
+                }
+                let prio: Vec<f32> = (0..x).map(|y| s_low.get(x, y)).collect();
+                for &y in &topk::top_k_indices(&prio, e) {
+                    selected[x * nb + y] = true;
+                }
+            }
+        }
+    }
+    selected
 }
 
 /// Build the per-head plan: pyramid, low-res scores, Alg. 1 selection.
@@ -155,6 +227,10 @@ impl Mra2Plan {
 /// `den == 0` and silently zeroing whole output rows — and the remaining
 /// `m - nb` budget goes to the best off-diagonal blocks by low-res score.
 /// For `m >= nb` this selects exactly the same set as the original rule.
+///
+/// In causal mode ([`Causality::Causal`]) the selection runs over the
+/// lower-triangular block set with a per-query-block budget (see
+/// [`mra2_select`]) and the stabilization floor only scans visible blocks.
 #[allow(clippy::too_many_arguments)]
 pub fn mra2_plan(
     q: &[f32],
@@ -165,6 +241,7 @@ pub fn mra2_plan(
     block: usize,
     m: usize,
     variant: Variant,
+    causality: Causality,
 ) -> Mra2Plan {
     assert!(block > 0 && n % block == 0, "block {block} must divide n={n}");
     assert_eq!(q.len(), n * d, "q buffer/shape mismatch");
@@ -182,20 +259,7 @@ pub fn mra2_plan(
     let s_low = qt.matmul_transb(&kt).scale(inv_sqrt_d); // (nb, nb)
 
     // --- Alg. 1: diagonal coverage + off-diagonal top-k --------------------
-    let mut selected = vec![false; nb * nb];
-    for i in 0..nb {
-        selected[i * nb + i] = true;
-    }
-    let extra = m.saturating_sub(nb);
-    if extra > 0 {
-        let mut prio = s_low.data.clone();
-        for i in 0..nb {
-            prio[i * nb + i] = f32::NEG_INFINITY;
-        }
-        for &c in &topk::top_k_indices(&prio, extra) {
-            selected[c] = true;
-        }
-    }
+    let selected = mra2_select(&s_low, nb, m, causality);
     let mut per_row: Vec<Vec<usize>> = vec![Vec::new(); nb];
     let mut tiles = 0usize;
     for x in 0..nb {
@@ -209,14 +273,31 @@ pub fn mra2_plan(
     let mut mb = vec![f32::NEG_INFINITY; nb];
     if variant == Variant::Full {
         for x in 0..nb {
-            for y in 0..nb {
+            let visible = match causality {
+                Causality::Bidirectional => nb,
+                Causality::Causal => x + 1,
+            };
+            for y in 0..visible {
                 if !selected[x * nb + y] {
                     mb[x] = mb[x].max(s_low.get(x, y));
                 }
             }
         }
     }
-    Mra2Plan { block: b, nb, d, variant, inv_sqrt_d, per_row, selected, tiles, s_low, vt, mb }
+    Mra2Plan {
+        block: b,
+        nb,
+        d,
+        variant,
+        causality,
+        inv_sqrt_d,
+        per_row,
+        selected,
+        tiles,
+        s_low,
+        vt,
+        mb,
+    }
 }
 
 /// Apply a plan to the query-block range `[x0, x1)`, writing the
@@ -242,6 +323,7 @@ pub fn mra2_apply_blocks(
     let (b, d, nb) = (plan.block, plan.d, plan.nb);
     assert!(x0 <= x1 && x1 <= nb, "query-block range {x0}..{x1} out of 0..{nb}");
     assert_eq!(out.len(), (x1 - x0) * b * d, "out shard size mismatch");
+    let causal = plan.causality == Causality::Causal;
     let max_tiles = plan.per_row[x0..x1].iter().map(Vec::len).max().unwrap_or(0);
     let mut tilebuf = vec![0.0f32; max_tiles * b * b];
     let mut den = vec![0.0f32; b];
@@ -253,10 +335,18 @@ pub fn mra2_apply_blocks(
         // pass 1: exact P tiles for this query block + running max
         let mut block_max = plan.mb[x];
         for (t, &y) in yset.iter().enumerate() {
+            debug_assert!(!causal || y <= x, "causal selection above the diagonal");
             let tile = &mut tilebuf[t * b * b..(t + 1) * b * b];
             for r in 0..b {
                 let qrow = &q[(x * b + r) * d..(x * b + r + 1) * d];
                 for c in 0..b {
+                    // refined tile straddling the diagonal: per-row
+                    // triangular masking (key j = y*b + c is in the future
+                    // of query i = x*b + r exactly when c > r)
+                    if causal && y == x && c > r {
+                        tile[r * b + c] = f32::NEG_INFINITY;
+                        continue;
+                    }
                     let krow = &k[(y * b + c) * d..(y * b + c + 1) * d];
                     let s = crate::tensor::mat::dot(qrow, krow) * plan.inv_sqrt_d;
                     tile[r * b + c] = s;
@@ -289,6 +379,12 @@ pub fn mra2_apply_blocks(
             let mut dacc = 0.0f32;
             for y in 0..nb {
                 if plan.selected[x * nb + y] {
+                    continue;
+                }
+                // causal: blocks above the diagonal are invisible, and the
+                // diagonal block itself is always refined (coverage rule),
+                // so the causal low-res set is strictly below the diagonal
+                if causal && y >= x {
                     continue;
                 }
                 let mu = (plan.s_low.get(x, y) - block_max).exp();
@@ -328,7 +424,8 @@ pub fn mra2_attention_stats(
     variant: Variant,
 ) -> (Mat, MraStats) {
     let (n, d) = (q.rows, q.cols);
-    let plan = mra2_plan(&q.data, &k.data, &v.data, n, d, block, m, variant);
+    let plan =
+        mra2_plan(&q.data, &k.data, &v.data, n, d, block, m, variant, Causality::Bidirectional);
     let mut out = Mat::zeros(n, d);
     mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut out.data);
     let stats = plan.stats(n);
@@ -338,6 +435,24 @@ pub fn mra2_attention_stats(
 /// Optimized MRA-2 / MRA-2-s attention (row-normalized output).
 pub fn mra2_attention(q: &Mat, k: &Mat, v: &Mat, block: usize, m: usize, variant: Variant) -> Mat {
     mra2_attention_stats(q, k, v, block, m, variant).0
+}
+
+/// Causal MRA-2 / MRA-2-s fast path: lower-triangular Alg. 1 selection
+/// with per-row triangular masking of the refined diagonal tiles
+/// (row-normalized output; see DESIGN.md §7).
+pub fn mra2_attention_causal(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    block: usize,
+    m: usize,
+    variant: Variant,
+) -> Mat {
+    let (n, d) = (q.rows, q.cols);
+    let plan = mra2_plan(&q.data, &k.data, &v.data, n, d, block, m, variant, Causality::Causal);
+    let mut out = Mat::zeros(n, d);
+    mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut out.data);
+    out
 }
 
 /// Dense oracle for the two-scale approximation: materializes
@@ -361,20 +476,7 @@ pub fn dense_mra2(
     let p = ops::scores(q, k);
     // same coverage rule as the fast path: all diagonal blocks + the best
     // off-diagonal blocks with the remaining budget
-    let mut selected = vec![false; nb * nb];
-    for i in 0..nb {
-        selected[i * nb + i] = true;
-    }
-    let extra = m.saturating_sub(nb);
-    if extra > 0 {
-        let mut prio = s_low.data.clone();
-        for i in 0..nb {
-            prio[i * nb + i] = f32::NEG_INFINITY;
-        }
-        for &c in &topk::top_k_indices(&prio, extra) {
-            selected[c] = true;
-        }
-    }
+    let selected = mra2_select(&s_low, nb, m, Causality::Bidirectional);
     let mut a_hat = Mat::zeros(n, n);
     for x in 0..nb {
         for y in 0..nb {
@@ -397,6 +499,60 @@ pub fn dense_mra2(
     let den = ops::row_sums(&a_hat);
     let z = ops::div_rows(&a_hat.matmul(v), &den);
     let _ = d;
+    (a_hat, z)
+}
+
+/// Dense causal oracle: the same per-query-block causal selection rule as
+/// the fast path, materializing `(A_hat, Z_hat)` with per-row triangular
+/// masking of every block touching the diagonal — the reference the causal
+/// fast path is gated against (<= 1e-5 max abs at n in {256, 1024}).
+pub fn dense_mra2_causal(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    block: usize,
+    m: usize,
+    variant: Variant,
+) -> (Mat, Mat) {
+    let n = q.rows;
+    let b = block;
+    let nb = n / b;
+    let m = m.min(nb * nb).max(1);
+    let inv_sqrt_d = 1.0 / (q.cols as f32).sqrt();
+    let qt = ops::pool_rows(q, b);
+    let kt = ops::pool_rows(k, b);
+    let s_low = qt.matmul_transb(&kt).scale(inv_sqrt_d);
+    let p = ops::scores(q, k);
+    let selected = mra2_select(&s_low, nb, m, Causality::Causal);
+    let mut a_hat = Mat::zeros(n, n);
+    for x in 0..nb {
+        // blocks above the diagonal contribute nothing in causal mode
+        for y in 0..=x {
+            if selected[x * nb + y] {
+                for i in x * b..(x + 1) * b {
+                    for j in y * b..(y + 1) * b {
+                        if j <= i {
+                            a_hat.set(i, j, p.get(i, j).exp());
+                        }
+                    }
+                }
+            } else if variant == Variant::Full {
+                // strictly-lower pooled block (fully visible); the `j <= i`
+                // guard is the per-row triangular mask for any straddling
+                // block, which the coverage rule keeps refined anyway
+                let mu = s_low.get(x, y).exp();
+                for i in x * b..(x + 1) * b {
+                    for j in y * b..(y + 1) * b {
+                        if j <= i {
+                            a_hat.set(i, j, mu);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let den = ops::row_sums(&a_hat);
+    let z = ops::div_rows(&a_hat.matmul(v), &den);
     (a_hat, z)
 }
 
@@ -558,12 +714,162 @@ mod tests {
         let (q, k, v) = setup(128, 16, 10);
         for m in [1, 2, 5, 8, 20, 64] {
             for variant in [Variant::Full, Variant::Sparse] {
-                let plan = mra2_plan(&q.data, &k.data, &v.data, 128, 16, 16, m, variant);
+                let plan = mra2_plan(
+                    &q.data,
+                    &k.data,
+                    &v.data,
+                    128,
+                    16,
+                    16,
+                    m,
+                    variant,
+                    Causality::Bidirectional,
+                );
                 for (x, ys) in plan.per_row.iter().enumerate() {
                     assert!(!ys.is_empty(), "m={m}: query block {x} uncovered");
                     assert!(ys.contains(&x), "m={m}: diagonal missing at {x}");
                 }
             }
+        }
+    }
+
+    /// Exact causal attention reference (row `i` attends keys `j <= i`).
+    fn exact_causal(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        let (n, d) = (q.rows, v.cols);
+        let p = ops::scores(q, k);
+        let mut z = Mat::zeros(n, d);
+        for i in 0..n {
+            let mx = (0..=i).map(|j| p.get(i, j)).fold(f32::NEG_INFINITY, f32::max);
+            let mut den = 0.0f32;
+            for j in 0..=i {
+                let a = (p.get(i, j) - mx).exp();
+                den += a;
+                for c in 0..d {
+                    z.set(i, c, z.get(i, c) + a * v.get(j, c));
+                }
+            }
+            for c in 0..d {
+                z.set(i, c, z.get(i, c) / den.max(1e-30));
+            }
+        }
+        z
+    }
+
+    #[test]
+    fn causal_fast_path_matches_causal_dense_oracle() {
+        let (q, k, v) = setup(128, 16, 12);
+        for m in [2, 8, 16, 40] {
+            for variant in [Variant::Full, Variant::Sparse] {
+                let (_, z_dense) = dense_mra2_causal(&q, &k, &v, 16, m, variant);
+                let z = mra2_attention_causal(&q, &k, &v, 16, m, variant);
+                assert!(ops::rel_fro_error(&z, &z_dense) < 1e-4, "m={m} {variant:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_acceptance_sizes_match_oracle_to_1e5_max_abs() {
+        // acceptance criterion: causal fast path within 1e-5 max abs error
+        // of the causal dense oracle at n in {256, 1024}
+        for &(n, block, m) in &[(256usize, 32usize, 24usize), (1024, 32, 96)] {
+            let (q, k, v) = setup(n, 16, 99);
+            let (_, z_dense) = dense_mra2_causal(&q, &k, &v, block, m, Variant::Full);
+            let z = mra2_attention_causal(&q, &k, &v, block, m, Variant::Full);
+            let max_abs = z
+                .data
+                .iter()
+                .zip(&z_dense.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_abs <= 1e-5, "n={n}: max abs err {max_abs}");
+        }
+    }
+
+    #[test]
+    fn causal_full_budget_matches_exact_causal_attention() {
+        let (q, k, v) = setup(64, 8, 13);
+        let exact = exact_causal(&q, &k, &v);
+        // m = nb^2 refines every visible block in both variants
+        for variant in [Variant::Full, Variant::Sparse] {
+            let z = mra2_attention_causal(&q, &k, &v, 16, 16, variant);
+            assert!(ops::rel_fro_error(&z, &exact) < 1e-4, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn causal_rows_stay_convex_with_ones_values() {
+        // every causal row is a convex combination of past values — with
+        // ones-values each output entry must be exactly 1 even at tiny
+        // budgets (the causal analog of the zero-row regression)
+        let (q, k, _) = setup(128, 16, 14);
+        let v = Mat::full(128, 16, 1.0);
+        for m in [1, 2, 8, 32] {
+            for variant in [Variant::Full, Variant::Sparse] {
+                let z = mra2_attention_causal(&q, &k, &v, 16, m, variant);
+                for (i, &x) in z.data.iter().enumerate() {
+                    assert!(
+                        (x - 1.0).abs() < 1e-4,
+                        "m={m} {variant:?}: row {} drifted ({x})",
+                        i / 16
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn causal_plan_never_selects_above_the_diagonal() {
+        let (q, k, v) = setup(128, 16, 15);
+        for m in [1, 5, 16, 64] {
+            let plan = mra2_plan(
+                &q.data,
+                &k.data,
+                &v.data,
+                128,
+                16,
+                16,
+                m,
+                Variant::Full,
+                Causality::Causal,
+            );
+            for (x, ys) in plan.per_row.iter().enumerate() {
+                assert!(ys.contains(&x), "m={m}: diagonal missing at {x}");
+                assert!(
+                    ys.iter().all(|&y| y <= x),
+                    "m={m}: block {x} refined the future: {ys:?}"
+                );
+            }
+            // the first query block can only ever see itself
+            assert_eq!(plan.per_row[0], vec![0]);
+        }
+    }
+
+    #[test]
+    fn causal_apply_blocks_sharding_is_exact() {
+        // the engine shards causal heads by query block too; shard
+        // boundaries must not change a single bit
+        let (q, k, v) = setup(128, 16, 16);
+        for variant in [Variant::Full, Variant::Sparse] {
+            let plan = mra2_plan(
+                &q.data,
+                &k.data,
+                &v.data,
+                128,
+                16,
+                16,
+                12,
+                variant,
+                Causality::Causal,
+            );
+            let mut full = vec![0.0f32; 128 * 16];
+            mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut full);
+            let mut sharded = vec![0.0f32; 128 * 16];
+            let rows_per_block = plan.block * plan.d;
+            for (x0, x1) in [(0usize, 2usize), (2, 5), (5, 8)] {
+                let shard = &mut sharded[x0 * rows_per_block..x1 * rows_per_block];
+                mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, x0, x1, shard);
+            }
+            assert_eq!(full, sharded, "{variant:?}");
         }
     }
 
@@ -573,7 +879,17 @@ mod tests {
         // boundaries must not change a single bit of the output
         let (q, k, v) = setup(128, 16, 11);
         for variant in [Variant::Full, Variant::Sparse] {
-            let plan = mra2_plan(&q.data, &k.data, &v.data, 128, 16, 16, 6, variant);
+            let plan = mra2_plan(
+                &q.data,
+                &k.data,
+                &v.data,
+                128,
+                16,
+                16,
+                6,
+                variant,
+                Causality::Bidirectional,
+            );
             let mut full = vec![0.0f32; 128 * 16];
             mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut full);
             let mut sharded = vec![0.0f32; 128 * 16];

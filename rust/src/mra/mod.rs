@@ -19,8 +19,9 @@ pub mod select;
 pub mod theory;
 
 pub use attention::{
-    dense_mra2, mra2_apply_blocks, mra2_attention, mra2_attention_stats, mra2_plan,
-    mra_attention, Mra2Plan, MraConfig, MraStats, Variant,
+    dense_mra2, dense_mra2_causal, mra2_apply_blocks, mra2_attention, mra2_attention_causal,
+    mra2_attention_stats, mra2_plan, mra_attention, Causality, Mra2Plan, MraConfig, MraStats,
+    Variant,
 };
 pub use frame::Block;
 pub use select::Selection;

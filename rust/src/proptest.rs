@@ -53,4 +53,45 @@ mod tests {
         assert!(assert_close(&[0.0], &[1e-6], 1e-5, 0.0).is_ok());
         assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
     }
+
+    /// Causal MRA-2 never attends to future positions: rewriting every
+    /// q/k/v row from a block-aligned cut onward — values, keys *and*
+    /// queries — must leave all output rows before the cut bitwise
+    /// unchanged.  This holds because causal selection keeps its budget
+    /// local to each query block (DESIGN.md §7): neither the refined set
+    /// nor the low-res correction of block `x` reads pooled statistics of
+    /// blocks `> x`.
+    #[test]
+    fn causal_mra2_output_never_attends_to_future_positions() {
+        use crate::mra::{mra2_attention_causal, Variant};
+        use crate::tensor::Mat;
+        let (n, b, d) = (64usize, 8usize, 8usize);
+        for_all_seeds(12, |seed, rng| {
+            let m = 1 + rng.below(24);
+            let variant = if seed % 2 == 0 {
+                Variant::Full
+            } else {
+                Variant::Sparse
+            };
+            let mut q = Mat::randn(n, d, 1.0, rng);
+            let mut k = Mat::randn(n, d, 1.0, rng);
+            let mut v = Mat::randn(n, d, 1.0, rng);
+            let z = mra2_attention_causal(&q, &k, &v, b, m, variant);
+            let cut = (1 + rng.below(n / b - 1)) * b;
+            for i in cut..n {
+                for j in 0..d {
+                    q.set(i, j, rng.normal());
+                    k.set(i, j, rng.normal());
+                    v.set(i, j, rng.normal());
+                }
+            }
+            let z2 = mra2_attention_causal(&q, &k, &v, b, m, variant);
+            if z.data[..cut * d] != z2.data[..cut * d] {
+                return Err(format!(
+                    "rows before {cut} changed with the future (m={m}, {variant:?})"
+                ));
+            }
+            Ok(())
+        });
+    }
 }

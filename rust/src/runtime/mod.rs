@@ -2,14 +2,21 @@
 //!
 //! Two backends share one API surface:
 //!
-//! * **`pjrt` feature on** — [`pjrt::Runtime`] compiles `artifacts/*.hlo.txt`
-//!   through the PJRT CPU client (compile-once executable cache, literal
-//!   marshalling).
-//! * **default (offline)** — a native stub [`Runtime`] that parses the same
-//!   manifest and shape-checks inputs but cannot execute HLO; `execute`
-//!   returns a descriptive error so callers (the serving coordinator, the
-//!   examples) fall back to the native batched engine
-//!   ([`crate::engine::Engine`]).
+//! * **`pjrt-xla` feature on** — [`pjrt::Runtime`] compiles
+//!   `artifacts/*.hlo.txt` through the PJRT CPU client (compile-once
+//!   executable cache, literal marshalling).  Requires the vendored `xla`
+//!   path dependency (see `Cargo.toml`).
+//! * **otherwise** (default, and plain `pjrt`) — a native stub [`Runtime`]
+//!   that parses the same manifest and shape-checks inputs but cannot
+//!   execute HLO; `execute` returns a descriptive error so callers (the
+//!   serving coordinator, the examples) fall back to the native batched
+//!   engine ([`crate::engine::Engine`]).
+//!
+//! The plain `pjrt` feature compiles the executor module against a typed
+//! shim of the `xla` API ([`xla_shim`]) with no extra dependency, so CI
+//! can `cargo check --features pjrt` and the gated module cannot silently
+//! rot; the exported [`Runtime`] stays the stub until `pjrt-xla` swaps in
+//! the real backend.
 //!
 //! Either way the coordinator talks to a single executor thread through the
 //! cloneable [`RuntimeHandle`] (the PJRT client types are neither `Send` nor
@@ -19,21 +26,23 @@
 pub mod artifacts;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(all(feature = "pjrt", not(feature = "pjrt-xla")))]
+pub mod xla_shim;
 
 pub use artifacts::{Artifact, DType, HostTensor, Manifest, TensorSpec};
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 pub use pjrt::Runtime;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "pjrt-xla"))]
 pub use stub::Runtime;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "pjrt-xla"))]
 mod stub {
     use anyhow::{bail, Context, Result};
 
     use crate::runtime::{HostTensor, Manifest};
 
-    /// Manifest-only runtime used when the `pjrt` feature is disabled.
+    /// Manifest-only runtime used when the `pjrt-xla` backend is absent.
     ///
     /// It performs the same artifact lookup and input shape/dtype checks as
     /// the PJRT backend so error paths stay testable offline, but it cannot
@@ -51,7 +60,7 @@ mod stub {
 
         /// Platform string (diagnostics).
         pub fn platform(&self) -> String {
-            "native-stub (enable feature `pjrt` for HLO execution)".to_string()
+            "native-stub (enable feature `pjrt-xla` for HLO execution)".to_string()
         }
 
         /// Validate that the artifact exists ("compilation" is a no-op).
@@ -59,7 +68,8 @@ mod stub {
             self.manifest.get(name).map(|_| ())
         }
 
-        /// Shape/dtype-check inputs, then fail: HLO execution needs `pjrt`.
+        /// Shape/dtype-check inputs, then fail: HLO execution needs the
+        /// `pjrt-xla` backend.
         pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
             let art = self.manifest.get(name)?.clone();
             if inputs.len() != art.inputs.len() {
@@ -69,8 +79,8 @@ mod stub {
                 t.check(spec).with_context(|| format!("{name} input {i}"))?;
             }
             bail!(
-                "artifact {name:?} cannot be executed: built without the `pjrt` \
-                 feature — route this batch through the native engine instead"
+                "artifact {name:?} cannot be executed: built without the `pjrt-xla` \
+                 backend — route this batch through the native engine instead"
             )
         }
 
@@ -160,7 +170,7 @@ pub fn spawn(
     Ok((RuntimeHandle { tx }, manifest))
 }
 
-#[cfg(all(test, not(feature = "pjrt")))]
+#[cfg(all(test, not(feature = "pjrt-xla")))]
 mod tests {
     use super::*;
     use std::path::PathBuf;

@@ -1,17 +1,25 @@
-//! PJRT-backed executor (feature `pjrt`): load `artifacts/*.hlo.txt`,
-//! compile once, execute from the coordinator hot path.
+//! PJRT-backed executor: load `artifacts/*.hlo.txt`, compile once,
+//! execute from the coordinator hot path.
 //!
 //! HLO **text** is the interchange format (jax >= 0.5 serialized protos use
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids).  Every executable is compiled at most once and cached;
 //! execution marshals [`HostTensor`]s to PJRT literals and unpacks the
 //! return tuple (`aot.py` lowers with `return_tuple=True`).
+//!
+//! Compiled under the `pjrt` feature: with `pjrt-xla` the `xla` paths
+//! resolve to the vendored bindings (real execution); without it they
+//! resolve to the typed [`crate::runtime::xla_shim`], which keeps this
+//! module compile-checked in CI (`cargo check --features pjrt`) while the
+//! exported `runtime::Runtime` remains the manifest-checking stub.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+#[cfg(not(feature = "pjrt-xla"))]
+use crate::runtime::xla_shim as xla;
 use crate::runtime::{HostTensor, Manifest};
 
 /// A PJRT CPU runtime with an executable cache over one artifacts dir.
@@ -111,13 +119,14 @@ fn from_literal(lit: xla::Literal) -> Result<HostTensor> {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt-xla"))]
 mod tests {
     use super::*;
 
     // Runtime tests that need real artifacts live in rust/tests/ (they are
     // skipped when artifacts/ has not been built); here we cover the
-    // literal marshalling.
+    // literal marshalling (shim literals cannot round-trip, so these need
+    // the real backend).
 
     #[test]
     fn literal_roundtrip_f32() {
