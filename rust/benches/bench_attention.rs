@@ -1,0 +1,112 @@
+//! Attention kernel bench: the fused packed-panel MRA-2 compute core
+//! (`mra2_apply_blocks` — outer-product score tiles + online-softmax
+//! aggregation + caller-owned scratch) vs the preserved scalar two-pass
+//! reference (`mra2_apply_blocks_ref`), over one full head per
+//! configuration.
+//!
+//! Before any timing, every configuration is parity-gated: the fused
+//! output must match the scalar reference within **1e-5 max abs error**
+//! (same math, different float rounding — the gate every oracle in the
+//! repo uses).
+//!
+//! ```bash
+//! cargo bench --bench bench_attention                    # n in {256, 1024, 4096}
+//! MRA_BENCH_SMALL=1 cargo bench --bench bench_attention  # n in {256, 1024} (CI)
+//! MRA_BENCH_JSON=1  cargo bench --bench bench_attention  # write BENCH_attention.json
+//! ```
+//!
+//! The JSON rows feed `scripts/bench_diff.py`, which fails CI when a
+//! tracked throughput metric regresses > 20% against the committed
+//! baseline (`rust/benches/baseline/BENCH_attention.json`).
+
+use mra::bench::{time_it, BenchJson, Table};
+use mra::mra::{
+    mra2_apply_blocks, mra2_apply_blocks_ref, mra2_plan, Causality, Mra2Scratch, Variant,
+};
+use mra::tensor::Rng;
+
+const D: usize = 64;
+
+fn gen(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n * D).map(|_| rng.normal()).collect()
+}
+
+fn main() {
+    let small = std::env::var("MRA_BENCH_SMALL").is_ok();
+    let ns: &[usize] = if small { &[256, 1024] } else { &[256, 1024, 4096] };
+    let blocks = [16usize, 32];
+    let iters = if small { 3 } else { 5 };
+    println!("attention kernel bench: d={D} m=4*nb per config (best-of mean over {iters} iters)\n");
+
+    let mut table = Table::new(&[
+        "impl", "n", "b", "mean ms", "GFLOP/s", "tokens/s", "speedup",
+    ]);
+    let mut json = BenchJson::new("attention");
+    for &n in ns {
+        for &b in &blocks {
+            let m = 4 * (n / b);
+            let mut rng = Rng::new(0xA77E | (n as u64) << 8 | b as u64);
+            let q = gen(n, &mut rng);
+            let k = gen(n, &mut rng);
+            let v = gen(n, &mut rng);
+            let plan =
+                mra2_plan(&q, &k, &v, n, D, b, m, Variant::Full, Causality::Bidirectional);
+            let flops = plan.stats(n).flops as f64;
+
+            // --- parity gate before any timing --------------------------
+            let mut z_ref = vec![0.0f32; n * D];
+            mra2_apply_blocks_ref(&plan, &q, &k, &v, 0, plan.nb, &mut z_ref);
+            let mut scratch = Mra2Scratch::for_plan(&plan);
+            let mut z = vec![0.0f32; n * D];
+            mra2_apply_blocks(&plan, &q, 0, plan.nb, &mut z, &mut scratch);
+            let max_abs = z
+                .iter()
+                .zip(&z_ref)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_abs <= 1e-5,
+                "fused kernel diverged from the scalar reference at n={n} b={b}: {max_abs}"
+            );
+
+            // --- timings ------------------------------------------------
+            let stats_ref = time_it(1, iters, || {
+                mra2_apply_blocks_ref(&plan, &q, &k, &v, 0, plan.nb, &mut z_ref);
+            });
+            let stats_fused = time_it(1, iters, || {
+                mra2_apply_blocks(&plan, &q, 0, plan.nb, &mut z, &mut scratch);
+            });
+
+            let speedup = stats_ref.mean_ms / stats_fused.mean_ms.max(1e-9);
+            for (impl_name, stats, spd) in [
+                ("scalar-ref", &stats_ref, 1.0),
+                ("fused-kernel", &stats_fused, speedup),
+            ] {
+                let secs = stats.mean_ms / 1e3;
+                let gflops = flops / secs.max(1e-12) / 1e9;
+                let tps = n as f64 / secs.max(1e-12);
+                table.row(&[
+                    impl_name.to_string(),
+                    format!("{n}"),
+                    format!("{b}"),
+                    format!("{:.3}", stats.mean_ms),
+                    format!("{gflops:.2}"),
+                    format!("{tps:.0}"),
+                    format!("{spd:.2}x"),
+                ]);
+                json.row(&[
+                    ("impl", BenchJson::str_field(impl_name)),
+                    ("n", format!("{n}")),
+                    ("b", format!("{b}")),
+                    ("mean_ms", format!("{:.4}", stats.mean_ms)),
+                    ("gflops", format!("{gflops:.2}")),
+                    ("tokens_per_sec", format!("{tps:.1}")),
+                    ("speedup_vs_scalar", format!("{spd:.3}")),
+                ]);
+            }
+        }
+    }
+    table.print();
+    json.write_if_requested();
+    println!("\nbench_attention OK (all configs within 1e-5 max abs of the scalar reference)");
+}

@@ -116,17 +116,19 @@ fn main() {
             );
         }
 
-        // --- MRA-2 causal incremental decode ----------------------------
+        // --- MRA-2 causal incremental decode (allocation-free loop) -----
         let mut best_mra = f64::INFINITY;
+        let mut out = vec![0.0f32; D];
         for _ in 0..iters {
             let mut st = base.clone();
             let t0 = Instant::now();
             for s in 0..steps {
                 let t = n + s;
-                let out = st.step(
+                st.step_into(
                     &q[t * D..(t + 1) * D],
                     &k[t * D..(t + 1) * D],
                     &v[t * D..(t + 1) * D],
+                    &mut out,
                 );
                 sink += out[0];
             }

@@ -22,7 +22,7 @@ use anyhow::{bail, Result};
 use crate::data::corpus::MlmBatch;
 use crate::engine::{kernel_by_name, pool, BatchedTensor, DecodeState, Engine};
 use crate::mra::Variant;
-use crate::tensor::{mat::dot, ops, Mat, Rng};
+use crate::tensor::{kernel, mat::dot, ops, Mat, Rng};
 
 /// Shape/knob description of the native models, parseable from the model
 /// tags used by the artifact grid (`mlm_mra2_n128_d128_l2_h2_v512`;
@@ -476,7 +476,8 @@ impl NativeLm {
                 let k = row_project(hidden_ref, &lw.wk[h]);
                 let v = row_project(hidden_ref, &lw.wv[h]);
                 st.append(&k, &v);
-                slot.copy_from_slice(&st.attend_last(&q));
+                // allocation-free steady path: attend straight into the slot
+                st.attend_last_into(&q, slot);
             });
             // residual + layer norm on the single row
             for (c, &hv) in cat.iter_mut().zip(hidden.iter()) {
@@ -489,17 +490,13 @@ impl NativeLm {
 }
 
 /// `row @ w` for a single row — the decode-path analog of `Mat::matmul`
-/// (same k-major accumulation order).
+/// (same k-major accumulation order, same branch-free kernel AXPY: dense
+/// embeddings never benefit from a zero-skip, which defeats vectorization).
 fn row_project(row: &[f32], w: &Mat) -> Vec<f32> {
     debug_assert_eq!(row.len(), w.rows);
     let mut out = vec![0.0f32; w.cols];
     for (i, &a) in row.iter().enumerate() {
-        if a == 0.0 {
-            continue;
-        }
-        for (o, &b) in out.iter_mut().zip(w.row(i)) {
-            *o += a * b;
-        }
+        kernel::axpy(&mut out, w.row(i), a);
     }
     out
 }

@@ -4,16 +4,22 @@
 //! [`DecodeState::append`] maintains the pooled key/value pyramid
 //! incrementally — partial-block sums accumulate in arrival order and are
 //! finalized (scaled by `1/block`) exactly when a block completes, the
-//! same float sequence as pooling the full prefix from scratch, so the
-//! incremental path is **bitwise identical** to recomputing the causal
-//! prefix ([`causal_row_attention`]; asserted in tests and
-//! `benches/bench_decode.rs`).
+//! same float sequence as pooling the full prefix from scratch — and packs
+//! each completed key block into a K^T panel for the micro-kernel layer
+//! (a pure permutation).  The incremental path is therefore **bitwise
+//! identical** to recomputing the causal prefix ([`causal_row_attention`];
+//! asserted in tests and `benches/bench_decode.rs`).
 //!
 //! [`DecodeState::attend_last`] runs a strictly per-row causal MRA-2 for
 //! the newest position: exact attention over the current (possibly
 //! partial) block and the `budget` best complete past blocks by pooled
 //! score, low-resolution `mu` correction over the remaining past blocks
-//! (Full variant).  Cost per generated token is
+//! (Full variant).  Refined blocks are scored through
+//! [`kernel::score_panel`] against the packed K^T panels and aggregated by
+//! the fused online-softmax kernel ([`kernel::softmax_accum_panel`]); all
+//! transients live in a per-state scratch, so the steady decode path
+//! ([`DecodeState::attend_last_into`]) performs **zero heap allocations**
+//! per token.  Cost per generated token is
 //! `O(block + budget * block + n / block)` against `O(n)` for exact causal
 //! decode — the tokens/sec gap `benches/bench_decode.rs` measures.
 //!
@@ -23,8 +29,22 @@
 //! the two schedules relate.
 
 use crate::mra::Variant;
-use crate::tensor::mat::dot;
-use crate::tensor::{ops, topk};
+use crate::tensor::{kernel, ops, topk};
+
+/// Per-step scratch of one decode stream: low-res scores, the refined-set
+/// bookkeeping and one score row.  Sized on the first step and reused
+/// verbatim afterwards (allocation-free steady path).
+#[derive(Clone, Debug, Default)]
+struct DecodeScratch {
+    /// Pooled scores of every complete past block (`<= n / block`).
+    s_low: Vec<f32>,
+    /// Refined block indices (ascending; `<= budget`).
+    refined: Vec<usize>,
+    /// Membership flags over the complete past blocks.
+    is_refined: Vec<bool>,
+    /// One block-wide score row (`<= block`).
+    scores: Vec<f32>,
+}
 
 /// Incremental KV cache + pooled pyramid for one `(batch, head)` pair of
 /// an autoregressive decode stream.
@@ -42,9 +62,14 @@ pub struct DecodeState {
     /// Pooled (mean) rows of every *completed* block, `(len / block, d)`.
     kt: Vec<f32>,
     vt: Vec<f32>,
+    /// Packed K^T panels of every completed block (`(d, block)` each) —
+    /// the outer-product operand for refined-block scoring.
+    kt_panels: Vec<f32>,
     /// Running sums of the current partial block.
     ksum: Vec<f32>,
     vsum: Vec<f32>,
+    /// Reusable per-step transients.
+    scratch: DecodeScratch,
 }
 
 impl DecodeState {
@@ -61,8 +86,10 @@ impl DecodeState {
             v_rows: Vec::new(),
             kt: Vec::new(),
             vt: Vec::new(),
+            kt_panels: Vec::new(),
             ksum: vec![0.0; d],
             vsum: vec![0.0; d],
+            scratch: DecodeScratch::default(),
         }
     }
 
@@ -84,7 +111,8 @@ impl DecodeState {
     /// in arrival order and are finalized exactly when the block completes
     /// — the same float sequence as `ops::pool_rows_slice` over the full
     /// prefix, which is what makes incremental decode bitwise identical to
-    /// a from-scratch recompute.
+    /// a from-scratch recompute.  Completed blocks are also packed into
+    /// K^T panels (a permutation — no float arithmetic).
     pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
         assert_eq!(k_row.len(), self.d, "k row width");
         assert_eq!(v_row.len(), self.d, "v row width");
@@ -103,25 +131,50 @@ impl DecodeState {
             self.vt.extend(self.vsum.iter().map(|&s| s * inv));
             self.ksum.fill(0.0);
             self.vsum.fill(0.0);
+            let panel_len = self.block * self.d;
+            let start = self.kt_panels.len();
+            self.kt_panels.resize(start + panel_len, 0.0);
+            kernel::pack_transpose(
+                &self.k_rows[(self.len - self.block) * self.d..self.len * self.d],
+                self.block,
+                self.d,
+                &mut self.kt_panels[start..],
+            );
         }
     }
 
     /// Causal MRA-2 attention of `q_row` (the newest position, `len - 1`)
     /// over the cached prefix; returns the row-normalized output row.
-    pub fn attend_last(&self, q_row: &[f32]) -> Vec<f32> {
+    /// Allocates the output — serving hot paths should pass a reusable
+    /// buffer to [`DecodeState::attend_last_into`] instead.
+    pub fn attend_last(&mut self, q_row: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.d];
+        self.attend_last_into(q_row, &mut out);
+        out
+    }
+
+    /// [`DecodeState::attend_last`] into a caller-owned output row — the
+    /// allocation-free steady path (all transients live in the state's
+    /// scratch; asserted by the scratch-reuse test).
+    pub fn attend_last_into(&mut self, q_row: &[f32], out: &mut [f32]) {
         assert!(self.len > 0, "attend_last on an empty cache");
         assert_eq!(q_row.len(), self.d, "q row width");
+        assert_eq!(out.len(), self.d, "out row width");
+        let (len, block, budget, variant) = (self.len, self.block, self.budget, self.variant);
         attend_row_core(
             q_row,
             &self.k_rows,
             &self.v_rows,
-            self.len,
+            len,
             &self.kt,
             &self.vt,
-            self.block,
-            self.budget,
-            self.variant,
-        )
+            &self.kt_panels,
+            block,
+            budget,
+            variant,
+            &mut self.scratch,
+            out,
+        );
     }
 
     /// One decode step: `append` + `attend_last`.
@@ -129,11 +182,35 @@ impl DecodeState {
         self.append(k_row, v_row);
         self.attend_last(q_row)
     }
+
+    /// [`DecodeState::step`] into a caller-owned output row — the
+    /// allocation-free serving loop (`append` +
+    /// [`DecodeState::attend_last_into`]).
+    pub fn step_into(&mut self, q_row: &[f32], k_row: &[f32], v_row: &[f32], out: &mut [f32]) {
+        self.append(k_row, v_row);
+        self.attend_last_into(q_row, out);
+    }
+
+    /// Total reserved f32/usize elements of the per-step scratch — the
+    /// steady-state allocation gate asserts this stops growing.
+    #[cfg(test)]
+    fn scratch_elems(&self) -> usize {
+        self.scratch.s_low.capacity()
+            + self.scratch.refined.capacity()
+            + self.scratch.is_refined.capacity()
+            + self.scratch.scores.capacity()
+    }
 }
 
 /// Shared row-attention core: the position `len - 1` attends the `len`
-/// cached k/v rows, with pooled complete-block mats `kt` / `vt` holding at
-/// least `(len - 1) / block` rows each.
+/// cached k/v rows, with pooled complete-block mats `kt` / `vt` and packed
+/// K^T panels `kt_panels` covering at least `(len - 1) / block` blocks.
+///
+/// Refined past blocks stream through the fused online-softmax kernel
+/// (running max seeded at the Full variant's stabilization floor), then
+/// the current partial block, then the low-res `mu` correction — the same
+/// schedule as the batch path's [`crate::mra::mra2_apply_blocks`] with a
+/// single query row.
 #[allow(clippy::too_many_arguments)]
 fn attend_row_core(
     q_row: &[f32],
@@ -142,100 +219,114 @@ fn attend_row_core(
     len: usize,
     kt: &[f32],
     vt: &[f32],
+    kt_panels: &[f32],
     block: usize,
     budget: usize,
     variant: Variant,
-) -> Vec<f32> {
+    scratch: &mut DecodeScratch,
+    out: &mut [f32],
+) {
     let d = q_row.len();
     let b = block;
     let i = len - 1;
     let x = i / b; // current (query) block
-    debug_assert!(kt.len() >= x * d && vt.len() >= x * d, "pooled pyramid too short");
+    debug_assert!(
+        kt.len() >= x * d && vt.len() >= x * d && kt_panels.len() >= x * b * d,
+        "pooled pyramid too short"
+    );
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
 
     // per-row Alg. 1: score every complete past block at low resolution
-    let s_low: Vec<f32> =
-        (0..x).map(|y| dot(q_row, &kt[y * d..(y + 1) * d]) * inv_sqrt_d).collect();
-    let mut refined = topk::top_k_indices(&s_low, budget.min(x));
-    refined.sort_unstable();
-    let mut is_refined = vec![false; x];
-    for &y in &refined {
+    let s_low = &mut scratch.s_low;
+    s_low.clear();
+    s_low.extend((0..x).map(|y| kernel::dot(q_row, &kt[y * d..(y + 1) * d]) * inv_sqrt_d));
+    topk::top_k_into(s_low, budget.min(x), &mut scratch.refined);
+    scratch.refined.sort_unstable();
+    let is_refined = &mut scratch.is_refined;
+    is_refined.clear();
+    is_refined.resize(x, false);
+    for &y in &scratch.refined {
         is_refined[y] = true;
     }
 
     // stabilization floor: best non-refined low-res score (Full only)
-    let mut mx = f32::NEG_INFINITY;
+    let mut floor = f32::NEG_INFINITY;
     if variant == Variant::Full {
         for (y, &s) in s_low.iter().enumerate() {
-            if !is_refined[y] && s > mx {
-                mx = s;
+            if !is_refined[y] && s > floor {
+                floor = s;
             }
         }
     }
 
-    // pass 1: exact scores for the refined past blocks + the current block
+    // fused pass: refined past blocks, then the current (partial) block,
+    // under the single-row online-softmax recurrence
+    out.fill(0.0);
+    let mut rowmax = [floor];
+    let mut den = [0.0f32];
+    let scores = &mut scratch.scores;
+    for &y in &scratch.refined {
+        scores.clear();
+        scores.resize(b, 0.0);
+        kernel::score_panel(
+            q_row,
+            d,
+            &kt_panels[y * b * d..(y + 1) * b * d],
+            b,
+            inv_sqrt_d,
+            scores,
+        );
+        kernel::softmax_accum_panel(
+            scores,
+            &v_rows[y * b * d..(y + 1) * b * d],
+            b,
+            d,
+            &mut rowmax,
+            &mut den,
+            out,
+        );
+    }
     let cur_start = x * b;
-    let exact_count = refined.len() * b + (len - cur_start);
-    let mut scores: Vec<f32> = Vec::with_capacity(exact_count);
-    let mut positions: Vec<usize> = Vec::with_capacity(exact_count);
-    for &y in &refined {
-        for j in y * b..(y + 1) * b {
-            let s = dot(q_row, &k_rows[j * d..(j + 1) * d]) * inv_sqrt_d;
-            if s > mx {
-                mx = s;
-            }
-            scores.push(s);
-            positions.push(j);
-        }
-    }
-    for j in cur_start..len {
-        let s = dot(q_row, &k_rows[j * d..(j + 1) * d]) * inv_sqrt_d;
-        if s > mx {
-            mx = s;
-        }
-        scores.push(s);
-        positions.push(j);
-    }
+    let w = len - cur_start;
+    scores.clear();
+    scores.extend(
+        (cur_start..len).map(|j| kernel::dot(q_row, &k_rows[j * d..(j + 1) * d]) * inv_sqrt_d),
+    );
+    kernel::softmax_accum_panel(
+        scores,
+        &v_rows[cur_start * d..len * d],
+        w,
+        d,
+        &mut rowmax,
+        &mut den,
+        out,
+    );
 
-    // pass 2: stabilized exp + value aggregation
-    let mut out = vec![0.0f32; d];
-    let mut den = 0.0f32;
-    for (&s, &j) in scores.iter().zip(&positions) {
-        let a = (s - mx).exp();
-        den += a;
-        let vrow = &v_rows[j * d..(j + 1) * d];
-        for (o, &vv) in out.iter_mut().zip(vrow) {
-            *o += a * vv;
-        }
-    }
-
-    // low-resolution contribution of the non-refined past blocks
+    // low-resolution contribution of the non-refined past blocks; the
+    // running max is >= the floor >= every non-refined pooled score, so
+    // each `mu` stays in range
     if variant == Variant::Full {
+        let mf = rowmax[0];
         for (y, &s) in s_low.iter().enumerate() {
             if is_refined[y] {
                 continue;
             }
-            let mu = (s - mx).exp() * b as f32;
-            den += mu;
-            let vrow = &vt[y * d..(y + 1) * d];
-            for (o, &vv) in out.iter_mut().zip(vrow) {
-                *o += mu * vv;
-            }
+            let mu = (s - mf).exp() * b as f32;
+            den[0] += mu;
+            kernel::axpy(out, &vt[y * d..(y + 1) * d], mu);
         }
     }
 
-    let inv = if den > 0.0 { 1.0 / den } else { 0.0 };
-    for o in out.iter_mut() {
-        *o *= inv;
-    }
-    out
+    let inv = if den[0] > 0.0 { 1.0 / den[0] } else { 0.0 };
+    kernel::scale(out, inv);
 }
 
 /// Attention output of the *last* position of a causal prefix, computed
 /// from scratch (no incremental state): pools the complete blocks of the
-/// prefix and runs the same row core as [`DecodeState::attend_last`].
-/// Bitwise identical to an incrementally maintained [`DecodeState`] — the
-/// regression surface for KV-cache bookkeeping bugs.
+/// prefix, packs their K^T panels, and runs the same row core as
+/// [`DecodeState::attend_last`].  Bitwise identical to an incrementally
+/// maintained [`DecodeState`] — the regression surface for KV-cache
+/// bookkeeping bugs.
 pub fn causal_row_attention(
     q_row: &[f32],
     k_prefix: &[f32],
@@ -251,16 +342,35 @@ pub fn causal_row_attention(
     let x = (len - 1) / block;
     let kt = ops::pool_rows_slice(&k_prefix[..x * block * d], x * block, d, block);
     let vt = ops::pool_rows_slice(&v_prefix[..x * block * d], x * block, d, block);
-    attend_row_core(q_row, k_prefix, v_prefix, len, &kt.data, &vt.data, block, budget, variant)
+    let mut kt_panels = vec![0.0f32; x * block * d];
+    for (y, panel) in kt_panels.chunks_exact_mut(block * d).enumerate() {
+        kernel::pack_transpose(&k_prefix[y * block * d..(y + 1) * block * d], block, d, panel);
+    }
+    let mut out = vec![0.0f32; d];
+    attend_row_core(
+        q_row,
+        k_prefix,
+        v_prefix,
+        len,
+        &kt.data,
+        &vt.data,
+        &kt_panels,
+        block,
+        budget,
+        variant,
+        &mut DecodeScratch::default(),
+        &mut out,
+    );
+    out
 }
 
 /// Dense oracle for one decode row: materialize the full score vector over
 /// the prefix under the same per-row selection rule (exact for the current
 /// block and refined past blocks, pooled `mu` scores elsewhere, `-inf`
 /// for dropped blocks in the sparse variant), softmax-normalize, and
-/// aggregate values position by position.  Tests and
-/// `benches/bench_decode.rs` gate the fast path against this (<= 1e-5 max
-/// abs error).
+/// aggregate values position by position.  Deliberately kept on the scalar
+/// `dot` path — the reference the fused kernels are gated against (<= 1e-5
+/// max abs error in tests and `benches/bench_decode.rs`).
 pub fn causal_row_oracle(
     q_row: &[f32],
     k_prefix: &[f32],
@@ -278,7 +388,8 @@ pub fn causal_row_oracle(
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
     let kt = ops::pool_rows_slice(&k_prefix[..x * b * d], x * b, d, b);
 
-    let s_low: Vec<f32> = (0..x).map(|y| dot(q_row, kt.row(y)) * inv_sqrt_d).collect();
+    let s_low: Vec<f32> =
+        (0..x).map(|y| kernel::dot(q_row, kt.row(y)) * inv_sqrt_d).collect();
     let refined = topk::top_k_indices(&s_low, budget.min(x));
     let mut is_refined = vec![false; x];
     for &y in &refined {
@@ -289,7 +400,7 @@ pub fn causal_row_oracle(
     for y in 0..x {
         for j in y * b..(y + 1) * b {
             s[j] = if is_refined[y] {
-                dot(q_row, &k_prefix[j * d..(j + 1) * d]) * inv_sqrt_d
+                kernel::dot(q_row, &k_prefix[j * d..(j + 1) * d]) * inv_sqrt_d
             } else if variant == Variant::Full {
                 s_low[y]
             } else {
@@ -298,7 +409,7 @@ pub fn causal_row_oracle(
         }
     }
     for (j, sj) in s.iter_mut().enumerate().skip(x * b) {
-        *sj = dot(q_row, &k_prefix[j * d..(j + 1) * d]) * inv_sqrt_d;
+        *sj = kernel::dot(q_row, &k_prefix[j * d..(j + 1) * d]) * inv_sqrt_d;
     }
 
     let mx = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -391,6 +502,34 @@ mod tests {
     }
 
     #[test]
+    fn attend_last_into_is_allocation_free_once_warm() {
+        // steady-state gate: after a warmup step at full pyramid depth, the
+        // per-step scratch must stop growing and attend_last_into must
+        // match attend_last exactly
+        let (d, b) = (16usize, 8usize);
+        let mut rng = Rng::new(21);
+        let n = 64;
+        let q = rows(n, d, &mut rng);
+        let k = rows(n, d, &mut rng);
+        let v = rows(n, d, &mut rng);
+        let mut st = DecodeState::new(b, 2, Variant::Full, d);
+        let mut out = vec![0.0f32; d];
+        for t in 0..n {
+            st.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            st.attend_last_into(&q[t * d..(t + 1) * d], &mut out);
+            let alloc = st.attend_last(&q[t * d..(t + 1) * d]);
+            assert_eq!(out, alloc, "step {t}: into/alloc paths diverged");
+        }
+        // same-length steady state: repeat the last step's attention many
+        // times; the scratch footprint must be exactly stable
+        let stable = st.scratch_elems();
+        for _ in 0..16 {
+            st.attend_last_into(&q[(n - 1) * d..n * d], &mut out);
+            assert_eq!(st.scratch_elems(), stable, "steady-state scratch grew");
+        }
+    }
+
+    #[test]
     fn first_token_attends_only_itself() {
         let mut rng = Rng::new(3);
         let d = 8;
@@ -453,7 +592,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "empty cache")]
     fn attend_on_empty_cache_panics() {
-        let st = DecodeState::new(4, 1, Variant::Full, 4);
+        let mut st = DecodeState::new(4, 1, Variant::Full, 4);
         let _ = st.attend_last(&[0.0; 4]);
     }
 }

@@ -14,12 +14,18 @@ use crate::baselines::longformer::Longformer;
 use crate::baselines::nystromformer::Nystromformer;
 use crate::baselines::AttentionApprox;
 use crate::engine::tensor4::MatView;
-use crate::mra::{mra2_apply_blocks, mra2_plan, Causality, Mra2Plan, Variant};
+use crate::mra::{mra2_apply_blocks, mra2_plan, Causality, Mra2Plan, Mra2Scratch, Variant};
 use crate::tensor::mat::dot;
 
 /// Opaque per-head state produced by [`AttnKernel::plan_head`] and shared
 /// read-only by every row shard of that head.
 pub type HeadPlan = Box<dyn Any + Send + Sync>;
+
+/// Opaque per-worker scratch produced by [`AttnKernel::make_scratch`]:
+/// each pool worker owns one for the whole compute-phase drain
+/// (`pool::run_with`), so per-shard transients (tile buffers, score rows)
+/// are allocated once per worker instead of once per call.
+pub type KernelScratch = Box<dyn Any + Send>;
 
 /// A batched attention kernel: computes `Z_hat ~ softmax(QK^T/sqrt(d)) V`
 /// for one `(batch, head)` pair, optionally split into independent
@@ -40,8 +46,17 @@ pub trait AttnKernel: Send + Sync {
         Box::new(())
     }
 
+    /// Build one per-worker scratch arena (reused across every shard the
+    /// worker claims).  Kernels without transients return the default `()`.
+    fn make_scratch(&self) -> KernelScratch {
+        Box::new(())
+    }
+
     /// Compute the row-normalized output rows `[r0, r1)` of one head into
-    /// `out` (length `(r1 - r0) * d`, zero-initialized by the engine).
+    /// `out` (length `(r1 - r0) * d`, zero-initialized by the engine),
+    /// using the worker's `scratch` (from [`AttnKernel::make_scratch`])
+    /// for all transient state.
+    #[allow(clippy::too_many_arguments)]
     fn compute_range(
         &self,
         plan: &HeadPlan,
@@ -51,6 +66,7 @@ pub trait AttnKernel: Send + Sync {
         r0: usize,
         r1: usize,
         out: &mut [f32],
+        scratch: &mut KernelScratch,
     );
 }
 
@@ -116,20 +132,27 @@ impl AttnKernel for Mra2Kernel {
         ))
     }
 
+    fn make_scratch(&self) -> KernelScratch {
+        Box::new(Mra2Scratch::new())
+    }
+
     fn compute_range(
         &self,
         plan: &HeadPlan,
         q: MatView,
-        k: MatView,
-        v: MatView,
+        _k: MatView,
+        _v: MatView,
         r0: usize,
         r1: usize,
         out: &mut [f32],
+        scratch: &mut KernelScratch,
     ) {
         let plan = plan.downcast_ref::<Mra2Plan>().expect("Mra2Kernel plan");
+        let scratch = scratch.downcast_mut::<Mra2Scratch>().expect("Mra2Kernel scratch");
         let b = plan.block;
         debug_assert!(r0 % b == 0 && r1 % b == 0, "shard not block-aligned");
-        mra2_apply_blocks(plan, q.data, k.data, v.data, r0 / b, r1 / b, out);
+        // K/V are read from the plan's packed panels, not the raw views
+        mra2_apply_blocks(plan, q.data, r0 / b, r1 / b, out, scratch);
     }
 }
 
@@ -146,6 +169,10 @@ impl AttnKernel for ExactKernel {
         Some(64.min(n).max(1))
     }
 
+    fn make_scratch(&self) -> KernelScratch {
+        Box::new(Vec::<f32>::new())
+    }
+
     fn compute_range(
         &self,
         _plan: &HeadPlan,
@@ -155,11 +182,13 @@ impl AttnKernel for ExactKernel {
         r0: usize,
         r1: usize,
         out: &mut [f32],
+        scratch: &mut KernelScratch,
     ) {
         let n = k.rows;
         let d = v.cols;
         let inv_sqrt_d = 1.0 / (q.cols as f32).sqrt();
-        let mut scores = vec![0.0f32; n];
+        let scores = scratch.downcast_mut::<Vec<f32>>().expect("ExactKernel scratch");
+        scores.resize(n, 0.0); // every entry is overwritten below
         for i in r0..r1 {
             let qrow = q.row(i);
             let mut mx = f32::NEG_INFINITY;
@@ -201,6 +230,10 @@ impl AttnKernel for CausalExactKernel {
         Some(64.min(n).max(1))
     }
 
+    fn make_scratch(&self) -> KernelScratch {
+        Box::new(Vec::<f32>::new())
+    }
+
     fn compute_range(
         &self,
         _plan: &HeadPlan,
@@ -210,10 +243,12 @@ impl AttnKernel for CausalExactKernel {
         r0: usize,
         r1: usize,
         out: &mut [f32],
+        scratch: &mut KernelScratch,
     ) {
         let d = v.cols;
         let inv_sqrt_d = 1.0 / (q.cols as f32).sqrt();
-        let mut scores = vec![0.0f32; k.rows];
+        let scores = scratch.downcast_mut::<Vec<f32>>().expect("CausalExactKernel scratch");
+        scores.resize(k.rows, 0.0); // entries [0, i] overwritten before use
         for i in r0..r1 {
             let qrow = q.row(i);
             let mut mx = f32::NEG_INFINITY;
@@ -267,6 +302,7 @@ impl<A: AttentionApprox + Send + Sync> AttnKernel for ApproxShim<A> {
         r0: usize,
         r1: usize,
         out: &mut [f32],
+        _scratch: &mut KernelScratch,
     ) {
         assert!(r0 == 0 && r1 == q.rows, "approx shims compute whole heads");
         let z = self.inner.compute(&q.to_mat(), &k.to_mat(), &v.to_mat());

@@ -13,7 +13,12 @@
 //! 2. **compute phase** — each head's output is split into disjoint
 //!    query-row shards (for MRA-2: query-block ranges of the fast path,
 //!    which are fully independent — see `mra::attention::mra2_apply_blocks`)
-//!    and all shards across all pairs drain through one work queue.
+//!    and the flattened `(batch, head, query-block)` task list drains
+//!    through the pool's work-stealing atomic cursor ([`pool::run_with`]);
+//!    every worker owns one kernel scratch arena
+//!    ([`kernels::AttnKernel::make_scratch`]) reused across all the shards
+//!    it claims, so the steady-state compute phase performs zero heap
+//!    allocations.
 //!
 //! Shards own disjoint `&mut` slices of the output buffer, so the whole
 //! scheduler is safe Rust, and every shard computes exactly the same float
@@ -31,8 +36,8 @@ pub mod tensor4;
 
 pub use decode::{causal_row_attention, causal_row_oracle, DecodeState};
 pub use kernels::{
-    kernel_by_name, ApproxShim, AttnKernel, CausalExactKernel, ExactKernel, HeadPlan, Mra2Kernel,
-    KERNEL_NAMES,
+    kernel_by_name, ApproxShim, AttnKernel, CausalExactKernel, ExactKernel, HeadPlan,
+    KernelScratch, Mra2Kernel, KERNEL_NAMES,
 };
 pub use tensor4::{rel_fro_error_flat, BatchedTensor, MatView};
 
@@ -93,7 +98,9 @@ impl Engine {
             });
         }
 
-        // phase 2: disjoint output shards across all pairs drain one queue
+        // phase 2: the flattened (batch, head, query-block) task list
+        // drains through the pool's work-stealing cursor; each worker keeps
+        // one kernel scratch arena for every shard it claims
         let mut out = BatchedTensor::zeros(batch, heads, n, d);
         let shard_rows = self.kernel.shard_rows(n);
         let mut tasks: Vec<ShardTask<'_>> = Vec::new();
@@ -108,20 +115,27 @@ impl Engine {
             }
         }
         let plans = &plans;
-        pool::run(self.threads, tasks, |t| {
-            let (b, h) = (t.pair / heads, t.pair % heads);
-            let rows = t.out.len() / d;
-            let plan = plans[t.pair].as_ref().expect("plan built in phase 1");
-            self.kernel.compute_range(
-                plan,
-                q.view(b, h),
-                k.view(b, h),
-                v.view(b, h),
-                t.r0,
-                t.r0 + rows,
-                t.out,
-            );
-        });
+        let kernel = self.kernel.as_ref();
+        pool::run_with(
+            self.threads,
+            tasks,
+            || kernel.make_scratch(),
+            |scratch, t| {
+                let (b, h) = (t.pair / heads, t.pair % heads);
+                let rows = t.out.len() / d;
+                let plan = plans[t.pair].as_ref().expect("plan built in phase 1");
+                kernel.compute_range(
+                    plan,
+                    q.view(b, h),
+                    k.view(b, h),
+                    v.view(b, h),
+                    t.r0,
+                    t.r0 + rows,
+                    t.out,
+                    scratch,
+                );
+            },
+        );
         out
     }
 }

@@ -1,11 +1,25 @@
 //! Scoped-thread worker pool (std only — no rayon offline).
 //!
-//! [`run`] drains an explicit work list through `threads` scoped workers
-//! pulling from a shared queue, so uneven task costs (e.g. MRA-2 query
-//! blocks with different refined-tile counts) self-balance.  Tasks carry
-//! their own disjoint `&mut` output shards, which keeps the whole scheme
-//! safe-Rust: no worker ever aliases another worker's output.
+//! Work stealing over a **flattened, precomputed task list**: every task is
+//! pushed into a `Vec` up front and workers claim tasks by bumping one
+//! shared atomic cursor ([`run`] / [`run_with`]).  Compared with the old
+//! mutex-guarded iterator, a claim is a single `fetch_add` — no lock
+//! convoy on the queue head — and skewed task costs (e.g. MRA-2 query
+//! blocks with different refined-tile counts) still self-balance because
+//! idle workers immediately steal the next unclaimed index.
+//!
+//! [`run_with`] additionally gives every worker a private state value
+//! (built once per worker, reused across all the tasks it claims) — the
+//! hook the engine uses to keep one kernel scratch arena per worker so the
+//! compute phase performs zero steady-state heap allocations.
+//!
+//! Tasks carry their own disjoint `&mut` output shards, which keeps the
+//! whole scheme safe-Rust: no worker ever aliases another worker's output.
+//! Each task slot is handed over through a dedicated `Mutex<Option<T>>`
+//! that is locked exactly once, by the worker that claimed its index —
+//! uncontended by construction.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Default worker count: the machine's available parallelism.
@@ -15,27 +29,46 @@ pub fn default_threads() -> usize {
 
 /// Run `f` over every item using up to `threads` scoped workers.
 ///
-/// Items are pulled from a shared queue (work stealing by contention);
-/// with `threads <= 1` everything runs inline on the caller's thread, so
+/// With `threads <= 1` everything runs inline on the caller's thread, so
 /// the sequential path has zero synchronization overhead.
 pub fn run<T: Send>(threads: usize, items: Vec<T>, f: impl Fn(T) + Sync) {
+    run_with(threads, items, || (), |_state, item| f(item));
+}
+
+/// [`run`] with per-worker state: each worker calls `init` once and gets
+/// `&mut` access to its state for every task it claims.  Use it to hoist
+/// per-task allocations (scratch buffers, score arenas) into a per-worker
+/// arena that lives for the whole drain.
+pub fn run_with<T: Send, S>(
+    threads: usize,
+    items: Vec<T>,
+    init: impl Fn() -> S + Sync,
+    f: impl Fn(&mut S, T) + Sync,
+) {
     let workers = threads.max(1).min(items.len().max(1));
     if workers <= 1 {
+        let mut state = init();
         for item in items {
-            f(item);
+            f(&mut state, item);
         }
         return;
     }
-    let queue = Mutex::new(items.into_iter());
-    let queue = &queue;
-    let f = &f;
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let cursor = AtomicUsize::new(0);
+    let (slots, cursor, init, f) = (&slots, &cursor, &init, &f);
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(move || loop {
-                let item = queue.lock().unwrap().next();
-                match item {
-                    Some(item) => f(item),
-                    None => break,
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= slots.len() {
+                        break;
+                    }
+                    let item = slots[i].lock().unwrap().take();
+                    if let Some(item) = item {
+                        f(&mut state, item);
+                    }
                 }
             });
         }
@@ -79,6 +112,53 @@ mod tests {
     #[test]
     fn empty_work_list_is_a_no_op() {
         run(4, Vec::<usize>::new(), |_| panic!("no items expected"));
+    }
+
+    #[test]
+    fn run_with_builds_one_state_per_worker_and_reuses_it() {
+        for threads in [1usize, 3, 8] {
+            let inits = AtomicUsize::new(0);
+            let touched = AtomicUsize::new(0);
+            let items: Vec<usize> = (0..64).collect();
+            run_with(
+                threads,
+                items,
+                || {
+                    inits.fetch_add(1, Ordering::Relaxed);
+                    Vec::<usize>::new() // per-worker arena
+                },
+                |arena, item| {
+                    arena.push(item); // grows only within one worker
+                    touched.fetch_add(1, Ordering::Relaxed);
+                },
+            );
+            let n_inits = inits.load(Ordering::Relaxed);
+            assert!(
+                n_inits >= 1 && n_inits <= threads.max(1),
+                "threads={threads}: {n_inits} states built"
+            );
+            assert_eq!(touched.load(Ordering::Relaxed), 64, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_with_sequential_path_reuses_a_single_state() {
+        // threads = 1 must run inline: exactly one init, items in order
+        let mut seen = Vec::new();
+        {
+            let seen_cell = std::sync::Mutex::new(&mut seen);
+            run_with(
+                1,
+                (0..10).collect::<Vec<usize>>(),
+                || 0usize,
+                |state, item| {
+                    *state += 1;
+                    seen_cell.lock().unwrap().push((item, *state));
+                },
+            );
+        }
+        let want: Vec<(usize, usize)> = (0..10).map(|i| (i, i + 1)).collect();
+        assert_eq!(seen, want);
     }
 
     #[test]

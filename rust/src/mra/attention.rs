@@ -3,11 +3,22 @@
 //! and the dense oracle used by tests and Fig. 8.
 //!
 //! The fast path is factored into a per-head [`Mra2Plan`] (pyramid, Alg. 1
-//! selection, stabilization floors) plus [`mra2_apply_blocks`], which
-//! computes any contiguous range of query blocks independently — every
-//! query block owns its output rows and denominators outright, so the
-//! engine ([`crate::engine`]) can shard one head across workers and still
-//! produce bitwise-identical results to the sequential path.
+//! selection, stabilization floors, **packed K^T/V panels**) plus
+//! [`mra2_apply_blocks`], which computes any contiguous range of query
+//! blocks independently — every query block owns its output rows and
+//! denominators outright, so the engine ([`crate::engine`]) can shard one
+//! head across workers and still produce bitwise-identical results to the
+//! sequential path.
+//!
+//! The compute core runs on the fused micro-kernel layer
+//! ([`crate::tensor::kernel`], DESIGN.md §8): score tiles are outer-product
+//! micro-GEMMs over the plan's packed panels, and the stabilized `exp` + V
+//! aggregation streams through a single pass under per-row online
+//! (running-max) softmax rescaling.  All transient state lives in a
+//! caller-owned [`Mra2Scratch`], so steady-state applications are
+//! allocation-free.  The historical two-pass scalar path is preserved as
+//! [`mra2_apply_blocks_ref`] — the parity reference for tests and
+//! `benches/bench_attention.rs` (<= 1e-5 max abs).
 //!
 //! Both the plan and the oracles support a [`Causality`] mode: in causal
 //! mode Alg. 1 selection is restricted to the lower-triangular block set
@@ -18,7 +29,7 @@
 use crate::mra::matvec;
 use crate::mra::pyramid::Pyramid;
 use crate::mra::select::{construct_j, Scored};
-use crate::tensor::{ops, topk, Mat};
+use crate::tensor::{kernel, ops, topk, Mat};
 
 /// Which components of the approximation are kept (Sec. 5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -145,17 +156,89 @@ pub struct Mra2Plan {
     /// Per-query-block stabilization floor: max low-res score over
     /// non-refined blocks (`-inf` for MRA-2-s and fully refined rows).
     pub mb: Vec<f32>,
+    /// Packed K^T panels, one `(d, b)` transposed tile per key block
+    /// (`kt_panels[y*b*d + l*b + c] = K[y*b + c, l]`), built once and
+    /// reused by every score tile touching block `y` — the operand shape
+    /// that makes [`kernel::score_panel`] a branch-free outer-product.
+    pub kt_panels: Vec<f32>,
+    /// Packed V panels: contiguous `(b, d)` per-block row copies (block `y`
+    /// at `v_panels[y*b*d..]`).  Row-major V is already panel-shaped, so
+    /// this is a byte-identical copy — paid deliberately (one `n*d` memcpy
+    /// per plan, < 1% of the tile flops) so the plan is self-contained:
+    /// [`mra2_apply_blocks`] never reads the caller's K/V buffers, which is
+    /// what lets shards, scratch reuse and the decode engine treat the plan
+    /// as the single read-only operand.
+    pub v_panels: Vec<f32>,
+}
+
+/// Caller-owned scratch arena for [`mra2_apply_blocks`]: one score tile,
+/// the per-row online-softmax state, and the low-res accumulator.  Sized
+/// lazily on first use and reused verbatim afterwards, so steady-state
+/// applications perform **zero heap allocations** (asserted by the
+/// scratch-reuse tests).  Workers keep one scratch each
+/// (`engine::pool::run_with`); a scratch must not be shared across
+/// concurrent applications.
+#[derive(Clone, Debug, Default)]
+pub struct Mra2Scratch {
+    /// One `(b, b)` score tile (the fused pass never holds more).
+    tile: Vec<f32>,
+    /// Per-row running maxes (`b`).
+    rowmax: Vec<f32>,
+    /// Per-row running denominators (`b`).
+    den: Vec<f32>,
+    /// Shared low-res value accumulator (`d`).
+    yacc: Vec<f32>,
+}
+
+impl Mra2Scratch {
+    /// Empty scratch; buffers grow on first application.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scratch pre-sized for `plan` (no growth on the first application).
+    pub fn for_plan(plan: &Mra2Plan) -> Self {
+        let mut s = Self::new();
+        s.ensure(plan.block, plan.d);
+        s
+    }
+
+    fn ensure(&mut self, b: usize, d: usize) {
+        if self.tile.len() < b * b {
+            self.tile.resize(b * b, 0.0);
+        }
+        if self.rowmax.len() < b {
+            self.rowmax.resize(b, 0.0);
+        }
+        if self.den.len() < b {
+            self.den.resize(b, 0.0);
+        }
+        if self.yacc.len() < d {
+            self.yacc.resize(d, 0.0);
+        }
+    }
+
+    /// Total reserved f32 elements across all buffers — the scratch-reuse
+    /// tests assert this does not grow across repeated applications.
+    pub fn heap_elems(&self) -> usize {
+        self.tile.capacity() + self.rowmax.capacity() + self.den.capacity() + self.yacc.capacity()
+    }
 }
 
 impl Mra2Plan {
     /// Workload statistics for one full application of this plan.
+    ///
+    /// `buffer_elems` counts the plan-resident operands (packed panels,
+    /// pooled mats, low-res scores) plus the fused-pass scratch — which is
+    /// a single tile regardless of the budget `m`, the point of the online
+    /// softmax rewrite (the old two-pass path buffered every tile of a
+    /// query block at once).
     pub fn stats(&self, n: usize) -> MraStats {
         let (b, nb, d) = (self.block, self.nb, self.d);
-        let max_tiles = self.per_row.iter().map(Vec::len).max().unwrap_or(0);
         let mut s = MraStats {
             mu_evals: nb * nb + self.tiles * b * b,
             flops: nb * nb * d + 3 * n * d + self.tiles * b * b * (2 * d + 2),
-            buffer_elems: max_tiles * b * b + 3 * nb * d + nb * nb,
+            buffer_elems: (b * b + 2 * b + d) + 2 * n * d + 3 * nb * d + nb * nb,
         };
         if self.variant == Variant::Full {
             for (x, yset) in self.per_row.iter().enumerate() {
@@ -284,6 +367,14 @@ pub fn mra2_plan(
             }
         }
     }
+
+    // --- packed panels: K^T (outer-product operand) + V row copies --------
+    let mut kt_panels = vec![0.0f32; n * d];
+    for (y, panel) in kt_panels.chunks_exact_mut(b * d).enumerate() {
+        kernel::pack_transpose(&k[y * b * d..(y + 1) * b * d], b, d, panel);
+    }
+    let v_panels = v.to_vec();
+
     Mra2Plan {
         block: b,
         nb,
@@ -297,6 +388,8 @@ pub fn mra2_plan(
         s_low,
         vt,
         mb,
+        kt_panels,
+        v_panels,
     }
 }
 
@@ -304,14 +397,109 @@ pub fn mra2_plan(
 /// row-normalized output rows `[x0*b, x1*b)` into `out` (length
 /// `(x1 - x0) * b * d`).
 ///
-/// §Perf: tiles are computed per query block into a single reusable buffer
-/// (no per-tile `Mat` allocations); the two-pass max stabilization happens
-/// within the block's tile set, so peak transient memory is
-/// `O(max_tiles_per_row * b^2)` instead of `O(m * b^2)`.  Every query block
-/// is fully self-contained (scores, denominators, low-res correction and
-/// normalization), which is what makes the range embarrassingly parallel.
-#[allow(clippy::too_many_arguments)]
+/// §Perf (DESIGN.md §8): one **fused pass** per query block — each refined
+/// tile is scored as an outer-product micro-GEMM over the plan's packed
+/// K^T panel ([`kernel::score_panel`]), then immediately exponentiated and
+/// aggregated against the packed V panel under per-row online (running
+/// max) softmax rescaling ([`kernel::softmax_accum_panel`]).  Peak
+/// transient memory is one `b x b` tile regardless of the budget, tile
+/// memory traffic is half the old two-pass schedule, and all transients
+/// live in the caller-owned `scratch`, so steady-state calls are
+/// allocation-free.  Every query block is fully self-contained (scores,
+/// denominators, low-res correction and normalization), which is what
+/// makes the range embarrassingly parallel.
+///
+/// The running max seeds at the stabilization floor `mb[x]`, so the shared
+/// low-res accumulator (anchored at the same floor) rescales per row by
+/// `exp(mb[x] - rowmax)` — every `exp` stays in range exactly as in the
+/// two-pass path.  [`mra2_apply_blocks_ref`] preserves that historical
+/// path as the parity reference (<= 1e-5 max abs; float rounding differs,
+/// the math does not).
 pub fn mra2_apply_blocks(
+    plan: &Mra2Plan,
+    q: &[f32],
+    x0: usize,
+    x1: usize,
+    out: &mut [f32],
+    scratch: &mut Mra2Scratch,
+) {
+    let (b, d, nb) = (plan.block, plan.d, plan.nb);
+    assert!(x0 <= x1 && x1 <= nb, "query-block range {x0}..{x1} out of 0..{nb}");
+    assert_eq!(out.len(), (x1 - x0) * b * d, "out shard size mismatch");
+    let causal = plan.causality == Causality::Causal;
+    scratch.ensure(b, d);
+    for x in x0..x1 {
+        let oblk = &mut out[(x - x0) * b * d..(x - x0 + 1) * b * d];
+        oblk.fill(0.0);
+        let rowmax = &mut scratch.rowmax[..b];
+        rowmax.fill(plan.mb[x]);
+        let den = &mut scratch.den[..b];
+        den.fill(0.0);
+        let qblk = &q[x * b * d..(x + 1) * b * d];
+        let tile = &mut scratch.tile[..b * b];
+        for &y in &plan.per_row[x] {
+            debug_assert!(!causal || y <= x, "causal selection above the diagonal");
+            let kt_panel = &plan.kt_panels[y * b * d..(y + 1) * b * d];
+            kernel::score_panel(qblk, d, kt_panel, b, plan.inv_sqrt_d, tile);
+            if causal && y == x {
+                // refined tile straddling the diagonal: per-row triangular
+                // masking (key j = y*b + c is in the future of query
+                // i = x*b + r exactly when c > r)
+                for r in 0..b {
+                    for t in tile[r * b + r + 1..(r + 1) * b].iter_mut() {
+                        *t = f32::NEG_INFINITY;
+                    }
+                }
+            }
+            let v_panel = &plan.v_panels[y * b * d..(y + 1) * b * d];
+            kernel::softmax_accum_panel(tile, v_panel, b, d, rowmax, den, oblk);
+        }
+        // low-resolution contribution: mu * (block sum of V) per region,
+        // accumulated once at the mb[x] anchor and rescaled per row
+        if plan.variant == Variant::Full {
+            let yacc = &mut scratch.yacc[..d];
+            yacc.fill(0.0);
+            let mut dacc = 0.0f32;
+            let mbx = plan.mb[x];
+            for y in 0..nb {
+                if plan.selected[x * nb + y] {
+                    continue;
+                }
+                // causal: blocks above the diagonal are invisible, and the
+                // diagonal block itself is always refined (coverage rule),
+                // so the causal low-res set is strictly below the diagonal
+                if causal && y >= x {
+                    continue;
+                }
+                let mu = (plan.s_low.get(x, y) - mbx).exp() * b as f32;
+                dacc += mu;
+                kernel::axpy(yacc, plan.vt.row(y), mu);
+            }
+            if dacc > 0.0 {
+                for r in 0..b {
+                    // rowmax >= mb[x] by seeding, so w <= 1
+                    let w = (mbx - rowmax[r]).exp();
+                    den[r] += w * dacc;
+                    kernel::axpy(&mut oblk[r * d..(r + 1) * d], yacc, w);
+                }
+            }
+        }
+        // row normalization (denominators are local to this query block)
+        for r in 0..b {
+            let inv = if den[r] > 0.0 { 1.0 / den[r] } else { 0.0 };
+            kernel::scale(&mut oblk[r * d..(r + 1) * d], inv);
+        }
+    }
+}
+
+/// The historical two-pass scalar path (per-element dots over strided K
+/// rows, block-max stabilization, separate exp + aggregation pass),
+/// preserved verbatim as the parity/throughput reference for
+/// [`mra2_apply_blocks`] — gated <= 1e-5 max abs in tests and
+/// `benches/bench_attention.rs`.  Reads the caller's raw `k`/`v` buffers
+/// and allocates per call; never use it on a hot path.
+#[allow(clippy::too_many_arguments)]
+pub fn mra2_apply_blocks_ref(
     plan: &Mra2Plan,
     q: &[f32],
     k: &[f32],
@@ -427,7 +615,8 @@ pub fn mra2_attention_stats(
     let plan =
         mra2_plan(&q.data, &k.data, &v.data, n, d, block, m, variant, Causality::Bidirectional);
     let mut out = Mat::zeros(n, d);
-    mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut out.data);
+    let mut scratch = Mra2Scratch::for_plan(&plan);
+    mra2_apply_blocks(&plan, &q.data, 0, plan.nb, &mut out.data, &mut scratch);
     let stats = plan.stats(n);
     (out, stats)
 }
@@ -451,7 +640,8 @@ pub fn mra2_attention_causal(
     let (n, d) = (q.rows, q.cols);
     let plan = mra2_plan(&q.data, &k.data, &v.data, n, d, block, m, variant, Causality::Causal);
     let mut out = Mat::zeros(n, d);
-    mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut out.data);
+    let mut scratch = Mra2Scratch::for_plan(&plan);
+    mra2_apply_blocks(&plan, &q.data, 0, plan.nb, &mut out.data, &mut scratch);
     out
 }
 
@@ -497,7 +687,8 @@ pub fn dense_mra2(
         }
     }
     let den = ops::row_sums(&a_hat);
-    let z = ops::div_rows(&a_hat.matmul(v), &den);
+    // A_hat has structural zeros in the sparse variant — sparse-aware matmul
+    let z = ops::div_rows(&a_hat.matmul_sparse(v), &den);
     let _ = d;
     (a_hat, z)
 }
@@ -552,7 +743,8 @@ pub fn dense_mra2_causal(
         }
     }
     let den = ops::row_sums(&a_hat);
-    let z = ops::div_rows(&a_hat.matmul(v), &den);
+    // the whole upper triangle of A_hat is structurally zero in causal mode
+    let z = ops::div_rows(&a_hat.matmul_sparse(v), &den);
     (a_hat, z)
 }
 
@@ -669,12 +861,15 @@ mod tests {
     }
 
     #[test]
-    fn stats_buffer_scales_with_m() {
+    fn stats_flops_scale_with_m_but_buffers_do_not() {
         let (q, k, v) = setup(128, 16, 7);
         let (_, s1) = mra2_attention_stats(&q, &k, &v, 16, 8, Variant::Full);
         let (_, s2) = mra2_attention_stats(&q, &k, &v, 16, 32, Variant::Full);
-        assert!(s2.buffer_elems > s1.buffer_elems);
         assert!(s2.flops > s1.flops);
+        // fused online-softmax pass: one tile of scratch regardless of the
+        // budget (the old two-pass path buffered every tile of a block)
+        assert_eq!(s2.buffer_elems, s1.buffer_elems);
+        assert!(s1.buffer_elems > 0);
     }
 
     #[test]
@@ -861,15 +1056,106 @@ mod tests {
                 variant,
                 Causality::Causal,
             );
+            let mut scratch = Mra2Scratch::new();
             let mut full = vec![0.0f32; 128 * 16];
-            mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut full);
+            mra2_apply_blocks(&plan, &q.data, 0, plan.nb, &mut full, &mut scratch);
             let mut sharded = vec![0.0f32; 128 * 16];
             let rows_per_block = plan.block * plan.d;
             for (x0, x1) in [(0usize, 2usize), (2, 5), (5, 8)] {
                 let shard = &mut sharded[x0 * rows_per_block..x1 * rows_per_block];
-                mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, x0, x1, shard);
+                // fresh scratch per shard: scratch state must never leak
+                mra2_apply_blocks(&plan, &q.data, x0, x1, shard, &mut Mra2Scratch::new());
             }
             assert_eq!(full, sharded, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn scratch_is_reused_with_zero_growth_and_identical_results() {
+        // satellite gate: a second application of the same plan must not
+        // grow the scratch arena (steady-state calls are allocation-free)
+        // and must produce bit-identical output
+        let (q, k, v) = setup(128, 16, 20);
+        for causality in [Causality::Bidirectional, Causality::Causal] {
+            let plan = mra2_plan(
+                &q.data,
+                &k.data,
+                &v.data,
+                128,
+                16,
+                16,
+                12,
+                Variant::Full,
+                causality,
+            );
+            let mut scratch = Mra2Scratch::new();
+            let mut out1 = vec![0.0f32; 128 * 16];
+            mra2_apply_blocks(&plan, &q.data, 0, plan.nb, &mut out1, &mut scratch);
+            let footprint = scratch.heap_elems();
+            assert!(footprint > 0, "first call must size the arena");
+            let mut out2 = vec![0.0f32; 128 * 16];
+            mra2_apply_blocks(&plan, &q.data, 0, plan.nb, &mut out2, &mut scratch);
+            assert_eq!(
+                scratch.heap_elems(),
+                footprint,
+                "{causality:?}: steady-state apply grew the scratch"
+            );
+            assert_eq!(out1, out2, "{causality:?}: scratch reuse changed results");
+        }
+        // pre-sized scratch never grows at all
+        let plan = mra2_plan(
+            &q.data,
+            &k.data,
+            &v.data,
+            128,
+            16,
+            16,
+            12,
+            Variant::Full,
+            Causality::Bidirectional,
+        );
+        let mut scratch = Mra2Scratch::for_plan(&plan);
+        let before = scratch.heap_elems();
+        let mut out = vec![0.0f32; 128 * 16];
+        mra2_apply_blocks(&plan, &q.data, 0, plan.nb, &mut out, &mut scratch);
+        assert_eq!(scratch.heap_elems(), before, "for_plan scratch grew on first use");
+    }
+
+    #[test]
+    fn fused_apply_matches_scalar_reference_within_1e5() {
+        // the fused online-softmax path vs the preserved two-pass scalar
+        // reference: same math, different float rounding — <= 1e-5 max abs
+        let (q, k, v) = setup(128, 16, 21);
+        for causality in [Causality::Bidirectional, Causality::Causal] {
+            for variant in [Variant::Full, Variant::Sparse] {
+                for m in [2usize, 8, 24] {
+                    let plan = mra2_plan(
+                        &q.data, &k.data, &v.data, 128, 16, 16, m, variant, causality,
+                    );
+                    let mut fused = vec![0.0f32; 128 * 16];
+                    mra2_apply_blocks(
+                        &plan,
+                        &q.data,
+                        0,
+                        plan.nb,
+                        &mut fused,
+                        &mut Mra2Scratch::new(),
+                    );
+                    let mut reference = vec![0.0f32; 128 * 16];
+                    mra2_apply_blocks_ref(
+                        &plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut reference,
+                    );
+                    let max_abs = fused
+                        .iter()
+                        .zip(&reference)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(
+                        max_abs <= 1e-5,
+                        "{causality:?} {variant:?} m={m}: max abs {max_abs}"
+                    );
+                }
+            }
         }
     }
 
@@ -890,13 +1176,15 @@ mod tests {
                 variant,
                 Causality::Bidirectional,
             );
+            let mut scratch = Mra2Scratch::new();
             let mut full = vec![0.0f32; 128 * 16];
-            mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, 0, plan.nb, &mut full);
+            mra2_apply_blocks(&plan, &q.data, 0, plan.nb, &mut full, &mut scratch);
             let mut sharded = vec![0.0f32; 128 * 16];
             let rows_per_block = plan.block * plan.d;
             for (x0, x1) in [(0usize, 3usize), (3, 4), (4, 8)] {
                 let shard = &mut sharded[x0 * rows_per_block..x1 * rows_per_block];
-                mra2_apply_blocks(&plan, &q.data, &k.data, &v.data, x0, x1, shard);
+                // one reused scratch across shards: same bits either way
+                mra2_apply_blocks(&plan, &q.data, x0, x1, shard, &mut scratch);
             }
             assert_eq!(full, sharded, "{variant:?}");
         }

@@ -19,9 +19,9 @@ pub mod select;
 pub mod theory;
 
 pub use attention::{
-    dense_mra2, dense_mra2_causal, mra2_apply_blocks, mra2_attention, mra2_attention_causal,
-    mra2_attention_stats, mra2_plan, mra_attention, Causality, Mra2Plan, MraConfig, MraStats,
-    Variant,
+    dense_mra2, dense_mra2_causal, mra2_apply_blocks, mra2_apply_blocks_ref, mra2_attention,
+    mra2_attention_causal, mra2_attention_stats, mra2_plan, mra_attention, Causality, Mra2Plan,
+    Mra2Scratch, MraConfig, MraStats, Variant,
 };
 pub use frame::Block;
 pub use select::Selection;

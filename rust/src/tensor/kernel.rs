@@ -1,0 +1,365 @@
+//! Fixed-width f32 micro-kernels for the attention hot paths.
+//!
+//! Everything here is written so rustc/LLVM auto-vectorizes it — fixed
+//! 8-lane chunk loops with scalar tails, `d`-specialized dispatch for the
+//! common head widths (d ∈ {32, 64}) that exposes the trip count to the
+//! optimizer, and branch-free inner loops (no data-dependent skips, which
+//! defeat vectorization — see `Mat::matmul_sparse` for the one deliberate
+//! exception).  No `unsafe`, no intrinsics: `benches/bench_attention.rs`
+//! verifies the vectorized throughput empirically and gates parity against
+//! the scalar reference path.
+//!
+//! The tile kernels operate on **packed panels** (DESIGN.md §8):
+//!
+//! * a K^T panel is one key block transposed to `(d, width)` so the score
+//!   tile `Q_blk @ K_blk^T` becomes `width`-wide contiguous rank-1 updates
+//!   (an outer-product micro-GEMM, no horizontal reductions);
+//! * a V panel is the block's rows `(width, d)` contiguous, so value
+//!   aggregation is a `d`-wide AXPY per key.
+//!
+//! [`softmax_accum_panel`] fuses the stabilized `exp` with the V
+//! aggregation under per-row *online* (running-max) softmax rescaling —
+//! FlashAttention's recurrence — so one pass over each score tile replaces
+//! the old two-pass (materialize-then-exp) schedule.
+
+/// Vector width the lane loops are unrolled to (f32 lanes per chunk).
+pub const LANES: usize = 8;
+
+/// Core 8-lane dot product: 8 partial accumulators combined pairwise, then
+/// a scalar tail — the exact float sequence of the historical `mat::dot`.
+#[inline(always)]
+fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let i = c * LANES;
+        let (x, y) = (&a[i..i + LANES], &b[i..i + LANES]);
+        for l in 0..LANES {
+            acc[l] += x[l] * y[l];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * LANES..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Dot product of two equal-length slices, with `d`-specialized fast paths
+/// for the common head widths: dispatching on a constant-length subslice
+/// lets LLVM fully unroll and vectorize the lane loop.  Every path computes
+/// the same float sequence, so the dispatch is bitwise-invisible.
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match a.len() {
+        32 => dot_lanes(&a[..32], &b[..32]),
+        64 => dot_lanes(&a[..64], &b[..64]),
+        _ => dot_lanes(a, b),
+    }
+}
+
+#[inline(always)]
+fn axpy_lanes(out: &mut [f32], x: &[f32], alpha: f32) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += alpha * v;
+    }
+}
+
+/// `out += alpha * x` (branch-free; the zip loop auto-vectorizes), with the
+/// same width-specialized dispatch as [`dot`].
+#[inline(always)]
+pub fn axpy(out: &mut [f32], x: &[f32], alpha: f32) {
+    debug_assert_eq!(out.len(), x.len());
+    match out.len() {
+        32 => axpy_lanes(&mut out[..32], &x[..32], alpha),
+        64 => axpy_lanes(&mut out[..64], &x[..64], alpha),
+        _ => axpy_lanes(out, x, alpha),
+    }
+}
+
+/// `out *= alpha` in place.
+#[inline(always)]
+pub fn scale(out: &mut [f32], alpha: f32) {
+    for o in out.iter_mut() {
+        *o *= alpha;
+    }
+}
+
+/// Pack `rows` consecutive `d`-wide rows of `src` into a transposed
+/// `(d, rows)` panel: `panel[l * rows + r] = src[r * d + l]`.  A pure
+/// permutation (bitwise-exact), built once per key block and reused by
+/// every score tile touching that block.
+pub fn pack_transpose(src: &[f32], rows: usize, d: usize, panel: &mut [f32]) {
+    debug_assert_eq!(src.len(), rows * d, "pack_transpose src shape");
+    debug_assert_eq!(panel.len(), rows * d, "pack_transpose panel shape");
+    for (r, row) in src.chunks_exact(d).enumerate() {
+        for (l, &v) in row.iter().enumerate() {
+            panel[l * rows + r] = v;
+        }
+    }
+}
+
+/// Score tile against a packed K^T panel:
+/// `tile[r * width + c] = scale * sum_l q[r * d + l] * kt_panel[l * width + c]`
+/// for every `d`-wide query row in `q`.
+///
+/// Outer-product formulation: the inner loop is a contiguous `width`-wide
+/// AXPY (rank-1 update), so there is no horizontal reduction anywhere —
+/// the shape LLVM vectorizes best at the block widths we use (16/32).
+pub fn score_panel(
+    q: &[f32],
+    d: usize,
+    kt_panel: &[f32],
+    width: usize,
+    scale_by: f32,
+    tile: &mut [f32],
+) {
+    let rows = q.len() / d;
+    debug_assert_eq!(q.len(), rows * d, "score_panel q shape");
+    debug_assert_eq!(kt_panel.len(), width * d, "score_panel panel shape");
+    debug_assert_eq!(tile.len(), rows * width, "score_panel tile shape");
+    for (qrow, trow) in q.chunks_exact(d).zip(tile.chunks_exact_mut(width)) {
+        trow.fill(0.0);
+        for (l, &ql) in qrow.iter().enumerate() {
+            axpy(trow, &kt_panel[l * width..(l + 1) * width], ql);
+        }
+        scale(trow, scale_by);
+    }
+}
+
+/// Fused stabilized-exp + value aggregation of one `(rows, width)` score
+/// tile against a packed `(width, d)` V panel, under per-row **online
+/// softmax**: `m` holds each row's running max, `den` its running
+/// denominator, and `out` its unnormalized `(rows, d)` accumulator.  When a
+/// tile raises a row's max, the row's previous `den`/`out` contributions
+/// are rescaled by `exp(m_old - m_new)` — the FlashAttention recurrence —
+/// so tiles stream through in a single pass.
+///
+/// Seeding: initialize `m` to the row's stabilization floor (or `-inf`
+/// with no floor), `den`/`out` to zero.  `exp(-inf) == 0`, so the first
+/// finite tile rescales the empty accumulators by zero harmlessly.  Score
+/// entries of `-inf` (causal masking) contribute exactly zero.  A tile row
+/// that is entirely `-inf` while `m` is still `-inf` is skipped outright
+/// (guards the `-inf - -inf = NaN` corner; cannot happen for MRA-2's
+/// diagonal-coverage tiles, where every row has at least one live key).
+pub fn softmax_accum_panel(
+    tile: &[f32],
+    v_panel: &[f32],
+    width: usize,
+    d: usize,
+    m: &mut [f32],
+    den: &mut [f32],
+    out: &mut [f32],
+) {
+    let rows = m.len();
+    debug_assert_eq!(tile.len(), rows * width, "softmax_accum tile shape");
+    debug_assert_eq!(v_panel.len(), width * d, "softmax_accum panel shape");
+    debug_assert_eq!(den.len(), rows, "softmax_accum den len");
+    debug_assert_eq!(out.len(), rows * d, "softmax_accum out shape");
+    for r in 0..rows {
+        let trow = &tile[r * width..(r + 1) * width];
+        let mut tmax = f32::NEG_INFINITY;
+        for &t in trow {
+            if t > tmax {
+                tmax = t;
+            }
+        }
+        if tmax == f32::NEG_INFINITY {
+            continue; // fully masked row: no contribution
+        }
+        let orow = &mut out[r * d..(r + 1) * d];
+        if tmax > m[r] {
+            let alpha = (m[r] - tmax).exp();
+            m[r] = tmax;
+            den[r] *= alpha;
+            scale(orow, alpha);
+        }
+        let mr = m[r];
+        let mut dsum = 0.0f32;
+        for (&t, vrow) in trow.iter().zip(v_panel.chunks_exact(d)) {
+            let a = (t - mr).exp();
+            dsum += a;
+            axpy(orow, vrow, a);
+        }
+        den[r] += dsum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn dot_matches_naive_at_every_width() {
+        let mut rng = Rng::new(1);
+        for len in [0usize, 1, 7, 8, 9, 31, 32, 33, 63, 64, 65, 100] {
+            let a = randv(len, &mut rng);
+            let b = randv(len, &mut rng);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3, "len={len}");
+        }
+    }
+
+    #[test]
+    fn dot_specialized_paths_are_bitwise_generic() {
+        // the 32/64 dispatch must not change a single bit
+        let mut rng = Rng::new(2);
+        for len in [32usize, 64] {
+            let a = randv(len, &mut rng);
+            let b = randv(len, &mut rng);
+            assert_eq!(dot(&a, &b), dot_lanes(&a, &b), "len={len}");
+        }
+    }
+
+    #[test]
+    fn axpy_and_scale_basics() {
+        let mut rng = Rng::new(3);
+        for len in [1usize, 5, 32, 64, 77] {
+            let x = randv(len, &mut rng);
+            let mut out = randv(len, &mut rng);
+            let want: Vec<f32> = out.iter().zip(&x).map(|(o, v)| o + 0.5 * v).collect();
+            axpy(&mut out, &x, 0.5);
+            for (g, w) in out.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-6);
+            }
+            scale(&mut out, 2.0);
+            for (g, w) in out.iter().zip(&want) {
+                assert!((g - 2.0 * w).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_transpose_is_the_transpose() {
+        let mut rng = Rng::new(4);
+        let (rows, d) = (5usize, 7usize);
+        let src = randv(rows * d, &mut rng);
+        let mut panel = vec![0.0f32; rows * d];
+        pack_transpose(&src, rows, d, &mut panel);
+        for r in 0..rows {
+            for l in 0..d {
+                assert_eq!(panel[l * rows + r], src[r * d + l]);
+            }
+        }
+    }
+
+    #[test]
+    fn score_panel_matches_per_element_dots() {
+        let mut rng = Rng::new(5);
+        for (rows, width, d) in [(4usize, 8usize, 16usize), (3, 5, 7), (1, 32, 64)] {
+            let q = randv(rows * d, &mut rng);
+            let kblk = randv(width * d, &mut rng);
+            let mut panel = vec![0.0f32; width * d];
+            pack_transpose(&kblk, width, d, &mut panel);
+            let mut tile = vec![0.0f32; rows * width];
+            let s = 0.25f32;
+            score_panel(&q, d, &panel, width, s, &mut tile);
+            for r in 0..rows {
+                for c in 0..width {
+                    let want = dot(&q[r * d..(r + 1) * d], &kblk[c * d..(c + 1) * d]) * s;
+                    let got = tile[r * width + c];
+                    assert!((got - want).abs() < 1e-4, "({r},{c}): {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_accum_matches_two_pass_reference() {
+        // stream three tiles through the online recurrence; compare against
+        // a global-max two-pass softmax over the concatenated scores
+        let mut rng = Rng::new(6);
+        let (rows, width, d, tiles) = (4usize, 8usize, 16usize, 3usize);
+        let all_scores: Vec<Vec<f32>> = (0..tiles).map(|_| randv(rows * width, &mut rng)).collect();
+        let all_v: Vec<Vec<f32>> = (0..tiles).map(|_| randv(width * d, &mut rng)).collect();
+
+        let mut m = vec![f32::NEG_INFINITY; rows];
+        let mut den = vec![0.0f32; rows];
+        let mut out = vec![0.0f32; rows * d];
+        for (t, v) in all_scores.iter().zip(&all_v) {
+            softmax_accum_panel(t, v, width, d, &mut m, &mut den, &mut out);
+        }
+
+        for r in 0..rows {
+            let mut gmax = f32::NEG_INFINITY;
+            for t in &all_scores {
+                for c in 0..width {
+                    gmax = gmax.max(t[r * width + c]);
+                }
+            }
+            let mut rden = 0.0f32;
+            let mut rout = vec![0.0f32; d];
+            for (t, v) in all_scores.iter().zip(&all_v) {
+                for c in 0..width {
+                    let a = (t[r * width + c] - gmax).exp();
+                    rden += a;
+                    for (o, &vv) in rout.iter_mut().zip(&v[c * d..(c + 1) * d]) {
+                        *o += a * vv;
+                    }
+                }
+            }
+            assert!((den[r] - rden).abs() < 1e-4 * rden.abs().max(1.0), "row {r} den");
+            for (c, (&g, &w)) in out[r * d..(r + 1) * d].iter().zip(&rout).enumerate() {
+                assert!((g - w).abs() < 1e-4 * w.abs().max(1.0), "({r},{c}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_accum_masked_entries_contribute_nothing() {
+        let mut rng = Rng::new(7);
+        let (width, d) = (4usize, 8usize);
+        let v = randv(width * d, &mut rng);
+        // row with a -inf (masked) entry == row over only the live keys
+        let tile = vec![1.0f32, f32::NEG_INFINITY, -0.5, 0.25];
+        let live = vec![1.0f32, -0.5, 0.25];
+        let mut live_v = v[..d].to_vec();
+        live_v.extend_from_slice(&v[2 * d..4 * d]);
+
+        let (mut m1, mut den1, mut out1) = (vec![f32::NEG_INFINITY], vec![0.0f32], vec![0.0f32; d]);
+        softmax_accum_panel(&tile, &v, width, d, &mut m1, &mut den1, &mut out1);
+        let (mut m2, mut den2, mut out2) = (vec![f32::NEG_INFINITY], vec![0.0f32], vec![0.0f32; d]);
+        softmax_accum_panel(&live, &live_v, 3, d, &mut m2, &mut den2, &mut out2);
+        assert_eq!(m1, m2);
+        assert!((den1[0] - den2[0]).abs() < 1e-6);
+        for (a, b) in out1.iter().zip(&out2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_accum_fully_masked_row_is_skipped() {
+        let d = 4usize;
+        let v = vec![1.0f32; d];
+        let tile = vec![f32::NEG_INFINITY];
+        let (mut m, mut den, mut out) = (vec![f32::NEG_INFINITY], vec![0.0f32], vec![0.0f32; d]);
+        softmax_accum_panel(&tile, &v, 1, d, &mut m, &mut den, &mut out);
+        assert_eq!(m[0], f32::NEG_INFINITY);
+        assert_eq!(den[0], 0.0);
+        assert!(out.iter().all(|&x| x == 0.0), "no NaN leakage: {out:?}");
+    }
+
+    #[test]
+    fn online_rescale_handles_ascending_and_descending_maxes() {
+        // tiles arriving with increasing then decreasing maxes hit both the
+        // rescale branch and the no-rescale branch
+        let d = 2usize;
+        let v = vec![1.0f32, 2.0];
+        let (mut m, mut den, mut out) = (vec![0.0f32], vec![0.0f32], vec![0.0f32; d]);
+        for &s in &[1.0f32, 5.0, 3.0] {
+            softmax_accum_panel(&[s], &v, 1, d, &mut m, &mut den, &mut out);
+        }
+        let want_den: f32 = [1.0f32, 5.0, 3.0].iter().map(|s| (s - 5.0f32).exp()).sum();
+        assert!((den[0] - want_den).abs() < 1e-6);
+        assert!((out[0] - want_den * 1.0).abs() < 1e-5);
+        assert!((out[1] - want_den * 2.0).abs() < 1e-5);
+        assert_eq!(m[0], 5.0);
+    }
+}

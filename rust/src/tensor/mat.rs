@@ -1,5 +1,12 @@
 //! Row-major `f32` matrix with a cache-tiled matmul hot path.
+//!
+//! The dense inner loops run through the [`crate::tensor::kernel`] layer
+//! (branch-free AXPY / lane-unrolled dot) so LLVM auto-vectorizes them;
+//! structurally sparse left operands get the dedicated
+//! [`Mat::matmul_sparse`] entry point instead of a data-dependent skip in
+//! the dense path (DESIGN.md §8).
 
+use crate::tensor::kernel;
 use crate::tensor::rng::Rng;
 
 /// Dense row-major matrix of `f32`.
@@ -89,15 +96,36 @@ impl Mat {
         t
     }
 
-    /// `self @ other` — ikj loop order (B rows stream through cache).
+    /// `self @ other` — ikj loop order (B rows stream through cache), dense:
+    /// every rank-1 update is a branch-free kernel AXPY.  The old
+    /// `if a == 0.0 { continue }` skip lives in [`Mat::matmul_sparse`] now —
+    /// a data-dependent branch in the innermost loop defeats
+    /// auto-vectorization for dense operands.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, kk, n) = (self.rows, self.cols, other.cols);
+        let (m, n) = (self.rows, other.cols);
         let mut out = Mat::zeros(m, n);
         for i in 0..m {
-            let a_row = self.row(i);
             let o_row = &mut out.data[i * n..(i + 1) * n];
-            for (k, &a) in a_row.iter().enumerate().take(kk) {
+            for (k, &a) in self.row(i).iter().enumerate() {
+                kernel::axpy(o_row, &other.data[k * n..(k + 1) * n], a);
+            }
+        }
+        out
+    }
+
+    /// `self @ other` skipping exact-zero left-operand entries — the
+    /// sparse-aware entry point for structurally sparse `A` (masked score
+    /// matrices, the block oracles' `A_hat`).  For finite operands the
+    /// result is bitwise identical to [`Mat::matmul`]; the zero-skip only
+    /// pays off when whole runs of `A[i, k]` are zero.
+    pub fn matmul_sparse(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, n) = (self.rows, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (k, &a) in self.row(i).iter().enumerate() {
                 if a == 0.0 {
                     continue;
                 }
@@ -186,27 +214,11 @@ impl Mat {
     }
 }
 
-/// Dot product of two equal-length slices (8-lane unrolled — the single
-/// hottest scalar loop in the CPU benches; see EXPERIMENTS.md §Perf).
-#[inline(always)]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let mut acc = [0.0f32; 8];
-    for c in 0..chunks {
-        let i = c * 8;
-        let (x, y) = (&a[i..i + 8], &b[i..i + 8]);
-        for l in 0..8 {
-            acc[l] += x[l] * y[l];
-        }
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for i in chunks * 8..n {
-        s += a[i] * b[i];
-    }
-    s
-}
+/// Dot product of two equal-length slices — re-exported from the
+/// micro-kernel layer ([`crate::tensor::kernel::dot`]), which adds
+/// `d`-specialized fast paths for d ∈ {32, 64} while computing the exact
+/// historical float sequence.
+pub use crate::tensor::kernel::dot;
 
 #[cfg(test)]
 mod tests {
@@ -247,6 +259,24 @@ mod tests {
         let mut rng = Rng::new(3);
         let a = Mat::randn(4, 11, 1.0, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matmul_sparse_matches_dense_matmul() {
+        // regression for the satellite: the dense path dropped the
+        // zero-skip branch; the sparse-aware entry point must stay
+        // result-identical on structurally sparse left operands
+        let mut rng = Rng::new(9);
+        let mut a = Mat::randn(6, 9, 1.0, &mut rng);
+        for i in 0..6 {
+            for j in 0..9 {
+                if (i + j) % 3 != 0 {
+                    a.set(i, j, 0.0);
+                }
+            }
+        }
+        let b = Mat::randn(9, 4, 1.0, &mut rng);
+        assert_eq!(a.matmul(&b), a.matmul_sparse(&b));
     }
 
     #[test]

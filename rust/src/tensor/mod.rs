@@ -3,9 +3,12 @@
 //! No external linear-algebra crates are available in the offline build, so
 //! everything the coordinator, the MRA core, and the baselines need is
 //! implemented here from scratch: a row-major matrix type with a cache-tiled
-//! matmul, elementwise/reduction ops, a deterministic PRNG, randomized
-//! truncated SVD, and partial top-k selection.
+//! matmul, the vectorization-friendly micro-kernel layer ([`kernel`] —
+//! lane-unrolled dot/AXPY, packed-panel score tiles, fused online-softmax
+//! accumulation; DESIGN.md §8), elementwise/reduction ops, a deterministic
+//! PRNG, randomized truncated SVD, and partial top-k selection.
 
+pub mod kernel;
 pub mod mat;
 pub mod ops;
 pub mod rng;

@@ -1,5 +1,6 @@
 //! Elementwise / reduction operations shared by the MRA core and baselines.
 
+use crate::tensor::kernel;
 use crate::tensor::Mat;
 
 /// Row-wise softmax (numerically stabilized).
@@ -37,9 +38,7 @@ pub fn div_rows(m: &Mat, d: &[f32]) -> Mat {
     let mut out = m.clone();
     for i in 0..m.rows {
         let inv = 1.0 / d[i].max(1e-30);
-        for v in out.row_mut(i) {
-            *v *= inv;
-        }
+        kernel::scale(out.row_mut(i), inv);
     }
     out
 }
@@ -87,14 +86,11 @@ pub fn pool_rows_slice(x: &[f32], rows: usize, cols: usize, b: usize) -> Mat {
     for g in 0..nb {
         let orow = out.row_mut(g);
         for r in 0..b {
-            let xrow = &x[(g * b + r) * cols..(g * b + r + 1) * cols];
-            for (o, &v) in orow.iter_mut().zip(xrow) {
-                *o += v;
-            }
+            // alpha = 1 AXPY: bitwise identical to the historical `+= v`
+            // loop (1.0 * v == v), so the decode pyramid invariants hold
+            kernel::axpy(orow, &x[(g * b + r) * cols..(g * b + r + 1) * cols], 1.0);
         }
-        for o in orow.iter_mut() {
-            *o *= inv;
-        }
+        kernel::scale(orow, inv);
     }
     out
 }

@@ -6,12 +6,24 @@
 /// `O(n)` average via quickselect on a scratch index vector, then only the
 /// selected prefix is sorted (`O(k log k)`).
 pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let mut idx = Vec::new();
+    top_k_into(values, k, &mut idx);
+    idx
+}
+
+/// [`top_k_indices`] into a caller-owned index buffer: `idx` is cleared and
+/// refilled, so once its capacity covers `values.len()` repeated calls are
+/// allocation-free — the form the per-token decode hot path
+/// (`engine::decode`) uses.  Result order is identical to
+/// [`top_k_indices`].
+pub fn top_k_into(values: &[f32], k: usize, idx: &mut Vec<usize>) {
     let n = values.len();
     let k = k.min(n);
+    idx.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
-    let mut idx: Vec<usize> = (0..n).collect();
+    idx.extend(0..n);
     if k < n {
         // descending comparator: largest k to the front
         idx.select_nth_unstable_by(k - 1, |&a, &b| {
@@ -28,7 +40,6 @@ pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.cmp(&b))
     });
-    idx
 }
 
 /// The `k`-th largest value (1-based: `k = 1` is the max) — the
@@ -79,6 +90,21 @@ mod tests {
                 v[b].partial_cmp(&v[a]).unwrap().then(a.cmp(&b))
             });
             assert_eq!(got, all[..17].to_vec());
+        }
+    }
+
+    #[test]
+    fn top_k_into_reuses_capacity_and_matches() {
+        let mut rng = Rng::new(11);
+        let v: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let mut buf = Vec::new();
+        top_k_into(&v, 7, &mut buf);
+        assert_eq!(buf, top_k_indices(&v, 7));
+        let cap = buf.capacity();
+        for k in [0usize, 3, 7, 64] {
+            top_k_into(&v, k, &mut buf);
+            assert_eq!(buf, top_k_indices(&v, k), "k={k}");
+            assert_eq!(buf.capacity(), cap, "k={k}: buffer regrew");
         }
     }
 

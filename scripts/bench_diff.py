@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Compare a freshly produced BENCH_*.json perf artifact against a
+committed baseline and fail on throughput regressions.
+
+Usage:
+    bench_diff.py BASELINE.json CURRENT.json [--max-regression 0.20]
+                  [--fields f1,f2,...]
+
+Both files use the repo's BenchJson schema:
+    {"bench": "<name>", "rows": [{<identity and metric fields>}, ...]}
+
+Rows are keyed by their identity fields (everything that is not a known
+metric — e.g. impl/kernel, n, b, threads).  For every key present in both
+files, each tracked higher-is-better metric present in *both* rows is
+compared; the gate fails (exit 1) when
+    current < baseline * (1 - max_regression).
+
+The committed baseline may carry only machine-portable metrics (e.g.
+`speedup_vs_scalar`) — absolute tokens/sec are only compared when the
+baseline records them (i.e. it was refreshed from a CI artifact of the
+same runner class; see EXPERIMENTS.md §Attention kernel bench).
+
+Exit codes: 0 ok, 1 regression, 2 usage/schema error (including zero
+comparable rows — a silent no-op gate would be worse than a loud one).
+"""
+
+import argparse
+import json
+import sys
+
+# higher-is-better metrics the gate tracks; everything else (mean_ms,
+# percentiles, ...) is ignored for regression purposes
+TRACKED = (
+    "tokens_per_sec",
+    "heads_per_sec",
+    "gflops",
+    "speedup_vs_scalar",
+    "speedup_vs_exact",
+)
+# fields that are metrics (never part of a row's identity key)
+METRIC_FIELDS = set(TRACKED) | {
+    "mean_ms",
+    "p50_ms",
+    "p95_ms",
+    "min_ms",
+    "us_per_token",
+}
+
+
+def load_rows(path):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"bench_diff: cannot read {path}: {e}")
+    if "rows" not in doc or not isinstance(doc["rows"], list):
+        sys.exit(f"bench_diff: {path} has no 'rows' list")
+    keyed = {}
+    for row in doc["rows"]:
+        key = tuple(sorted((k, str(v)) for k, v in row.items() if k not in METRIC_FIELDS))
+        keyed[key] = row
+    return doc.get("bench", "?"), keyed
+
+
+def fmt_key(key):
+    return " ".join(f"{k}={v}" for k, v in key)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.20,
+        help="allowed fractional drop per metric (default 0.20 = 20%%)",
+    )
+    ap.add_argument(
+        "--fields",
+        default=",".join(TRACKED),
+        help="comma-separated metric fields to compare (default: %(default)s)",
+    )
+    ap.add_argument(
+        "--allow-missing",
+        action="store_true",
+        help="tolerate baseline rows absent from the current artifact "
+        "(default: missing rows fail the gate — silent sweep drift must not "
+        "shrink coverage)",
+    )
+    args = ap.parse_args()
+    fields = [f.strip() for f in args.fields.split(",") if f.strip()]
+
+    bench_b, base = load_rows(args.baseline)
+    bench_c, cur = load_rows(args.current)
+    if bench_b != bench_c:
+        print(f"bench_diff: warning: bench names differ ({bench_b!r} vs {bench_c!r})")
+
+    compared = 0
+    regressions = []
+    missing = []
+    for key, brow in sorted(base.items()):
+        crow = cur.get(key)
+        if crow is None:
+            missing.append(key)
+            print(f"bench_diff: baseline row missing from current: {fmt_key(key)}")
+            continue
+        for f in fields:
+            if f not in brow or f not in crow:
+                continue
+            try:
+                b, c = float(brow[f]), float(crow[f])
+            except (TypeError, ValueError):
+                sys.exit(f"bench_diff: non-numeric {f} in row {fmt_key(key)}")
+            compared += 1
+            floor = b * (1.0 - args.max_regression)
+            status = "ok"
+            if b > 0 and c < floor:
+                status = "REGRESSION"
+                regressions.append((key, f, b, c))
+            print(
+                f"  {fmt_key(key)}  {f}: baseline {b:.3f} -> current {c:.3f} "
+                f"(floor {floor:.3f}) {status}"
+            )
+
+    if compared == 0:
+        sys.exit(
+            "bench_diff: no comparable (row, metric) pairs between "
+            f"{args.baseline} and {args.current} — key or schema mismatch"
+        )
+    if missing and not args.allow_missing:
+        print(
+            f"\nbench_diff: {len(missing)} baseline row(s) missing from the "
+            "current artifact — the bench sweep shrank (update the committed "
+            "baseline deliberately, or pass --allow-missing):"
+        )
+        for key in missing:
+            print(f"  {fmt_key(key)}")
+        sys.exit(1)
+    if regressions:
+        print(
+            f"\nbench_diff: {len(regressions)} metric(s) regressed more than "
+            f"{args.max_regression:.0%}:"
+        )
+        for key, f, b, c in regressions:
+            print(f"  {fmt_key(key)}  {f}: {b:.3f} -> {c:.3f} ({c / b - 1.0:+.1%})")
+        sys.exit(1)
+    print(f"\nbench_diff: OK ({compared} metric comparisons within {args.max_regression:.0%})")
+
+
+if __name__ == "__main__":
+    main()
