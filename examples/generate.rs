@@ -1,13 +1,17 @@
-//! Autoregressive generation demo: greedy decode over the causal MRA-2
-//! incremental engine (per-(layer, head) KV caches, DESIGN.md §7),
-//! streaming tokens as they are produced, then the same prompt through the
-//! serving path (`Server::start_native_lm` + `Server::generate`) to show
-//! generation requests riding the dynamic batcher.
+//! Autoregressive generation demo on the session API: greedy decode over
+//! the causal MRA-2 incremental engine (paged per-(layer, head) KV caches,
+//! DESIGN.md §7/§9), streaming tokens as they are produced.  The same
+//! prompt is then generated a *second* time against the same radix prefix
+//! cache — the run must report a cache hit (the block-aligned prompt
+//! prefix served from physically shared pages) and produce the identical
+//! token stream.  Finally the prompt rides the serving path
+//! (`Server::start_native_lm_sessions` + `Server::generate`) to show
+//! generation requests flowing through the continuous-batching scheduler.
 //!
 //! Runs entirely on the native CPU path — no artifacts required.
 //!
 //! ```bash
-//! cargo run --release --example generate -- --prompt-len 16 --new 32
+//! cargo run --release --example generate -- --prompt-len 48 --new 32
 //! cargo run --release --example generate -- --model lm_mra2_n256_d128_l2_h4_v512
 //! ```
 
@@ -15,7 +19,7 @@ use std::io::Write;
 
 use anyhow::Result;
 use mra::cli::Args;
-use mra::config::ServeConfig;
+use mra::config::{ServeConfig, SessionConfig};
 use mra::coordinator::{NativeLm, NativeMlmConfig, Server};
 use mra::data::{Corpus, CorpusConfig};
 use mra::engine::pool;
@@ -23,7 +27,7 @@ use mra::engine::pool;
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let model = args.str_or("model", "lm_mra2_n128_d128_l2_h2_v512");
-    let prompt_len = args.usize_or("prompt-len", 16)?.max(1);
+    let prompt_len = args.usize_or("prompt-len", 48)?.max(1);
     let max_new = args.usize_or("new", 32)?.max(1);
     let threads = args.usize_or("threads", pool::default_threads())?;
 
@@ -54,36 +58,57 @@ fn main() -> Result<()> {
     }
     println!();
 
+    // one shared page pool + radix prefix cache for both runs
+    let kv_pool = lm.new_page_pool(4096);
+    let mut cache = lm.new_radix_cache();
+
     print!("stream :");
     let t0 = std::time::Instant::now();
-    // the first callback fires right after prefill, before any decode
-    // step for generated tokens — split the timing there so tokens/s
-    // measures decode only (consistent with bench_decode)
-    let mut t_first = None;
-    let toks = lm.generate_with(&prompt, max_new, |_, tok| {
-        if t_first.is_none() {
-            t_first = Some(std::time::Instant::now());
-        }
+    let mut session = lm.new_session(&prompt, &kv_pool, Some(&mut cache))?;
+    let t_prefill = std::time::Instant::now();
+    let mut toks = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let tok = lm.session_step(&mut session)?;
+        toks.push(tok);
         print!(" {tok}");
         let _ = std::io::stdout().flush();
-    })?;
-    let t_end = std::time::Instant::now();
-    let t_first = t_first.unwrap_or(t_end);
-    let prefill_ms = t_first.duration_since(t0).as_secs_f64() * 1e3;
-    let decode_s = t_end.duration_since(t_first).as_secs_f64();
-    let decode_steps = toks.len().saturating_sub(1);
-    print!(
-        "\n{} tokens (prefill {} tokens in {prefill_ms:.1} ms",
-        toks.len(),
-        prompt_len
-    );
-    if decode_steps > 0 {
-        print!("; decode {:.1} tokens/s", decode_steps as f64 / decode_s.max(1e-9));
     }
-    println!("; context {} -> {})", prompt_len, prompt_len + max_new);
+    let t_end = std::time::Instant::now();
+    let prefill_ms = t_prefill.duration_since(t0).as_secs_f64() * 1e3;
+    let decode_s = t_end.duration_since(t_prefill).as_secs_f64();
+    println!(
+        "\n{} tokens (prefill {prompt_len} tokens in {prefill_ms:.1} ms; decode {:.1} \
+         tokens/s; context {prompt_len} -> {})",
+        toks.len(),
+        toks.len() as f64 / decode_s.max(1e-9),
+        prompt_len + max_new
+    );
+    // the session path is bitwise identical to the plain generate() path
+    assert_eq!(toks, lm.generate(&prompt, max_new)?, "session decode != generate()");
+
+    // the same prompt again: the block-aligned prefix must be served from
+    // the radix cache (physically shared pages), with identical output
+    let expected_cached = (prompt.len() - 1) / cfg.block * cfg.block;
+    let mut warm = lm.new_session(&prompt, &kv_pool, Some(&mut cache))?;
+    assert_eq!(
+        warm.cached_tokens(),
+        expected_cached,
+        "second run must hit the prefix cache for every complete prompt block"
+    );
+    let warm_toks: Vec<i32> =
+        (0..max_new).map(|_| lm.session_step(&mut warm)).collect::<Result<_>>()?;
+    assert_eq!(warm_toks, toks, "cache-hit decode must be bitwise identical");
+    println!(
+        "replay : cache hit on {}/{} prompt tokens (shared pages, {} in pool), identical \
+         {}-token stream",
+        warm.cached_tokens(),
+        prompt_len,
+        kv_pool.pages_in_use(),
+        warm_toks.len()
+    );
 
     // the same prompt through the serving path: generation requests ride
-    // the dynamic batcher exactly like MLM inference
+    // the continuous-batching session scheduler
     let serve = ServeConfig {
         max_batch: 4,
         flush_us: 500,
@@ -92,11 +117,12 @@ fn main() -> Result<()> {
         model: model.clone(),
         artifacts_dir: "artifacts".to_string(),
     };
-    let server = Server::start_native_lm(serve, mcfg, threads)?;
+    let scfg = SessionConfig { total_pages: 4096, ..Default::default() };
+    let server = Server::start_native_lm_sessions(serve, mcfg, threads, scfg)?;
     let resp = server.generate(prompt.clone(), max_new)?;
     assert_eq!(resp.predictions, toks, "server decode must match the direct path");
     println!(
-        "server : {} tokens via the batcher in {:.1} ms (bitwise identical)",
+        "server : {} tokens via the session scheduler in {:.1} ms (bitwise identical)",
         resp.predictions.len(),
         resp.latency.as_secs_f64() * 1e3
     );

@@ -1,0 +1,134 @@
+//! Session-serving demo: N clients share a system prompt through the
+//! continuous-batching scheduler (`Server::start_native_lm_sessions`), and
+//! a direct-API segment forks one session several ways and decodes the
+//! forks interleaved — showing that the shared prefix is *physically* the
+//! same memory (page pointers and pool occupancy), not a numeric copy.
+//!
+//! Runs entirely on the native CPU path — no artifacts required.
+//!
+//! ```bash
+//! cargo run --release --example serve_sessions -- --clients 6 --new 24
+//! cargo run --release --example serve_sessions -- --model lm_mra2_n1024_d64_l2_h2_v256
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use mra::cli::Args;
+use mra::config::{ServeConfig, SessionConfig};
+use mra::coordinator::{LmSession, NativeLm, NativeMlmConfig, Server};
+use mra::engine::pool;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let model = args.str_or("model", "lm_mra2_n256_d64_l2_h2_v512");
+    let clients = args.usize_or("clients", 6)?.max(1);
+    let max_new = args.usize_or("new", 24)?.max(1);
+    let threads = args.usize_or("threads", pool::default_threads())?;
+
+    let mcfg = NativeMlmConfig::from_tag(&model);
+    let lm = NativeLm::new(mcfg.clone(), threads);
+    let cfg = lm.config().clone();
+    let block = cfg.block;
+    // shared system prompt: two cacheable blocks, then per-client suffixes
+    let sys_len = 2 * block;
+    if sys_len + block + max_new > cfg.seq_len {
+        anyhow::bail!("--new {max_new} too large for seq_len {}", cfg.seq_len);
+    }
+    let system: Vec<i32> = (0..sys_len).map(|i| 2 + (i as i32 * 5) % 60).collect();
+
+    // ---- part 1: fork + interleaved decode on the direct session API ---
+    println!("== fork demo: {model} ({}) ==", lm.kernel_name());
+    let kv_pool = lm.new_page_pool(1024);
+    let mut cache = lm.new_radix_cache();
+    let base = lm.new_session(&system, &kv_pool, Some(&mut cache))?;
+    let pages_base = kv_pool.pages_in_use();
+    let fanout = 3usize;
+    let mut forks: Vec<LmSession> = (0..fanout).map(|_| base.fork()).collect();
+    assert_eq!(
+        kv_pool.pages_in_use(),
+        pages_base,
+        "forking must clone page handles, not pages"
+    );
+    // every fork's first page IS the base session's first page
+    for f in &forks {
+        assert!(Arc::ptr_eq(&base.states()[0].pages()[0], &f.states()[0].pages()[0]));
+    }
+    println!(
+        "forked {fanout} sessions off a {sys_len}-token prompt: {} physical pages before \
+         and after (handles shared)",
+        pages_base
+    );
+    // diverge each fork with its own continuation, then decode interleaved
+    for (fi, fork) in forks.iter_mut().enumerate() {
+        let suffix: Vec<i32> = (0..4).map(|j| 3 + (fi * 7 + j) as i32 % 50).collect();
+        lm.extend_session(fork, &suffix)?;
+    }
+    let mut streams: Vec<Vec<i32>> = vec![Vec::new(); fanout];
+    for _ in 0..8 {
+        // round-robin, one token per fork per round (the scheduler's
+        // continuous batching does exactly this across sessions)
+        for (fi, fork) in forks.iter_mut().enumerate() {
+            streams[fi].push(lm.session_step(fork)?);
+        }
+    }
+    for (fi, toks) in streams.iter().enumerate() {
+        println!("  fork {fi}: {toks:?}");
+    }
+    println!(
+        "pool after divergence: {} pages in use (shared prefix still single-copy)\n",
+        kv_pool.pages_in_use()
+    );
+
+    // ---- part 2: N clients through the continuous-batching server ------
+    println!("== serving demo: {clients} clients, shared {sys_len}-token system prompt ==");
+    let serve = ServeConfig {
+        max_batch: 8,
+        flush_us: 1_000,
+        workers: 1,
+        queue_depth: 256,
+        model: model.clone(),
+        artifacts_dir: "artifacts".to_string(),
+    };
+    let scfg = SessionConfig {
+        total_pages: 2048,
+        free_watermark: 16,
+        max_running: 32,
+        prefix_cache: true,
+    };
+    let server = Arc::new(Server::start_native_lm_sessions(serve, mcfg, threads, scfg)?);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = server.clone();
+            let mut prompt = system.clone();
+            s.spawn(move || {
+                prompt.extend((0..6).map(|j| 4 + (c * 11 + j) as i32 % 40));
+                let resp = server.generate(prompt, max_new).expect("generate");
+                assert_eq!(resp.predictions.len(), max_new);
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", server.metrics.summary());
+    let hit_tokens = server
+        .metrics
+        .prefix_hit_tokens
+        .load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "served {clients} clients in {:.1} ms — {hit_tokens} prompt tokens reused from \
+         shared prefix pages",
+        wall * 1e3
+    );
+    if clients > 1 {
+        assert!(
+            hit_tokens >= sys_len as u64,
+            "clients sharing a system prompt must hit the radix cache"
+        );
+    }
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    println!("serve_sessions OK");
+    Ok(())
+}

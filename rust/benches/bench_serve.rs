@@ -1,0 +1,246 @@
+//! Session-serving bench: the continuous-batching session scheduler
+//! (`Server::start_native_lm_sessions` — paged KV cache, radix prefix
+//! sharing, per-step join/leave) against the fixed-round batcher LM path
+//! (`Server::start_native_lm`) on a mixed-length generation workload where
+//! every request shares a system prompt — the serving-paper shape of the
+//! evaluation.
+//!
+//! Correctness gates run before any timing:
+//!
+//! * both serving paths must produce **bitwise identical** token streams
+//!   to the direct `NativeLm::generate` path for sampled requests;
+//! * the page arena must be allocation-free in steady state: replaying a
+//!   session decode after the pool is warm must not create new page
+//!   buffers (`PagePool::buffers_created` stays flat — recycling only).
+//!
+//! The acceptance gate asserts continuous batching beats the fixed-round
+//! batcher in generated tokens/sec on the mixed workload: the scheduler
+//! skips re-prefilling the shared prompt (radix prefix cache), drains
+//! `(session, head)` tasks from one pool instead of per-request
+//! mini-forwards, and never stalls a round on its slowest request.
+//!
+//! ```bash
+//! cargo bench --bench bench_serve                    # 32 requests
+//! MRA_BENCH_SMALL=1 cargo bench --bench bench_serve  # 12 requests (CI)
+//! MRA_BENCH_JSON=1  cargo bench --bench bench_serve  # write BENCH_serve.json
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use mra::bench::{BenchJson, Table};
+use mra::config::{ServeConfig, SessionConfig};
+use mra::coordinator::{NativeLm, NativeMlmConfig, Server};
+use mra::engine::pool;
+use mra::tensor::Rng;
+
+/// n=1024, d_model=64, 2 layers x 2 heads, vocab 256 (block clamps to 32,
+/// d_head 32 — the kernel layer's specialized width).
+const MODEL: &str = "lm_mra2_n1024_d64_l2_h2_v256";
+/// Shared system prompt every request starts with (4 cacheable blocks).
+const SYSTEM_LEN: usize = 128;
+
+struct Case {
+    prompt: Vec<i32>,
+    gen: usize,
+}
+
+fn build_workload(requests: usize) -> Vec<Case> {
+    let mut rng = Rng::new(0x5E55_10);
+    let system: Vec<i32> = (0..SYSTEM_LEN).map(|_| 2 + rng.below(250) as i32).collect();
+    (0..requests)
+        .map(|_| {
+            // mixed lengths: suffix 16..=144, generation 12..=31
+            let suffix = 16 + rng.below(129);
+            let gen = 12 + rng.below(20);
+            let mut prompt = system.clone();
+            prompt.extend((0..suffix).map(|_| 2 + rng.below(250) as i32));
+            Case { prompt, gen }
+        })
+        .collect()
+}
+
+/// Fire the whole workload from `clients` concurrent client threads;
+/// returns (wall seconds, generated tokens).
+fn run_workload(server: &Arc<Server>, cases: &[Case], clients: usize) -> (f64, usize) {
+    let total_tokens = std::sync::atomic::AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = server.clone();
+            let total_tokens = &total_tokens;
+            let slice: Vec<&Case> = cases.iter().skip(c).step_by(clients).collect();
+            s.spawn(move || {
+                for case in slice {
+                    let resp = server
+                        .generate(case.prompt.clone(), case.gen)
+                        .expect("serving request failed");
+                    assert_eq!(resp.predictions.len(), case.gen);
+                    total_tokens.fetch_add(resp.predictions.len(), Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    (t0.elapsed().as_secs_f64(), total_tokens.load(Ordering::Relaxed))
+}
+
+fn main() {
+    let small = std::env::var("MRA_BENCH_SMALL").is_ok();
+    let requests = if small { 12 } else { 32 };
+    let clients = 4usize;
+    let threads = pool::default_threads();
+    let mcfg = NativeMlmConfig::from_tag(MODEL);
+    let cases = build_workload(requests);
+    println!(
+        "serve bench: model {MODEL}, {requests} requests ({clients} clients), \
+         shared system prompt {SYSTEM_LEN} tokens, engine threads {threads}\n"
+    );
+
+    let direct = NativeLm::new(mcfg.clone(), threads);
+
+    // --- correctness gate 1: steady-state page-buffer reuse -------------
+    {
+        let pool_kv = direct.new_page_pool(512);
+        let mut sess = direct
+            .new_session(&cases[0].prompt, &pool_kv, None)
+            .expect("session prefill");
+        for _ in 0..64 {
+            direct.session_step(&mut sess).expect("decode step");
+        }
+        drop(sess); // pages return to the freelist
+        let created = pool_kv.buffers_created();
+        let mut sess = direct
+            .new_session(&cases[0].prompt, &pool_kv, None)
+            .expect("warm session prefill");
+        for _ in 0..64 {
+            direct.session_step(&mut sess).expect("warm decode step");
+        }
+        assert_eq!(
+            pool_kv.buffers_created(),
+            created,
+            "steady-state decode created new page buffers (freelist bypassed)"
+        );
+        println!(
+            "page arena: {} buffers cover the steady-state session (recycled on replay)",
+            created
+        );
+    }
+
+    let serve_cfg = ServeConfig {
+        max_batch: 8,
+        flush_us: 2_000,
+        workers: 2,
+        queue_depth: 512,
+        model: MODEL.to_string(),
+        artifacts_dir: "artifacts".to_string(),
+    };
+
+    // --- fixed-round batcher path ---------------------------------------
+    let fixed = Arc::new(
+        Server::start_native_lm(serve_cfg.clone(), mcfg.clone(), threads)
+            .expect("fixed-round server"),
+    );
+    // correctness gate 2a: bitwise identical to the direct path
+    for case in cases.iter().take(2) {
+        let resp = fixed.generate(case.prompt.clone(), case.gen).expect("fixed generate");
+        assert_eq!(
+            resp.predictions,
+            direct.generate(&case.prompt, case.gen).unwrap(),
+            "fixed-round serving diverged from direct decode"
+        );
+    }
+    let (fixed_wall, fixed_tokens) = run_workload(&fixed, &cases, clients);
+    println!("fixed-round : {}", fixed.metrics.summary());
+    if let Ok(s) = Arc::try_unwrap(fixed) {
+        s.shutdown();
+    }
+
+    // --- continuous-batching session path --------------------------------
+    let scfg = SessionConfig {
+        total_pages: if small { 1024 } else { 2048 },
+        free_watermark: 32,
+        max_running: 64,
+        prefix_cache: true,
+    };
+    let continuous = Arc::new(
+        Server::start_native_lm_sessions(serve_cfg, mcfg, threads, scfg.clone())
+            .expect("session server"),
+    );
+    // correctness gate 2b: bitwise identical to the direct path
+    for case in cases.iter().take(2) {
+        let resp =
+            continuous.generate(case.prompt.clone(), case.gen).expect("continuous generate");
+        assert_eq!(
+            resp.predictions,
+            direct.generate(&case.prompt, case.gen).unwrap(),
+            "continuous serving diverged from direct decode"
+        );
+    }
+    let (cont_wall, cont_tokens) = run_workload(&continuous, &cases, clients);
+    println!("continuous  : {}", continuous.metrics.summary());
+    let hit_tokens = continuous.metrics.prefix_hit_tokens.load(Ordering::Relaxed);
+    let pool_pages = continuous.metrics.pool_pages.load(Ordering::Relaxed);
+    let free_pages = continuous.metrics.free_pages.load(Ordering::Relaxed);
+    assert!(
+        hit_tokens > 0,
+        "the shared system prompt must produce radix prefix-cache hits"
+    );
+    assert!(
+        pool_pages == scfg.total_pages as u64 && free_pages <= pool_pages,
+        "page pool must stay bounded: free {free_pages} of {pool_pages}"
+    );
+    if let Ok(s) = Arc::try_unwrap(continuous) {
+        s.shutdown();
+    }
+
+    // --- report + acceptance gate ----------------------------------------
+    let fixed_tps = fixed_tokens as f64 / fixed_wall.max(1e-9);
+    let cont_tps = cont_tokens as f64 / cont_wall.max(1e-9);
+    let speedup = cont_tps / fixed_tps.max(1e-9);
+    let mut table =
+        Table::new(&["impl", "requests", "wall ms", "gen tokens", "tokens/s", "speedup"]);
+    table.row(&[
+        "fixed-round".to_string(),
+        format!("{requests}"),
+        format!("{:.1}", fixed_wall * 1e3),
+        format!("{fixed_tokens}"),
+        format!("{fixed_tps:.1}"),
+        "1.00x".to_string(),
+    ]);
+    table.row(&[
+        "continuous".to_string(),
+        format!("{requests}"),
+        format!("{:.1}", cont_wall * 1e3),
+        format!("{cont_tokens}"),
+        format!("{cont_tps:.1}"),
+        format!("{speedup:.2}x"),
+    ]);
+    table.print();
+
+    let mut json = BenchJson::new("serve");
+    json.row(&[
+        ("impl", BenchJson::str_field("fixed-round")),
+        ("requests", format!("{requests}")),
+        ("tokens_per_sec", format!("{fixed_tps:.1}")),
+        ("speedup_vs_fixed", "1.0".to_string()),
+    ]);
+    json.row(&[
+        ("impl", BenchJson::str_field("continuous")),
+        ("requests", format!("{requests}")),
+        ("tokens_per_sec", format!("{cont_tps:.1}")),
+        ("speedup_vs_fixed", format!("{speedup:.3}")),
+    ]);
+    json.write_if_requested();
+
+    assert_eq!(fixed_tokens, cont_tokens, "both paths must serve the same workload");
+    assert!(
+        cont_tps > fixed_tps,
+        "acceptance gate: continuous batching must beat the fixed-round batcher \
+         on the mixed-length workload ({cont_tps:.1} vs {fixed_tps:.1} tokens/s)"
+    );
+    println!(
+        "\nbench_serve OK (bitwise serving gates, bounded pool, prefix hits {hit_tokens} \
+         tokens, continuous {speedup:.2}x fixed)"
+    );
+}

@@ -79,8 +79,10 @@ impl AttentionApprox for HTransformer1d {
                     scored.push(Scored { block: child, log_mu: lm });
                 }
             } else {
-                let qs = qp.at(blk.scale);
-                let ks = kp.at(blk.scale);
+                // the pyramid was built from exactly these partition
+                // scales, so the Result path cannot trip
+                let qs = qp.at(blk.scale).expect("partition scale in pyramid");
+                let ks = kp.at(blk.scale).expect("partition scale in pyramid");
                 let lm = dot(qs.row(blk.x), ks.row(blk.y)) * inv_sqrt_d;
                 scored.push(Scored { block: *blk, log_mu: lm });
             }
@@ -89,7 +91,9 @@ impl AttentionApprox for HTransformer1d {
             fine_scales.push(1);
         }
         let vp_fine = if self.block > 1 { Pyramid::build(v, &fine_scales) } else { vp };
-        mra::matvec::compute(&scored, &vp_fine, n, &fine_scales).normalized()
+        mra::matvec::compute(&scored, &vp_fine, n, &fine_scales)
+            .expect("partition scales in ladder")
+            .normalized()
     }
 
     fn workload(&self, n: usize, d: usize) -> usize {

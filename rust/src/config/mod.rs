@@ -115,6 +115,47 @@ impl ServeConfig {
     }
 }
 
+/// Session-serving scheduler configuration (`[sessions]` section) — the
+/// continuous-batching knobs of `Server::start_native_lm_sessions`
+/// (DESIGN.md §9).
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// KV page-pool capacity in pages (one page = one `block`-token span
+    /// of one `(layer, head)` stream).  Bounds total cache memory across
+    /// all sessions *and* the radix prefix cache.
+    pub total_pages: usize,
+    /// Pages kept free beyond a session's estimated lifetime footprint at
+    /// admission — decode headroom that delays preemption.
+    pub free_watermark: usize,
+    /// Max sessions decoding concurrently (the running-batch cap).
+    pub max_running: usize,
+    /// Enable the radix prefix cache (shared-prompt page reuse).
+    pub prefix_cache: bool,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            total_pages: 4096,
+            free_watermark: 64,
+            max_running: 32,
+            prefix_cache: true,
+        }
+    }
+}
+
+impl SessionConfig {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let d = SessionConfig::default();
+        Ok(SessionConfig {
+            total_pages: c.usize_or("sessions.total_pages", d.total_pages)?,
+            free_watermark: c.usize_or("sessions.free_watermark", d.free_watermark)?,
+            max_running: c.usize_or("sessions.max_running", d.max_running)?,
+            prefix_cache: c.bool_or("sessions.prefix_cache", d.prefix_cache)?,
+        })
+    }
+}
+
 /// Trainer configuration (see `configs/train.toml`).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -184,6 +225,16 @@ lr = 0.001
         assert_eq!(s.workers, 2); // default
         let d = ServeConfig::default_config();
         assert_eq!(d.max_batch, 8);
+    }
+
+    #[test]
+    fn session_config_defaults_and_overrides() {
+        let c = Config::parse("[sessions]\ntotal_pages = 512\nprefix_cache = false\n").unwrap();
+        let s = SessionConfig::from_config(&c).unwrap();
+        assert_eq!(s.total_pages, 512);
+        assert!(!s.prefix_cache);
+        assert_eq!(s.max_running, SessionConfig::default().max_running);
+        assert_eq!(s.free_watermark, SessionConfig::default().free_watermark);
     }
 
     #[test]

@@ -4,6 +4,13 @@
 //!
 //! Pure data structure — the server thread drives it with `push` /
 //! `poll_due`, so every invariant is unit-testable without threads.
+//!
+//! Scope note: the batcher forms **fixed rounds** — right for the MLM
+//! predict path (one forward per batch) and kept as the LM serving
+//! baseline, but generation requests are better served by the
+//! continuous-batching session scheduler
+//! ([`crate::coordinator::scheduler`]), which retires this round barrier;
+//! `benches/bench_serve.rs` measures the two against each other.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

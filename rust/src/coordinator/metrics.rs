@@ -1,4 +1,7 @@
-//! Serving metrics: log-bucketed latency histogram + counters.
+//! Serving metrics: log-bucketed latency histogram + counters, plus the
+//! session-serving gauges (page-pool occupancy, radix prefix-cache hit
+//! rate, preemptions, running-batch size) the continuous-batching
+//! scheduler publishes every step.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -64,6 +67,12 @@ impl Histogram {
 }
 
 /// Coordinator-wide metrics.
+///
+/// The session-serving fields split into **counters** (monotone:
+/// `sessions`, `preemptions`, `prefix_*`, `generated_tokens`,
+/// `decode_steps`) and **gauges** (last published value: `pool_pages`,
+/// `free_pages`, `cache_pages`, `running_sessions`, `waiting_sessions`),
+/// refreshed by the scheduler once per decode step.
 #[derive(Default)]
 pub struct Metrics {
     pub request_latency: Histogram,
@@ -72,6 +81,32 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub rejected: AtomicU64,
     pub padded_slots: AtomicU64,
+    // --- session-serving counters ---
+    /// Sessions admitted (prefilled) by the scheduler.
+    pub sessions: AtomicU64,
+    /// Sessions preempted under memory pressure (recomputed on readmit).
+    pub preemptions: AtomicU64,
+    /// Radix prefix-cache lookups at admission.
+    pub prefix_lookups: AtomicU64,
+    /// Lookups that reused at least one cached block.
+    pub prefix_hits: AtomicU64,
+    /// Prompt tokens served from shared cache pages instead of recomputed.
+    pub prefix_hit_tokens: AtomicU64,
+    /// Tokens emitted by the continuous decode loop.
+    pub generated_tokens: AtomicU64,
+    /// Continuous-batching decode steps executed.
+    pub decode_steps: AtomicU64,
+    // --- session-serving gauges ---
+    /// Page-pool capacity (constant once serving starts).
+    pub pool_pages: AtomicU64,
+    /// Free pages in the pool at the last step.
+    pub free_pages: AtomicU64,
+    /// Page handles held by the radix prefix cache at the last step.
+    pub cache_pages: AtomicU64,
+    /// Sessions in the running decode batch at the last step.
+    pub running_sessions: AtomicU64,
+    /// Sessions waiting for admission at the last step.
+    pub waiting_sessions: AtomicU64,
 }
 
 impl Metrics {
@@ -92,9 +127,43 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// One-line summary for logs / bench output.
+    /// Record one admission-time prefix-cache lookup.
+    pub fn record_prefix_lookup(&self, hit_tokens: usize) {
+        self.prefix_lookups.fetch_add(1, Ordering::Relaxed);
+        if hit_tokens > 0 {
+            self.prefix_hits.fetch_add(1, Ordering::Relaxed);
+            self.prefix_hit_tokens.fetch_add(hit_tokens as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Fraction of admission lookups that reused cached pages (0 when no
+    /// lookups happened yet).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let lookups = self.prefix_lookups.load(Ordering::Relaxed);
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits.load(Ordering::Relaxed) as f64 / lookups as f64
+    }
+
+    /// Publish the per-step scheduler gauges.
+    pub fn set_session_gauges(
+        &self,
+        free_pages: u64,
+        cache_pages: u64,
+        running: u64,
+        waiting: u64,
+    ) {
+        self.free_pages.store(free_pages, Ordering::Relaxed);
+        self.cache_pages.store(cache_pages, Ordering::Relaxed);
+        self.running_sessions.store(running, Ordering::Relaxed);
+        self.waiting_sessions.store(waiting, Ordering::Relaxed);
+    }
+
+    /// One-line summary for logs / bench output; appends the
+    /// session-serving block once the scheduler has admitted sessions.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} batches={} rejected={} pad_slots={} latency_mean={:.2}ms p50={:.2}ms p95={:.2}ms batch_exec_mean={:.2}ms",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -104,7 +173,24 @@ impl Metrics {
             self.request_latency.percentile_us(0.5) as f64 / 1e3,
             self.request_latency.percentile_us(0.95) as f64 / 1e3,
             self.batch_exec.mean_us() / 1e3,
-        )
+        );
+        if self.sessions.load(Ordering::Relaxed) > 0 {
+            s.push_str(&format!(
+                " sessions={} preemptions={} prefix_hit_rate={:.2} prefix_hit_tokens={} gen_tokens={} steps={} pages={}/{} cache_pages={} running={} waiting={}",
+                self.sessions.load(Ordering::Relaxed),
+                self.preemptions.load(Ordering::Relaxed),
+                self.prefix_hit_rate(),
+                self.prefix_hit_tokens.load(Ordering::Relaxed),
+                self.generated_tokens.load(Ordering::Relaxed),
+                self.decode_steps.load(Ordering::Relaxed),
+                self.free_pages.load(Ordering::Relaxed),
+                self.pool_pages.load(Ordering::Relaxed),
+                self.cache_pages.load(Ordering::Relaxed),
+                self.running_sessions.load(Ordering::Relaxed),
+                self.waiting_sessions.load(Ordering::Relaxed),
+            ));
+        }
+        s
     }
 }
 
@@ -150,5 +236,62 @@ mod tests {
         assert!(s.contains("requests=1"));
         assert!(s.contains("pad_slots=3"));
         assert!(s.contains("rejected=1"));
+        // no session block until the scheduler admits something
+        assert!(!s.contains("sessions="), "{s}");
+    }
+
+    #[test]
+    fn prefix_hit_rate_counts_only_hits() {
+        let m = Metrics::new();
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.record_prefix_lookup(0);
+        m.record_prefix_lookup(32);
+        m.record_prefix_lookup(64);
+        m.record_prefix_lookup(0);
+        assert_eq!(m.prefix_lookups.load(Ordering::Relaxed), 4);
+        assert_eq!(m.prefix_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(m.prefix_hit_tokens.load(Ordering::Relaxed), 96);
+        assert!((m.prefix_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn session_gauges_overwrite_not_accumulate() {
+        let m = Metrics::new();
+        m.set_session_gauges(100, 10, 3, 7);
+        m.set_session_gauges(90, 12, 4, 6);
+        assert_eq!(m.free_pages.load(Ordering::Relaxed), 90);
+        assert_eq!(m.cache_pages.load(Ordering::Relaxed), 12);
+        assert_eq!(m.running_sessions.load(Ordering::Relaxed), 4);
+        assert_eq!(m.waiting_sessions.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn summary_surfaces_the_session_block_once_serving() {
+        let m = Metrics::new();
+        m.sessions.fetch_add(2, Ordering::Relaxed);
+        m.preemptions.fetch_add(1, Ordering::Relaxed);
+        m.pool_pages.store(256, Ordering::Relaxed);
+        m.record_prefix_lookup(16);
+        m.set_session_gauges(200, 16, 2, 0);
+        let s = m.summary();
+        assert!(s.contains("sessions=2"), "{s}");
+        assert!(s.contains("preemptions=1"), "{s}");
+        assert!(s.contains("prefix_hit_rate=1.00"), "{s}");
+        assert!(s.contains("pages=200/256"), "{s}");
+    }
+
+    #[test]
+    fn percentile_edges_cover_extremes() {
+        // percentile behavior at p -> 0 and p -> 1 plus micro samples
+        let h = Histogram::new();
+        h.record(Duration::from_micros(1));
+        h.record(Duration::from_secs(10));
+        let lo = h.percentile_us(0.0);
+        let hi = h.percentile_us(1.0);
+        assert!(lo <= hi);
+        assert!(hi >= 10_000_000 / 2, "p100 must land in the seconds bucket: {hi}");
+        // zero-duration records clamp to the 1us bucket
+        h.record(Duration::ZERO);
+        assert_eq!(h.count(), 3);
     }
 }

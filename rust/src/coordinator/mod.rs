@@ -3,8 +3,12 @@
 //! through [`crate::runtime`], or the native batched engine when artifacts
 //! are absent).
 //!
-//! * [`metrics`] — latency histograms + throughput counters.
-//! * [`batcher`] — dynamic batching with deadline flush.
+//! * [`metrics`] — latency histograms + throughput counters + the
+//!   session-serving gauges (free pages, cache occupancy, prefix hits).
+//! * [`batcher`] — dynamic batching with deadline flush (fixed rounds).
+//! * [`scheduler`] — continuous batching for LM sessions: admission
+//!   against page watermarks, per-step join/leave, preemption with
+//!   recompute-on-readmit, radix prefix-cache management.
 //! * [`router`]  — sequence-length / batch-size bucket routing + padding.
 //! * [`server`]  — thread/worker serving loop with backpressure, over the
 //!   artifact runtime or the native engine fallback (MLM inference and
@@ -19,12 +23,14 @@ pub mod batcher;
 pub mod metrics;
 pub mod native;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 pub mod trainer;
 
 pub use batcher::{Batch, Batcher, Request};
 pub use metrics::Metrics;
-pub use native::{NativeLm, NativeMlm, NativeMlmConfig};
+pub use native::{LmSession, NativeLm, NativeMlm, NativeMlmConfig};
 pub use router::Router;
+pub use scheduler::SessionConfig;
 pub use server::Server;
 pub use trainer::Trainer;

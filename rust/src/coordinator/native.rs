@@ -14,13 +14,19 @@
 //!
 //! * [`NativeMlm`] — bidirectional attention, per-position MLM argmax.
 //! * [`NativeLm`]  — causal attention: a batch scoring path through the
-//!   engine's causal kernels, plus an incremental greedy decode path over
-//!   per-(layer, head) [`DecodeState`] KV caches (DESIGN.md §7).
+//!   engine's causal kernels, plus the session-serving decode path —
+//!   page-backed per-(layer, head) [`DecodeState`] KV caches grouped into
+//!   [`LmSession`]s that fork, share radix-cached prefixes physically,
+//!   and step as a continuous batch (DESIGN.md §7, §9).
+
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use anyhow::{bail, Result};
 
 use crate::data::corpus::MlmBatch;
-use crate::engine::{kernel_by_name, pool, BatchedTensor, DecodeState, Engine};
+use crate::engine::{
+    kernel_by_name, pool, BatchedTensor, DecodeState, Engine, PagePool, PoolExhausted, RadixCache,
+};
 use crate::mra::Variant;
 use crate::tensor::{kernel, mat::dot, ops, Mat, Rng};
 
@@ -329,18 +335,129 @@ impl NativeMlm {
     }
 }
 
+/// One `(session, head)` unit of a decode step: `(session index, head,
+/// decode state, output slot, q/k/v projection scratch, hidden row)`.
+type StreamTask<'a> =
+    (usize, usize, &'a mut DecodeState, &'a mut [f32], &'a mut [f32], &'a [f32]);
+
+/// One live decode session of a [`NativeLm`]: the per-(layer, head)
+/// [`DecodeState`] KV caches (page-backed, possibly sharing pages with
+/// other sessions), the next-token logits of the last fed position, and
+/// the per-step scratch buffers that keep the steady decode path free of
+/// per-token heap allocations.
+///
+/// Created by [`NativeLm::new_session`] (prompt prefill, optionally
+/// reusing radix-cached prefix pages) or [`LmSession::fork`] (physically
+/// shares every page with the parent until the streams diverge).
+pub struct LmSession {
+    /// Layer-major decode streams: `states[layer * heads + h]`.
+    states: Vec<DecodeState>,
+    /// Next-token logits at the last fed position (`vocab` entries).
+    logits: Vec<f32>,
+    /// Hidden-row scratch (`d_model`).
+    hidden: Vec<f32>,
+    /// Concatenated-heads scratch (`d_model`).
+    cat: Vec<f32>,
+    /// Per-head q/k/v projection scratch (`heads * 3 * d_head`).
+    proj: Vec<f32>,
+    /// Positions fed so far (cached prefix + computed).
+    len: usize,
+    /// Positions served from shared pages instead of recomputed (radix
+    /// prefix-cache hit at creation; everything for a fork).
+    cached_tokens: usize,
+    /// Set when an advance failed with [`PoolExhausted`] mid-layer: the
+    /// head streams are desynchronized (some appended the token, some
+    /// did not) and the session must be discarded — retrying would
+    /// append the same K/V rows twice and silently diverge.  Every
+    /// further use asserts against this.
+    poisoned: bool,
+}
+
+impl LmSession {
+    /// Positions in the session's KV caches.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions whose KV state was shared (prefix-cache hit / fork)
+    /// rather than recomputed.
+    pub fn cached_tokens(&self) -> usize {
+        self.cached_tokens
+    }
+
+    /// Next-token logits at the last fed position.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// Greedy next token (argmax over [`LmSession::logits`]).
+    pub fn next_token(&self) -> i32 {
+        assert!(!self.poisoned, "session poisoned by pool exhaustion — discard and recompute");
+        assert!(!self.logits.is_empty(), "session has no logits yet");
+        ops::argmax(&self.logits) as i32
+    }
+
+    /// True once an advance failed with pool exhaustion: the session's
+    /// head streams are torn and it must be dropped (recompute-on-readmit
+    /// is lossless — decode is deterministic).
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// The per-stream decode states (page handles inspectable for
+    /// sharing assertions).
+    pub fn states(&self) -> &[DecodeState] {
+        &self.states
+    }
+
+    /// Physical pages this session would need from the pool for its next
+    /// decode step — counting both block-boundary crossings and shared
+    /// partial tails about to copy-on-write — the scheduler's reservation
+    /// hook.
+    pub fn pages_needed_next_step(&self) -> usize {
+        self.states.iter().filter(|st| st.next_append_needs_page()).count()
+    }
+
+    /// Fork the session: every page of every stream is shared physically
+    /// with the parent (`Arc` clones, zero pool pages consumed); a shared
+    /// partial tail page copies on the first divergent write.  Decoding a
+    /// fork is bitwise identical to decoding a cold session fed the same
+    /// token stream (property-tested).
+    pub fn fork(&self) -> LmSession {
+        assert!(!self.poisoned, "cannot fork a poisoned session");
+        LmSession {
+            states: self.states.iter().map(DecodeState::fork).collect(),
+            logits: self.logits.clone(),
+            hidden: self.hidden.clone(),
+            cat: self.cat.clone(),
+            proj: self.proj.clone(),
+            len: self.len,
+            cached_tokens: self.len,
+            poisoned: false,
+        }
+    }
+}
+
 /// Deterministic native causal LM — the autoregressive sibling of
 /// [`NativeMlm`], sharing its seed-derived weights.
 ///
-/// Two execution paths:
+/// Execution paths:
 ///
 /// * [`NativeLm::logits`] — batch scoring through the engine's *causal*
 ///   kernels (block-level causal plan; training-time parallel form).
-/// * [`NativeLm::generate`] — incremental greedy decode through
-///   per-(layer, head) [`DecodeState`] KV caches: each new token reuses
-///   the pooled pyramid of the prefix instead of re-running full
-///   attention, and generation is bitwise reproducible — continuing from
-///   a generated prefix equals generating in one call (tested).
+/// * [`NativeLm::new_session`] / [`NativeLm::step_sessions`] — the
+///   session-serving path: page-backed per-(layer, head) [`DecodeState`]
+///   KV caches with radix prefix reuse, forking, and continuous batched
+///   stepping (one token for *every* running session per call, parallel
+///   over `(session, head)` on the engine pool).
+/// * [`NativeLm::generate`] — greedy decode of one prompt, built on the
+///   same session machinery (a private unbounded pool, no prefix cache);
+///   generation is bitwise reproducible — continuing from a generated
+///   prefix equals generating in one call (tested).
 pub struct NativeLm {
     core: NativeCore,
     /// Refined complete past blocks per decode step (per-row Alg. 1
@@ -386,6 +503,288 @@ impl NativeLm {
         }
     }
 
+    /// Decode streams per session: `layers * heads`.
+    pub fn streams(&self) -> usize {
+        self.core.cfg.layers * self.core.cfg.heads
+    }
+
+    fn d_head(&self) -> usize {
+        self.core.cfg.d_model / self.core.cfg.heads
+    }
+
+    /// A bounded page pool with this model's page geometry (`block` x
+    /// `d_head`), shared by every session of one serving scheduler.
+    pub fn new_page_pool(&self, capacity_pages: usize) -> PagePool {
+        PagePool::new(capacity_pages, self.core.cfg.block, self.d_head())
+    }
+
+    /// A radix prefix cache keyed for this model's block size and stream
+    /// count.
+    pub fn new_radix_cache(&self) -> RadixCache {
+        RadixCache::new(self.core.cfg.block, self.streams())
+    }
+
+    /// Physical pages a session holding `tokens` positions occupies
+    /// (ignoring sharing) — the scheduler's admission estimate.
+    pub fn session_page_estimate(&self, tokens: usize) -> usize {
+        let block = self.core.cfg.block;
+        self.streams() * tokens.div_ceil(block)
+    }
+
+    /// Start a session: prefill `prompt` through fresh page-backed decode
+    /// caches, reusing the longest radix-cached block-aligned prefix when
+    /// `cache` is given (at most `prompt.len() - 1` tokens — the last
+    /// prompt position is always recomputed, since its attention output
+    /// feeds the first generated logits).  Newly completed prompt blocks
+    /// are advertised back into the cache, so the *next* session with the
+    /// same prompt physically shares their pages.
+    ///
+    /// Fails with a [`PoolExhausted`]-sourced error when the pool cannot
+    /// hold the prefill; the session is dropped and its pages returned, so
+    /// the caller can evict/preempt and retry.
+    pub fn new_session(
+        &self,
+        prompt: &[i32],
+        pool: &PagePool,
+        mut cache: Option<&mut RadixCache>,
+    ) -> Result<LmSession> {
+        let cfg = &self.core.cfg;
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > cfg.seq_len {
+            bail!("prompt length {} exceeds seq_len {}", prompt.len(), cfg.seq_len);
+        }
+        assert_eq!(pool.block(), cfg.block, "pool/model block mismatch");
+        assert_eq!(pool.d(), self.d_head(), "pool/model head-dim mismatch");
+        let heads = cfg.heads;
+        let d_head = self.d_head();
+        let variant = self.variant();
+        let mut cached = 0usize;
+        let mut states: Option<Vec<DecodeState>> = None;
+        if let Some(cache) = cache.as_deref_mut() {
+            let limit = (prompt.len() - 1) / cfg.block * cfg.block;
+            if limit > 0 {
+                let (matched, per_stream) = cache.lookup(&prompt[..limit]);
+                if matched > 0 {
+                    cached = matched;
+                    states = Some(
+                        per_stream
+                            .into_iter()
+                            .map(|pages| {
+                                DecodeState::from_cached(
+                                    pool,
+                                    self.decode_budget,
+                                    variant,
+                                    pages,
+                                    matched,
+                                )
+                            })
+                            .collect(),
+                    );
+                }
+            }
+        }
+        let states = states.unwrap_or_else(|| {
+            (0..self.streams())
+                .map(|_| DecodeState::with_pool(pool, self.decode_budget, variant))
+                .collect()
+        });
+        let mut session = LmSession {
+            states,
+            logits: Vec::with_capacity(cfg.vocab),
+            hidden: vec![0.0; cfg.d_model],
+            cat: vec![0.0; cfg.d_model],
+            proj: vec![0.0; heads * 3 * d_head],
+            len: cached,
+            cached_tokens: cached,
+            poisoned: false,
+        };
+        for (pi, &t) in prompt.iter().enumerate().skip(cached) {
+            // pay the tied-head vocab projection only at the last position
+            let with_logits = pi + 1 == prompt.len();
+            self.advance_session(&mut session, t, with_logits)?;
+        }
+        if let Some(cache) = cache {
+            let nb = prompt.len() / cfg.block;
+            if nb > 0 {
+                let mut pages = Vec::with_capacity(nb * self.streams());
+                for bi in 0..nb {
+                    for st in &session.states {
+                        pages.push(st.pages()[bi].clone());
+                    }
+                }
+                cache.insert(&prompt[..nb * cfg.block], &pages);
+            }
+        }
+        Ok(session)
+    }
+
+    /// Feed externally chosen tokens (teacher forcing / replaying a
+    /// preempted session's generated suffix); logits are recomputed at the
+    /// last fed position.
+    ///
+    /// On a [`PoolExhausted`] error the session is **poisoned** (head
+    /// streams desynchronized) and must be discarded and recomputed —
+    /// see [`LmSession::is_poisoned`].
+    pub fn extend_session(&self, session: &mut LmSession, tokens: &[i32]) -> Result<()> {
+        if session.len + tokens.len() > self.core.cfg.seq_len {
+            bail!(
+                "session {} + {} tokens exceeds seq_len {}",
+                session.len,
+                tokens.len(),
+                self.core.cfg.seq_len
+            );
+        }
+        for (i, &t) in tokens.iter().enumerate() {
+            self.advance_session(session, t, i + 1 == tokens.len())?;
+        }
+        Ok(())
+    }
+
+    /// One greedy decode step for a single session: commit the argmax
+    /// token, advance the caches, recompute logits.  Returns the emitted
+    /// token.  Bitwise identical to the same session stepping inside a
+    /// [`NativeLm::step_sessions`] batch.
+    ///
+    /// On a [`PoolExhausted`] error the session is **poisoned** and must
+    /// be discarded and recomputed ([`LmSession::is_poisoned`]) — unlike
+    /// [`DecodeState::try_append`], the multi-stream step is not atomic.
+    pub fn session_step(&self, session: &mut LmSession) -> Result<i32> {
+        let tok = session.next_token();
+        self.advance_session(session, tok, true)?;
+        Ok(tok)
+    }
+
+    /// One continuous-batching decode step: every session commits its
+    /// greedy next token and advances one position, parallel over
+    /// `(session, head)` tasks on the engine pool (layers in lockstep).
+    /// Per-session results: the emitted token, or [`PoolExhausted`] when
+    /// that session could not get a page — the failed session's caches are
+    /// inconsistent and must be preempted (dropped and recomputed later;
+    /// decode is deterministic, so recompute-on-readmit is lossless).
+    /// Other sessions are unaffected.
+    ///
+    /// Batching never changes results: each `(session, head)` task runs
+    /// exactly the float sequence of the single-session path, and the
+    /// work-stealing schedule does not reorder any per-stream arithmetic.
+    pub fn step_sessions(
+        &self,
+        sessions: &mut [&mut LmSession],
+    ) -> Vec<Result<i32, PoolExhausted>> {
+        let toks: Vec<i32> = sessions.iter().map(|s| s.next_token()).collect();
+        let results = self.advance_batch(sessions, &toks, true);
+        results.into_iter().zip(toks).map(|(r, tok)| r.map(|()| tok)).collect()
+    }
+
+    /// The one per-token decode body (also the prefill body): embed each
+    /// session's committed token, run every layer as a flattened
+    /// `(session, head)` task list on the engine pool, then optionally
+    /// project logits.  Both [`NativeLm::step_sessions`] and the
+    /// single-session [`NativeLm::advance_session`] are thin wrappers, so
+    /// solo and batched stepping cannot drift apart.
+    fn advance_batch(
+        &self,
+        sessions: &mut [&mut LmSession],
+        toks: &[i32],
+        with_logits: bool,
+    ) -> Vec<Result<(), PoolExhausted>> {
+        debug_assert_eq!(sessions.len(), toks.len());
+        let cfg = &self.core.cfg;
+        for sess in sessions.iter() {
+            assert!(!sess.poisoned, "session poisoned by pool exhaustion — discard and recompute");
+            assert!(
+                sess.len < cfg.seq_len,
+                "session at seq_len {} cannot advance further",
+                cfg.seq_len
+            );
+        }
+        let heads = cfg.heads;
+        let d_head = self.d_head();
+        let threads = self.core.engine.threads();
+        let failed: Vec<AtomicBool> = (0..sessions.len()).map(|_| AtomicBool::new(false)).collect();
+        // embed every session's committed token
+        for (sess, &tok) in sessions.iter_mut().zip(toks) {
+            let t = (tok.max(0) as usize).min(cfg.vocab - 1);
+            sess.hidden.copy_from_slice(self.core.embed.row(t));
+        }
+        for (li, lw) in self.core.layers.iter().enumerate() {
+            // flatten (session, head) into one task list so the pool
+            // load-balances across every running stream
+            let mut tasks: Vec<StreamTask> = Vec::with_capacity(sessions.len() * heads);
+            for (si, sess) in sessions.iter_mut().enumerate() {
+                if failed[si].load(Ordering::Relaxed) {
+                    continue;
+                }
+                let sess: &mut LmSession = &mut **sess;
+                sess.cat.fill(0.0);
+                let hidden: &[f32] = &sess.hidden;
+                let layer_states = &mut sess.states[li * heads..(li + 1) * heads];
+                for (h, ((st, slot), proj)) in layer_states
+                    .iter_mut()
+                    .zip(sess.cat.chunks_mut(d_head))
+                    .zip(sess.proj.chunks_mut(3 * d_head))
+                    .enumerate()
+                {
+                    tasks.push((si, h, st, slot, proj, hidden));
+                }
+            }
+            let failed_ref = &failed;
+            pool::run(threads, tasks, |(si, h, st, slot, proj, hidden)| {
+                if failed_ref[si].load(Ordering::Relaxed) {
+                    return;
+                }
+                let (q, kv) = proj.split_at_mut(d_head);
+                let (k, v) = kv.split_at_mut(d_head);
+                row_project_into(hidden, &lw.wq[h], q);
+                row_project_into(hidden, &lw.wk[h], k);
+                row_project_into(hidden, &lw.wv[h], v);
+                if st.try_append(k, v).is_err() {
+                    failed_ref[si].store(true, Ordering::Relaxed);
+                    return;
+                }
+                // allocation-free steady path: attend straight into the slot
+                st.attend_last_into(q, slot);
+            });
+            // residual + layer norm per surviving session
+            for (si, sess) in sessions.iter_mut().enumerate() {
+                if failed[si].load(Ordering::Relaxed) {
+                    continue;
+                }
+                for (c, &hv) in sess.cat.iter_mut().zip(sess.hidden.iter()) {
+                    *c += hv;
+                }
+                layer_norm_row_into(&sess.cat, 1e-5, &mut sess.hidden);
+            }
+        }
+        // vocab projection, one task per surviving session (the largest
+        // matmul of the step; prefill defers it to the last position)
+        if with_logits {
+            let mut tasks: Vec<(&[f32], &mut Vec<f32>)> = Vec::with_capacity(sessions.len());
+            for (si, sess) in sessions.iter_mut().enumerate() {
+                if failed[si].load(Ordering::Relaxed) {
+                    continue;
+                }
+                let sess: &mut LmSession = &mut **sess;
+                tasks.push((&sess.hidden, &mut sess.logits));
+            }
+            pool::run(threads, tasks, |(hidden, logits)| {
+                self.project_logits_into(hidden, logits);
+            });
+        }
+        let mut out = Vec::with_capacity(sessions.len());
+        for (sess, f) in sessions.iter_mut().zip(&failed) {
+            if f.load(Ordering::Relaxed) {
+                sess.poisoned = true; // torn mid-layer: discard + recompute
+                out.push(Err(PoolExhausted));
+            } else {
+                sess.len += 1;
+                out.push(Ok(()));
+            }
+        }
+        out
+    }
+
     /// Greedy generation: prefill the prompt through the decode caches,
     /// then emit `max_new` argmax tokens.  Returns only the generated ids.
     pub fn generate(&self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
@@ -394,7 +793,8 @@ impl NativeLm {
 
     /// [`Self::generate`] with a per-token callback `(position, token)` —
     /// the streaming hook used by `examples/generate.rs` and the serving
-    /// path.
+    /// path.  Runs on the session machinery with a private unbounded pool
+    /// (no prefix cache, no sharing).
     pub fn generate_with(
         &self,
         prompt: &[i32],
@@ -413,102 +813,66 @@ impl NativeLm {
                 cfg.seq_len
             );
         }
-        let d_head = cfg.d_model / cfg.heads;
-        let variant = self.variant();
-        let mut states: Vec<Vec<DecodeState>> = (0..cfg.layers)
-            .map(|_| {
-                (0..cfg.heads)
-                    .map(|_| DecodeState::new(cfg.block, self.decode_budget, variant, d_head))
-                    .collect()
-            })
-            .collect();
-        // prefill: advance the caches over every prompt token, paying the
-        // tied-head vocab projection only at the last position
-        let mut logits = Vec::new();
-        for (pi, &t) in prompt.iter().enumerate() {
-            let hidden = self.advance(&mut states, t);
-            if pi + 1 == prompt.len() {
-                logits = self.project_logits(&hidden);
-            }
-        }
+        let pool = PagePool::unbounded(cfg.block, self.d_head());
+        let mut session = self.new_session(prompt, &pool, None)?;
         let mut out = Vec::with_capacity(max_new);
         for gi in 0..max_new {
-            let next = ops::argmax(&logits) as i32;
+            let next = session.next_token();
             out.push(next);
             on_token(prompt.len() + gi, next);
             if gi + 1 < max_new {
-                let hidden = self.advance(&mut states, next);
-                logits = self.project_logits(&hidden);
+                self.advance_session(&mut session, next, true)?;
             }
         }
         Ok(out)
     }
 
-    /// Tied output head for one position: `hidden @ embed^T`.
-    fn project_logits(&self, hidden: &[f32]) -> Vec<f32> {
-        (0..self.core.cfg.vocab).map(|tk| dot(hidden, self.core.embed.row(tk))).collect()
+    /// Tied output head for one position into a reusable buffer:
+    /// `hidden @ embed^T`.
+    fn project_logits_into(&self, hidden: &[f32], logits: &mut Vec<f32>) {
+        let vocab = self.core.cfg.vocab;
+        logits.clear();
+        logits.extend((0..vocab).map(|tk| dot(hidden, self.core.embed.row(tk))));
     }
 
-    /// One incremental cache advance: embed `tok`, then per layer project
-    /// q/k/v for every head, append k/v to that head's KV cache and attend
-    /// the newest row.  Heads drain through the engine's worker pool; each
-    /// head owns its cache and output slot, so the step is deterministic
-    /// at any thread count.  Returns the position's final hidden row (the
-    /// vocab projection is separate — prefill skips it; see
-    /// [`Self::project_logits`]).
-    fn advance(&self, states: &mut [Vec<DecodeState>], tok: i32) -> Vec<f32> {
-        let cfg = &self.core.cfg;
-        let dm = cfg.d_model;
-        let d_head = dm / cfg.heads;
-        let t = (tok.max(0) as usize).min(cfg.vocab - 1);
-        let mut hidden: Vec<f32> = self.core.embed.row(t).to_vec();
-        for (lw, layer_states) in self.core.layers.iter().zip(states.iter_mut()) {
-            let mut cat = vec![0.0f32; dm];
-            let tasks: Vec<(usize, &mut DecodeState, &mut [f32])> = layer_states
-                .iter_mut()
-                .zip(cat.chunks_mut(d_head))
-                .enumerate()
-                .map(|(h, (st, slot))| (h, st, slot))
-                .collect();
-            let hidden_ref = &hidden;
-            pool::run(self.core.engine.threads(), tasks, |(h, st, slot)| {
-                let q = row_project(hidden_ref, &lw.wq[h]);
-                let k = row_project(hidden_ref, &lw.wk[h]);
-                let v = row_project(hidden_ref, &lw.wv[h]);
-                st.append(&k, &v);
-                // allocation-free steady path: attend straight into the slot
-                st.attend_last_into(&q, slot);
-            });
-            // residual + layer norm on the single row
-            for (c, &hv) in cat.iter_mut().zip(hidden.iter()) {
-                *c += hv;
-            }
-            hidden = layer_norm_row(&cat, 1e-5);
-        }
-        hidden
+    /// One incremental cache advance of a single session — the 1-element
+    /// form of [`NativeLm::advance_batch`] (prefill and solo stepping run
+    /// the exact code the continuous batch runs).
+    fn advance_session(
+        &self,
+        session: &mut LmSession,
+        tok: i32,
+        with_logits: bool,
+    ) -> Result<(), PoolExhausted> {
+        self.advance_batch(&mut [session], &[tok], with_logits)
+            .pop()
+            .expect("one result per session")
     }
 }
 
-/// `row @ w` for a single row — the decode-path analog of `Mat::matmul`
-/// (same k-major accumulation order, same branch-free kernel AXPY: dense
-/// embeddings never benefit from a zero-skip, which defeats vectorization).
-fn row_project(row: &[f32], w: &Mat) -> Vec<f32> {
+/// `out = row @ w` for a single row into a caller-owned buffer — the
+/// decode-path analog of `Mat::matmul` (same k-major accumulation order,
+/// same branch-free kernel AXPY: dense embeddings never benefit from a
+/// zero-skip, which defeats vectorization).
+fn row_project_into(row: &[f32], w: &Mat, out: &mut [f32]) {
     debug_assert_eq!(row.len(), w.rows);
-    let mut out = vec![0.0f32; w.cols];
+    debug_assert_eq!(out.len(), w.cols);
+    out.fill(0.0);
     for (i, &a) in row.iter().enumerate() {
-        kernel::axpy(&mut out, w.row(i), a);
+        kernel::axpy(out, w.row(i), a);
     }
-    out
 }
 
-/// Single-row LayerNorm (gain 1, bias 0) — the decode twin of
-/// [`ops::layer_norm_rows`].
-fn layer_norm_row(x: &[f32], eps: f32) -> Vec<f32> {
+/// Single-row LayerNorm (gain 1, bias 0) into a caller-owned buffer — the
+/// decode twin of [`ops::layer_norm_rows`].
+fn layer_norm_row_into(x: &[f32], eps: f32, out: &mut [f32]) {
     let n = x.len() as f32;
     let mu: f32 = x.iter().sum::<f32>() / n;
     let var: f32 = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
     let inv = 1.0 / (var + eps).sqrt();
-    x.iter().map(|v| (v - mu) * inv).collect()
+    for (o, v) in out.iter_mut().zip(x) {
+        *o = (v - mu) * inv;
+    }
 }
 
 #[cfg(test)]
@@ -661,5 +1025,140 @@ mod tests {
         assert_eq!(streamed.iter().map(|&(_, t)| t).collect::<Vec<_>>(), toks);
         assert_eq!(streamed[0].0, 2); // first generated position
         assert_eq!(streamed[3].0, 5);
+    }
+
+    // ---- session-serving path -------------------------------------------
+
+    use std::sync::Arc;
+
+    fn long_prompt(len: usize) -> Vec<i32> {
+        (0..len).map(|i| (2 + (i * 7) % 60) as i32).collect()
+    }
+
+    #[test]
+    fn session_decode_matches_generate_bitwise_and_second_run_hits_cache() {
+        let model = NativeLm::new(small_cfg(), 2);
+        let prompt = long_prompt(20); // block 16 -> one cacheable block
+        let want = model.generate(&prompt, 6).unwrap();
+        let pool = model.new_page_pool(1024);
+        let mut cache = model.new_radix_cache();
+        let mut sess = model.new_session(&prompt, &pool, Some(&mut cache)).unwrap();
+        assert_eq!(sess.cached_tokens(), 0, "cold session cannot hit an empty cache");
+        let got: Vec<i32> = (0..6).map(|_| model.session_step(&mut sess).unwrap()).collect();
+        assert_eq!(got, want, "session path diverged from generate()");
+        // same prompt again: the block-aligned prefix must come from the
+        // cache, physically, and the output must be identical
+        let mut warm = model.new_session(&prompt, &pool, Some(&mut cache)).unwrap();
+        let block = model.config().block;
+        assert_eq!(warm.cached_tokens(), (prompt.len() - 1) / block * block);
+        for (a, b) in sess.states().iter().zip(warm.states()) {
+            assert!(
+                Arc::ptr_eq(&a.pages()[0], &b.pages()[0]),
+                "cached prompt block must be the same physical page"
+            );
+        }
+        let got2: Vec<i32> = (0..6).map(|_| model.session_step(&mut warm).unwrap()).collect();
+        assert_eq!(got2, want, "cache-hit decode diverged");
+    }
+
+    /// Satellite proptest: forking a session off a cached shared prefix
+    /// and decoding is bitwise identical to a cold decode of the full
+    /// concatenated token stream — for random prefix lengths (including
+    /// non-block-aligned cuts) and random fork fan-out — and the shared
+    /// prefix is physically the same memory.
+    #[test]
+    fn fork_from_shared_prefix_decodes_bitwise_identical_to_cold() {
+        use crate::proptest::for_all_seeds;
+        let model = NativeLm::new(small_cfg(), 2);
+        for_all_seeds(6, |_, rng| {
+            let pool = model.new_page_pool(4096);
+            let mut cache = model.new_radix_cache();
+            let plen = 1 + rng.below(40); // non-block-aligned cuts included
+            let prefix: Vec<i32> = (0..plen).map(|_| rng.below(64) as i32).collect();
+            let base = model
+                .new_session(&prefix, &pool, Some(&mut cache))
+                .map_err(|e| format!("{e:#}"))?;
+            let used_after_base = pool.pages_in_use();
+            let fanout = 1 + rng.below(3);
+            for fi in 0..fanout {
+                let mut fork = base.fork();
+                if pool.pages_in_use() != used_after_base {
+                    return Err("fork consumed pool pages before diverging".into());
+                }
+                for (a, b) in base.states().iter().zip(fork.states()) {
+                    for (pa, pb) in a.pages().iter().zip(b.pages()) {
+                        if !Arc::ptr_eq(pa, pb) {
+                            return Err(format!("fork {fi}: page not physically shared"));
+                        }
+                    }
+                }
+                let clen = 1 + rng.below(6);
+                let cont: Vec<i32> = (0..clen).map(|_| rng.below(64) as i32).collect();
+                model.extend_session(&mut fork, &cont).map_err(|e| format!("{e:#}"))?;
+                // cold decode of the concatenated stream, fresh pool
+                let cold_pool = model.new_page_pool(4096);
+                let full: Vec<i32> = prefix.iter().chain(&cont).copied().collect();
+                let mut cold = model
+                    .new_session(&full, &cold_pool, None)
+                    .map_err(|e| format!("{e:#}"))?;
+                if fork.logits() != cold.logits() {
+                    return Err(format!("fork {fi}: logits != cold (plen={plen} clen={clen})"));
+                }
+                for step in 0..3 {
+                    let a = model.session_step(&mut fork).map_err(|e| format!("{e:#}"))?;
+                    let b = model.session_step(&mut cold).map_err(|e| format!("{e:#}"))?;
+                    if a != b {
+                        return Err(format!("fork {fi} step {step}: token {a} != cold {b}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn step_sessions_is_bitwise_identical_to_individual_stepping() {
+        let model = NativeLm::new(small_cfg(), 3);
+        let pool = model.new_page_pool(4096);
+        let prompts =
+            [long_prompt(4), long_prompt(24), vec![7, 6, 5, 4, 3, 2]];
+        let mut batch: Vec<LmSession> =
+            prompts.iter().map(|p| model.new_session(p, &pool, None).unwrap()).collect();
+        let mut solo: Vec<LmSession> =
+            prompts.iter().map(|p| model.new_session(p, &pool, None).unwrap()).collect();
+        for round in 0..5 {
+            let mut refs: Vec<&mut LmSession> = batch.iter_mut().collect();
+            let toks = model.step_sessions(&mut refs);
+            for (si, (sess, tok)) in solo.iter_mut().zip(&toks).enumerate() {
+                let single = model.session_step(sess).unwrap();
+                assert_eq!(single, (*tok).unwrap(), "round {round} session {si}");
+            }
+        }
+        for (a, b) in batch.iter().zip(&solo) {
+            assert_eq!(a.logits(), b.logits(), "batched/solo logits diverged");
+        }
+    }
+
+    #[test]
+    fn prefill_pool_exhaustion_is_typed_and_releases_pages() {
+        let model = NativeLm::new(small_cfg(), 1);
+        let pool = model.new_page_pool(1); // far below the prefill footprint
+        let err = model.new_session(&long_prompt(20), &pool, None).unwrap_err();
+        assert!(
+            err.downcast_ref::<PoolExhausted>().is_some(),
+            "expected a PoolExhausted-sourced error, got {err:#}"
+        );
+        assert_eq!(pool.pages_in_use(), 0, "failed prefill must release its pages");
+    }
+
+    #[test]
+    fn session_rejects_oversized_prompts_and_extensions() {
+        let model = NativeLm::new(small_cfg(), 1);
+        let pool = model.new_page_pool(256);
+        assert!(model.new_session(&[], &pool, None).is_err());
+        assert!(model.new_session(&long_prompt(65), &pool, None).is_err());
+        let mut sess = model.new_session(&long_prompt(60), &pool, None).unwrap();
+        let err = model.extend_session(&mut sess, &long_prompt(10)).unwrap_err();
+        assert!(format!("{err:#}").contains("seq_len"), "{err:#}");
     }
 }

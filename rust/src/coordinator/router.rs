@@ -4,6 +4,13 @@
 //! (`fwd_<tag>_b{B}`); the router picks the smallest bucket that fits,
 //! pads the token matrix to `(B, seq_len)`, and slices the outputs back to
 //! the real requests.
+//!
+//! Scope note: bucket routing (and its padding waste, tracked by
+//! `Metrics::padded_slots`) exists because AOT executables have static
+//! shapes.  The native session-serving path
+//! ([`crate::coordinator::scheduler`]) has no buckets at all — sessions
+//! of any length join/leave the running batch per step, and its paged KV
+//! arena plays the role padding plays here (DESIGN.md §9).
 
 use anyhow::{bail, Context, Result};
 

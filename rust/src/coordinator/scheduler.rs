@@ -1,0 +1,504 @@
+//! Continuous-batching session scheduler — the serving loop behind
+//! `Server::start_native_lm_sessions`.
+//!
+//! Replaces the fixed-round batcher for LM generation: instead of forming
+//! a batch, decoding every request to completion and only then starting
+//! the next batch (the slowest request gates the round), the scheduler
+//! keeps a **running set** of live [`LmSession`]s and advances *all* of
+//! them one token per step ([`NativeLm::step_sessions`]).  Requests join
+//! the running set the step after admission and leave the step they
+//! finish — no request ever waits for an unrelated slow request.
+//!
+//! State machine per request (DESIGN.md §9):
+//!
+//! ```text
+//!            admit (pages >= est + watermark)
+//!  WAITING ------------------------------------> RUNNING --+-- finished --> responded
+//!     ^                                             |
+//!     |          preempt (pool pressure;            |
+//!     +--------- youngest first, generated tokens --+
+//!                kept for replay)
+//! ```
+//!
+//! Memory control is page-based: the KV state of every session lives in
+//! one bounded [`PagePool`].  Admission requires the pool to hold a
+//! session's *lifetime* estimate (`prompt + gen_tokens` pages) plus a
+//! free watermark; each step reserves the pages the running set is about
+//! to touch, reclaiming in order (1) LRU radix-cache entries, then
+//! (2) preempting the most recently admitted session.  A preempted
+//! session's prompt *and already-generated tokens* are replayed through
+//! prefill on readmission — decode is deterministic, so
+//! recompute-on-readmit is lossless (asserted in tests), and the radix
+//! prefix cache usually turns the replay into a page-sharing hit.
+//!
+//! Fairness: admission is strictly FIFO (head-of-line requests that can
+//! never fit the pool are rejected, not allowed to wedge the queue);
+//! every running session gets exactly one token per step; preemption
+//! takes the youngest session so older sessions keep their progress.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+
+pub use crate::config::SessionConfig;
+use crate::coordinator::batcher::Request;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::native::{LmSession, NativeLm};
+use crate::coordinator::server::{Ingress, Responder, Response};
+use crate::engine::PoolExhausted;
+
+/// A request waiting for admission (fresh, or preempted with its partial
+/// generation kept for replay).
+struct Pending {
+    req: Request,
+    resp: Responder,
+    /// Tokens generated before a preemption; replayed through prefill on
+    /// readmission so the visible output is identical.
+    generated: Vec<i32>,
+}
+
+/// A request in the running decode set.
+struct Running {
+    req: Request,
+    resp: Responder,
+    session: LmSession,
+    generated: Vec<i32>,
+    /// Admission stamp; preemption evicts the largest (youngest).
+    admitted_at: u64,
+}
+
+impl Running {
+    fn target_tokens(&self) -> usize {
+        self.req.gen_tokens.max(1)
+    }
+}
+
+/// The scheduler thread body: owns the page pool, the radix prefix cache
+/// and the session queues; drains `ingress` until shutdown *and* all
+/// admitted work is finished.
+pub(crate) fn scheduler_loop(
+    ingress: Receiver<Ingress>,
+    lm: Arc<NativeLm>,
+    scfg: SessionConfig,
+    metrics: Arc<Metrics>,
+) {
+    let pool = lm.new_page_pool(scfg.total_pages);
+    metrics.pool_pages.store(scfg.total_pages as u64, Ordering::Relaxed);
+    let mut cache = if scfg.prefix_cache { Some(lm.new_radix_cache()) } else { None };
+    let mut waiting: VecDeque<Pending> = VecDeque::new();
+    let mut running: Vec<Running> = Vec::new();
+    let mut open = true;
+    let mut admit_stamp = 0u64;
+    let seq_len = lm.config().seq_len;
+    let block = lm.config().block;
+
+    loop {
+        // ---- ingress: block only when fully idle ----------------------
+        if running.is_empty() && waiting.is_empty() {
+            if !open {
+                break;
+            }
+            match ingress.recv() {
+                Ok(Ingress::Req(req, resp)) => {
+                    waiting.push_back(Pending { req, resp, generated: Vec::new() })
+                }
+                Ok(Ingress::Shutdown) | Err(_) => {
+                    open = false;
+                    continue;
+                }
+            }
+        }
+        loop {
+            match ingress.try_recv() {
+                Ok(Ingress::Req(req, resp)) => {
+                    waiting.push_back(Pending { req, resp, generated: Vec::new() })
+                }
+                Ok(Ingress::Shutdown) => open = false,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+
+        // ---- admission: FIFO against the free-page watermark ----------
+        while running.len() < scfg.max_running.max(1) {
+            let Some(front) = waiting.front() else { break };
+            let gen = front.req.gen_tokens.max(1);
+            if front.req.tokens.is_empty() || front.req.tokens.len() + gen > seq_len {
+                let p = waiting.pop_front().expect("front exists");
+                let msg = if p.req.tokens.is_empty() {
+                    "empty prompt".to_string()
+                } else {
+                    format!(
+                        "prompt {} + {} new tokens exceeds seq_len {seq_len}",
+                        p.req.tokens.len(),
+                        gen
+                    )
+                };
+                metrics.inc_rejected();
+                let _ = p.resp.send(Err(msg));
+                continue;
+            }
+            // lifetime footprint: every page the session will ever hold.
+            // The *feasibility* check below must use this cold estimate —
+            // a request admitted thanks to cache sharing could otherwise
+            // be hard-rejected on readmission after its cached prefix was
+            // evicted, breaking the accepted-means-served contract.
+            let est_cold = lm.session_page_estimate(front.req.tokens.len() + gen);
+            // the *timing* check may discount the prompt prefix the radix
+            // cache will share instead of allocate (read-only probe, no
+            // LRU touch — readmits probe only their original prompt, a
+            // safe under-count)
+            let mut est = est_cold;
+            if let Some(c) = cache.as_ref() {
+                let probe_len = front.req.tokens.len().saturating_sub(1) / block * block;
+                let cached = c.probe(&front.req.tokens[..probe_len]);
+                est = est.saturating_sub(lm.streams() * (cached / block));
+            }
+            if est_cold + scfg.free_watermark > scfg.total_pages {
+                let p = waiting.pop_front().expect("front exists");
+                metrics.inc_rejected();
+                let _ = p.resp.send(Err(format!(
+                    "request needs ~{est_cold} pages + watermark {} but the pool holds only {} — \
+                     raise sessions.total_pages",
+                    scfg.free_watermark, scfg.total_pages
+                )));
+                continue;
+            }
+            if pool.free_pages() < est + scfg.free_watermark {
+                // reclaim cold radix-cache entries before refusing
+                let need = est + scfg.free_watermark - pool.free_pages();
+                if let Some(c) = cache.as_mut() {
+                    c.evict_lru(need);
+                }
+                if pool.free_pages() < est + scfg.free_watermark {
+                    break; // wait for running sessions to finish
+                }
+            }
+            let mut p = waiting.pop_front().expect("front exists");
+            // replay = prompt + any generation from before a preemption
+            let mut prompt = p.req.tokens.clone();
+            prompt.extend_from_slice(&p.generated);
+            match lm.new_session(&prompt, &pool, cache.as_mut()) {
+                Ok(session) => {
+                    metrics.sessions.fetch_add(1, Ordering::Relaxed);
+                    // readmissions of preempted sessions mostly re-find
+                    // their *own* blocks — real recompute savings, but not
+                    // cross-session sharing, so they stay out of the
+                    // prefix-hit metrics
+                    if p.generated.is_empty() {
+                        metrics.record_prefix_lookup(session.cached_tokens());
+                    }
+                    admit_stamp += 1;
+                    running.push(Running {
+                        req: p.req,
+                        resp: p.resp,
+                        session,
+                        generated: std::mem::take(&mut p.generated),
+                        admitted_at: admit_stamp,
+                    });
+                }
+                Err(e) if e.downcast_ref::<PoolExhausted>().is_some() => {
+                    // the estimate was optimistic (pages pinned elsewhere);
+                    // retry after eviction/leaves unless nothing can free
+                    let reclaimable = !running.is_empty()
+                        || cache.as_ref().map(|c| c.pages_held() > 0).unwrap_or(false);
+                    if reclaimable {
+                        waiting.push_front(p);
+                    } else {
+                        metrics.inc_rejected();
+                        let _ = p
+                            .resp
+                            .send(Err("page pool exhausted with nothing reclaimable".to_string()));
+                    }
+                    break;
+                }
+                Err(e) => {
+                    metrics.inc_rejected();
+                    let _ = p.resp.send(Err(format!("{e:#}")));
+                }
+            }
+        }
+
+        // ---- finishers: sessions one token from target take it straight
+        // from their current logits — no advance, no pages, no risk of a
+        // pointless final-step preemption (mirrors generate()'s
+        // `gi + 1 < max_new` skip, so outputs stay bitwise aligned)
+        let mut i = 0;
+        while i < running.len() {
+            if running[i].generated.len() + 1 >= running[i].target_tokens() {
+                let mut r = running.remove(i);
+                r.generated.push(r.session.next_token());
+                metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                let latency = r.req.arrived.elapsed();
+                metrics.request_latency.record(latency);
+                let _ = r.resp.send(Ok(Response {
+                    id: r.req.id,
+                    predictions: r.generated,
+                    latency,
+                }));
+            } else {
+                i += 1;
+            }
+        }
+
+        if running.is_empty() {
+            metrics.set_session_gauges(
+                pool.free_pages() as u64,
+                cache.as_ref().map(|c| c.pages_held()).unwrap_or(0) as u64,
+                0,
+                waiting.len() as u64,
+            );
+            continue;
+        }
+
+        // ---- per-step page reservation (evict, then preempt youngest) -
+        loop {
+            let needed: usize =
+                running.iter().map(|r| r.session.pages_needed_next_step()).sum();
+            if pool.free_pages() >= needed {
+                break;
+            }
+            let short = needed - pool.free_pages();
+            if let Some(c) = cache.as_mut() {
+                if c.evict_lru(short) > 0 {
+                    continue;
+                }
+            }
+            if running.len() <= 1 {
+                // a single session always fits its admission estimate; if
+                // this still trips, the step below surfaces PoolExhausted
+                // and the session is preempted whole
+                break;
+            }
+            let vi = running
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, r)| r.admitted_at)
+                .map(|(i, _)| i)
+                .expect("non-empty running set");
+            let victim = running.swap_remove(vi);
+            metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            waiting.push_front(Pending {
+                req: victim.req,
+                resp: victim.resp,
+                generated: victim.generated,
+            });
+            // victim.session drops here; its exclusive pages return
+        }
+
+        // ---- one continuous decode step: every session, one token -----
+        let results = {
+            let mut refs: Vec<&mut LmSession> =
+                running.iter_mut().map(|r| &mut r.session).collect();
+            lm.step_sessions(&mut refs)
+        };
+        metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+
+        // ---- join/leave: record tokens, preempt the pool-starved ------
+        // (every stepped session had >= 2 tokens to go, so none finishes
+        // here — sessions reaching their last token leave through the
+        // pre-step finisher path next iteration, straight from logits)
+        let mut starved: Vec<usize> = Vec::new();
+        for (i, res) in results.iter().enumerate() {
+            match res {
+                Ok(tok) => {
+                    running[i].generated.push(*tok);
+                    metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(PoolExhausted) => starved.push(i),
+            }
+        }
+        for &i in starved.iter().rev() {
+            // mid-step pool exhaustion: caches are torn — drop them and
+            // replay prompt + generated on readmission (deterministic)
+            let r = running.remove(i);
+            metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            waiting.push_front(Pending { req: r.req, resp: r.resp, generated: r.generated });
+        }
+
+        metrics.set_session_gauges(
+            pool.free_pages() as u64,
+            cache.as_ref().map(|c| c.pages_held()).unwrap_or(0) as u64,
+            running.len() as u64,
+            waiting.len() as u64,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::native::NativeMlmConfig;
+    use std::sync::mpsc::{channel, sync_channel, SyncSender};
+    use std::time::Instant;
+
+    fn small_cfg() -> NativeMlmConfig {
+        NativeMlmConfig {
+            vocab: 64,
+            seq_len: 64,
+            d_model: 32,
+            heads: 2,
+            layers: 1,
+            block: 16,
+            budget: 0,
+            attention: "mra2".to_string(),
+            seed: 7,
+        }
+    }
+
+    fn spawn_scheduler(
+        scfg: SessionConfig,
+    ) -> (SyncSender<Ingress>, Arc<NativeLm>, Arc<Metrics>, std::thread::JoinHandle<()>) {
+        let lm = Arc::new(NativeLm::new(small_cfg(), 2));
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Ingress>(64);
+        let (lm2, m2) = (lm.clone(), metrics.clone());
+        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2));
+        (tx, lm, metrics, handle)
+    }
+
+    fn send_req(
+        tx: &SyncSender<Ingress>,
+        id: u64,
+        prompt: Vec<i32>,
+        gen: usize,
+    ) -> std::sync::mpsc::Receiver<Result<Response, String>> {
+        let (rtx, rrx) = channel();
+        let req = Request { id, tokens: prompt, gen_tokens: gen, arrived: Instant::now() };
+        tx.send(Ingress::Req(req, rtx)).unwrap();
+        rrx
+    }
+
+    fn prompt(seed: usize, len: usize) -> Vec<i32> {
+        (0..len).map(|i| (2 + (seed * 13 + i * 7) % 60) as i32).collect()
+    }
+
+    #[test]
+    fn continuous_sessions_match_direct_generation_bitwise() {
+        let scfg = SessionConfig { total_pages: 512, free_watermark: 8, ..Default::default() };
+        let (tx, lm, metrics, handle) = spawn_scheduler(scfg);
+        let cases: Vec<(Vec<i32>, usize)> = (0..6)
+            .map(|i| (prompt(i, 4 + i * 9 % 40), 3 + i % 5))
+            .collect();
+        let receivers: Vec<_> = cases
+            .iter()
+            .enumerate()
+            .map(|(i, (p, g))| send_req(&tx, i as u64, p.clone(), *g))
+            .collect();
+        for ((p, g), rx) in cases.iter().zip(receivers) {
+            let resp = rx.recv().unwrap().expect("scheduler response");
+            let want = lm.generate(p, *g).unwrap();
+            assert_eq!(resp.predictions, want, "continuous decode diverged from generate()");
+        }
+        tx.send(Ingress::Shutdown).unwrap();
+        drop(tx);
+        handle.join().unwrap();
+        assert_eq!(metrics.sessions.load(Ordering::Relaxed) as usize, 6);
+        assert!(metrics.decode_steps.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn shared_prompts_hit_the_prefix_cache() {
+        let scfg = SessionConfig { total_pages: 512, free_watermark: 8, ..Default::default() };
+        let (tx, lm, metrics, handle) = spawn_scheduler(scfg);
+        let shared = prompt(0, 33); // 2 cacheable blocks at block=16
+        let r1 = send_req(&tx, 0, shared.clone(), 4);
+        let first = r1.recv().unwrap().expect("first response");
+        // second identical prompt after the first finished: guaranteed hit
+        let r2 = send_req(&tx, 1, shared.clone(), 4);
+        let second = r2.recv().unwrap().expect("second response");
+        assert_eq!(first.predictions, second.predictions, "cache hit changed the output");
+        assert_eq!(first.predictions, lm.generate(&shared, 4).unwrap());
+        tx.send(Ingress::Shutdown).unwrap();
+        handle.join().unwrap();
+        assert!(
+            metrics.prefix_hit_tokens.load(Ordering::Relaxed) >= 32,
+            "second session must reuse the cached prompt blocks: {}",
+            metrics.summary()
+        );
+    }
+
+    #[test]
+    fn tight_pool_preempts_and_recompute_on_readmit_is_lossless() {
+        // streams = 2, block = 16.  prompt 16 + gen 6 => lifetime estimate
+        // 2 * ceil(22/16) = 4 pages.  With a 10-page pool and no watermark,
+        // admission over-commits: 4 sessions admitted at 2 pages each
+        // (free = 2), and the first decode step crosses every session's
+        // block boundary at once (len 16 -> 17), demanding 8 pages — the
+        // reservation loop must preempt the youngest sessions, and their
+        // replay on readmission must reproduce the exact same tokens.
+        // Requests are enqueued *before* the scheduler thread starts so
+        // the admission sequence is deterministic.
+        let scfg = SessionConfig {
+            total_pages: 10,
+            free_watermark: 0,
+            max_running: 8,
+            prefix_cache: false,
+        };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 2));
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Ingress>(64);
+        let cases: Vec<(Vec<i32>, usize)> = (0..5).map(|i| (prompt(i, 16), 6)).collect();
+        let receivers: Vec<_> = cases
+            .iter()
+            .enumerate()
+            .map(|(i, (p, g))| send_req(&tx, i as u64, p.clone(), *g))
+            .collect();
+        let (lm2, m2) = (lm.clone(), metrics.clone());
+        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2));
+        for ((p, g), rxr) in cases.iter().zip(receivers) {
+            let resp = rxr.recv().unwrap().expect("response under memory pressure");
+            assert_eq!(
+                resp.predictions,
+                lm.generate(p, *g).unwrap(),
+                "preemption/readmit changed the output"
+            );
+        }
+        tx.send(Ingress::Shutdown).unwrap();
+        handle.join().unwrap();
+        assert!(
+            metrics.preemptions.load(Ordering::Relaxed) >= 1,
+            "the 10-page pool must force at least one preemption: {}",
+            metrics.summary()
+        );
+        // readmissions re-prefill, so admitted sessions > request count
+        assert!(metrics.sessions.load(Ordering::Relaxed) > 5, "{}", metrics.summary());
+        assert_eq!(metrics.pool_pages.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn oversized_and_empty_requests_fail_cleanly_without_wedging() {
+        let scfg = SessionConfig { total_pages: 64, free_watermark: 4, ..Default::default() };
+        let (tx, lm, _metrics, handle) = spawn_scheduler(scfg);
+        let too_long = send_req(&tx, 0, prompt(0, 60), 8); // 60 + 8 > 64
+        let empty = send_req(&tx, 1, Vec::new(), 4);
+        let ok = send_req(&tx, 2, prompt(2, 6), 3);
+        assert!(too_long.recv().unwrap().unwrap_err().contains("seq_len"));
+        assert!(empty.recv().unwrap().unwrap_err().contains("empty"));
+        let resp = ok.recv().unwrap().expect("well-formed request still served");
+        assert_eq!(resp.predictions, lm.generate(&prompt(2, 6), 3).unwrap());
+        tx.send(Ingress::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn request_larger_than_the_pool_is_rejected_not_queued_forever() {
+        let scfg = SessionConfig {
+            total_pages: 4,
+            free_watermark: 2,
+            max_running: 4,
+            prefix_cache: true,
+        };
+        let (tx, _lm, _metrics, handle) = spawn_scheduler(scfg);
+        // est = 2 streams * ceil(48/16) = 6 pages > 4 - watermark
+        let rx = send_req(&tx, 0, prompt(0, 40), 8);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("total_pages"), "{err}");
+        tx.send(Ingress::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+}

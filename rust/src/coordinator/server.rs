@@ -16,6 +16,12 @@
 //! causal-LM path ([`Server::start_native_lm`]) that greedily decodes
 //! generation requests ([`Server::generate`]) through incremental KV
 //! caches.
+//!
+//! LM generation has a second, preferred backend:
+//! [`Server::start_native_lm_sessions`] swaps the batcher + workers for
+//! the continuous-batching session scheduler
+//! ([`crate::coordinator::scheduler`]) — paged KV cache, radix prefix
+//! sharing, per-step join/leave — behind the same submit API.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
@@ -42,9 +48,9 @@ pub struct Response {
     pub latency: Duration,
 }
 
-type Responder = Sender<Result<Response, String>>;
+pub(crate) type Responder = Sender<Result<Response, String>>;
 
-enum Ingress {
+pub(crate) enum Ingress {
     Req(Request, Responder),
     Shutdown,
 }
@@ -112,6 +118,13 @@ impl Server {
     /// inference, and each worker decodes its batch on a shared
     /// [`NativeLm`] (prompt prefill + greedy decode through per-(layer,
     /// head) [`crate::engine::DecodeState`] KV caches).
+    ///
+    /// This is the **fixed-round** LM path: a formed batch decodes to
+    /// completion before its worker takes another, so the slowest request
+    /// gates its whole round.  The session server
+    /// ([`Server::start_native_lm_sessions`]) replaces it with continuous
+    /// batching; this path is kept as the serving baseline
+    /// (`benches/bench_serve.rs` measures the gap).
     pub fn start_native_lm(
         cfg: ServeConfig,
         model_cfg: NativeMlmConfig,
@@ -121,6 +134,35 @@ impl Server {
         Self::start_with(cfg, move || -> Box<dyn BatchRunner> {
             Box::new(LmRunner { model: model.clone() })
         })
+    }
+
+    /// Spin up the **session-serving** LM server: one scheduler thread
+    /// running continuous batching over page-backed KV sessions
+    /// ([`crate::coordinator::scheduler`]) — admission against free-page
+    /// watermarks, per-step join/leave (no fixed rounds), radix
+    /// prefix-cache sharing for common prompts, and preemption with
+    /// recompute-on-readmit under memory pressure.  Requests submit
+    /// through the same [`Server::generate`] / [`Server::infer`] API, and
+    /// outputs are bitwise identical to the fixed-round path.
+    pub fn start_native_lm_sessions(
+        cfg: ServeConfig,
+        model_cfg: NativeMlmConfig,
+        engine_threads: usize,
+        session_cfg: crate::config::SessionConfig,
+    ) -> Result<Self> {
+        let model = Arc::new(NativeLm::new(model_cfg, engine_threads));
+        let metrics = Arc::new(Metrics::new());
+        let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_depth);
+        let sched_metrics = metrics.clone();
+        let threads = vec![std::thread::spawn(move || {
+            crate::coordinator::scheduler::scheduler_loop(
+                ingress_rx,
+                model,
+                session_cfg,
+                sched_metrics,
+            );
+        })];
+        Ok(Server { ingress: ingress_tx, metrics, next_id: AtomicU64::new(0), threads })
     }
 
     /// Shared startup: batcher thread + `cfg.workers` workers, one runner
@@ -486,6 +528,45 @@ mod tests {
         let one = server.infer(vec![2, 9]).expect("infer");
         assert_eq!(one.predictions.len(), 1);
         // prompts that cannot fit the requested continuation error cleanly
+        let err = server.generate(vec![2; 64], 8).unwrap_err();
+        assert!(format!("{err:#}").contains("seq_len"), "{err:#}");
+        server.shutdown();
+    }
+
+    /// The session server answers the same API as the fixed-round LM
+    /// server, bitwise identically, and reports prefix-cache reuse for a
+    /// repeated prompt in its stats.
+    #[test]
+    fn session_server_matches_fixed_round_and_reports_cache_hits() {
+        use crate::config::SessionConfig;
+        let cfg = serve_cfg(4, 500);
+        let model_cfg = NativeMlmConfig::from_tag(&cfg.model);
+        let scfg = SessionConfig { total_pages: 512, free_watermark: 8, ..Default::default() };
+        let server =
+            Server::start_native_lm_sessions(cfg.clone(), model_cfg.clone(), 2, scfg)
+                .expect("session server");
+        // longer than one block (32 for this tag) so the repeat can hit
+        let prompt: Vec<i32> = (0..40).map(|i| 2 + (i as i32 * 7) % 60).collect();
+        let resp = server.generate(prompt.clone(), 4).expect("generate");
+        // bitwise identical to the direct model path and the batcher path
+        let direct = NativeLm::new(model_cfg.clone(), 2).generate(&prompt, 4).unwrap();
+        assert_eq!(resp.predictions, direct);
+        let fixed = Server::start_native_lm(cfg, model_cfg, 2).expect("lm server");
+        let fixed_resp = fixed.generate(prompt.clone(), 4).expect("fixed generate");
+        assert_eq!(fixed_resp.predictions, direct);
+        fixed.shutdown();
+        // repeated prompt: served from shared prefix pages
+        let resp2 = server.generate(prompt.clone(), 4).expect("second generate");
+        assert_eq!(resp2.predictions, direct);
+        assert!(
+            server.metrics.prefix_hit_tokens.load(Ordering::Relaxed) >= 16,
+            "{}",
+            server.metrics.summary()
+        );
+        assert!(server.metrics.summary().contains("sessions="), "stats must surface sessions");
+        // infer() decodes one token, errors stay clean
+        let one = server.infer(vec![2, 9]).expect("infer");
+        assert_eq!(one.predictions.len(), 1);
         let err = server.generate(vec![2; 64], 8).unwrap_err();
         assert!(format!("{err:#}").contains("seq_len"), "{err:#}");
         server.shutdown();

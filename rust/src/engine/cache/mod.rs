@@ -1,0 +1,30 @@
+//! Session-serving KV cache: a paged arena + radix prefix tree.
+//!
+//! The MRA-2 decode state of one `(layer, head)` stream decomposes into
+//! block-aligned units (DESIGN.md §7): raw K/V rows, the packed K^T panel
+//! and the pooled pyramid rows of a block are all finalized exactly when
+//! the block completes, and attention only ever reads them at block
+//! granularity.  That makes the KV state *naturally pageable*: one
+//! [`Page`] holds everything the row-attention core needs about one
+//! `block`-token span of one stream — a page boundary on a multiple of
+//! `block` never splits a tile or a pyramid node.
+//!
+//! * [`page`] — the bounded [`PagePool`] arena (fixed-size pages, recycled
+//!   buffers, refcounted handles, copy-on-write for shared partial tails).
+//! * [`radix`] — the [`RadixCache`] token-prefix tree mapping cached
+//!   prompt prefixes to their physical pages, at block granularity, with
+//!   LRU eviction under memory pressure.
+//!
+//! Sharing model: a [`PageRef`] is an `Arc` — a forked session or a
+//! prefix-cache hit clones handles, not floats, so the shared-prefix
+//! portion of a forked session is *physically the same memory* as its
+//! parent (asserted via `Arc::ptr_eq` / pool occupancy in tests).  Pages
+//! of complete blocks are immutable for life; only the partial tail page
+//! of a stream is ever written, and writers copy-on-write when the tail
+//! is shared.  See DESIGN.md §9 for the page layout and lifetime rules.
+
+pub mod page;
+pub mod radix;
+
+pub use page::{Page, PagePool, PageRef, PoolExhausted};
+pub use radix::{CacheStats, RadixCache};

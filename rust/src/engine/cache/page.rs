@@ -1,0 +1,385 @@
+//! Bounded paged arena for decode KV state.
+//!
+//! One [`Page`] stores everything the per-row attention core
+//! ([`crate::engine::decode`]) reads about one `block`-token span of one
+//! `(layer, head)` stream, in one fixed-size buffer:
+//!
+//! ```text
+//! [ k rows      | v rows      | K^T panel   | pooled k | pooled v ]
+//!   block * d     block * d     block * d     d          d
+//! ```
+//!
+//! K/V rows are written token by token as the stream appends; the panel
+//! and the pooled rows are written once, when the block completes
+//! ([`Page::finalize`]) — after that the page is immutable for life, so it
+//! can be shared freely across sessions (fork, radix prefix cache).
+//!
+//! [`PagePool`] is the global bounded arena: it hands out refcounted
+//! [`PageRef`]s up to a fixed capacity and recycles the underlying buffers
+//! when the last reference drops, so the steady-state serving loop
+//! performs no heap allocations for cache growth — a page "allocation" is
+//! a freelist pop ([`PagePool::buffers_created`] is the high-water mark
+//! the allocation-free tests gate on).  When the pool is exhausted,
+//! [`PagePool::try_alloc`] fails with [`PoolExhausted`] and the scheduler
+//! reacts (radix-cache eviction, then session preemption) instead of
+//! growing memory without bound.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::tensor::kernel;
+
+/// Error returned when the bounded page pool has no free pages left.
+/// Callers either evict/preempt and retry, or surface the error.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolExhausted;
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV page pool exhausted (all pages in use)")
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+struct PoolShared {
+    block: usize,
+    d: usize,
+    page_elems: usize,
+    /// Max live (physical) pages; `usize::MAX` = unbounded.
+    capacity: usize,
+    /// Physical pages currently alive (each counted once however many
+    /// sessions/cache entries share it).
+    live: AtomicUsize,
+    /// Buffers ever created — the allocation high-water mark; stops
+    /// growing once the freelist covers the working set.
+    created: AtomicUsize,
+    /// Retired page buffers awaiting reuse.
+    recycled: Mutex<Vec<Box<[f32]>>>,
+}
+
+/// Shared handle to the bounded page arena (cheap to clone).
+pub struct PagePool {
+    shared: Arc<PoolShared>,
+}
+
+impl Clone for PagePool {
+    fn clone(&self) -> Self {
+        PagePool { shared: self.shared.clone() }
+    }
+}
+
+impl std::fmt::Debug for PagePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagePool")
+            .field("block", &self.shared.block)
+            .field("d", &self.shared.d)
+            .field("capacity", &self.shared.capacity)
+            .field("in_use", &self.pages_in_use())
+            .finish()
+    }
+}
+
+/// Refcounted handle to one page; cloning shares the physical page.
+pub type PageRef = Arc<Page>;
+
+impl PagePool {
+    /// Pool of at most `capacity` live pages sized for `(block, d)`
+    /// streams.  Buffers are created lazily and recycled on free.
+    pub fn new(capacity: usize, block: usize, d: usize) -> Self {
+        assert!(capacity > 0, "page pool capacity must be positive");
+        assert!(block > 0 && d > 0, "page geometry must be positive");
+        PagePool {
+            shared: Arc::new(PoolShared {
+                block,
+                d,
+                page_elems: 3 * block * d + 2 * d,
+                capacity,
+                live: AtomicUsize::new(0),
+                created: AtomicUsize::new(0),
+                recycled: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Unbounded pool — the default for standalone [`DecodeState`]s and
+    /// tests; serving schedulers always bound theirs.
+    ///
+    /// [`DecodeState`]: crate::engine::DecodeState
+    pub fn unbounded(block: usize, d: usize) -> Self {
+        Self::new(usize::MAX, block, d)
+    }
+
+    pub fn block(&self) -> usize {
+        self.shared.block
+    }
+
+    pub fn d(&self) -> usize {
+        self.shared.d
+    }
+
+    /// Floats per page (`3 * block * d + 2 * d`).
+    pub fn page_elems(&self) -> usize {
+        self.shared.page_elems
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
+    }
+
+    /// Physical pages currently alive.
+    pub fn pages_in_use(&self) -> usize {
+        self.shared.live.load(Ordering::Relaxed)
+    }
+
+    /// Pages that can still be allocated before [`PoolExhausted`].
+    pub fn free_pages(&self) -> usize {
+        self.shared.capacity.saturating_sub(self.pages_in_use())
+    }
+
+    /// Buffers ever created (the heap-allocation high-water mark; steady
+    /// state recycles instead of creating).
+    pub fn buffers_created(&self) -> usize {
+        self.shared.created.load(Ordering::Relaxed)
+    }
+
+    fn grab_buffer(&self) -> Result<Box<[f32]>, PoolExhausted> {
+        // reserve the live slot first so concurrent allocators cannot
+        // overshoot the capacity
+        let prev = self.shared.live.fetch_add(1, Ordering::Relaxed);
+        if prev >= self.shared.capacity {
+            self.shared.live.fetch_sub(1, Ordering::Relaxed);
+            return Err(PoolExhausted);
+        }
+        let reused = self.shared.recycled.lock().unwrap().pop();
+        Ok(reused.unwrap_or_else(|| {
+            self.shared.created.fetch_add(1, Ordering::Relaxed);
+            vec![0.0f32; self.shared.page_elems].into_boxed_slice()
+        }))
+    }
+
+    /// Allocate a zeroed page, failing when the pool is at capacity.
+    pub fn try_alloc(&self) -> Result<PageRef, PoolExhausted> {
+        let mut data = self.grab_buffer()?;
+        data.fill(0.0);
+        Ok(Arc::new(Page {
+            data,
+            block: self.shared.block,
+            d: self.shared.d,
+            pool: self.shared.clone(),
+        }))
+    }
+
+    /// Allocate a page holding a copy of `src`'s contents — the
+    /// copy-on-write step for a shared partial tail page.
+    pub fn alloc_copy(&self, src: &Page) -> Result<PageRef, PoolExhausted> {
+        let mut data = self.grab_buffer()?;
+        data.copy_from_slice(&src.data);
+        Ok(Arc::new(Page {
+            data,
+            block: self.shared.block,
+            d: self.shared.d,
+            pool: self.shared.clone(),
+        }))
+    }
+}
+
+/// One block-aligned span of one `(layer, head)` KV stream.  See the
+/// module docs for the layout; all accessors are zero-copy slices into
+/// the page buffer.
+pub struct Page {
+    data: Box<[f32]>,
+    block: usize,
+    d: usize,
+    pool: Arc<PoolShared>,
+}
+
+impl Page {
+    #[inline]
+    fn bd(&self) -> usize {
+        self.block * self.d
+    }
+
+    /// Raw key row `i` of this block (`i < block`).
+    #[inline]
+    pub fn k_row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.block);
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// First `rows` key rows, row-major (the partial-tail view).
+    #[inline]
+    pub fn k_rows(&self, rows: usize) -> &[f32] {
+        debug_assert!(rows <= self.block);
+        &self.data[..rows * self.d]
+    }
+
+    /// First `rows` value rows, row-major (the partial-tail view).
+    #[inline]
+    pub fn v_rows(&self, rows: usize) -> &[f32] {
+        debug_assert!(rows <= self.block);
+        let bd = self.bd();
+        &self.data[bd..bd + rows * self.d]
+    }
+
+    /// All `block` value rows (complete-block view).
+    #[inline]
+    pub fn v_block(&self) -> &[f32] {
+        let bd = self.bd();
+        &self.data[bd..2 * bd]
+    }
+
+    /// Packed `(d, block)` K^T panel (valid once the block completed).
+    #[inline]
+    pub fn panel(&self) -> &[f32] {
+        let bd = self.bd();
+        &self.data[2 * bd..3 * bd]
+    }
+
+    /// Pooled (mean) key row (valid once the block completed).
+    #[inline]
+    pub fn kt(&self) -> &[f32] {
+        let bd = self.bd();
+        &self.data[3 * bd..3 * bd + self.d]
+    }
+
+    /// Pooled (mean) value row (valid once the block completed).
+    #[inline]
+    pub fn vt(&self) -> &[f32] {
+        let bd = self.bd();
+        &self.data[3 * bd + self.d..3 * bd + 2 * self.d]
+    }
+
+    /// Write the key/value rows of position `i` within the block.  Only
+    /// ever called through a unique (copy-on-write) handle.
+    pub fn write_kv_row(&mut self, i: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(i < self.block);
+        debug_assert_eq!(k_row.len(), self.d);
+        debug_assert_eq!(v_row.len(), self.d);
+        let (d, bd) = (self.d, self.bd());
+        self.data[i * d..(i + 1) * d].copy_from_slice(k_row);
+        self.data[bd + i * d..bd + (i + 1) * d].copy_from_slice(v_row);
+    }
+
+    /// Seal a completed block: write the pooled rows (`sum * inv`, the
+    /// same float sequence as the historical `DecodeState` finalization)
+    /// and pack the K^T panel from the page's own key rows (a pure
+    /// permutation).  After this the page is immutable.
+    pub fn finalize(&mut self, ksum: &[f32], vsum: &[f32], inv: f32) {
+        debug_assert_eq!(ksum.len(), self.d);
+        debug_assert_eq!(vsum.len(), self.d);
+        let (d, block) = (self.d, self.block);
+        let bd = block * d;
+        let (rows, derived) = self.data.split_at_mut(2 * bd);
+        for (o, &s) in derived[bd..bd + d].iter_mut().zip(ksum) {
+            *o = s * inv;
+        }
+        for (o, &s) in derived[bd + d..bd + 2 * d].iter_mut().zip(vsum) {
+            *o = s * inv;
+        }
+        kernel::pack_transpose(&rows[..bd], block, d, &mut derived[..bd]);
+    }
+}
+
+impl Drop for Page {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.data);
+        self.pool.recycled.lock().unwrap().push(buf);
+        self.pool.live.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl std::fmt::Debug for Page {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Page").field("block", &self.block).field("d", &self.d).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_pool_refuses_past_capacity_and_recycles() {
+        let pool = PagePool::new(2, 4, 8);
+        assert_eq!(pool.page_elems(), 3 * 4 * 8 + 2 * 8);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.free_pages(), 0);
+        assert_eq!(pool.try_alloc().unwrap_err(), PoolExhausted);
+        drop(a);
+        assert_eq!(pool.free_pages(), 1);
+        // freed buffer is recycled, not re-created
+        let created = pool.buffers_created();
+        let c = pool.try_alloc().unwrap();
+        assert_eq!(pool.buffers_created(), created, "steady state re-created a buffer");
+        drop((b, c));
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn sharing_a_page_does_not_consume_pool_pages() {
+        let pool = PagePool::new(4, 2, 4);
+        let a = pool.try_alloc().unwrap();
+        let shared = a.clone();
+        assert_eq!(Arc::strong_count(&a), 2);
+        assert_eq!(pool.pages_in_use(), 1, "a shared page is one physical page");
+        drop(a);
+        assert_eq!(pool.pages_in_use(), 1);
+        drop(shared);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn write_finalize_roundtrip_matches_layout() {
+        let (b, d) = (2usize, 3usize);
+        let pool = PagePool::unbounded(b, d);
+        let mut page = pool.try_alloc().unwrap();
+        let p = Arc::get_mut(&mut page).unwrap();
+        p.write_kv_row(0, &[1.0, 2.0, 3.0], &[10.0, 20.0, 30.0]);
+        p.write_kv_row(1, &[4.0, 5.0, 6.0], &[40.0, 50.0, 60.0]);
+        let ksum = [5.0, 7.0, 9.0];
+        let vsum = [50.0, 70.0, 90.0];
+        p.finalize(&ksum, &vsum, 0.5);
+        assert_eq!(page.k_row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(page.k_rows(2), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(page.v_rows(1), &[10.0, 20.0, 30.0]);
+        assert_eq!(page.v_block(), &[10.0, 20.0, 30.0, 40.0, 50.0, 60.0]);
+        assert_eq!(page.kt(), &[2.5, 3.5, 4.5]);
+        assert_eq!(page.vt(), &[25.0, 35.0, 45.0]);
+        // panel is the (d, block) transpose of the key rows
+        let mut panel = vec![0.0f32; b * d];
+        kernel::pack_transpose(page.k_rows(b), b, d, &mut panel);
+        assert_eq!(page.panel(), &panel[..]);
+    }
+
+    #[test]
+    fn alloc_copy_duplicates_contents_into_a_fresh_page() {
+        let pool = PagePool::new(3, 2, 2);
+        let mut page = pool.try_alloc().unwrap();
+        Arc::get_mut(&mut page).unwrap().write_kv_row(0, &[1.0, 2.0], &[3.0, 4.0]);
+        let copy = pool.alloc_copy(&page).unwrap();
+        assert!(!Arc::ptr_eq(&page, &copy));
+        assert_eq!(copy.k_row(0), page.k_row(0));
+        assert_eq!(copy.v_rows(1), page.v_rows(1));
+        assert_eq!(pool.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn recycled_pages_come_back_zeroed() {
+        let pool = PagePool::new(1, 2, 2);
+        let mut page = pool.try_alloc().unwrap();
+        Arc::get_mut(&mut page).unwrap().write_kv_row(1, &[9.0, 9.0], &[9.0, 9.0]);
+        drop(page);
+        let fresh = pool.try_alloc().unwrap();
+        assert!(fresh.k_rows(2).iter().all(|&x| x == 0.0));
+        assert!(fresh.v_block().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pool_exhausted_error_is_descriptive() {
+        let msg = PoolExhausted.to_string();
+        assert!(msg.contains("page pool exhausted"), "{msg}");
+    }
+}

@@ -1,5 +1,7 @@
 //! Incremental causal decode: a per-(batch, head) KV cache that reuses the
-//! MRA-2 pyramid across steps.
+//! MRA-2 pyramid across steps — backed by the paged arena
+//! ([`crate::engine::cache`]) so sessions can fork and share prefixes
+//! physically.
 //!
 //! [`DecodeState::append`] maintains the pooled key/value pyramid
 //! incrementally — partial-block sums accumulate in arrival order and are
@@ -10,6 +12,16 @@
 //! identical** to recomputing the causal prefix ([`causal_row_attention`];
 //! asserted in tests and `benches/bench_decode.rs`).
 //!
+//! State lives in fixed-size block-aligned [`Page`]s from a (possibly
+//! bounded) [`PagePool`]: one page holds one block's raw K/V rows, its
+//! packed K^T panel and its pooled pyramid rows, so a page boundary never
+//! splits a tile or a pyramid node.  [`DecodeState::fork`] clones page
+//! *handles* — the shared prefix of a forked session is physically the
+//! same memory as its parent's (`Arc::ptr_eq`, asserted in tests), and
+//! only the partial tail page is copied on the next write (copy-on-write).
+//! [`DecodeState::from_cached`] rebuilds a state directly from
+//! radix-cached pages of a shared prompt.
+//!
 //! [`DecodeState::attend_last`] runs a strictly per-row causal MRA-2 for
 //! the newest position: exact attention over the current (possibly
 //! partial) block and the `budget` best complete past blocks by pooled
@@ -19,15 +31,19 @@
 //! the fused online-softmax kernel ([`kernel::softmax_accum_panel`]); all
 //! transients live in a per-state scratch, so the steady decode path
 //! ([`DecodeState::attend_last_into`]) performs **zero heap allocations**
-//! per token.  Cost per generated token is
+//! per token (page "allocations" at block boundaries are freelist pops
+//! once the pool is warm).  Cost per generated token is
 //! `O(block + budget * block + n / block)` against `O(n)` for exact causal
 //! decode — the tokens/sec gap `benches/bench_decode.rs` measures.
 //!
 //! This per-row selection is the decode-time analog of the causal batch
 //! plan's per-query-block budget (`mra::attention::mra2_plan` with
 //! [`Causality::Causal`][crate::mra::Causality]); see DESIGN.md §7 for how
-//! the two schedules relate.
+//! the two schedules relate and §9 for the page lifetime rules.
 
+use std::sync::Arc;
+
+use crate::engine::cache::{Page, PagePool, PageRef, PoolExhausted};
 use crate::mra::Variant;
 use crate::tensor::{kernel, ops, topk};
 
@@ -46,8 +62,104 @@ struct DecodeScratch {
     scores: Vec<f32>,
 }
 
+/// Per-block view the row-attention core reads: pooled rows, packed K^T
+/// panel and raw value rows of every complete past block, plus the raw
+/// K/V rows of the current (possibly partial) block.  Implemented by the
+/// paged state and by the flat-slice recompute path — both feed the same
+/// float sequence through [`attend_row_core`], which is what keeps the
+/// paged layout bitwise identical to the historical contiguous one.
+trait BlockSource {
+    /// Pooled (mean) key row of complete block `y`.
+    fn kt(&self, y: usize) -> &[f32];
+    /// Pooled (mean) value row of complete block `y`.
+    fn vt(&self, y: usize) -> &[f32];
+    /// Packed `(d, block)` K^T panel of complete block `y`.
+    fn panel(&self, y: usize) -> &[f32];
+    /// Raw value rows of complete block `y` (`block * d`).
+    fn v_block(&self, y: usize) -> &[f32];
+    /// Raw key rows of the current block (`w * d`).
+    fn tail_k(&self) -> &[f32];
+    /// Raw value rows of the current block (`w * d`).
+    fn tail_v(&self) -> &[f32];
+}
+
+/// [`BlockSource`] over the paged state: block `y` is page `y`.
+struct PagedBlocks<'a> {
+    pages: &'a [PageRef],
+    /// Rows in the current (tail) block.
+    w: usize,
+}
+
+impl BlockSource for PagedBlocks<'_> {
+    fn kt(&self, y: usize) -> &[f32] {
+        self.pages[y].kt()
+    }
+
+    fn vt(&self, y: usize) -> &[f32] {
+        self.pages[y].vt()
+    }
+
+    fn panel(&self, y: usize) -> &[f32] {
+        self.pages[y].panel()
+    }
+
+    fn v_block(&self, y: usize) -> &[f32] {
+        self.pages[y].v_block()
+    }
+
+    fn tail_k(&self) -> &[f32] {
+        self.pages.last().expect("tail page").k_rows(self.w)
+    }
+
+    fn tail_v(&self) -> &[f32] {
+        self.pages.last().expect("tail page").v_rows(self.w)
+    }
+}
+
+/// [`BlockSource`] over flat prefix slices (the from-scratch recompute
+/// path of [`causal_row_attention`]).
+struct SliceBlocks<'a> {
+    d: usize,
+    b: usize,
+    kt: &'a [f32],
+    vt: &'a [f32],
+    panels: &'a [f32],
+    v_prefix: &'a [f32],
+    tail_k: &'a [f32],
+    tail_v: &'a [f32],
+}
+
+impl BlockSource for SliceBlocks<'_> {
+    fn kt(&self, y: usize) -> &[f32] {
+        &self.kt[y * self.d..(y + 1) * self.d]
+    }
+
+    fn vt(&self, y: usize) -> &[f32] {
+        &self.vt[y * self.d..(y + 1) * self.d]
+    }
+
+    fn panel(&self, y: usize) -> &[f32] {
+        &self.panels[y * self.b * self.d..(y + 1) * self.b * self.d]
+    }
+
+    fn v_block(&self, y: usize) -> &[f32] {
+        &self.v_prefix[y * self.b * self.d..(y + 1) * self.b * self.d]
+    }
+
+    fn tail_k(&self) -> &[f32] {
+        self.tail_k
+    }
+
+    fn tail_v(&self) -> &[f32] {
+        self.tail_v
+    }
+}
+
 /// Incremental KV cache + pooled pyramid for one `(batch, head)` pair of
-/// an autoregressive decode stream.
+/// an autoregressive decode stream, stored in block-aligned pages.
+///
+/// Cloning (= [`DecodeState::fork`]) shares the pages physically and the
+/// pool handle; the clone costs zero pool pages until it diverges.
 #[derive(Clone, Debug)]
 pub struct DecodeState {
     block: usize,
@@ -56,15 +168,11 @@ pub struct DecodeState {
     variant: Variant,
     d: usize,
     len: usize,
-    /// Raw appended key/value rows, `(len, d)` row-major.
-    k_rows: Vec<f32>,
-    v_rows: Vec<f32>,
-    /// Pooled (mean) rows of every *completed* block, `(len / block, d)`.
-    kt: Vec<f32>,
-    vt: Vec<f32>,
-    /// Packed K^T panels of every completed block (`(d, block)` each) —
-    /// the outer-product operand for refined-block scoring.
-    kt_panels: Vec<f32>,
+    /// Page allocator (shared across forks; bounded under the serving
+    /// scheduler, unbounded for standalone states).
+    pool: PagePool,
+    /// One page per started block; all complete except possibly the last.
+    pages: Vec<PageRef>,
     /// Running sums of the current partial block.
     ksum: Vec<f32>,
     vsum: Vec<f32>,
@@ -73,24 +181,51 @@ pub struct DecodeState {
 }
 
 impl DecodeState {
+    /// Standalone state with a private unbounded page pool.
     pub fn new(block: usize, budget: usize, variant: Variant, d: usize) -> Self {
         assert!(block > 0, "block must be positive");
         assert!(d > 0, "head dim must be positive");
+        Self::with_pool(&PagePool::unbounded(block, d), budget, variant)
+    }
+
+    /// State allocating from a shared (possibly bounded) pool; `block`
+    /// and `d` come from the pool's page geometry.
+    pub fn with_pool(pool: &PagePool, budget: usize, variant: Variant) -> Self {
+        let d = pool.d();
         DecodeState {
-            block,
+            block: pool.block(),
             budget,
             variant,
             d,
             len: 0,
-            k_rows: Vec::new(),
-            v_rows: Vec::new(),
-            kt: Vec::new(),
-            vt: Vec::new(),
-            kt_panels: Vec::new(),
+            pool: pool.clone(),
+            pages: Vec::new(),
             ksum: vec![0.0; d],
             vsum: vec![0.0; d],
             scratch: DecodeScratch::default(),
         }
+    }
+
+    /// Rebuild a state from radix-cached pages of a shared prefix:
+    /// `pages` must be complete-block pages in order (`len = pages.len() *
+    /// block` tokens).  The pages are shared, not copied — this is the
+    /// prefix-cache hit path.
+    pub fn from_cached(
+        pool: &PagePool,
+        budget: usize,
+        variant: Variant,
+        pages: Vec<PageRef>,
+        len: usize,
+    ) -> Self {
+        assert_eq!(
+            len,
+            pages.len() * pool.block(),
+            "cached prefix must be whole blocks"
+        );
+        let mut st = Self::with_pool(pool, budget, variant);
+        st.pages = pages;
+        st.len = len;
+        st
     }
 
     /// Number of cached positions.
@@ -106,6 +241,40 @@ impl DecodeState {
         self.block
     }
 
+    /// The pages backing this stream (one per started block; all complete
+    /// except possibly the last).  Complete pages are immutable and safe
+    /// to share (radix cache, forks).
+    pub fn pages(&self) -> &[PageRef] {
+        &self.pages
+    }
+
+    /// The pool this stream allocates from.
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    /// Fork the stream: the clone shares every page physically (the
+    /// partial tail copies on its next write) and allocates from the same
+    /// pool.  Bitwise: both sides continue exactly as a cold state fed
+    /// the same prefix would.
+    pub fn fork(&self) -> Self {
+        self.clone()
+    }
+
+    /// Whether the next [`DecodeState::append`] allocates a page — either
+    /// it starts a new block, or the partial tail is shared with a fork
+    /// and will copy-on-write.  The scheduler's per-step page reservation
+    /// hook.
+    pub fn next_append_needs_page(&self) -> bool {
+        if self.len % self.block == 0 {
+            return true;
+        }
+        match self.pages.last() {
+            Some(tail) => Arc::strong_count(tail) > 1,
+            None => true,
+        }
+    }
+
     /// Append one key/value row to the cache, maintaining the pooled
     /// pyramid incrementally.  Rows accumulate into the partial-block sums
     /// in arrival order and are finalized exactly when the block completes
@@ -113,11 +282,32 @@ impl DecodeState {
     /// prefix, which is what makes incremental decode bitwise identical to
     /// a from-scratch recompute.  Completed blocks are also packed into
     /// K^T panels (a permutation — no float arithmetic).
+    ///
+    /// Panics when the pool is exhausted; serving paths use
+    /// [`DecodeState::try_append`] and let the scheduler evict/preempt.
     pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        self.try_append(k_row, v_row).expect("KV page pool exhausted");
+    }
+
+    /// [`DecodeState::append`] returning [`PoolExhausted`] when no page is
+    /// free.  On error the state is unchanged (the failed step can be
+    /// retried after eviction, or the whole stream preempted and
+    /// recomputed later — decode is deterministic).
+    pub fn try_append(&mut self, k_row: &[f32], v_row: &[f32]) -> Result<(), PoolExhausted> {
         assert_eq!(k_row.len(), self.d, "k row width");
         assert_eq!(v_row.len(), self.d, "v row width");
-        self.k_rows.extend_from_slice(k_row);
-        self.v_rows.extend_from_slice(v_row);
+        if self.len % self.block == 0 {
+            self.pages.push(self.pool.try_alloc()?);
+        } else if Arc::get_mut(self.pages.last_mut().expect("tail page")).is_none() {
+            // shared partial tail (fork before a block boundary):
+            // copy-on-write before the first divergent row lands
+            let copy = self.pool.alloc_copy(self.pages.last().expect("tail page"))?;
+            *self.pages.last_mut().expect("tail page") = copy;
+        }
+        let off = self.len % self.block;
+        let page: &mut Page = Arc::get_mut(self.pages.last_mut().expect("tail page"))
+            .expect("tail page unique after CoW");
+        page.write_kv_row(off, k_row, v_row);
         for (s, &x) in self.ksum.iter_mut().zip(k_row) {
             *s += x;
         }
@@ -127,20 +317,13 @@ impl DecodeState {
         self.len += 1;
         if self.len % self.block == 0 {
             let inv = 1.0 / self.block as f32;
-            self.kt.extend(self.ksum.iter().map(|&s| s * inv));
-            self.vt.extend(self.vsum.iter().map(|&s| s * inv));
+            let page = Arc::get_mut(self.pages.last_mut().expect("tail page"))
+                .expect("tail page unique while completing");
+            page.finalize(&self.ksum, &self.vsum, inv);
             self.ksum.fill(0.0);
             self.vsum.fill(0.0);
-            let panel_len = self.block * self.d;
-            let start = self.kt_panels.len();
-            self.kt_panels.resize(start + panel_len, 0.0);
-            kernel::pack_transpose(
-                &self.k_rows[(self.len - self.block) * self.d..self.len * self.d],
-                self.block,
-                self.d,
-                &mut self.kt_panels[start..],
-            );
         }
+        Ok(())
     }
 
     /// Causal MRA-2 attention of `q_row` (the newest position, `len - 1`)
@@ -161,20 +344,9 @@ impl DecodeState {
         assert_eq!(q_row.len(), self.d, "q row width");
         assert_eq!(out.len(), self.d, "out row width");
         let (len, block, budget, variant) = (self.len, self.block, self.budget, self.variant);
-        attend_row_core(
-            q_row,
-            &self.k_rows,
-            &self.v_rows,
-            len,
-            &self.kt,
-            &self.vt,
-            &self.kt_panels,
-            block,
-            budget,
-            variant,
-            &mut self.scratch,
-            out,
-        );
+        let w = len - (len - 1) / block * block;
+        let src = PagedBlocks { pages: &self.pages, w };
+        attend_row_core(q_row, &src, len, block, budget, variant, &mut self.scratch, out);
     }
 
     /// One decode step: `append` + `attend_last`.
@@ -202,24 +374,21 @@ impl DecodeState {
     }
 }
 
-/// Shared row-attention core: the position `len - 1` attends the `len`
-/// cached k/v rows, with pooled complete-block mats `kt` / `vt` and packed
-/// K^T panels `kt_panels` covering at least `(len - 1) / block` blocks.
+/// Shared row-attention core: the position `len - 1` attends the cached
+/// prefix exposed by `src` (complete past blocks `0..x` plus the current
+/// block's `w` rows).
 ///
 /// Refined past blocks stream through the fused online-softmax kernel
 /// (running max seeded at the Full variant's stabilization floor), then
 /// the current partial block, then the low-res `mu` correction — the same
 /// schedule as the batch path's [`crate::mra::mra2_apply_blocks`] with a
-/// single query row.
+/// single query row.  Every [`BlockSource`] feeds the identical float
+/// sequence, so paged and contiguous states agree bitwise.
 #[allow(clippy::too_many_arguments)]
-fn attend_row_core(
+fn attend_row_core<S: BlockSource>(
     q_row: &[f32],
-    k_rows: &[f32],
-    v_rows: &[f32],
+    src: &S,
     len: usize,
-    kt: &[f32],
-    vt: &[f32],
-    kt_panels: &[f32],
     block: usize,
     budget: usize,
     variant: Variant,
@@ -230,16 +399,12 @@ fn attend_row_core(
     let b = block;
     let i = len - 1;
     let x = i / b; // current (query) block
-    debug_assert!(
-        kt.len() >= x * d && vt.len() >= x * d && kt_panels.len() >= x * b * d,
-        "pooled pyramid too short"
-    );
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
 
     // per-row Alg. 1: score every complete past block at low resolution
     let s_low = &mut scratch.s_low;
     s_low.clear();
-    s_low.extend((0..x).map(|y| kernel::dot(q_row, &kt[y * d..(y + 1) * d]) * inv_sqrt_d));
+    s_low.extend((0..x).map(|y| kernel::dot(q_row, src.kt(y)) * inv_sqrt_d));
     topk::top_k_into(s_low, budget.min(x), &mut scratch.refined);
     scratch.refined.sort_unstable();
     let is_refined = &mut scratch.is_refined;
@@ -268,39 +433,14 @@ fn attend_row_core(
     for &y in &scratch.refined {
         scores.clear();
         scores.resize(b, 0.0);
-        kernel::score_panel(
-            q_row,
-            d,
-            &kt_panels[y * b * d..(y + 1) * b * d],
-            b,
-            inv_sqrt_d,
-            scores,
-        );
-        kernel::softmax_accum_panel(
-            scores,
-            &v_rows[y * b * d..(y + 1) * b * d],
-            b,
-            d,
-            &mut rowmax,
-            &mut den,
-            out,
-        );
+        kernel::score_panel(q_row, d, src.panel(y), b, inv_sqrt_d, scores);
+        kernel::softmax_accum_panel(scores, src.v_block(y), b, d, &mut rowmax, &mut den, out);
     }
-    let cur_start = x * b;
-    let w = len - cur_start;
+    let w = len - x * b;
+    let tail_k = src.tail_k();
     scores.clear();
-    scores.extend(
-        (cur_start..len).map(|j| kernel::dot(q_row, &k_rows[j * d..(j + 1) * d]) * inv_sqrt_d),
-    );
-    kernel::softmax_accum_panel(
-        scores,
-        &v_rows[cur_start * d..len * d],
-        w,
-        d,
-        &mut rowmax,
-        &mut den,
-        out,
-    );
+    scores.extend((0..w).map(|r| kernel::dot(q_row, &tail_k[r * d..(r + 1) * d]) * inv_sqrt_d));
+    kernel::softmax_accum_panel(scores, src.tail_v(), w, d, &mut rowmax, &mut den, out);
 
     // low-resolution contribution of the non-refined past blocks; the
     // running max is >= the floor >= every non-refined pooled score, so
@@ -313,7 +453,7 @@ fn attend_row_core(
             }
             let mu = (s - mf).exp() * b as f32;
             den[0] += mu;
-            kernel::axpy(out, &vt[y * d..(y + 1) * d], mu);
+            kernel::axpy(out, src.vt(y), mu);
         }
     }
 
@@ -325,8 +465,8 @@ fn attend_row_core(
 /// from scratch (no incremental state): pools the complete blocks of the
 /// prefix, packs their K^T panels, and runs the same row core as
 /// [`DecodeState::attend_last`].  Bitwise identical to an incrementally
-/// maintained [`DecodeState`] — the regression surface for KV-cache
-/// bookkeeping bugs.
+/// maintained [`DecodeState`] — the regression surface for KV-cache and
+/// page bookkeeping bugs.
 pub fn causal_row_attention(
     q_row: &[f32],
     k_prefix: &[f32],
@@ -346,15 +486,21 @@ pub fn causal_row_attention(
     for (y, panel) in kt_panels.chunks_exact_mut(block * d).enumerate() {
         kernel::pack_transpose(&k_prefix[y * block * d..(y + 1) * block * d], block, d, panel);
     }
+    let src = SliceBlocks {
+        d,
+        b: block,
+        kt: &kt.data,
+        vt: &vt.data,
+        panels: &kt_panels,
+        v_prefix,
+        tail_k: &k_prefix[x * block * d..len * d],
+        tail_v: &v_prefix[x * block * d..len * d],
+    };
     let mut out = vec![0.0f32; d];
     attend_row_core(
         q_row,
-        k_prefix,
-        v_prefix,
+        &src,
         len,
-        &kt.data,
-        &vt.data,
-        &kt_panels,
         block,
         budget,
         variant,
@@ -527,6 +673,98 @@ mod tests {
             st.attend_last_into(&q[(n - 1) * d..n * d], &mut out);
             assert_eq!(st.scratch_elems(), stable, "steady-state scratch grew");
         }
+    }
+
+    #[test]
+    fn fork_shares_pages_physically_then_copy_on_writes() {
+        let (d, b) = (8usize, 4usize);
+        let pool = PagePool::new(64, b, d);
+        let mut rng = Rng::new(31);
+        let n = 10; // 2 complete pages + a 2-row partial tail
+        let k = rows(n + 4, d, &mut rng);
+        let v = rows(n + 4, d, &mut rng);
+        let mut base = DecodeState::with_pool(&pool, 2, Variant::Full);
+        for t in 0..n {
+            base.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+        }
+        let used_before = pool.pages_in_use();
+        let mut forked = base.fork();
+        // the fork is physically the same memory, not a numeric copy
+        assert_eq!(pool.pages_in_use(), used_before, "fork must not consume pages");
+        for (a, bb) in base.pages().iter().zip(forked.pages()) {
+            assert!(Arc::ptr_eq(a, bb), "forked page is not shared");
+        }
+        assert!(Arc::strong_count(&base.pages()[0]) >= 2);
+        // divergent appends: the shared partial tail copies on write,
+        // complete pages stay shared
+        let t = n;
+        forked.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+        assert_eq!(pool.pages_in_use(), used_before + 1, "CoW must copy one page");
+        assert!(!Arc::ptr_eq(&base.pages()[2], &forked.pages()[2]), "tail must diverge");
+        assert!(Arc::ptr_eq(&base.pages()[0], &forked.pages()[0]));
+        assert!(Arc::ptr_eq(&base.pages()[1], &forked.pages()[1]));
+        // and the parent is untouched: bitwise identical to a cold state
+        // over the same rows
+        let t2 = n + 1;
+        base.append(&k[t2 * d..(t2 + 1) * d], &v[t2 * d..(t2 + 1) * d]);
+        let q = rows(1, d, &mut rng);
+        let out_base = base.attend_last(&q);
+        let mut cold = DecodeState::new(b, 2, Variant::Full, d);
+        for tt in 0..n {
+            cold.append(&k[tt * d..(tt + 1) * d], &v[tt * d..(tt + 1) * d]);
+        }
+        cold.append(&k[t2 * d..(t2 + 1) * d], &v[t2 * d..(t2 + 1) * d]);
+        assert_eq!(out_base, cold.attend_last(&q), "parent diverged after fork CoW");
+    }
+
+    #[test]
+    fn from_cached_pages_continue_bitwise_identically() {
+        let (d, b) = (8usize, 4usize);
+        let pool = PagePool::new(64, b, d);
+        let mut rng = Rng::new(33);
+        let n = 14; // 3 complete blocks + 2 tail rows
+        let k = rows(n, d, &mut rng);
+        let v = rows(n, d, &mut rng);
+        let q = rows(n, d, &mut rng);
+        let mut full = DecodeState::with_pool(&pool, 2, Variant::Full);
+        for t in 0..n {
+            full.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+        }
+        // seed a new state from the first 2 complete blocks' pages (the
+        // radix-cache hit path), then replay the rest
+        let cached: Vec<PageRef> = full.pages()[..2].to_vec();
+        let mut warm = DecodeState::from_cached(&pool, 2, Variant::Full, cached, 2 * b);
+        for t in 2 * b..n {
+            warm.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+        }
+        assert!(Arc::ptr_eq(&full.pages()[0], &warm.pages()[0]));
+        assert!(Arc::ptr_eq(&full.pages()[1], &warm.pages()[1]));
+        let qrow = &q[(n - 1) * d..n * d];
+        assert_eq!(full.attend_last(qrow), warm.attend_last(qrow));
+    }
+
+    #[test]
+    fn bounded_pool_exhaustion_is_clean_and_retryable() {
+        let (d, b) = (4usize, 4usize);
+        let pool = PagePool::new(2, b, d);
+        let mut st = DecodeState::with_pool(&pool, 1, Variant::Full);
+        let row = vec![1.0f32; d];
+        for _ in 0..b {
+            st.try_append(&row, &row).unwrap();
+        }
+        // a second stream grabs the last free page
+        let hog = pool.try_alloc().unwrap();
+        // next append needs a second page: fails, state unchanged
+        assert!(st.next_append_needs_page());
+        assert_eq!(st.try_append(&row, &row).unwrap_err(), PoolExhausted);
+        assert_eq!(st.len(), b);
+        let out = st.attend_last(&row); // still fully usable
+        assert_eq!(out.len(), d);
+        // freeing pages elsewhere makes the *same* append succeed (the
+        // scheduler's evict-then-retry path)
+        drop(hog);
+        st.try_append(&row, &row).unwrap();
+        assert_eq!(st.len(), b + 1);
     }
 
     #[test]

@@ -28,12 +28,18 @@
 //!
 //! See DESIGN.md §Engine for the schedule and EXPERIMENTS.md §Engine for
 //! measured thread scaling.
+//!
+//! Serving-side state lives next door: [`cache`] is the paged KV arena +
+//! radix prefix tree, and [`decode`] the per-stream incremental decode
+//! state built on its pages (DESIGN.md §9).
 
+pub mod cache;
 pub mod decode;
 pub mod kernels;
 pub mod pool;
 pub mod tensor4;
 
+pub use cache::{CacheStats, Page, PagePool, PageRef, PoolExhausted, RadixCache};
 pub use decode::{causal_row_attention, causal_row_oracle, DecodeState};
 pub use kernels::{
     kernel_by_name, ApproxShim, AttnKernel, CausalExactKernel, ExactKernel, HeadPlan,

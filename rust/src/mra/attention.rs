@@ -112,12 +112,15 @@ pub fn mra_attention(q: &Mat, k: &Mat, v: &Mat, cfg: &MraConfig) -> Mat {
     let qpyr = Pyramid::build(q, &cfg.scales);
     let kpyr = Pyramid::build(k, &cfg.scales);
     let vpyr = Pyramid::build(v, &cfg.scales);
-    let sel = construct_j(&qpyr, &kpyr, n, q.cols, &cfg.scales, &cfg.budgets, cfg.include_diagonal);
+    // cfg.validate established every ladder scale, so the Result paths of
+    // construct_j / compute (unknown-scale errors) cannot trip here
+    let sel = construct_j(&qpyr, &kpyr, n, q.cols, &cfg.scales, &cfg.budgets, cfg.include_diagonal)
+        .expect("validated ladder");
     let blocks: Vec<Scored> = match cfg.variant {
         Variant::Full => sel.blocks,
         Variant::Sparse => sel.finest_only(*cfg.scales.last().unwrap()),
     };
-    matvec::compute(&blocks, &vpyr, n, &cfg.scales).normalized()
+    matvec::compute(&blocks, &vpyr, n, &cfg.scales).expect("validated ladder").normalized()
 }
 
 /// Workload statistics of one MRA-2 invocation (feeds Fig. 7 left).

@@ -11,6 +11,8 @@
 //! but keeps every `exp` in range (the CPU analog of the kernel's two-pass
 //! stabilization).
 
+use anyhow::{anyhow, Result};
+
 use crate::mra::pyramid::Pyramid;
 use crate::mra::select::Scored;
 use crate::tensor::Mat;
@@ -44,10 +46,13 @@ impl MatVec {
 
 /// Run Alg. 2 over the final set `J` (`blocks`) and the value pyramid.
 ///
-/// `scales` must be the descending ladder used for selection; every block's
-/// scale must appear in it.
-pub fn compute(blocks: &[Scored], vpyr: &Pyramid, n: usize, scales: &[usize]) -> MatVec {
-    let d_model = vpyr.at(scales[0]).cols;
+/// `scales` must be the descending ladder used for selection; a block
+/// whose scale is missing from it (or from the pyramid) is a descriptive
+/// error listing the known scales — no panic (mirroring the
+/// `kernel_by_name` contract; callers with a validated ladder may
+/// `expect`).
+pub fn compute(blocks: &[Scored], vpyr: &Pyramid, n: usize, scales: &[usize]) -> Result<MatVec> {
+    let d_model = vpyr.at(scales[0])?.cols;
     let shift = blocks
         .iter()
         .map(|s| s.log_mu)
@@ -57,10 +62,12 @@ pub fn compute(blocks: &[Scored], vpyr: &Pyramid, n: usize, scales: &[usize]) ->
     // group blocks by scale for the coarse-to-fine sweep
     let mut by_scale: Vec<Vec<&Scored>> = vec![Vec::new(); scales.len()];
     for b in blocks {
-        let li = scales
-            .iter()
-            .position(|&s| s == b.block.scale)
-            .unwrap_or_else(|| panic!("block scale {} not in ladder", b.block.scale));
+        let li = scales.iter().position(|&s| s == b.block.scale).ok_or_else(|| {
+            anyhow!(
+                "block scale {} not in ladder (known scales: {scales:?})",
+                b.block.scale
+            )
+        })?;
         by_scale[li].push(b);
     }
 
@@ -84,7 +91,7 @@ pub fn compute(blocks: &[Scored], vpyr: &Pyramid, n: usize, scales: &[usize]) ->
             y = y2;
             dsum = d2;
         }
-        let vt = vpyr.at(s);
+        let vt = vpyr.at(s)?;
         for sb in &by_scale[li] {
             let mu = (sb.log_mu - shift).exp();
             if mu == 0.0 {
@@ -113,7 +120,7 @@ pub fn compute(blocks: &[Scored], vpyr: &Pyramid, n: usize, scales: &[usize]) ->
         y = y2;
         dsum = d2;
     }
-    MatVec { y, d: dsum, shift }
+    Ok(MatVec { y, d: dsum, shift })
 }
 
 /// Dense oracle: materialize `A_hat` from the same block set (test / Fig. 8
@@ -156,8 +163,8 @@ mod tests {
         let qp = Pyramid::build(&q, &scales);
         let kp = Pyramid::build(&k, &scales);
         let vp = Pyramid::build(&v, &scales);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &[5], true);
-        let mv = compute(&sel.blocks, &vp, n, &scales);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[5], true).unwrap();
+        let mv = compute(&sel.blocks, &vp, n, &scales).unwrap();
         let a = dense_a_hat(&sel.blocks, n);
         let want = a.matmul(&v);
         let scale = mv.shift.exp();
@@ -187,8 +194,8 @@ mod tests {
         let qp = Pyramid::build(&q, &scales);
         let kp = Pyramid::build(&k, &scales);
         let vp = Pyramid::build(&v, &scales);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &[3, 6], true);
-        let mv = compute(&sel.blocks, &vp, n, &scales);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[3, 6], true).unwrap();
+        let mv = compute(&sel.blocks, &vp, n, &scales).unwrap();
         let a = dense_a_hat(&sel.blocks, n);
         let z_dense = {
             let den = ops::row_sums(&a);
@@ -196,6 +203,24 @@ mod tests {
         };
         let z = mv.normalized();
         assert!(ops::rel_fro_error(&z, &z_dense) < 1e-4);
+    }
+
+    /// Regression for the error-text contract: a block whose scale is
+    /// missing from the ladder is a `Result` (no panic) whose message
+    /// lists the known scales.
+    #[test]
+    fn unknown_block_scale_error_lists_the_ladder() {
+        use crate::mra::frame::Block;
+        let n = 32;
+        let scales = [8usize, 1];
+        let v = Mat::full(n, 2, 1.0);
+        let vp = Pyramid::build(&v, &scales);
+        let blocks = vec![Scored { block: Block { scale: 4, x: 0, y: 0 }, log_mu: 0.0 }];
+        let err = compute(&blocks, &vp, n, &scales).err().expect("must error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("block scale 4 not in ladder"), "{msg}");
+        assert!(msg.contains("known scales"), "{msg}");
+        assert!(msg.contains("[8, 1]"), "{msg}");
     }
 
     #[test]
@@ -208,8 +233,8 @@ mod tests {
         let qp = Pyramid::build(&q, &scales);
         let kp = Pyramid::build(&k, &scales);
         let vp = Pyramid::build(&v, &scales);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &[4], true);
-        let z = compute(&sel.blocks, &vp, n, &scales).normalized();
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[4], true).unwrap();
+        let z = compute(&sel.blocks, &vp, n, &scales).unwrap().normalized();
         for &x in z.data.iter() {
             assert!((x - 1.0).abs() < 1e-4, "{x}");
         }
@@ -225,15 +250,15 @@ mod tests {
         let kp = Pyramid::build(&k, &scales);
         let vp = Pyramid::build(&v, &scales);
         let qp = Pyramid::build(&q, &scales);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &[6], true);
-        let z1 = compute(&sel.blocks, &vp, n, &scales).normalized();
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[6], true).unwrap();
+        let z1 = compute(&sel.blocks, &vp, n, &scales).unwrap().normalized();
         // manually shift all log_mu by a constant: normalization cancels it
         let shifted: Vec<Scored> = sel
             .blocks
             .iter()
             .map(|s| Scored { block: s.block, log_mu: s.log_mu + 7.5 })
             .collect();
-        let z2 = compute(&shifted, &vp, n, &scales).normalized();
+        let z2 = compute(&shifted, &vp, n, &scales).unwrap().normalized();
         assert!(ops::rel_fro_error(&z2, &z1) < 1e-4);
     }
 
@@ -246,7 +271,7 @@ mod tests {
         let scales = [8usize, 1];
         let vp = Pyramid::build(&v, &scales);
         let blocks = vec![Scored { block: Block { scale: 8, x: 0, y: 1 }, log_mu: 0.3 }];
-        let z = compute(&blocks, &vp, n, &scales).normalized();
+        let z = compute(&blocks, &vp, n, &scales).unwrap().normalized();
         for i in 0..8 {
             assert!((z.get(i, 0) - 2.0).abs() < 1e-5);
         }

@@ -4,6 +4,8 @@
 //! `{1, 2, 4, ..., n}` costs `O(n d)` total (the telescoping sum of
 //! Sec. 4.4).
 
+use anyhow::{anyhow, Result};
+
 use crate::tensor::Mat;
 
 /// Pooled copies of a matrix at a descending ladder of scales.
@@ -49,14 +51,14 @@ impl Pyramid {
         Pyramid { levels: ordered }
     }
 
-    /// Pooled matrix at `scale` (panics if the scale was not requested).
-    pub fn at(&self, scale: usize) -> &Mat {
-        &self
-            .levels
-            .iter()
-            .find(|(s, _)| *s == scale)
-            .unwrap_or_else(|| panic!("scale {scale} not in pyramid"))
-            .1
+    /// Pooled matrix at `scale`; a scale that was not requested at build
+    /// time is a descriptive error listing the known scales (mirroring
+    /// the `kernel_by_name` contract — callers whose ladder is validated
+    /// up front may `expect` it).
+    pub fn at(&self, scale: usize) -> Result<&Mat> {
+        self.levels.iter().find(|(s, _)| *s == scale).map(|(_, m)| m).ok_or_else(|| {
+            anyhow!("scale {scale} not in pyramid (known scales: {:?})", self.scales())
+        })
     }
 
     pub fn scales(&self) -> Vec<usize> {
@@ -98,7 +100,7 @@ mod tests {
         let p = Pyramid::build(&x, &[16, 4, 1]);
         for &s in &[16usize, 4, 1] {
             let want = ops::pool_rows(&x, s);
-            let got = p.at(s);
+            let got = p.at(s).unwrap();
             for (a, b) in got.data.iter().zip(want.data.iter()) {
                 assert!((a - b).abs() < 1e-5);
             }
@@ -110,7 +112,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let x = Mat::randn(8, 3, 1.0, &mut rng);
         let p = Pyramid::build(&x, &[1]);
-        assert_eq!(p.at(1), &x);
+        assert_eq!(p.at(1).unwrap(), &x);
     }
 
     #[test]
@@ -118,12 +120,25 @@ mod tests {
         let mut rng = Rng::new(2);
         let x = Mat::randn(32, 4, 1.0, &mut rng);
         let p = Pyramid::build(&x, &[32]);
-        let top = p.at(32);
+        let top = p.at(32).unwrap();
         assert_eq!(top.rows, 1);
         for j in 0..4 {
             let mean: f32 = (0..32).map(|i| x.get(i, j)).sum::<f32>() / 32.0;
             assert!((top.get(0, j) - mean).abs() < 1e-5);
         }
+    }
+
+    /// Regression for the error-text contract: an unknown scale is a
+    /// `Result` (no panic) whose message lists the scales that exist.
+    #[test]
+    fn unknown_scale_error_lists_known_scales() {
+        let x = Mat::zeros(16, 2);
+        let p = Pyramid::build(&x, &[8, 2]);
+        let err = p.at(4).err().expect("unknown scale must error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("scale 4 not in pyramid"), "{msg}");
+        assert!(msg.contains("known scales"), "{msg}");
+        assert!(msg.contains("[8, 2]"), "{msg}");
     }
 
     #[test]

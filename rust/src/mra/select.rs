@@ -8,6 +8,8 @@
 //! supports are pairwise disjoint and tile the full `n x n` matrix
 //! (Remark 4.4 — asserted in tests).
 
+use anyhow::Result;
+
 use crate::mra::frame::Block;
 use crate::mra::pyramid::Pyramid;
 use crate::tensor::{mat::dot, topk, Mat};
@@ -39,6 +41,9 @@ fn score(qp: &Mat, kp: &Mat, x: usize, y: usize, inv_sqrt_d: f32) -> f32 {
 /// * `include_diagonal` — seed the diagonal blocks at `s_0` into the pop
 ///   set ("initial J prespecified via priors"), guaranteeing every query
 ///   row block has at least one finest-scale block (used by MRA-2-s).
+///
+/// Errors when a ladder scale is missing from either pyramid (the
+/// descriptive `Pyramid::at` error listing the known scales).
 pub fn construct_j(
     qpyr: &Pyramid,
     kpyr: &Pyramid,
@@ -47,7 +52,7 @@ pub fn construct_j(
     scales: &[usize],
     budgets: &[usize],
     include_diagonal: bool,
-) -> Selection {
+) -> Result<Selection> {
     assert!(!scales.is_empty());
     assert_eq!(budgets.len(), scales.len() - 1, "one budget per refinement");
     for w in scales.windows(2) {
@@ -57,8 +62,8 @@ pub fn construct_j(
 
     let s0 = scales[0];
     let nb0 = n / s0;
-    let qp0 = qpyr.at(s0);
-    let kp0 = kpyr.at(s0);
+    let qp0 = qpyr.at(s0)?;
+    let kp0 = kpyr.at(s0)?;
     let mut mu_evals = nb0 * nb0;
 
     // frontier: surviving blocks at the current scale with (log_mu, prio)
@@ -87,8 +92,8 @@ pub fn construct_j(
         for &i in &popped_idx {
             popped_mark[i] = true;
         }
-        let qp = qpyr.at(s_new);
-        let kp = kpyr.at(s_new);
+        let qp = qpyr.at(s_new)?;
+        let kp = kpyr.at(s_new)?;
         let mut next: Vec<(Block, f32, f32)> =
             Vec::with_capacity(m * ratio * ratio);
         for (i, (block, lm, _)) in frontier.iter().enumerate() {
@@ -107,7 +112,7 @@ pub fn construct_j(
     for (block, lm, _) in frontier {
         final_blocks.push(Scored { block, log_mu: lm });
     }
-    Selection { blocks: final_blocks, mu_evals }
+    Ok(Selection { blocks: final_blocks, mu_evals })
 }
 
 impl Selection {
@@ -140,7 +145,7 @@ mod tests {
         let (n, d) = (64, 8);
         let scales = [16usize, 4, 1];
         let (qp, kp) = setup(n, d, &scales, 0);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &[3, 5], true);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[3, 5], true).unwrap();
         assert_eq!(sel.covered_area(), n * n);
         // pairwise disjoint
         for (i, a) in sel.blocks.iter().enumerate() {
@@ -157,7 +162,7 @@ mod tests {
         let scales = [16usize, 4, 1];
         let budgets = [3usize, 5];
         let (qp, kp) = setup(n, d, &scales, 1);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &budgets, false);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &budgets, false).unwrap();
         let expect = 16 + 3 * (16 - 1) + 5 * (16 - 1);
         assert_eq!(sel.blocks.len(), expect);
     }
@@ -168,7 +173,7 @@ mod tests {
         let scales = [16usize, 4, 1];
         let budgets = [3usize, 5];
         let (qp, kp) = setup(n, d, &scales, 2);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &budgets, false);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &budgets, false).unwrap();
         // (n/s0)^2 + m_1 (s0/s1)^2 + m_2 (s1/s2)^2
         assert_eq!(sel.mu_evals, 16 + 3 * 16 + 5 * 16);
     }
@@ -178,7 +183,7 @@ mod tests {
         let (n, d) = (64, 8);
         let scales = [16usize, 1];
         let (qp, kp) = setup(n, d, &scales, 3);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &[4], true);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[4], true).unwrap();
         // with budget = nb = 4 and diagonal priority, every popped block is
         // on the diagonal -> all finest blocks lie in diagonal regions
         for s in sel.finest_only(1) {
@@ -191,7 +196,7 @@ mod tests {
         let (n, d) = (32, 4);
         let scales = [8usize, 1];
         let (qp, kp) = setup(n, d, &scales, 4);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &[2], false);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[2], false).unwrap();
         // every refined (finest) region must have a parent score >= any
         // surviving coarse block's score
         let coarse_max = sel
@@ -201,8 +206,8 @@ mod tests {
             .map(|s| s.log_mu)
             .fold(f32::NEG_INFINITY, f32::max);
         // reconstruct parent scores of refined children via pooled mats
-        let qp8 = qp.at(8);
-        let kp8 = kp.at(8);
+        let qp8 = qp.at(8).unwrap();
+        let kp8 = kp.at(8).unwrap();
         let inv = 1.0 / (d as f32).sqrt();
         let mut parents: std::collections::HashSet<(usize, usize)> =
             std::collections::HashSet::new();
@@ -220,7 +225,7 @@ mod tests {
         let (n, d) = (32, 4);
         let scales = [8usize, 1];
         let (qp, kp) = setup(n, d, &scales, 5);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &[0], false);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[0], false).unwrap();
         assert!(sel.blocks.iter().all(|s| s.block.scale == 8));
         assert_eq!(sel.blocks.len(), 16);
     }
@@ -230,7 +235,7 @@ mod tests {
         let (n, d) = (32, 4);
         let scales = [8usize, 1];
         let (qp, kp) = setup(n, d, &scales, 6);
-        let sel = construct_j(&qp, &kp, n, d, &scales, &[1000], false);
+        let sel = construct_j(&qp, &kp, n, d, &scales, &[1000], false).unwrap();
         // everything refined to scale 1
         assert!(sel.blocks.iter().all(|s| s.block.scale == 1));
         assert_eq!(sel.blocks.len(), n * n);

@@ -36,6 +36,7 @@ TRACKED = (
     "gflops",
     "speedup_vs_scalar",
     "speedup_vs_exact",
+    "speedup_vs_fixed",
 )
 # fields that are metrics (never part of a row's identity key)
 METRIC_FIELDS = set(TRACKED) | {
