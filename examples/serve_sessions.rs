@@ -95,6 +95,9 @@ fn main() -> Result<()> {
         free_watermark: 16,
         max_running: 32,
         prefix_cache: true,
+        // one block per step keeps the demo's interleaving visible in the
+        // prefill_chunks / prefill_backlog metrics below
+        prefill_chunk_tokens: block,
     };
     let server = Arc::new(Server::start_native_lm_sessions(serve, mcfg, threads, scfg)?);
     let t0 = std::time::Instant::now();

@@ -1,0 +1,233 @@
+//! Prefill bench: block-aligned chunked, engine-parallel prompt prefill
+//! (`NativeLm::new_session` / `NativeLm::prefill_chunk`) against the
+//! historical per-token prefill (`NativeLm::new_session_per_token`) on a
+//! long prompt, plus the serving property the chunked path buys: decode
+//! steps keep running (bounded per-step latency) while a 4k-token prompt
+//! prefills in budgeted chunks, instead of stalling for the whole prompt.
+//!
+//! Correctness gates run before any timing:
+//!
+//! * chunked prefill must be **bitwise identical** to per-token prefill
+//!   (logits and subsequent greedy decode steps);
+//! * the interleaved decode session must land on the exact tokens of an
+//!   uninterleaved decode of the same prompt.
+//!
+//! Acceptance gates (ISSUE 5):
+//!
+//! * chunked prefill beats per-token prefill tokens/s on a >= 4k prompt;
+//! * while the 4k prompt prefills chunk by chunk, a concurrent decode
+//!   session's median per-step latency stays far below the monolithic
+//!   prefill wall time it used to stall behind (no full-prompt stall),
+//!   and the decode advances once per chunk.
+//!
+//! ```bash
+//! cargo bench --bench bench_prefill                    # 3 timing reps
+//! MRA_BENCH_SMALL=1 cargo bench --bench bench_prefill  # 1 rep (CI)
+//! MRA_BENCH_JSON=1  cargo bench --bench bench_prefill  # BENCH_prefill.json
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use mra::bench::{BenchJson, Table};
+use mra::config::{ServeConfig, SessionConfig};
+use mra::coordinator::{NativeLm, NativeMlmConfig, Server};
+use mra::engine::pool;
+use mra::tensor::Rng;
+
+/// seq_len 8192 so a 4096-token prompt plus decode fits; d_head 32 (the
+/// kernel layer's specialized width), 2 layers x 2 heads, block 32.
+const MODEL: &str = "lm_mra2_n8192_d64_l2_h2_v256";
+/// Acceptance-criterion prompt length (>= 4k tokens).
+const PROMPT_LEN: usize = 4096;
+
+fn main() {
+    let small = std::env::var("MRA_BENCH_SMALL").is_ok();
+    let reps = if small { 1 } else { 3 };
+    let threads = pool::default_threads();
+    let mcfg = NativeMlmConfig::from_tag(MODEL);
+    let model = NativeLm::new(mcfg.clone(), threads);
+    let block = model.config().block;
+    let mut rng = Rng::new(0xF111);
+    let prompt: Vec<i32> = (0..PROMPT_LEN).map(|_| 2 + rng.below(250) as i32).collect();
+    let short: Vec<i32> = (0..64).map(|_| 2 + rng.below(250) as i32).collect();
+    println!(
+        "prefill bench: model {MODEL} ({}), prompt {PROMPT_LEN} tokens, block {block}, \
+         engine threads {threads}\n",
+        model.kernel_name()
+    );
+
+    // --- correctness gate: chunked == per-token, bitwise ----------------
+    {
+        let gate_len = if small { 512 } else { 1024 };
+        let p = &prompt[..gate_len];
+        let pool_a = model.new_page_pool(4096);
+        let pool_b = model.new_page_pool(4096);
+        let mut a = model.new_session_per_token(p, &pool_a, None).expect("per-token prefill");
+        let mut b = model.new_session(p, &pool_b, None).expect("chunked prefill");
+        assert_eq!(a.logits(), b.logits(), "chunked prefill logits diverged from per-token");
+        assert_eq!(
+            pool_a.pages_in_use(),
+            pool_b.pages_in_use(),
+            "chunked prefill must occupy the same physical pages"
+        );
+        for step in 0..8 {
+            let ta = model.session_step(&mut a).expect("per-token decode");
+            let tb = model.session_step(&mut b).expect("chunked decode");
+            assert_eq!(ta, tb, "decode step {step} diverged after chunked prefill");
+        }
+        println!("bitwise gate: chunked == per-token prefill (n={gate_len}, +8 decode steps)");
+    }
+
+    // --- throughput: per-token vs chunked on the full prompt ------------
+    let time_prefill = |per_token: bool| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let kv = model.new_page_pool(4096);
+            let t0 = Instant::now();
+            let sess = if per_token {
+                model.new_session_per_token(&prompt, &kv, None)
+            } else {
+                model.new_session(&prompt, &kv, None)
+            }
+            .expect("prefill");
+            let dt = t0.elapsed().as_secs_f64();
+            assert_eq!(sess.len(), PROMPT_LEN);
+            best = best.min(dt);
+        }
+        best
+    };
+    let per_tok_wall = time_prefill(true);
+    let chunked_wall = time_prefill(false);
+    let per_tok_tps = PROMPT_LEN as f64 / per_tok_wall.max(1e-9);
+    let chunked_tps = PROMPT_LEN as f64 / chunked_wall.max(1e-9);
+    let speedup = chunked_tps / per_tok_tps.max(1e-9);
+
+    // --- interleaving gate: decodes keep stepping during the prefill ----
+    let (p50_step_ms, interleave_chunks) = {
+        let chunk = 256usize;
+        let steps = PROMPT_LEN.div_ceil(chunk);
+        // uninterleaved reference stream, computed up front on a private
+        // pool (decode is deterministic, so interleaving prefill chunks
+        // of an unrelated session must not change a single token)
+        let want = model.generate(&short, steps).expect("reference decode");
+        let kv = model.new_page_pool(4096);
+        // the decode session the old monolithic prefill used to stall
+        let mut dec = model.new_session(&short, &kv, None).expect("decode session");
+        let mut pre = model.begin_session(&prompt, &kv, None).expect("begin prefill");
+        let mut step_ms: Vec<f64> = Vec::new();
+        while pre.len() < prompt.len() {
+            let t0 = Instant::now();
+            let tok = model.session_step(&mut dec).expect("interleaved decode step");
+            step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            assert_eq!(
+                tok, want[step_ms.len() - 1],
+                "interleaving a prefill chunk changed decode token {}",
+                step_ms.len() - 1
+            );
+            let take = model.prefill_take(pre.len(), prompt.len(), chunk);
+            let done = pre.len() + take == prompt.len();
+            let from = pre.len();
+            model
+                .prefill_chunk(&mut pre, &prompt[from..from + take], done)
+                .expect("prefill chunk");
+        }
+        assert_eq!(step_ms.len(), steps, "one decode step per prefill chunk");
+        assert!(!pre.logits().is_empty(), "prefill must finish with logits");
+        step_ms.sort_by(f64::total_cmp);
+        (step_ms[step_ms.len() / 2], step_ms.len())
+    };
+
+    // --- serving path: chunked prefill drives the session scheduler -----
+    let sched_metrics = {
+        let serve_cfg = ServeConfig {
+            max_batch: 8,
+            flush_us: 1_000,
+            workers: 1,
+            queue_depth: 64,
+            model: MODEL.to_string(),
+            artifacts_dir: "artifacts".to_string(),
+        };
+        let scfg = SessionConfig {
+            total_pages: 2048,
+            free_watermark: 16,
+            max_running: 8,
+            prefix_cache: true,
+            prefill_chunk_tokens: 256,
+        };
+        let server = Server::start_native_lm_sessions(serve_cfg, mcfg.clone(), threads, scfg)
+            .expect("session server");
+        let long_req: Vec<i32> = prompt[..if small { 1024 } else { 2048 }].to_vec();
+        let resp = server.generate(long_req.clone(), 4).expect("served generation");
+        assert_eq!(
+            resp.predictions,
+            model.generate(&long_req, 4).expect("direct generate"),
+            "scheduler chunked prefill diverged from direct decode"
+        );
+        let chunks = server.metrics.prefill_chunks.load(Ordering::Relaxed);
+        let tokens = server.metrics.prefill_tokens.load(Ordering::Relaxed);
+        assert!(
+            chunks as usize >= long_req.len() / 256,
+            "long prompt must prefill across multiple scheduler chunks (got {chunks})"
+        );
+        assert_eq!(tokens as usize, long_req.len(), "every prompt token prefilled once");
+        let summary = server.metrics.summary();
+        server.shutdown();
+        summary
+    };
+    println!("scheduler   : {sched_metrics}");
+
+    // --- report + acceptance gates ---------------------------------------
+    let mut table = Table::new(&["impl", "n", "wall ms", "tokens/s", "speedup"]);
+    table.row(&[
+        "per-token".to_string(),
+        format!("{PROMPT_LEN}"),
+        format!("{:.1}", per_tok_wall * 1e3),
+        format!("{per_tok_tps:.0}"),
+        "1.00x".to_string(),
+    ]);
+    table.row(&[
+        "chunked".to_string(),
+        format!("{PROMPT_LEN}"),
+        format!("{:.1}", chunked_wall * 1e3),
+        format!("{chunked_tps:.0}"),
+        format!("{speedup:.2}x"),
+    ]);
+    table.print();
+    println!(
+        "interleave: {interleave_chunks} decode steps during the {PROMPT_LEN}-token prefill, \
+         median step {p50_step_ms:.3} ms (monolithic per-token stall: {:.1} ms)",
+        per_tok_wall * 1e3
+    );
+
+    let mut json = BenchJson::new("prefill");
+    json.row(&[
+        ("impl", BenchJson::str_field("per-token")),
+        ("n", format!("{PROMPT_LEN}")),
+        ("tokens_per_sec", format!("{per_tok_tps:.1}")),
+        ("prefill_speedup_vs_per_token", "1.0".to_string()),
+    ]);
+    json.row(&[
+        ("impl", BenchJson::str_field("chunked")),
+        ("n", format!("{PROMPT_LEN}")),
+        ("tokens_per_sec", format!("{chunked_tps:.1}")),
+        ("prefill_speedup_vs_per_token", format!("{speedup:.3}")),
+    ]);
+    json.write_if_requested();
+
+    assert!(
+        chunked_tps > per_tok_tps,
+        "acceptance gate: chunked prefill must beat per-token prefill on a \
+         {PROMPT_LEN}-token prompt ({chunked_tps:.0} vs {per_tok_tps:.0} tokens/s)"
+    );
+    assert!(
+        p50_step_ms < per_tok_wall * 1e3 / 10.0,
+        "acceptance gate: decode steps during chunked prefill must stay far below the \
+         full-prompt stall (median {p50_step_ms:.3} ms vs {:.1} ms monolithic prefill)",
+        per_tok_wall * 1e3
+    );
+    println!(
+        "\nbench_prefill OK (bitwise chunked == per-token, chunked {speedup:.2}x, \
+         decode bounded at {p50_step_ms:.3} ms median during prefill)"
+    );
+}

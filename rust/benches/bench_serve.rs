@@ -162,6 +162,7 @@ fn main() {
         free_watermark: 32,
         max_running: 64,
         prefix_cache: true,
+        prefill_chunk_tokens: 256,
     };
     let continuous = Arc::new(
         Server::start_native_lm_sessions(serve_cfg, mcfg, threads, scfg.clone())

@@ -86,7 +86,7 @@ impl Longformer {
 
 impl AttentionApprox for Longformer {
     fn name(&self) -> String {
-        format!("longformer(w={})", self.window)
+        format!("longformer(w={},g={})", self.window, self.globals)
     }
 
     fn compute(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {

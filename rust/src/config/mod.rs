@@ -131,6 +131,13 @@ pub struct SessionConfig {
     pub max_running: usize,
     /// Enable the radix prefix cache (shared-prompt page reuse).
     pub prefix_cache: bool,
+    /// Prompt tokens prefilled per scheduler step (Sarathi-style chunked
+    /// prefill budget, shared by every prefilling session and spent
+    /// *alongside* the one-token decode of the running set — a long
+    /// prompt never stalls running decodes for its whole prefill).
+    /// Chunks snap to block boundaries; the budget is clamped up to one
+    /// block at runtime so prefill always progresses.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for SessionConfig {
@@ -140,6 +147,7 @@ impl Default for SessionConfig {
             free_watermark: 64,
             max_running: 32,
             prefix_cache: true,
+            prefill_chunk_tokens: 256,
         }
     }
 }
@@ -152,6 +160,8 @@ impl SessionConfig {
             free_watermark: c.usize_or("sessions.free_watermark", d.free_watermark)?,
             max_running: c.usize_or("sessions.max_running", d.max_running)?,
             prefix_cache: c.bool_or("sessions.prefix_cache", d.prefix_cache)?,
+            prefill_chunk_tokens: c
+                .usize_or("sessions.prefill_chunk_tokens", d.prefill_chunk_tokens)?,
         })
     }
 }
@@ -229,12 +239,21 @@ lr = 0.001
 
     #[test]
     fn session_config_defaults_and_overrides() {
-        let c = Config::parse("[sessions]\ntotal_pages = 512\nprefix_cache = false\n").unwrap();
+        let c = Config::parse(
+            "[sessions]\ntotal_pages = 512\nprefix_cache = false\nprefill_chunk_tokens = 64\n",
+        )
+        .unwrap();
         let s = SessionConfig::from_config(&c).unwrap();
         assert_eq!(s.total_pages, 512);
         assert!(!s.prefix_cache);
+        assert_eq!(s.prefill_chunk_tokens, 64);
         assert_eq!(s.max_running, SessionConfig::default().max_running);
         assert_eq!(s.free_watermark, SessionConfig::default().free_watermark);
+        assert_eq!(
+            SessionConfig::default().prefill_chunk_tokens,
+            256,
+            "default prefill budget documented in DESIGN.md §10"
+        );
     }
 
     #[test]

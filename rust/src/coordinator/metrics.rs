@@ -82,7 +82,8 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub padded_slots: AtomicU64,
     // --- session-serving counters ---
-    /// Sessions admitted (prefilled) by the scheduler.
+    /// Sessions admitted by the scheduler (their prompt prefill may still
+    /// be in progress — see `prefilling_sessions`).
     pub sessions: AtomicU64,
     /// Sessions preempted under memory pressure (recomputed on readmit).
     pub preemptions: AtomicU64,
@@ -96,6 +97,11 @@ pub struct Metrics {
     pub generated_tokens: AtomicU64,
     /// Continuous-batching decode steps executed.
     pub decode_steps: AtomicU64,
+    /// Prefill chunks run through the engine-parallel chunked path.
+    pub prefill_chunks: AtomicU64,
+    /// Prompt tokens prefilled through chunks (radix-cached tokens are
+    /// *not* counted — they were never recomputed).
+    pub prefill_tokens: AtomicU64,
     // --- session-serving gauges ---
     /// Page-pool capacity (constant once serving starts).
     pub pool_pages: AtomicU64,
@@ -107,6 +113,13 @@ pub struct Metrics {
     pub running_sessions: AtomicU64,
     /// Sessions waiting for admission at the last step.
     pub waiting_sessions: AtomicU64,
+    /// Admitted sessions still mid-prefill at the last step — the
+    /// per-step stall gauge: with monolithic prefill this was always 0
+    /// because admission blocked the whole step instead.
+    pub prefilling_sessions: AtomicU64,
+    /// Prompt tokens still to prefill across the running set at the last
+    /// step (the prefill backlog the decode steps are interleaving with).
+    pub prefill_backlog_tokens: AtomicU64,
 }
 
 impl Metrics {
@@ -146,6 +159,12 @@ impl Metrics {
         self.prefix_hits.load(Ordering::Relaxed) as f64 / lookups as f64
     }
 
+    /// Record one engine-parallel prefill chunk of `tokens` tokens.
+    pub fn record_prefill_chunk(&self, tokens: usize) {
+        self.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+        self.prefill_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
     /// Publish the per-step scheduler gauges.
     pub fn set_session_gauges(
         &self,
@@ -153,11 +172,15 @@ impl Metrics {
         cache_pages: u64,
         running: u64,
         waiting: u64,
+        prefilling: u64,
+        prefill_backlog: u64,
     ) {
         self.free_pages.store(free_pages, Ordering::Relaxed);
         self.cache_pages.store(cache_pages, Ordering::Relaxed);
         self.running_sessions.store(running, Ordering::Relaxed);
         self.waiting_sessions.store(waiting, Ordering::Relaxed);
+        self.prefilling_sessions.store(prefilling, Ordering::Relaxed);
+        self.prefill_backlog_tokens.store(prefill_backlog, Ordering::Relaxed);
     }
 
     /// One-line summary for logs / bench output; appends the
@@ -176,18 +199,22 @@ impl Metrics {
         );
         if self.sessions.load(Ordering::Relaxed) > 0 {
             s.push_str(&format!(
-                " sessions={} preemptions={} prefix_hit_rate={:.2} prefix_hit_tokens={} gen_tokens={} steps={} pages={}/{} cache_pages={} running={} waiting={}",
+                " sessions={} preemptions={} prefix_hit_rate={:.2} prefix_hit_tokens={} gen_tokens={} steps={} prefill_chunks={} prefill_tokens={} pages={}/{} cache_pages={} running={} waiting={} prefilling={} prefill_backlog={}",
                 self.sessions.load(Ordering::Relaxed),
                 self.preemptions.load(Ordering::Relaxed),
                 self.prefix_hit_rate(),
                 self.prefix_hit_tokens.load(Ordering::Relaxed),
                 self.generated_tokens.load(Ordering::Relaxed),
                 self.decode_steps.load(Ordering::Relaxed),
+                self.prefill_chunks.load(Ordering::Relaxed),
+                self.prefill_tokens.load(Ordering::Relaxed),
                 self.free_pages.load(Ordering::Relaxed),
                 self.pool_pages.load(Ordering::Relaxed),
                 self.cache_pages.load(Ordering::Relaxed),
                 self.running_sessions.load(Ordering::Relaxed),
                 self.waiting_sessions.load(Ordering::Relaxed),
+                self.prefilling_sessions.load(Ordering::Relaxed),
+                self.prefill_backlog_tokens.load(Ordering::Relaxed),
             ));
         }
         s
@@ -257,12 +284,23 @@ mod tests {
     #[test]
     fn session_gauges_overwrite_not_accumulate() {
         let m = Metrics::new();
-        m.set_session_gauges(100, 10, 3, 7);
-        m.set_session_gauges(90, 12, 4, 6);
+        m.set_session_gauges(100, 10, 3, 7, 2, 640);
+        m.set_session_gauges(90, 12, 4, 6, 1, 320);
         assert_eq!(m.free_pages.load(Ordering::Relaxed), 90);
         assert_eq!(m.cache_pages.load(Ordering::Relaxed), 12);
         assert_eq!(m.running_sessions.load(Ordering::Relaxed), 4);
         assert_eq!(m.waiting_sessions.load(Ordering::Relaxed), 6);
+        assert_eq!(m.prefilling_sessions.load(Ordering::Relaxed), 1);
+        assert_eq!(m.prefill_backlog_tokens.load(Ordering::Relaxed), 320);
+    }
+
+    #[test]
+    fn prefill_chunk_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_prefill_chunk(128);
+        m.record_prefill_chunk(32);
+        assert_eq!(m.prefill_chunks.load(Ordering::Relaxed), 2);
+        assert_eq!(m.prefill_tokens.load(Ordering::Relaxed), 160);
     }
 
     #[test]
@@ -272,12 +310,16 @@ mod tests {
         m.preemptions.fetch_add(1, Ordering::Relaxed);
         m.pool_pages.store(256, Ordering::Relaxed);
         m.record_prefix_lookup(16);
-        m.set_session_gauges(200, 16, 2, 0);
+        m.record_prefill_chunk(48);
+        m.set_session_gauges(200, 16, 2, 0, 1, 96);
         let s = m.summary();
         assert!(s.contains("sessions=2"), "{s}");
         assert!(s.contains("preemptions=1"), "{s}");
         assert!(s.contains("prefix_hit_rate=1.00"), "{s}");
         assert!(s.contains("pages=200/256"), "{s}");
+        assert!(s.contains("prefill_chunks=1"), "{s}");
+        assert!(s.contains("prefill_tokens=48"), "{s}");
+        assert!(s.contains("prefill_backlog=96"), "{s}");
     }
 
     #[test]

@@ -25,7 +25,8 @@ use anyhow::{bail, Result};
 
 use crate::data::corpus::MlmBatch;
 use crate::engine::{
-    kernel_by_name, pool, BatchedTensor, DecodeState, Engine, PagePool, PoolExhausted, RadixCache,
+    kernel_by_name, pool, BatchedTensor, DecodeScratch, DecodeState, Engine, PagePool,
+    PoolExhausted, RadixCache,
 };
 use crate::mra::Variant;
 use crate::tensor::{kernel, mat::dot, ops, Mat, Rng};
@@ -422,6 +423,14 @@ impl LmSession {
         self.states.iter().filter(|st| st.next_append_needs_page()).count()
     }
 
+    /// Physical pages a prefill chunk of `rows` tokens would take from the
+    /// pool across every `(layer, head)` stream — the chunked form of
+    /// [`LmSession::pages_needed_next_step`], used by the scheduler to
+    /// reserve a whole chunk before running it.
+    pub fn pages_needed_for_chunk(&self, rows: usize) -> usize {
+        self.states.iter().map(|st| st.pages_needed_for_append(rows)).sum()
+    }
+
     /// Fork the session: every page of every stream is shared physically
     /// with the parent (`Arc` clones, zero pool pages consumed); a shared
     /// partial tail page copies on the first divergent write.  Decoding a
@@ -531,22 +540,20 @@ impl NativeLm {
         self.streams() * tokens.div_ceil(block)
     }
 
-    /// Start a session: prefill `prompt` through fresh page-backed decode
-    /// caches, reusing the longest radix-cached block-aligned prefix when
-    /// `cache` is given (at most `prompt.len() - 1` tokens — the last
-    /// prompt position is always recomputed, since its attention output
-    /// feeds the first generated logits).  Newly completed prompt blocks
-    /// are advertised back into the cache, so the *next* session with the
-    /// same prompt physically shares their pages.
-    ///
-    /// Fails with a [`PoolExhausted`]-sourced error when the pool cannot
-    /// hold the prefill; the session is dropped and its pages returned, so
-    /// the caller can evict/preempt and retry.
-    pub fn new_session(
+    /// Open a session for `prompt` *without computing anything*: validate,
+    /// build the per-stream page-backed caches, and attach the longest
+    /// radix-cached block-aligned prefix when `cache` is given (at most
+    /// `prompt.len() - 1` tokens — the last prompt position is always
+    /// recomputed, since its attention output feeds the first generated
+    /// logits).  Consumes no pool pages (cached pages are shared), so it
+    /// cannot fail with [`PoolExhausted`]; the remaining prompt positions
+    /// are then fed through [`NativeLm::prefill_chunk`] — all at once
+    /// ([`NativeLm::new_session`]) or budgeted across scheduler steps.
+    pub fn begin_session(
         &self,
         prompt: &[i32],
         pool: &PagePool,
-        mut cache: Option<&mut RadixCache>,
+        cache: Option<&mut RadixCache>,
     ) -> Result<LmSession> {
         let cfg = &self.core.cfg;
         if prompt.is_empty() {
@@ -562,7 +569,7 @@ impl NativeLm {
         let variant = self.variant();
         let mut cached = 0usize;
         let mut states: Option<Vec<DecodeState>> = None;
-        if let Some(cache) = cache.as_deref_mut() {
+        if let Some(cache) = cache {
             let limit = (prompt.len() - 1) / cfg.block * cfg.block;
             if limit > 0 {
                 let (matched, per_stream) = cache.lookup(&prompt[..limit]);
@@ -590,7 +597,7 @@ impl NativeLm {
                 .map(|_| DecodeState::with_pool(pool, self.decode_budget, variant))
                 .collect()
         });
-        let mut session = LmSession {
+        Ok(LmSession {
             states,
             logits: Vec::with_capacity(cfg.vocab),
             hidden: vec![0.0; cfg.d_model],
@@ -599,30 +606,230 @@ impl NativeLm {
             len: cached,
             cached_tokens: cached,
             poisoned: false,
-        };
-        for (pi, &t) in prompt.iter().enumerate().skip(cached) {
+        })
+    }
+
+    /// Advertise the complete prompt blocks of a fully prefilled session
+    /// back into the radix cache, so the *next* session with the same
+    /// prompt physically shares their pages.
+    pub fn publish_prompt_pages(
+        &self,
+        cache: &mut RadixCache,
+        prompt: &[i32],
+        session: &LmSession,
+    ) {
+        let block = self.core.cfg.block;
+        let nb = prompt.len() / block;
+        if nb == 0 {
+            return;
+        }
+        debug_assert!(session.len >= nb * block, "prompt blocks not prefilled yet");
+        let mut pages = Vec::with_capacity(nb * self.streams());
+        for bi in 0..nb {
+            for st in &session.states {
+                pages.push(st.pages()[bi].clone());
+            }
+        }
+        cache.insert(&prompt[..nb * block], &pages);
+    }
+
+    /// The next chunk size when prefilling `total` prompt tokens with
+    /// `done` already fed and a per-step budget of `budget` tokens:
+    /// `min(budget, remaining)`, snapped *down* to a block boundary so
+    /// every non-final chunk ends on a complete block (cache-shareable
+    /// pages, full panels) — the final chunk takes whatever partial tail
+    /// remains.  Always at least 1 when anything remains.
+    pub fn prefill_take(&self, done: usize, total: usize, budget: usize) -> usize {
+        let block = self.core.cfg.block;
+        let remaining = total.saturating_sub(done);
+        let take = budget.max(1).min(remaining);
+        if take == remaining {
+            return take;
+        }
+        let snapped = (done + take) / block * block;
+        if snapped > done {
+            snapped - done
+        } else {
+            take
+        }
+    }
+
+    /// Feed one block-aligned chunk of prompt tokens through every layer
+    /// at once — the engine-parallel prefill body.  Per layer:
+    ///
+    /// 1. one task per head projects the whole chunk's Q/K/V rows (the
+    ///    same [`row_project_into`] calls as the per-token path) and
+    ///    bulk-appends K/V ([`DecodeState::try_append_rows`] — appends are
+    ///    order-dependent within a stream, so this phase is sequential
+    ///    per head but parallel across heads);
+    /// 2. every `(row, head)` attention fans out across the work-stealing
+    ///    pool ([`DecodeState::attend_pos_into`] with a per-worker
+    ///    scratch) — row `r` attends exactly the causal prefix it would
+    ///    have seen as the newest position;
+    /// 3. residual + layer norm row by row.
+    ///
+    /// Each row's float sequence is identical to the per-token decode
+    /// body ([`NativeLm::advance_batch`]), so chunked prefill is **bitwise
+    /// identical** to per-token prefill and to prefix recompute
+    /// (property-tested).  Logits are projected only when `with_logits`
+    /// (the final chunk of a prompt).
+    ///
+    /// On [`PoolExhausted`] the session is **poisoned** (streams
+    /// desynchronized mid-chunk) and must be discarded and recomputed,
+    /// exactly like a failed batched decode step.
+    pub fn prefill_chunk(
+        &self,
+        session: &mut LmSession,
+        tokens: &[i32],
+        with_logits: bool,
+    ) -> Result<(), PoolExhausted> {
+        let cfg = &self.core.cfg;
+        assert!(!session.poisoned, "session poisoned by pool exhaustion — discard and recompute");
+        let c = tokens.len();
+        if c == 0 {
+            return Ok(());
+        }
+        assert!(
+            session.len + c <= cfg.seq_len,
+            "prefill chunk overruns seq_len {} (session {} + chunk {c})",
+            cfg.seq_len,
+            session.len
+        );
+        let dm = cfg.d_model;
+        let heads = cfg.heads;
+        let d_head = self.d_head();
+        let threads = self.core.engine.threads();
+        let base_len = session.len;
+        // per-chunk transients (prefill is not the steady per-token loop;
+        // one allocation per chunk, not per token)
+        let mut hidden = vec![0.0f32; c * dm];
+        for (hrow, &tok) in hidden.chunks_exact_mut(dm).zip(tokens) {
+            let t = (tok.max(0) as usize).min(cfg.vocab - 1);
+            hrow.copy_from_slice(self.core.embed.row(t));
+        }
+        let mut cat = vec![0.0f32; c * dm];
+        // per-head panels: [q rows | k rows | v rows], each c * d_head
+        let mut proj = vec![0.0f32; heads * c * 3 * d_head];
+        let failed = AtomicBool::new(false);
+        for (li, lw) in self.core.layers.iter().enumerate() {
+            // phase 1: project + bulk-append, one task per head
+            {
+                let layer_states = &mut session.states[li * heads..(li + 1) * heads];
+                let hidden_ref: &[f32] = &hidden;
+                let failed_ref = &failed;
+                let tasks: Vec<(usize, &mut DecodeState, &mut [f32])> = layer_states
+                    .iter_mut()
+                    .zip(proj.chunks_mut(c * 3 * d_head))
+                    .enumerate()
+                    .map(|(h, (st, pbuf))| (h, st, pbuf))
+                    .collect();
+                pool::run(threads, tasks, |(h, st, pbuf): (usize, &mut DecodeState, &mut [f32])| {
+                    let (qb, kvb) = pbuf.split_at_mut(c * d_head);
+                    let (kb, vb) = kvb.split_at_mut(c * d_head);
+                    for r in 0..c {
+                        let hrow = &hidden_ref[r * dm..(r + 1) * dm];
+                        row_project_into(hrow, &lw.wq[h], &mut qb[r * d_head..(r + 1) * d_head]);
+                        row_project_into(hrow, &lw.wk[h], &mut kb[r * d_head..(r + 1) * d_head]);
+                        row_project_into(hrow, &lw.wv[h], &mut vb[r * d_head..(r + 1) * d_head]);
+                    }
+                    if st.try_append_rows(kb, vb).is_err() {
+                        failed_ref.store(true, Ordering::Relaxed);
+                    }
+                });
+            }
+            if failed.load(Ordering::Relaxed) {
+                session.poisoned = true; // torn mid-chunk: discard + recompute
+                return Err(PoolExhausted);
+            }
+            // phase 2: every (row, head) attention across the pool, one
+            // scratch per worker
+            {
+                let states: &[DecodeState] = &session.states[li * heads..(li + 1) * heads];
+                let proj_ref: &[f32] = &proj;
+                let tasks: Vec<(usize, &mut [f32])> =
+                    cat.chunks_mut(d_head).enumerate().collect();
+                pool::run_with(
+                    threads,
+                    tasks,
+                    DecodeScratch::default,
+                    |scratch, (p, slot): (usize, &mut [f32])| {
+                        let (r, h) = (p / heads, p % heads);
+                        let q_off = h * c * 3 * d_head + r * d_head;
+                        let q = &proj_ref[q_off..q_off + d_head];
+                        states[h].attend_pos_into(q, base_len + r, scratch, slot);
+                    },
+                );
+            }
+            // phase 3: residual + layer norm, row by row (the same
+            // per-row arithmetic as the per-token body)
+            for (crow, hrow) in cat.chunks_exact_mut(dm).zip(hidden.chunks_exact_mut(dm)) {
+                for (cv, &hv) in crow.iter_mut().zip(hrow.iter()) {
+                    *cv += hv;
+                }
+                layer_norm_row_into(crow, 1e-5, hrow);
+            }
+        }
+        session.len += c;
+        if with_logits {
+            let last = &hidden[(c - 1) * dm..c * dm];
+            self.project_logits_into(last, &mut session.logits);
+        }
+        Ok(())
+    }
+
+    /// Start a session: prefill `prompt` through fresh page-backed decode
+    /// caches in **one engine-parallel chunk**
+    /// ([`NativeLm::prefill_chunk`]), reusing the longest radix-cached
+    /// block-aligned prefix when `cache` is given.  Newly completed prompt
+    /// blocks are advertised back into the cache, so the *next* session
+    /// with the same prompt physically shares their pages.  Bitwise
+    /// identical to [`NativeLm::new_session_per_token`] (property-tested).
+    ///
+    /// Fails with a [`PoolExhausted`]-sourced error when the pool cannot
+    /// hold the prefill; the session is dropped and its pages returned, so
+    /// the caller can evict/preempt and retry.
+    pub fn new_session(
+        &self,
+        prompt: &[i32],
+        pool: &PagePool,
+        mut cache: Option<&mut RadixCache>,
+    ) -> Result<LmSession> {
+        let mut session = self.begin_session(prompt, pool, cache.as_deref_mut())?;
+        let done = session.len;
+        self.prefill_chunk(&mut session, &prompt[done..], true)?;
+        if let Some(cache) = cache {
+            self.publish_prompt_pages(cache, prompt, &session);
+        }
+        Ok(session)
+    }
+
+    /// The historical token-at-a-time prefill (the per-token decode body
+    /// run once per prompt position) — kept as the reference the chunked
+    /// path is bitwise-gated against (`benches/bench_prefill.rs` and the
+    /// `chunked_prefill_bitwise_identical_to_per_token` proptest), and as
+    /// the honest baseline for the prefill throughput gate.
+    pub fn new_session_per_token(
+        &self,
+        prompt: &[i32],
+        pool: &PagePool,
+        mut cache: Option<&mut RadixCache>,
+    ) -> Result<LmSession> {
+        let mut session = self.begin_session(prompt, pool, cache.as_deref_mut())?;
+        for (pi, &t) in prompt.iter().enumerate().skip(session.len) {
             // pay the tied-head vocab projection only at the last position
             let with_logits = pi + 1 == prompt.len();
             self.advance_session(&mut session, t, with_logits)?;
         }
         if let Some(cache) = cache {
-            let nb = prompt.len() / cfg.block;
-            if nb > 0 {
-                let mut pages = Vec::with_capacity(nb * self.streams());
-                for bi in 0..nb {
-                    for st in &session.states {
-                        pages.push(st.pages()[bi].clone());
-                    }
-                }
-                cache.insert(&prompt[..nb * cfg.block], &pages);
-            }
+            self.publish_prompt_pages(cache, prompt, &session);
         }
         Ok(session)
     }
 
     /// Feed externally chosen tokens (teacher forcing / replaying a
-    /// preempted session's generated suffix); logits are recomputed at the
-    /// last fed position.
+    /// preempted session's generated suffix) as one engine-parallel chunk
+    /// ([`NativeLm::prefill_chunk`] — bitwise identical to feeding them
+    /// one at a time); logits are recomputed at the last fed position.
     ///
     /// On a [`PoolExhausted`] error the session is **poisoned** (head
     /// streams desynchronized) and must be discarded and recomputed —
@@ -636,9 +843,7 @@ impl NativeLm {
                 self.core.cfg.seq_len
             );
         }
-        for (i, &t) in tokens.iter().enumerate() {
-            self.advance_session(session, t, i + 1 == tokens.len())?;
-        }
+        self.prefill_chunk(session, tokens, true)?;
         Ok(())
     }
 
@@ -677,12 +882,13 @@ impl NativeLm {
         results.into_iter().zip(toks).map(|(r, tok)| r.map(|()| tok)).collect()
     }
 
-    /// The one per-token decode body (also the prefill body): embed each
-    /// session's committed token, run every layer as a flattened
-    /// `(session, head)` task list on the engine pool, then optionally
-    /// project logits.  Both [`NativeLm::step_sessions`] and the
-    /// single-session [`NativeLm::advance_session`] are thin wrappers, so
-    /// solo and batched stepping cannot drift apart.
+    /// The one per-token decode body (and the reference body the chunked
+    /// prefill is bitwise-gated against): embed each session's committed
+    /// token, run every layer as a flattened `(session, head)` task list
+    /// on the engine pool, then optionally project logits.  Both
+    /// [`NativeLm::step_sessions`] and the single-session
+    /// [`NativeLm::advance_session`] are thin wrappers, so solo and
+    /// batched stepping cannot drift apart.
     fn advance_batch(
         &self,
         sessions: &mut [&mut LmSession],
@@ -1111,6 +1317,120 @@ mod tests {
                         return Err(format!("fork {fi} step {step}: token {a} != cold {b}"));
                     }
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prefill_take_is_block_snapped() {
+        let model = NativeLm::new(small_cfg(), 1); // block 16
+        assert_eq!(model.prefill_take(0, 40, 100), 40, "whole remainder fits the budget");
+        assert_eq!(model.prefill_take(0, 40, 24), 16, "non-final chunks snap to blocks");
+        assert_eq!(model.prefill_take(16, 40, 24), 24, "final chunk takes the partial tail");
+        assert_eq!(model.prefill_take(16, 64, 24), 16);
+        assert_eq!(model.prefill_take(0, 64, 7), 7, "sub-block budgets stay unsnapped");
+        assert_eq!(model.prefill_take(9, 64, 10), 7, "chunks re-align to the next boundary");
+        assert_eq!(model.prefill_take(63, 64, 100), 1);
+        assert_eq!(model.prefill_take(64, 64, 8), 0, "nothing remaining");
+    }
+
+    /// Satellite proptest: chunked, engine-parallel prefill is bitwise
+    /// identical to the historical per-token prefill — for random
+    /// (non-block-aligned) prompt lengths, random chunk budgets, with and
+    /// without radix prefix-cache hits, and across a mid-prefill
+    /// preemption (drop + replay) — including equal physical pool
+    /// occupancy at every checkpoint.
+    #[test]
+    fn chunked_prefill_bitwise_identical_to_per_token() {
+        use crate::proptest::for_all_seeds;
+        let model = NativeLm::new(small_cfg(), 3);
+        for_all_seeds(8, |seed, rng| {
+            let plen = 1 + rng.below(48);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(64) as i32).collect();
+            let budget = 1 + rng.below(24);
+            let with_cache = seed % 2 == 1;
+            let pool_a = model.new_page_pool(4096);
+            let pool_b = model.new_page_pool(4096);
+            let mut cache_a = model.new_radix_cache();
+            let mut cache_b = model.new_radix_cache();
+            if with_cache {
+                // warm both caches so the comparison sessions take the
+                // radix-hit path (per-token warms one, chunked the other
+                // — the advertised pages must be interchangeable)
+                model
+                    .new_session_per_token(&prompt, &pool_a, Some(&mut cache_a))
+                    .map_err(|e| format!("{e:#}"))?;
+                model
+                    .new_session(&prompt, &pool_b, Some(&mut cache_b))
+                    .map_err(|e| format!("{e:#}"))?;
+            }
+            // per-token reference
+            let mut a = model
+                .new_session_per_token(&prompt, &pool_a, with_cache.then_some(&mut cache_a))
+                .map_err(|e| format!("{e:#}"))?;
+            // chunked, scheduler-style budgeted chunks, optionally torn
+            // down mid-prefill once and replayed from scratch (the
+            // preemption path — decode is deterministic, so the replay
+            // must land on the identical state)
+            let mut preempt = rng.below(2) == 1;
+            let mut b = loop {
+                let mut s = model
+                    .begin_session(&prompt, &pool_b, with_cache.then_some(&mut cache_b))
+                    .map_err(|e| format!("{e:#}"))?;
+                let mut interrupted = false;
+                while s.len() < prompt.len() {
+                    let from = s.len();
+                    let take = model.prefill_take(from, prompt.len(), budget);
+                    let done = from + take == prompt.len();
+                    model
+                        .prefill_chunk(&mut s, &prompt[from..from + take], done)
+                        .map_err(|e| format!("{e:#}"))?;
+                    if preempt && s.len() < prompt.len() {
+                        preempt = false;
+                        interrupted = true;
+                        break;
+                    }
+                }
+                if !interrupted {
+                    if with_cache {
+                        model.publish_prompt_pages(&mut cache_b, &prompt, &s);
+                    }
+                    break s;
+                }
+                // preempted: s drops here, its exclusive pages return
+            };
+            if a.cached_tokens() != b.cached_tokens() {
+                return Err(format!(
+                    "cache hit differs: per-token {} vs chunked {}",
+                    a.cached_tokens(),
+                    b.cached_tokens()
+                ));
+            }
+            if a.logits() != b.logits() {
+                return Err(format!(
+                    "prefill logits diverged (plen={plen} budget={budget} cache={with_cache})"
+                ));
+            }
+            if pool_a.pages_in_use() != pool_b.pages_in_use() {
+                return Err(format!(
+                    "pool occupancy diverged after prefill: {} vs {}",
+                    pool_a.pages_in_use(),
+                    pool_b.pages_in_use()
+                ));
+            }
+            for step in 0..4 {
+                if a.len() >= model.config().seq_len {
+                    break;
+                }
+                let ta = model.session_step(&mut a).map_err(|e| format!("{e:#}"))?;
+                let tb = model.session_step(&mut b).map_err(|e| format!("{e:#}"))?;
+                if ta != tb {
+                    return Err(format!("step {step}: token {ta} != chunked {tb}"));
+                }
+            }
+            if pool_a.pages_in_use() != pool_b.pages_in_use() {
+                return Err("pool occupancy diverged after decode steps".to_string());
             }
             Ok(())
         });

@@ -9,32 +9,49 @@
 //! the running set the step after admission and leave the step they
 //! finish — no request ever waits for an unrelated slow request.
 //!
-//! State machine per request (DESIGN.md §9):
+//! Prompt prefill is **chunked and interleaved** (Sarathi-style): an
+//! admitted session enters a `Prefilling` phase and each scheduler step
+//! spends a configurable token budget ([`SessionConfig::
+//! prefill_chunk_tokens`]) on block-aligned prefill chunks — run through
+//! the engine-parallel [`NativeLm::prefill_chunk`] path — *alongside* the
+//! one-token decode of the running set.  A 16k-token prompt therefore no
+//! longer freezes every running decode for its whole prefill; it
+//! progresses one budget's worth per step while decodes keep emitting.
+//! Chunked prefill is bitwise identical to the historical per-token
+//! prefill (property-tested), so interleaving never changes outputs.
+//!
+//! State machine per request (DESIGN.md §9, §10):
 //!
 //! ```text
-//!            admit (pages >= est + watermark)
-//!  WAITING ------------------------------------> RUNNING --+-- finished --> responded
-//!     ^                                             |
-//!     |          preempt (pool pressure;            |
-//!     +--------- youngest first, generated tokens --+
-//!                kept for replay)
+//!          admit (pages >= est + watermark)    prefill complete
+//!  WAITING ---------------------------> PREFILLING ----------> RUNNING --+-- finished
+//!     ^                                        |                          |
+//!     |     preempt (pool pressure; youngest   |                          |
+//!     +---- first, generated tokens kept for --+--------------------------+
+//!     |     replay)
+//!     `-- shutdown: never-admitted waiters get a descriptive error
 //! ```
 //!
 //! Memory control is page-based: the KV state of every session lives in
 //! one bounded [`PagePool`].  Admission requires the pool to hold a
 //! session's *lifetime* estimate (`prompt + gen_tokens` pages) plus a
-//! free watermark; each step reserves the pages the running set is about
-//! to touch, reclaiming in order (1) LRU radix-cache entries, then
+//! free watermark; each step plans the prefill chunks it is about to run
+//! and reserves the pages the running set will touch (decode appends +
+//! planned chunks), reclaiming in order (1) LRU radix-cache entries, then
 //! (2) preempting the most recently admitted session.  A preempted
 //! session's prompt *and already-generated tokens* are replayed through
-//! prefill on readmission — decode is deterministic, so
+//! the same chunked prefill on readmission — decode is deterministic, so
 //! recompute-on-readmit is lossless (asserted in tests), and the radix
 //! prefix cache usually turns the replay into a page-sharing hit.
 //!
 //! Fairness: admission is strictly FIFO (head-of-line requests that can
-//! never fit the pool are rejected, not allowed to wedge the queue);
-//! every running session gets exactly one token per step; preemption
-//! takes the youngest session so older sessions keep their progress.
+//! never fit the pool are rejected, not allowed to wedge the queue); the
+//! prefill budget is spent oldest-admitted first; every decodable session
+//! gets exactly one token per step; preemption takes the youngest session
+//! so older sessions keep their progress.  On shutdown, requests still
+//! waiting for admission are answered with a descriptive error instead of
+//! having their responders dropped (a hung client); sessions that were
+//! already admitted (including preempted ones) still run to completion.
 
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
@@ -56,14 +73,22 @@ struct Pending {
     /// Tokens generated before a preemption; replayed through prefill on
     /// readmission so the visible output is identical.
     generated: Vec<i32>,
+    /// True once this request has been admitted at least once (a
+    /// preempted session awaiting readmission).  Admitted requests are
+    /// never shed at shutdown — accepted means served.
+    admitted: bool,
 }
 
-/// A request in the running decode set.
+/// A request in the running set (prefilling or decoding).
 struct Running {
     req: Request,
     resp: Responder,
     session: LmSession,
     generated: Vec<i32>,
+    /// `Some(prompt)` while the session is still prefilling `prompt`
+    /// (request tokens + any pre-preemption generation to replay); the
+    /// session's `len()` is the prefill cursor.  `None` once decoding.
+    prefill: Option<Vec<i32>>,
     /// Admission stamp; preemption evicts the largest (youngest).
     admitted_at: u64,
 }
@@ -71,6 +96,12 @@ struct Running {
 impl Running {
     fn target_tokens(&self) -> usize {
         self.req.gen_tokens.max(1)
+    }
+
+    /// Decode-phase and not one token from target (those leave through
+    /// the finisher path, straight from logits).
+    fn decodable(&self) -> bool {
+        self.prefill.is_none() && self.generated.len() + 1 < self.target_tokens()
     }
 }
 
@@ -92,6 +123,8 @@ pub(crate) fn scheduler_loop(
     let mut admit_stamp = 0u64;
     let seq_len = lm.config().seq_len;
     let block = lm.config().block;
+    // at least one block per step so prefill always progresses
+    let chunk_budget = scfg.prefill_chunk_tokens.max(block);
 
     loop {
         // ---- ingress: block only when fully idle ----------------------
@@ -101,7 +134,7 @@ pub(crate) fn scheduler_loop(
             }
             match ingress.recv() {
                 Ok(Ingress::Req(req, resp)) => {
-                    waiting.push_back(Pending { req, resp, generated: Vec::new() })
+                    waiting.push_back(Pending { req, resp, generated: Vec::new(), admitted: false })
                 }
                 Ok(Ingress::Shutdown) | Err(_) => {
                     open = false;
@@ -112,7 +145,7 @@ pub(crate) fn scheduler_loop(
         loop {
             match ingress.try_recv() {
                 Ok(Ingress::Req(req, resp)) => {
-                    waiting.push_back(Pending { req, resp, generated: Vec::new() })
+                    waiting.push_back(Pending { req, resp, generated: Vec::new(), admitted: false })
                 }
                 Ok(Ingress::Shutdown) => open = false,
                 Err(TryRecvError::Empty) => break,
@@ -121,6 +154,26 @@ pub(crate) fn scheduler_loop(
                     break;
                 }
             }
+        }
+
+        // ---- shutdown shed (§bugfix): never-admitted waiters get a
+        // descriptive error instead of a dropped responder (hung client).
+        // Preempted sessions stay — they were admitted once and finish
+        // through readmission (accepted means served).
+        if !open && !waiting.is_empty() {
+            waiting.retain(|p| {
+                if !p.admitted {
+                    metrics.inc_rejected();
+                    let _ = p.resp.send(Err(format!(
+                        "scheduler shutting down: request {} was still waiting for \
+                         admission and was not served — resubmit after restart",
+                        p.req.id
+                    )));
+                    false
+                } else {
+                    true
+                }
+            });
         }
 
         // ---- admission: FIFO against the free-page watermark ----------
@@ -182,7 +235,10 @@ pub(crate) fn scheduler_loop(
             // replay = prompt + any generation from before a preemption
             let mut prompt = p.req.tokens.clone();
             prompt.extend_from_slice(&p.generated);
-            match lm.new_session(&prompt, &pool, cache.as_mut()) {
+            // opening a session computes nothing and consumes no pages —
+            // it only attaches the radix-cached prefix; the prompt then
+            // prefills in budgeted chunks across the following steps
+            match lm.begin_session(&prompt, &pool, cache.as_mut()) {
                 Ok(session) => {
                     metrics.sessions.fetch_add(1, Ordering::Relaxed);
                     // readmissions of preempted sessions mostly re-find
@@ -198,23 +254,9 @@ pub(crate) fn scheduler_loop(
                         resp: p.resp,
                         session,
                         generated: std::mem::take(&mut p.generated),
+                        prefill: Some(prompt),
                         admitted_at: admit_stamp,
                     });
-                }
-                Err(e) if e.downcast_ref::<PoolExhausted>().is_some() => {
-                    // the estimate was optimistic (pages pinned elsewhere);
-                    // retry after eviction/leaves unless nothing can free
-                    let reclaimable = !running.is_empty()
-                        || cache.as_ref().map(|c| c.pages_held() > 0).unwrap_or(false);
-                    if reclaimable {
-                        waiting.push_front(p);
-                    } else {
-                        metrics.inc_rejected();
-                        let _ = p
-                            .resp
-                            .send(Err("page pool exhausted with nothing reclaimable".to_string()));
-                    }
-                    break;
                 }
                 Err(e) => {
                     metrics.inc_rejected();
@@ -223,13 +265,15 @@ pub(crate) fn scheduler_loop(
             }
         }
 
-        // ---- finishers: sessions one token from target take it straight
-        // from their current logits — no advance, no pages, no risk of a
-        // pointless final-step preemption (mirrors generate()'s
+        // ---- finishers: decoded sessions one token from target take it
+        // straight from their current logits — no advance, no pages, no
+        // risk of a pointless final-step preemption (mirrors generate()'s
         // `gi + 1 < max_new` skip, so outputs stay bitwise aligned)
         let mut i = 0;
         while i < running.len() {
-            if running[i].generated.len() + 1 >= running[i].target_tokens() {
+            if running[i].prefill.is_none()
+                && running[i].generated.len() + 1 >= running[i].target_tokens()
+            {
                 let mut r = running.remove(i);
                 r.generated.push(r.session.next_token());
                 metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
@@ -251,16 +295,56 @@ pub(crate) fn scheduler_loop(
                 cache.as_ref().map(|c| c.pages_held()).unwrap_or(0) as u64,
                 0,
                 waiting.len() as u64,
+                0,
+                0,
             );
             continue;
         }
 
-        // ---- per-step page reservation (evict, then preempt youngest) -
-        loop {
-            let needed: usize =
-                running.iter().map(|r| r.session.pages_needed_next_step()).sum();
+        // ---- plan + reserve this step (evict, then preempt youngest) --
+        // The prefill plan is pure arithmetic, so it can be recomputed
+        // after every preemption until the step's page demand fits:
+        // one block-aligned chunk per prefilling session (oldest first)
+        // from the shared token budget, alongside one decode append per
+        // decodable session.
+        let plan: Vec<(usize, usize, bool)> = loop {
+            let mut budget = chunk_budget;
+            let mut plan: Vec<(usize, usize, bool)> = Vec::new();
+            let mut order: Vec<usize> =
+                (0..running.len()).filter(|&i| running[i].prefill.is_some()).collect();
+            order.sort_unstable_by_key(|&i| running[i].admitted_at);
+            for i in order {
+                if budget == 0 {
+                    break;
+                }
+                let r = &running[i];
+                let total = r.prefill.as_ref().expect("prefilling").len();
+                let take = lm.prefill_take(r.session.len(), total, budget);
+                if take == 0 {
+                    continue;
+                }
+                budget -= take;
+                plan.push((i, take, r.session.len() + take == total));
+            }
+            let mut needed: usize = running
+                .iter()
+                .filter(|r| r.decodable())
+                .map(|r| r.session.pages_needed_next_step())
+                .sum();
+            for &(i, take, done_after) in &plan {
+                let r = &running[i];
+                needed += r.session.pages_needed_for_chunk(take);
+                // a session finishing its prefill this step decodes this
+                // step too — its first decode append may start a block
+                if done_after && r.generated.len() + 1 < r.target_tokens() {
+                    let total = r.prefill.as_ref().expect("prefilling").len();
+                    if total % block == 0 {
+                        needed += lm.streams();
+                    }
+                }
+            }
             if pool.free_pages() >= needed {
-                break;
+                break plan;
             }
             let short = needed - pool.free_pages();
             if let Some(c) = cache.as_mut() {
@@ -270,9 +354,9 @@ pub(crate) fn scheduler_loop(
             }
             if running.len() <= 1 {
                 // a single session always fits its admission estimate; if
-                // this still trips, the step below surfaces PoolExhausted
-                // and the session is preempted whole
-                break;
+                // this still trips, the chunk/step below surfaces
+                // PoolExhausted and the session is preempted whole
+                break plan;
             }
             let vi = running
                 .iter()
@@ -286,45 +370,122 @@ pub(crate) fn scheduler_loop(
                 req: victim.req,
                 resp: victim.resp,
                 generated: victim.generated,
+                admitted: true,
             });
             // victim.session drops here; its exclusive pages return
-        }
-
-        // ---- one continuous decode step: every session, one token -----
-        let results = {
-            let mut refs: Vec<&mut LmSession> =
-                running.iter_mut().map(|r| &mut r.session).collect();
-            lm.step_sessions(&mut refs)
         };
-        metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
 
-        // ---- join/leave: record tokens, preempt the pool-starved ------
-        // (every stepped session had >= 2 tokens to go, so none finishes
-        // here — sessions reaching their last token leave through the
-        // pre-step finisher path next iteration, straight from logits)
-        let mut starved: Vec<usize> = Vec::new();
-        for (i, res) in results.iter().enumerate() {
-            match res {
-                Ok(tok) => {
-                    running[i].generated.push(*tok);
-                    metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+        // ---- prefill: run the planned chunks through the engine -------
+        let mut torn: Vec<usize> = Vec::new();
+        for &(i, take, done_after) in &plan {
+            let Running { session, prefill, .. } = &mut running[i];
+            let prompt = prefill.as_ref().expect("prefilling");
+            let from = session.len();
+            match lm.prefill_chunk(session, &prompt[from..from + take], done_after) {
+                Ok(()) => {
+                    metrics.record_prefill_chunk(take);
+                    if done_after {
+                        // advertise the complete prompt blocks so the next
+                        // session with this prompt shares them physically
+                        if let Some(c) = cache.as_mut() {
+                            lm.publish_prompt_pages(c, prompt, session);
+                        }
+                    }
                 }
-                Err(PoolExhausted) => starved.push(i),
+                Err(PoolExhausted) => torn.push(i),
             }
         }
-        for &i in starved.iter().rev() {
-            // mid-step pool exhaustion: caches are torn — drop them and
-            // replay prompt + generated on readmission (deterministic)
+        for &(i, _, done_after) in &plan {
+            if done_after && !torn.contains(&i) {
+                running[i].prefill = None;
+            }
+        }
+        // plan order is admission order, not index order: sort so the
+        // reverse removal below never invalidates a pending index
+        torn.sort_unstable();
+        for &i in torn.iter().rev() {
+            // mid-chunk pool exhaustion: the session's streams are torn —
+            // drop it and replay prompt + generated on readmission
+            // (chunked prefill is deterministic, so the replay is
+            // lossless), unless nothing in the system can ever free a
+            // page, in which case fail loudly instead of looping forever
             let r = running.remove(i);
-            metrics.preemptions.fetch_add(1, Ordering::Relaxed);
-            waiting.push_front(Pending { req: r.req, resp: r.resp, generated: r.generated });
+            let reclaimable = !running.is_empty()
+                || cache.as_ref().map(|c| c.pages_held() > 0).unwrap_or(false);
+            if reclaimable {
+                metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+                waiting.push_front(Pending {
+                    req: r.req,
+                    resp: r.resp,
+                    generated: r.generated,
+                    admitted: true,
+                });
+            } else {
+                metrics.inc_rejected();
+                let _ = r
+                    .resp
+                    .send(Err("page pool exhausted with nothing reclaimable".to_string()));
+            }
         }
 
+        // ---- one continuous decode step: every decodable session, one
+        // token — sessions whose prefill just completed join immediately
+        let decodable: Vec<usize> =
+            (0..running.len()).filter(|&i| running[i].decodable()).collect();
+        if !decodable.is_empty() {
+            let results = {
+                let mut refs: Vec<&mut LmSession> = running
+                    .iter_mut()
+                    .filter(|r| r.decodable())
+                    .map(|r| &mut r.session)
+                    .collect();
+                lm.step_sessions(&mut refs)
+            };
+            metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+
+            // ---- join/leave: record tokens, preempt the pool-starved --
+            // (every stepped session had >= 2 tokens to go, so none
+            // finishes here — sessions reaching their last token leave
+            // through the pre-step finisher path next iteration, straight
+            // from logits)
+            let mut starved: Vec<usize> = Vec::new();
+            for (k, res) in results.iter().enumerate() {
+                let i = decodable[k];
+                match res {
+                    Ok(tok) => {
+                        running[i].generated.push(*tok);
+                        metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(PoolExhausted) => starved.push(i),
+                }
+            }
+            for &i in starved.iter().rev() {
+                // mid-step pool exhaustion: caches are torn — drop them and
+                // replay prompt + generated on readmission (deterministic)
+                let r = running.remove(i);
+                metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+                waiting.push_front(Pending {
+                    req: r.req,
+                    resp: r.resp,
+                    generated: r.generated,
+                    admitted: true,
+                });
+            }
+        }
+
+        let prefilling =
+            running.iter().filter(|r| r.prefill.is_some()).count() as u64;
+        let backlog: u64 = running
+            .iter()
+            .filter_map(|r| r.prefill.as_ref().map(|p| (p.len() - r.session.len()) as u64))
+            .sum();
         metrics.set_session_gauges(
             pool.free_pages() as u64,
             cache.as_ref().map(|c| c.pages_held()).unwrap_or(0) as u64,
             running.len() as u64,
             waiting.len() as u64,
+            prefilling,
+            backlog,
         );
     }
 }
@@ -399,6 +560,7 @@ mod tests {
         handle.join().unwrap();
         assert_eq!(metrics.sessions.load(Ordering::Relaxed) as usize, 6);
         assert!(metrics.decode_steps.load(Ordering::Relaxed) > 0);
+        assert!(metrics.prefill_chunks.load(Ordering::Relaxed) >= 6, "{}", metrics.summary());
     }
 
     #[test]
@@ -426,18 +588,18 @@ mod tests {
     fn tight_pool_preempts_and_recompute_on_readmit_is_lossless() {
         // streams = 2, block = 16.  prompt 16 + gen 6 => lifetime estimate
         // 2 * ceil(22/16) = 4 pages.  With a 10-page pool and no watermark,
-        // admission over-commits: 4 sessions admitted at 2 pages each
-        // (free = 2), and the first decode step crosses every session's
-        // block boundary at once (len 16 -> 17), demanding 8 pages — the
-        // reservation loop must preempt the youngest sessions, and their
-        // replay on readmission must reproduce the exact same tokens.
-        // Requests are enqueued *before* the scheduler thread starts so
-        // the admission sequence is deterministic.
+        // admission over-commits: 5 sessions admitted (opening a session
+        // is free), but their first-step prefill chunks demand 2 pages
+        // each — the plan/reserve loop must preempt the youngest sessions,
+        // and their replay on readmission must reproduce the exact same
+        // tokens.  Requests are enqueued *before* the scheduler thread
+        // starts so the admission sequence is deterministic.
         let scfg = SessionConfig {
             total_pages: 10,
             free_watermark: 0,
             max_running: 8,
             prefix_cache: false,
+            prefill_chunk_tokens: 256,
         };
         let lm = Arc::new(NativeLm::new(small_cfg(), 2));
         let metrics = Arc::new(Metrics::new());
@@ -471,6 +633,75 @@ mod tests {
     }
 
     #[test]
+    fn long_prompt_prefills_in_chunks_alongside_decodes() {
+        // prefill budget of one block: the 48-token prompt must take
+        // several steps of chunked prefill while the short session's
+        // decode keeps stepping — with the monolithic prefill this was a
+        // single inline stall and prefill_chunks stayed 0/1.  Requests
+        // (and nothing else) are enqueued before the scheduler starts, so
+        // the chunk accounting is exact.
+        let scfg = SessionConfig {
+            total_pages: 512,
+            free_watermark: 0,
+            max_running: 8,
+            prefix_cache: false,
+            prefill_chunk_tokens: 16,
+        };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 2));
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Ingress>(64);
+        let short = prompt(0, 4);
+        let long = prompt(1, 48);
+        let ra = send_req(&tx, 0, short.clone(), 12);
+        let rb = send_req(&tx, 1, long.clone(), 3);
+        let (lm2, m2) = (lm.clone(), metrics.clone());
+        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2));
+        let a = ra.recv().unwrap().expect("short response");
+        let b = rb.recv().unwrap().expect("long response");
+        assert_eq!(a.predictions, lm.generate(&short, 12).unwrap(), "interleaving changed output");
+        assert_eq!(b.predictions, lm.generate(&long, 3).unwrap(), "chunked prefill changed output");
+        tx.send(Ingress::Shutdown).unwrap();
+        handle.join().unwrap();
+        // short prefills in 1 chunk; the long prompt needs >= 3 chunks of
+        // <= 16 tokens, spread across steps that also decoded the short
+        // session (no inline full-prompt prefill)
+        let chunks = metrics.prefill_chunks.load(Ordering::Relaxed);
+        let tokens = metrics.prefill_tokens.load(Ordering::Relaxed);
+        assert!(chunks >= 4, "long prompt must prefill chunked: {}", metrics.summary());
+        assert_eq!(tokens, 4 + 48, "every prompt token prefilled exactly once");
+        assert!(
+            metrics.decode_steps.load(Ordering::Relaxed) >= 11,
+            "decodes must run alongside the chunked prefill: {}",
+            metrics.summary()
+        );
+    }
+
+    #[test]
+    fn shutdown_with_waiting_queue_errors_every_pending_requester() {
+        // §bugfix regression: shutting down with requests still in the
+        // waiting queue used to drop their responders — the clients hung
+        // forever on recv().  Requests and the shutdown are enqueued
+        // before the scheduler thread starts, so both requests are
+        // guaranteed to still be waiting when the shutdown is observed.
+        let scfg = SessionConfig { total_pages: 64, free_watermark: 4, ..Default::default() };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 1));
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Ingress>(64);
+        let r1 = send_req(&tx, 7, prompt(0, 8), 4);
+        let r2 = send_req(&tx, 8, prompt(1, 8), 4);
+        tx.send(Ingress::Shutdown).unwrap();
+        let (lm2, m2) = (lm.clone(), metrics.clone());
+        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2));
+        let e1 = r1.recv().expect("responder must not be dropped").unwrap_err();
+        let e2 = r2.recv().expect("responder must not be dropped").unwrap_err();
+        assert!(e1.contains("shutting down") && e1.contains('7'), "{e1}");
+        assert!(e2.contains("shutting down") && e2.contains('8'), "{e2}");
+        handle.join().unwrap();
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.sessions.load(Ordering::Relaxed), 0, "nothing was admitted");
+    }
+
+    #[test]
     fn oversized_and_empty_requests_fail_cleanly_without_wedging() {
         let scfg = SessionConfig { total_pages: 64, free_watermark: 4, ..Default::default() };
         let (tx, lm, _metrics, handle) = spawn_scheduler(scfg);
@@ -492,6 +723,7 @@ mod tests {
             free_watermark: 2,
             max_running: 4,
             prefix_cache: true,
+            prefill_chunk_tokens: 256,
         };
         let (tx, _lm, _metrics, handle) = spawn_scheduler(scfg);
         // est = 2 streams * ceil(48/16) = 6 pages > 4 - watermark

@@ -139,9 +139,11 @@ impl Server {
     /// Spin up the **session-serving** LM server: one scheduler thread
     /// running continuous batching over page-backed KV sessions
     /// ([`crate::coordinator::scheduler`]) — admission against free-page
-    /// watermarks, per-step join/leave (no fixed rounds), radix
-    /// prefix-cache sharing for common prompts, and preemption with
-    /// recompute-on-readmit under memory pressure.  Requests submit
+    /// watermarks, chunked engine-parallel prompt prefill interleaved
+    /// with decode steps (`sessions.prefill_chunk_tokens`), per-step
+    /// join/leave (no fixed rounds), radix prefix-cache sharing for
+    /// common prompts, and preemption with recompute-on-readmit under
+    /// memory pressure.  Requests submit
     /// through the same [`Server::generate`] / [`Server::infer`] API, and
     /// outputs are bitwise identical to the fixed-round path.
     pub fn start_native_lm_sessions(

@@ -50,8 +50,14 @@ use crate::tensor::{kernel, ops, topk};
 /// Per-step scratch of one decode stream: low-res scores, the refined-set
 /// bookkeeping and one score row.  Sized on the first step and reused
 /// verbatim afterwards (allocation-free steady path).
+///
+/// Public so chunked-prefill callers ([`DecodeState::attend_pos_into`])
+/// can keep one scratch per pool worker instead of one per stream; the
+/// scratch never influences results — every field is fully overwritten
+/// before use, which is what lets a fresh scratch reproduce the per-token
+/// float sequence bitwise.
 #[derive(Clone, Debug, Default)]
-struct DecodeScratch {
+pub struct DecodeScratch {
     /// Pooled scores of every complete past block (`<= n / block`).
     s_low: Vec<f32>,
     /// Refined block indices (ascending; `<= budget`).
@@ -83,10 +89,18 @@ trait BlockSource {
     fn tail_v(&self) -> &[f32];
 }
 
-/// [`BlockSource`] over the paged state: block `y` is page `y`.
+/// [`BlockSource`] over the paged state: block `y` is page `y`.  The
+/// "tail" block is page `x` — the block holding the attending position —
+/// which is the *last* page for `attend_last`, but an interior (possibly
+/// already finalized) page for the positional attends of chunked prefill.
+/// Finalization only writes the panel/pooled rows, never the raw K/V
+/// rows, so reading a finalized page's first `w` raw rows is bitwise
+/// identical to reading them while the block was still partial.
 struct PagedBlocks<'a> {
     pages: &'a [PageRef],
-    /// Rows in the current (tail) block.
+    /// Block index of the attending position (`pos / block`).
+    x: usize,
+    /// Rows of block `x` visible to the attending position.
     w: usize,
 }
 
@@ -108,11 +122,11 @@ impl BlockSource for PagedBlocks<'_> {
     }
 
     fn tail_k(&self) -> &[f32] {
-        self.pages.last().expect("tail page").k_rows(self.w)
+        self.pages[self.x].k_rows(self.w)
     }
 
     fn tail_v(&self) -> &[f32] {
-        self.pages.last().expect("tail page").v_rows(self.w)
+        self.pages[self.x].v_rows(self.w)
     }
 }
 
@@ -266,13 +280,29 @@ impl DecodeState {
     /// and will copy-on-write.  The scheduler's per-step page reservation
     /// hook.
     pub fn next_append_needs_page(&self) -> bool {
-        if self.len % self.block == 0 {
-            return true;
+        self.pages_needed_for_append(1) > 0
+    }
+
+    /// Physical pages appending `rows` more positions would take from the
+    /// pool: one per block boundary crossed, plus one when the partial
+    /// tail is shared with a fork and will copy-on-write — the chunked
+    /// form of [`DecodeState::next_append_needs_page`], used by the
+    /// scheduler to reserve a prefill chunk before running it.
+    pub fn pages_needed_for_append(&self, rows: usize) -> usize {
+        if rows == 0 {
+            return 0;
         }
-        match self.pages.last() {
-            Some(tail) => Arc::strong_count(tail) > 1,
-            None => true,
+        let before = self.len.div_ceil(self.block);
+        let after = (self.len + rows).div_ceil(self.block);
+        let mut need = after - before;
+        if self.len % self.block != 0 {
+            if let Some(tail) = self.pages.last() {
+                if Arc::strong_count(tail) > 1 {
+                    need += 1; // shared partial tail copies on the next write
+                }
+            }
         }
+        need
     }
 
     /// Append one key/value row to the cache, maintaining the pooled
@@ -326,6 +356,25 @@ impl DecodeState {
         Ok(())
     }
 
+    /// Append a whole chunk of key/value rows (`rows * d` each, row-major)
+    /// — the prefill-chunk bulk form of [`DecodeState::try_append`].  The
+    /// per-row float sequence (partial sums, finalization, panel packing)
+    /// is exactly the per-token one, so a chunked prefill stays bitwise
+    /// identical to feeding the rows one at a time.
+    ///
+    /// **Not atomic**: on [`PoolExhausted`] the rows before the failing
+    /// one remain appended.  A multi-stream caller (one chunk across every
+    /// `(layer, head)` stream) must treat the whole session as torn and
+    /// discard it, exactly like a failed batched decode step.
+    pub fn try_append_rows(&mut self, k_rows: &[f32], v_rows: &[f32]) -> Result<(), PoolExhausted> {
+        assert_eq!(k_rows.len(), v_rows.len(), "k/v chunk length mismatch");
+        assert_eq!(k_rows.len() % self.d, 0, "chunk must be whole rows");
+        for (k, v) in k_rows.chunks_exact(self.d).zip(v_rows.chunks_exact(self.d)) {
+            self.try_append(k, v)?;
+        }
+        Ok(())
+    }
+
     /// Causal MRA-2 attention of `q_row` (the newest position, `len - 1`)
     /// over the cached prefix; returns the row-normalized output row.
     /// Allocates the output — serving hot paths should pass a reusable
@@ -342,11 +391,47 @@ impl DecodeState {
     pub fn attend_last_into(&mut self, q_row: &[f32], out: &mut [f32]) {
         assert!(self.len > 0, "attend_last on an empty cache");
         assert_eq!(q_row.len(), self.d, "q row width");
-        assert_eq!(out.len(), self.d, "out row width");
         let (len, block, budget, variant) = (self.len, self.block, self.budget, self.variant);
-        let w = len - (len - 1) / block * block;
-        let src = PagedBlocks { pages: &self.pages, w };
-        attend_row_core(q_row, &src, len, block, budget, variant, &mut self.scratch, out);
+        attend_row_paged(
+            &self.pages,
+            len - 1,
+            block,
+            budget,
+            variant,
+            q_row,
+            &mut self.scratch,
+            out,
+        );
+    }
+
+    /// Causal attention of `q_row` *as position `pos`* over the prefix
+    /// `0..=pos` of the cache — the chunked-prefill form of
+    /// [`DecodeState::attend_last_into`]: after a whole chunk of K/V rows
+    /// has been appended, every row of the chunk attends its own causal
+    /// prefix, in parallel, through a caller-owned (per pool worker)
+    /// scratch.  Takes `&self` so one stream's rows can fan out across
+    /// workers; the float sequence for each row is exactly what
+    /// `attend_last_into` produced when `pos` was the newest position
+    /// (asserted by the chunked-prefill bitwise tests).
+    pub fn attend_pos_into(
+        &self,
+        q_row: &[f32],
+        pos: usize,
+        scratch: &mut DecodeScratch,
+        out: &mut [f32],
+    ) {
+        assert!(pos < self.len, "position {pos} not cached (len {})", self.len);
+        assert_eq!(q_row.len(), self.d, "q row width");
+        attend_row_paged(
+            &self.pages,
+            pos,
+            self.block,
+            self.budget,
+            self.variant,
+            q_row,
+            scratch,
+            out,
+        );
     }
 
     /// One decode step: `append` + `attend_last`.
@@ -372,6 +457,30 @@ impl DecodeState {
             + self.scratch.is_refined.capacity()
             + self.scratch.scores.capacity()
     }
+}
+
+/// Attend position `pos` of a paged stream over its causal prefix — the
+/// shared body of [`DecodeState::attend_last_into`] (newest position,
+/// state-owned scratch) and [`DecodeState::attend_pos_into`] (any cached
+/// position, caller-owned scratch).
+#[allow(clippy::too_many_arguments)]
+fn attend_row_paged(
+    pages: &[PageRef],
+    pos: usize,
+    block: usize,
+    budget: usize,
+    variant: Variant,
+    q_row: &[f32],
+    scratch: &mut DecodeScratch,
+    out: &mut [f32],
+) {
+    let d = q_row.len();
+    assert_eq!(out.len(), d, "out row width");
+    let len = pos + 1;
+    let x = pos / block;
+    let w = len - x * block;
+    let src = PagedBlocks { pages, x, w };
+    attend_row_core(q_row, &src, len, block, budget, variant, scratch, out);
 }
 
 /// Shared row-attention core: the position `len - 1` attends the cached
@@ -741,6 +850,85 @@ mod tests {
         assert!(Arc::ptr_eq(&full.pages()[1], &warm.pages()[1]));
         let qrow = &q[(n - 1) * d..n * d];
         assert_eq!(full.attend_last(qrow), warm.attend_last(qrow));
+    }
+
+    #[test]
+    fn chunked_append_and_positional_attend_match_per_token_bitwise() {
+        // the decode-layer half of the chunked-prefill identity: appending
+        // a whole chunk and attending each row at its own position must
+        // reproduce the per-token append/attend_last float sequence exactly
+        let (d, b) = (16usize, 8usize);
+        for variant in [Variant::Full, Variant::Sparse] {
+            let mut rng = Rng::new(41);
+            let n = 61; // non-block-aligned, several boundaries
+            let q = rows(n, d, &mut rng);
+            let k = rows(n, d, &mut rng);
+            let v = rows(n, d, &mut rng);
+            // per-token reference
+            let mut per_tok = DecodeState::new(b, 2, variant, d);
+            let mut want = Vec::new();
+            for t in 0..n {
+                per_tok.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+                want.push(per_tok.attend_last(&q[t * d..(t + 1) * d]));
+            }
+            // chunked: bulk-append in uneven chunks, then attend each row
+            // positionally with a fresh caller scratch
+            let mut chunked = DecodeState::new(b, 2, variant, d);
+            let mut start = 0usize;
+            for take in [5usize, 8, 16, 3, 29] {
+                let end = (start + take).min(n);
+                chunked
+                    .try_append_rows(&k[start * d..end * d], &v[start * d..end * d])
+                    .unwrap();
+                let mut scratch = DecodeScratch::default();
+                let mut out = vec![0.0f32; d];
+                for pos in start..end {
+                    let qrow = &q[pos * d..(pos + 1) * d];
+                    chunked.attend_pos_into(qrow, pos, &mut scratch, &mut out);
+                    assert_eq!(out, want[pos], "{variant:?} pos {pos}");
+                }
+                start = end;
+            }
+            assert_eq!(chunked.len(), n);
+            // positional attends re-run after later blocks completed still
+            // read the same rows (finalization never rewrites raw K/V)
+            let mut scratch = DecodeScratch::default();
+            let mut out = vec![0.0f32; d];
+            for pos in [0usize, 7, 8, 20, n - 1] {
+                chunked.attend_pos_into(&q[pos * d..(pos + 1) * d], pos, &mut scratch, &mut out);
+                assert_eq!(out, want[pos], "{variant:?} replayed pos {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn pages_needed_for_append_counts_boundaries_and_cow() {
+        let (d, b) = (4usize, 4usize);
+        let pool = PagePool::new(64, b, d);
+        let mut st = DecodeState::with_pool(&pool, 1, Variant::Full);
+        let row = vec![1.0f32; d];
+        assert_eq!(st.pages_needed_for_append(0), 0);
+        assert_eq!(st.pages_needed_for_append(1), 1); // starts block 0
+        assert_eq!(st.pages_needed_for_append(b), 1);
+        assert_eq!(st.pages_needed_for_append(b + 1), 2);
+        assert_eq!(st.pages_needed_for_append(3 * b), 3);
+        st.try_append(&row, &row).unwrap(); // len 1: inside block 0
+        assert_eq!(st.pages_needed_for_append(b - 1), 0);
+        assert_eq!(st.pages_needed_for_append(b), 1);
+        assert!(!st.next_append_needs_page());
+        // a fork shares the partial tail: the next append copies-on-write
+        let fork = st.fork();
+        assert_eq!(st.pages_needed_for_append(b - 1), 1, "CoW counted");
+        assert_eq!(st.pages_needed_for_append(b), 2, "CoW + new block");
+        assert!(st.next_append_needs_page());
+        drop(fork);
+        assert_eq!(st.pages_needed_for_append(b - 1), 0);
+        // the estimate matches what a real chunk consumes
+        let used = pool.pages_in_use();
+        let need = st.pages_needed_for_append(2 * b + 1);
+        let many = vec![1.0f32; (2 * b + 1) * d];
+        st.try_append_rows(&many, &many).unwrap();
+        assert_eq!(pool.pages_in_use(), used + need);
     }
 
     #[test]

@@ -334,8 +334,15 @@ pub fn kernel_by_name(name: &str, block: usize, m: usize) -> Result<Box<dyn Attn
         "mra2s" => Box::new(Mra2Kernel::new(block, m, Variant::Sparse)),
         "mra2-causal" => Box::new(Mra2Kernel::new_causal(block, m, Variant::Full)),
         "mra2s-causal" => Box::new(Mra2Kernel::new_causal(block, m, Variant::Sparse)),
-        "longformer" => Box::new(ApproxShim::new(Longformer::new(block.max(4), 1))),
-        "nystromformer" => Box::new(ApproxShim::new(Nystromformer::new((2 * block).max(8), 6))),
+        // §bugfix: the `m` budget knob used to be silently dropped for the
+        // baseline shims (budgets were hard-coded from `block` alone) — a
+        // sweep over m produced identical longformer/nystromformer rows.
+        // `m` now maps onto each baseline's own budget axis: longformer's
+        // global-token count and nystromformer's landmark count (its rank
+        // budget, floored for pseudo-inverse stability); `block` keeps
+        // setting the longformer window, its geometric analog.
+        "longformer" => Box::new(ApproxShim::new(Longformer::new(block.max(4), m.max(1)))),
+        "nystromformer" => Box::new(ApproxShim::new(Nystromformer::new(m.max(8), 6))),
         other => bail!(
             "unknown attention kernel {other:?}; known kernels: {}",
             KERNEL_NAMES.join(", ")
@@ -370,6 +377,57 @@ mod tests {
         assert!(Mra2Kernel::new_causal(16, 8, Variant::Full).name().contains("-causal"));
         assert!(CausalExactKernel.name().contains("exact-causal"));
         assert!(!Mra2Kernel::new(16, 8, Variant::Full).name().contains("causal"));
+    }
+
+    #[test]
+    fn shim_kernels_thread_the_m_budget_knob() {
+        // §bugfix regression: `m` used to be silently ignored for the
+        // baseline shims, so a budget sweep produced identical rows.  The
+        // knob must now be observable through the constructed kernel.
+        let lo = kernel_by_name("longformer", 16, 1).unwrap();
+        let hi = kernel_by_name("longformer", 16, 6).unwrap();
+        assert_ne!(lo.name(), hi.name(), "longformer must report the threaded budget");
+        assert!(hi.name().contains("g=6"), "{}", hi.name());
+        let lo = kernel_by_name("nystromformer", 16, 16).unwrap();
+        let hi = kernel_by_name("nystromformer", 16, 48).unwrap();
+        assert_ne!(lo.name(), hi.name(), "nystromformer must report the threaded budget");
+        assert!(lo.name().contains("l=16"), "{}", lo.name());
+        assert!(hi.name().contains("l=48"), "{}", hi.name());
+        // the workload model scales with the knob too (the budget axis)
+        assert!(
+            Longformer::new(16, 6).workload(256, 32) > Longformer::new(16, 1).workload(256, 32)
+        );
+        assert!(
+            Nystromformer::new(48, 6).workload(256, 32)
+                > Nystromformer::new(16, 6).workload(256, 32)
+        );
+    }
+
+    #[test]
+    fn shim_kernels_compute_whole_heads_under_engine_sharding() {
+        use crate::engine::{BatchedTensor, Engine};
+        use crate::tensor::Rng;
+        // §bugfix regression: ApproxShim::compute_range hard-asserts
+        // whole-head ranges while the engine shards by shard_rows(n) —
+        // every shim must keep the default shard_rows == None (one shard
+        // per head), including at n not divisible by the block knob, or
+        // the multi-threaded engine trips the assert
+        let mut rng = Rng::new(17);
+        let n = 50; // not divisible by block 16 or the derived budgets
+        let q = BatchedTensor::randn(2, 2, n, 8, 1.0, &mut rng);
+        let k = BatchedTensor::randn(2, 2, n, 8, 1.0, &mut rng);
+        let v = BatchedTensor::randn(2, 2, n, 8, 1.0, &mut rng);
+        for name in ["longformer", "nystromformer"] {
+            let kernel = kernel_by_name(name, 16, 8).unwrap();
+            assert!(kernel.shard_rows(n).is_none(), "{name} must compute whole heads");
+            let engine = Engine::new(kernel, 4);
+            let out = engine.forward(&q, &k, &v);
+            assert_eq!(out.shape(), (2, 2, n, 8));
+            assert!(
+                out.data.iter().all(|x| x.is_finite()),
+                "{name} produced non-finite output"
+            );
+        }
     }
 
     #[test]

@@ -37,6 +37,7 @@ TRACKED = (
     "speedup_vs_scalar",
     "speedup_vs_exact",
     "speedup_vs_fixed",
+    "prefill_speedup_vs_per_token",
 )
 # fields that are metrics (never part of a row's identity key)
 METRIC_FIELDS = set(TRACKED) | {
@@ -91,6 +92,16 @@ def main():
     )
     args = ap.parse_args()
     fields = [f.strip() for f in args.fields.split(",") if f.strip()]
+    # a typo'd --fields entry must fail loudly up front, not silently
+    # compare nothing (or, worse, be treated as a row-identity field)
+    unknown = [f for f in fields if f not in METRIC_FIELDS]
+    if unknown:
+        sys.exit(
+            "bench_diff: unknown metric field(s) "
+            + ", ".join(repr(f) for f in unknown)
+            + "; known metrics: "
+            + ", ".join(sorted(METRIC_FIELDS))
+        )
 
     bench_b, base = load_rows(args.baseline)
     bench_c, cur = load_rows(args.current)
@@ -100,7 +111,14 @@ def main():
     compared = 0
     regressions = []
     missing = []
+    seen_fields = set()
     for key, brow in sorted(base.items()):
+        # track which requested metrics the baseline carries at all, even
+        # for rows absent from the current artifact — a pure row-key
+        # mismatch must not be misdiagnosed as a metric-less baseline
+        for f in fields:
+            if f in brow:
+                seen_fields.add(f)
         crow = cur.get(key)
         if crow is None:
             missing.append(key)
@@ -125,6 +143,19 @@ def main():
             )
 
     if compared == 0:
+        # distinguish "the requested metric is not in the baseline at all"
+        # (the old failure surfaced as an opaque KeyError-ish no-op) from a
+        # row-identity mismatch
+        requested = [f for f in fields if f != ""]
+        absent = [f for f in requested if f not in seen_fields]
+        if absent and len(absent) == len(requested):
+            sys.exit(
+                "bench_diff: none of the requested metric(s) "
+                + ", ".join(repr(f) for f in absent)
+                + f" appear in any baseline row of {args.baseline} — refresh the "
+                "committed baseline to carry the new metric (see "
+                "rust/benches/baseline/README.md)"
+            )
         sys.exit(
             "bench_diff: no comparable (row, metric) pairs between "
             f"{args.baseline} and {args.current} — key or schema mismatch"
