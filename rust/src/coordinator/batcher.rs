@@ -12,6 +12,10 @@
 //! ([`crate::coordinator::scheduler`]), which retires this round barrier;
 //! `benches/bench_serve.rs` measures the two against each other.
 
+// the batcher sits on the request path: a panic here drops every queued
+// request's responder.  `cargo xtask lint` enforces the same rule.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -109,6 +113,7 @@ impl Batcher {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -52,8 +52,20 @@
 //! waiting for admission are answered with a descriptive error instead of
 //! having their responders dropped (a hung client); sessions that were
 //! already admitted (including preempted ones) still run to completion.
+//!
+//! State lives in the [`Scheduler`] struct, one phase per method, and
+//! every step ends in [`Scheduler::check_invariants`] (compiled under
+//! `debug_assertions` or the `paranoid` feature — see DESIGN.md §11):
+//! the page pool's conservation accounting, the radix tree's structure,
+//! and the scheduler's own queue/page arithmetic are machine-checked
+//! after each step of every serving test, not asserted in prose.
 
-use std::collections::VecDeque;
+// request/responder paths must never panic mid-step: a panicking
+// scheduler thread drops every queued responder (the PR 5 hung-client
+// bug class).  `cargo xtask lint` enforces the same rule textually.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
@@ -63,7 +75,7 @@ use crate::coordinator::batcher::Request;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::native::{LmSession, NativeLm};
 use crate::coordinator::server::{Ingress, Responder, Response};
-use crate::engine::PoolExhausted;
+use crate::engine::{PagePool, PoolExhausted, RadixCache};
 
 /// A request waiting for admission (fresh, or preempted with its partial
 /// generation kept for replay).
@@ -105,8 +117,31 @@ impl Running {
     }
 }
 
-/// The scheduler thread body: owns the page pool, the radix prefix cache
-/// and the session queues; drains `ingress` until shutdown *and* all
+/// One block-aligned prefill chunk the step is about to run:
+/// `(running index, tokens to take, prefill completes after)`.
+type ChunkPlan = Vec<(usize, usize, bool)>;
+
+/// The continuous-batching scheduler state: the page pool, the radix
+/// prefix cache and the session queues, advanced one step at a time by
+/// [`Scheduler::step`] (the phases of the old monolithic loop, one
+/// method each).  [`scheduler_loop`] is the thread body driving it.
+pub(crate) struct Scheduler {
+    lm: Arc<NativeLm>,
+    scfg: SessionConfig,
+    metrics: Arc<Metrics>,
+    pool: PagePool,
+    cache: Option<RadixCache>,
+    waiting: VecDeque<Pending>,
+    running: Vec<Running>,
+    open: bool,
+    admit_stamp: u64,
+    seq_len: usize,
+    block: usize,
+    /// At least one block per step so prefill always progresses.
+    chunk_budget: usize,
+}
+
+/// The scheduler thread body: drains `ingress` until shutdown *and* all
 /// admitted work is finished.
 pub(crate) fn scheduler_loop(
     ingress: Receiver<Ingress>,
@@ -114,171 +149,229 @@ pub(crate) fn scheduler_loop(
     scfg: SessionConfig,
     metrics: Arc<Metrics>,
 ) {
-    let pool = lm.new_page_pool(scfg.total_pages);
-    metrics.pool_pages.store(scfg.total_pages as u64, Ordering::Relaxed);
-    let mut cache = if scfg.prefix_cache { Some(lm.new_radix_cache()) } else { None };
-    let mut waiting: VecDeque<Pending> = VecDeque::new();
-    let mut running: Vec<Running> = Vec::new();
-    let mut open = true;
-    let mut admit_stamp = 0u64;
-    let seq_len = lm.config().seq_len;
-    let block = lm.config().block;
-    // at least one block per step so prefill always progresses
-    let chunk_budget = scfg.prefill_chunk_tokens.max(block);
+    let mut sched = Scheduler::new(lm, scfg, metrics);
+    while sched.step(&ingress) {}
+}
 
-    loop {
+impl Scheduler {
+    pub(crate) fn new(lm: Arc<NativeLm>, scfg: SessionConfig, metrics: Arc<Metrics>) -> Self {
+        let pool = lm.new_page_pool(scfg.total_pages);
+        metrics.pool_pages.store(scfg.total_pages as u64, Ordering::Relaxed);
+        let cache = if scfg.prefix_cache { Some(lm.new_radix_cache()) } else { None };
+        let seq_len = lm.config().seq_len;
+        let block = lm.config().block;
+        let chunk_budget = scfg.prefill_chunk_tokens.max(block);
+        Scheduler {
+            lm,
+            scfg,
+            metrics,
+            pool,
+            cache,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            open: true,
+            admit_stamp: 0,
+            seq_len,
+            block,
+            chunk_budget,
+        }
+    }
+
+    /// One full scheduler step; returns `false` when the loop should
+    /// exit (shutdown observed and all admitted work drained).  Ends in
+    /// [`Scheduler::check_invariants`] on every path that mutated state.
+    pub(crate) fn step(&mut self, ingress: &Receiver<Ingress>) -> bool {
         // ---- ingress: block only when fully idle ----------------------
-        if running.is_empty() && waiting.is_empty() {
-            if !open {
-                break;
+        if self.running.is_empty() && self.waiting.is_empty() {
+            if !self.open {
+                return false;
             }
             match ingress.recv() {
-                Ok(Ingress::Req(req, resp)) => {
-                    waiting.push_back(Pending { req, resp, generated: Vec::new(), admitted: false })
-                }
+                Ok(Ingress::Req(req, resp)) => self.enqueue(req, resp),
                 Ok(Ingress::Shutdown) | Err(_) => {
-                    open = false;
-                    continue;
+                    self.open = false;
+                    return true;
                 }
             }
         }
         loop {
             match ingress.try_recv() {
-                Ok(Ingress::Req(req, resp)) => {
-                    waiting.push_back(Pending { req, resp, generated: Vec::new(), admitted: false })
-                }
-                Ok(Ingress::Shutdown) => open = false,
+                Ok(Ingress::Req(req, resp)) => self.enqueue(req, resp),
+                Ok(Ingress::Shutdown) => self.open = false,
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
-                    open = false;
+                    self.open = false;
                     break;
                 }
             }
         }
 
-        // ---- shutdown shed (§bugfix): never-admitted waiters get a
-        // descriptive error instead of a dropped responder (hung client).
-        // Preempted sessions stay — they were admitted once and finish
-        // through readmission (accepted means served).
-        if !open && !waiting.is_empty() {
-            waiting.retain(|p| {
-                if !p.admitted {
-                    metrics.inc_rejected();
-                    let _ = p.resp.send(Err(format!(
-                        "scheduler shutting down: request {} was still waiting for \
-                         admission and was not served — resubmit after restart",
-                        p.req.id
-                    )));
-                    false
-                } else {
-                    true
-                }
-            });
+        self.shed_unadmitted_waiters();
+        self.admit();
+        self.finish_ready();
+
+        if self.running.is_empty() {
+            self.publish_gauges();
+            self.check_invariants();
+            return true;
         }
 
-        // ---- admission: FIFO against the free-page watermark ----------
-        while running.len() < scfg.max_running.max(1) {
-            let Some(front) = waiting.front() else { break };
-            let gen = front.req.gen_tokens.max(1);
-            if front.req.tokens.is_empty() || front.req.tokens.len() + gen > seq_len {
-                let p = waiting.pop_front().expect("front exists");
-                let msg = if p.req.tokens.is_empty() {
-                    "empty prompt".to_string()
-                } else {
-                    format!(
-                        "prompt {} + {} new tokens exceeds seq_len {seq_len}",
-                        p.req.tokens.len(),
-                        gen
-                    )
-                };
+        let plan = self.plan_and_reserve();
+        self.run_prefill_chunks(&plan);
+        self.decode_step();
+        self.publish_gauges();
+        self.check_invariants();
+        true
+    }
+
+    fn enqueue(&mut self, req: Request, resp: Responder) {
+        self.waiting.push_back(Pending { req, resp, generated: Vec::new(), admitted: false });
+    }
+
+    /// Shutdown shed (§bugfix): never-admitted waiters get a descriptive
+    /// error instead of a dropped responder (hung client).  Preempted
+    /// sessions stay — they were admitted once and finish through
+    /// readmission (accepted means served).
+    fn shed_unadmitted_waiters(&mut self) {
+        if self.open || self.waiting.is_empty() {
+            return;
+        }
+        let metrics = &self.metrics;
+        self.waiting.retain(|p| {
+            if !p.admitted {
                 metrics.inc_rejected();
+                let _ = p.resp.send(Err(format!(
+                    "scheduler shutting down: request {} was still waiting for \
+                     admission and was not served — resubmit after restart",
+                    p.req.id
+                )));
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Admission: FIFO against the free-page watermark.
+    fn admit(&mut self) {
+        while self.running.len() < self.scfg.max_running.max(1) {
+            // inspect the head; `est` is the page estimate the timing
+            // check uses, `reject` a terminal refusal for this request
+            let (reject, est) = {
+                let Some(front) = self.waiting.front() else { break };
+                let gen = front.req.gen_tokens.max(1);
+                if front.req.tokens.is_empty() {
+                    (Some("empty prompt".to_string()), 0)
+                } else if front.req.tokens.len() + gen > self.seq_len {
+                    (
+                        Some(format!(
+                            "prompt {} + {} new tokens exceeds seq_len {}",
+                            front.req.tokens.len(),
+                            gen,
+                            self.seq_len
+                        )),
+                        0,
+                    )
+                } else {
+                    // lifetime footprint: every page the session will ever
+                    // hold.  The *feasibility* check must use this cold
+                    // estimate — a request admitted thanks to cache sharing
+                    // could otherwise be hard-rejected on readmission after
+                    // its cached prefix was evicted, breaking the
+                    // accepted-means-served contract.
+                    let est_cold =
+                        self.lm.session_page_estimate(front.req.tokens.len() + gen);
+                    // the *timing* check may discount the prompt prefix the
+                    // radix cache will share instead of allocate (read-only
+                    // probe, no LRU touch — readmits probe only their
+                    // original prompt, a safe under-count)
+                    let mut est = est_cold;
+                    if let Some(c) = self.cache.as_ref() {
+                        let probe_len =
+                            front.req.tokens.len().saturating_sub(1) / self.block * self.block;
+                        let cached = c.probe(&front.req.tokens[..probe_len]);
+                        est = est.saturating_sub(self.lm.streams() * (cached / self.block));
+                    }
+                    if est_cold + self.scfg.free_watermark > self.scfg.total_pages {
+                        (
+                            Some(format!(
+                                "request needs ~{est_cold} pages + watermark {} but the pool \
+                                 holds only {} — raise sessions.total_pages",
+                                self.scfg.free_watermark, self.scfg.total_pages
+                            )),
+                            0,
+                        )
+                    } else {
+                        (None, est)
+                    }
+                }
+            };
+            if let Some(msg) = reject {
+                let Some(p) = self.waiting.pop_front() else { break };
+                self.metrics.inc_rejected();
                 let _ = p.resp.send(Err(msg));
                 continue;
             }
-            // lifetime footprint: every page the session will ever hold.
-            // The *feasibility* check below must use this cold estimate —
-            // a request admitted thanks to cache sharing could otherwise
-            // be hard-rejected on readmission after its cached prefix was
-            // evicted, breaking the accepted-means-served contract.
-            let est_cold = lm.session_page_estimate(front.req.tokens.len() + gen);
-            // the *timing* check may discount the prompt prefix the radix
-            // cache will share instead of allocate (read-only probe, no
-            // LRU touch — readmits probe only their original prompt, a
-            // safe under-count)
-            let mut est = est_cold;
-            if let Some(c) = cache.as_ref() {
-                let probe_len = front.req.tokens.len().saturating_sub(1) / block * block;
-                let cached = c.probe(&front.req.tokens[..probe_len]);
-                est = est.saturating_sub(lm.streams() * (cached / block));
-            }
-            if est_cold + scfg.free_watermark > scfg.total_pages {
-                let p = waiting.pop_front().expect("front exists");
-                metrics.inc_rejected();
-                let _ = p.resp.send(Err(format!(
-                    "request needs ~{est_cold} pages + watermark {} but the pool holds only {} — \
-                     raise sessions.total_pages",
-                    scfg.free_watermark, scfg.total_pages
-                )));
-                continue;
-            }
-            if pool.free_pages() < est + scfg.free_watermark {
+            if self.pool.free_pages() < est + self.scfg.free_watermark {
                 // reclaim cold radix-cache entries before refusing
-                let need = est + scfg.free_watermark - pool.free_pages();
-                if let Some(c) = cache.as_mut() {
+                let need = est + self.scfg.free_watermark - self.pool.free_pages();
+                if let Some(c) = self.cache.as_mut() {
                     c.evict_lru(need);
                 }
-                if pool.free_pages() < est + scfg.free_watermark {
+                if self.pool.free_pages() < est + self.scfg.free_watermark {
                     break; // wait for running sessions to finish
                 }
             }
-            let mut p = waiting.pop_front().expect("front exists");
+            let Some(mut p) = self.waiting.pop_front() else { break };
             // replay = prompt + any generation from before a preemption
             let mut prompt = p.req.tokens.clone();
             prompt.extend_from_slice(&p.generated);
             // opening a session computes nothing and consumes no pages —
             // it only attaches the radix-cached prefix; the prompt then
             // prefills in budgeted chunks across the following steps
-            match lm.begin_session(&prompt, &pool, cache.as_mut()) {
+            match self.lm.begin_session(&prompt, &self.pool, self.cache.as_mut()) {
                 Ok(session) => {
-                    metrics.sessions.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.sessions.fetch_add(1, Ordering::Relaxed);
                     // readmissions of preempted sessions mostly re-find
                     // their *own* blocks — real recompute savings, but not
                     // cross-session sharing, so they stay out of the
                     // prefix-hit metrics
                     if p.generated.is_empty() {
-                        metrics.record_prefix_lookup(session.cached_tokens());
+                        self.metrics.record_prefix_lookup(session.cached_tokens());
                     }
-                    admit_stamp += 1;
-                    running.push(Running {
+                    self.admit_stamp += 1;
+                    self.running.push(Running {
                         req: p.req,
                         resp: p.resp,
                         session,
                         generated: std::mem::take(&mut p.generated),
                         prefill: Some(prompt),
-                        admitted_at: admit_stamp,
+                        admitted_at: self.admit_stamp,
                     });
                 }
                 Err(e) => {
-                    metrics.inc_rejected();
+                    self.metrics.inc_rejected();
                     let _ = p.resp.send(Err(format!("{e:#}")));
                 }
             }
         }
+    }
 
-        // ---- finishers: decoded sessions one token from target take it
-        // straight from their current logits — no advance, no pages, no
-        // risk of a pointless final-step preemption (mirrors generate()'s
-        // `gi + 1 < max_new` skip, so outputs stay bitwise aligned)
+    /// Finishers: decoded sessions one token from target take it
+    /// straight from their current logits — no advance, no pages, no
+    /// risk of a pointless final-step preemption (mirrors generate()'s
+    /// `gi + 1 < max_new` skip, so outputs stay bitwise aligned).
+    fn finish_ready(&mut self) {
         let mut i = 0;
-        while i < running.len() {
-            if running[i].prefill.is_none()
-                && running[i].generated.len() + 1 >= running[i].target_tokens()
+        while i < self.running.len() {
+            if self.running[i].prefill.is_none()
+                && self.running[i].generated.len() + 1 >= self.running[i].target_tokens()
             {
-                let mut r = running.remove(i);
+                let mut r = self.running.remove(i);
                 r.generated.push(r.session.next_token());
-                metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                self.metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
                 let latency = r.req.arrived.elapsed();
-                metrics.request_latency.record(latency);
+                self.metrics.request_latency.record(latency);
                 let _ = r.resp.send(Ok(Response {
                     id: r.req.id,
                     predictions: r.generated,
@@ -288,116 +381,112 @@ pub(crate) fn scheduler_loop(
                 i += 1;
             }
         }
+    }
 
-        if running.is_empty() {
-            metrics.set_session_gauges(
-                pool.free_pages() as u64,
-                cache.as_ref().map(|c| c.pages_held()).unwrap_or(0) as u64,
-                0,
-                waiting.len() as u64,
-                0,
-                0,
-            );
-            continue;
-        }
-
-        // ---- plan + reserve this step (evict, then preempt youngest) --
-        // The prefill plan is pure arithmetic, so it can be recomputed
-        // after every preemption until the step's page demand fits:
-        // one block-aligned chunk per prefilling session (oldest first)
-        // from the shared token budget, alongside one decode append per
-        // decodable session.
-        let plan: Vec<(usize, usize, bool)> = loop {
-            let mut budget = chunk_budget;
-            let mut plan: Vec<(usize, usize, bool)> = Vec::new();
+    /// Plan + reserve this step (evict, then preempt youngest).  The
+    /// prefill plan is pure arithmetic, so it can be recomputed after
+    /// every preemption until the step's page demand fits: one
+    /// block-aligned chunk per prefilling session (oldest first) from
+    /// the shared token budget, alongside one decode append per
+    /// decodable session.
+    fn plan_and_reserve(&mut self) -> ChunkPlan {
+        loop {
+            let mut budget = self.chunk_budget;
+            let mut plan: ChunkPlan = Vec::new();
             let mut order: Vec<usize> =
-                (0..running.len()).filter(|&i| running[i].prefill.is_some()).collect();
-            order.sort_unstable_by_key(|&i| running[i].admitted_at);
+                (0..self.running.len()).filter(|&i| self.running[i].prefill.is_some()).collect();
+            order.sort_unstable_by_key(|&i| self.running[i].admitted_at);
             for i in order {
                 if budget == 0 {
                     break;
                 }
-                let r = &running[i];
-                let total = r.prefill.as_ref().expect("prefilling").len();
-                let take = lm.prefill_take(r.session.len(), total, budget);
+                let r = &self.running[i];
+                let Some(pf) = r.prefill.as_ref() else { continue };
+                let take = self.lm.prefill_take(r.session.len(), pf.len(), budget);
                 if take == 0 {
                     continue;
                 }
                 budget -= take;
-                plan.push((i, take, r.session.len() + take == total));
+                plan.push((i, take, r.session.len() + take == pf.len()));
             }
-            let mut needed: usize = running
+            let mut needed: usize = self
+                .running
                 .iter()
                 .filter(|r| r.decodable())
                 .map(|r| r.session.pages_needed_next_step())
                 .sum();
             for &(i, take, done_after) in &plan {
-                let r = &running[i];
+                let r = &self.running[i];
                 needed += r.session.pages_needed_for_chunk(take);
                 // a session finishing its prefill this step decodes this
                 // step too — its first decode append may start a block
                 if done_after && r.generated.len() + 1 < r.target_tokens() {
-                    let total = r.prefill.as_ref().expect("prefilling").len();
-                    if total % block == 0 {
-                        needed += lm.streams();
+                    let Some(pf) = r.prefill.as_ref() else { continue };
+                    if pf.len() % self.block == 0 {
+                        needed += self.lm.streams();
                     }
                 }
             }
-            if pool.free_pages() >= needed {
-                break plan;
+            if self.pool.free_pages() >= needed {
+                return plan;
             }
-            let short = needed - pool.free_pages();
-            if let Some(c) = cache.as_mut() {
+            let short = needed - self.pool.free_pages();
+            if let Some(c) = self.cache.as_mut() {
                 if c.evict_lru(short) > 0 {
                     continue;
                 }
             }
-            if running.len() <= 1 {
+            if self.running.len() <= 1 {
                 // a single session always fits its admission estimate; if
                 // this still trips, the chunk/step below surfaces
                 // PoolExhausted and the session is preempted whole
-                break plan;
+                return plan;
             }
-            let vi = running
+            let Some(vi) = self
+                .running
                 .iter()
                 .enumerate()
                 .max_by_key(|(_, r)| r.admitted_at)
                 .map(|(i, _)| i)
-                .expect("non-empty running set");
-            let victim = running.swap_remove(vi);
-            metrics.preemptions.fetch_add(1, Ordering::Relaxed);
-            waiting.push_front(Pending {
+            else {
+                return plan;
+            };
+            let victim = self.running.swap_remove(vi);
+            self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            self.waiting.push_front(Pending {
                 req: victim.req,
                 resp: victim.resp,
                 generated: victim.generated,
                 admitted: true,
             });
             // victim.session drops here; its exclusive pages return
-        };
+        }
+    }
 
-        // ---- prefill: run the planned chunks through the engine -------
+    /// Prefill: run the planned chunks through the engine.
+    fn run_prefill_chunks(&mut self, plan: &ChunkPlan) {
         let mut torn: Vec<usize> = Vec::new();
-        for &(i, take, done_after) in &plan {
-            let Running { session, prefill, .. } = &mut running[i];
-            let prompt = prefill.as_ref().expect("prefilling");
+        for &(i, take, done_after) in plan {
+            let Running { session, prefill, .. } = &mut self.running[i];
+            let Some(prompt) = prefill.as_ref() else { continue };
             let from = session.len();
-            match lm.prefill_chunk(session, &prompt[from..from + take], done_after) {
+            match self.lm.prefill_chunk(session, &prompt[from..from + take], done_after) {
                 Ok(()) => {
-                    metrics.record_prefill_chunk(take);
+                    self.metrics.record_prefill_chunk(take);
                     if done_after {
                         // advertise the complete prompt blocks so the next
                         // session with this prompt shares them physically
-                        if let Some(c) = cache.as_mut() {
-                            lm.publish_prompt_pages(c, prompt, session);
+                        if let Some(c) = self.cache.as_mut() {
+                            self.lm.publish_prompt_pages(c, prompt, session);
                         }
                     }
                 }
                 Err(PoolExhausted) => torn.push(i),
             }
         }
-        for &(i, _, done_after) in &plan {
+        for &(i, _, done_after) in plan {
             if done_after && !torn.contains(&i) {
-                running[i].prefill = None;
+                self.running[i].prefill = None;
             }
         }
         // plan order is admission order, not index order: sort so the
@@ -409,88 +498,253 @@ pub(crate) fn scheduler_loop(
             // (chunked prefill is deterministic, so the replay is
             // lossless), unless nothing in the system can ever free a
             // page, in which case fail loudly instead of looping forever
-            let r = running.remove(i);
-            let reclaimable = !running.is_empty()
-                || cache.as_ref().map(|c| c.pages_held() > 0).unwrap_or(false);
+            let r = self.running.remove(i);
+            let reclaimable = !self.running.is_empty()
+                || self.cache.as_ref().map(|c| c.pages_held() > 0).unwrap_or(false);
             if reclaimable {
-                metrics.preemptions.fetch_add(1, Ordering::Relaxed);
-                waiting.push_front(Pending {
+                self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+                self.waiting.push_front(Pending {
                     req: r.req,
                     resp: r.resp,
                     generated: r.generated,
                     admitted: true,
                 });
             } else {
-                metrics.inc_rejected();
+                self.metrics.inc_rejected();
                 let _ = r
                     .resp
                     .send(Err("page pool exhausted with nothing reclaimable".to_string()));
             }
         }
+    }
 
-        // ---- one continuous decode step: every decodable session, one
-        // token — sessions whose prefill just completed join immediately
+    /// One continuous decode step: every decodable session, one token —
+    /// sessions whose prefill just completed join immediately.
+    fn decode_step(&mut self) {
         let decodable: Vec<usize> =
-            (0..running.len()).filter(|&i| running[i].decodable()).collect();
-        if !decodable.is_empty() {
-            let results = {
-                let mut refs: Vec<&mut LmSession> = running
-                    .iter_mut()
-                    .filter(|r| r.decodable())
-                    .map(|r| &mut r.session)
-                    .collect();
-                lm.step_sessions(&mut refs)
-            };
-            metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+            (0..self.running.len()).filter(|&i| self.running[i].decodable()).collect();
+        if decodable.is_empty() {
+            return;
+        }
+        let results = {
+            let mut refs: Vec<&mut LmSession> = self
+                .running
+                .iter_mut()
+                .filter(|r| r.decodable())
+                .map(|r| &mut r.session)
+                .collect();
+            self.lm.step_sessions(&mut refs)
+        };
+        self.metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
 
-            // ---- join/leave: record tokens, preempt the pool-starved --
-            // (every stepped session had >= 2 tokens to go, so none
-            // finishes here — sessions reaching their last token leave
-            // through the pre-step finisher path next iteration, straight
-            // from logits)
-            let mut starved: Vec<usize> = Vec::new();
-            for (k, res) in results.iter().enumerate() {
-                let i = decodable[k];
-                match res {
-                    Ok(tok) => {
-                        running[i].generated.push(*tok);
-                        metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
-                    }
-                    Err(PoolExhausted) => starved.push(i),
+        // join/leave: record tokens, preempt the pool-starved (every
+        // stepped session had >= 2 tokens to go, so none finishes here —
+        // sessions reaching their last token leave through the pre-step
+        // finisher path next iteration, straight from logits)
+        let mut starved: Vec<usize> = Vec::new();
+        for (k, res) in results.iter().enumerate() {
+            let i = decodable[k];
+            match res {
+                Ok(tok) => {
+                    self.running[i].generated.push(*tok);
+                    self.metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
                 }
-            }
-            for &i in starved.iter().rev() {
-                // mid-step pool exhaustion: caches are torn — drop them and
-                // replay prompt + generated on readmission (deterministic)
-                let r = running.remove(i);
-                metrics.preemptions.fetch_add(1, Ordering::Relaxed);
-                waiting.push_front(Pending {
-                    req: r.req,
-                    resp: r.resp,
-                    generated: r.generated,
-                    admitted: true,
-                });
+                Err(PoolExhausted) => starved.push(i),
             }
         }
+        for &i in starved.iter().rev() {
+            // mid-step pool exhaustion: caches are torn — drop them and
+            // replay prompt + generated on readmission (deterministic)
+            let r = self.running.remove(i);
+            self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            self.waiting.push_front(Pending {
+                req: r.req,
+                resp: r.resp,
+                generated: r.generated,
+                admitted: true,
+            });
+        }
+    }
 
-        let prefilling =
-            running.iter().filter(|r| r.prefill.is_some()).count() as u64;
-        let backlog: u64 = running
+    fn publish_gauges(&self) {
+        let prefilling = self.running.iter().filter(|r| r.prefill.is_some()).count() as u64;
+        let backlog: u64 = self
+            .running
             .iter()
             .filter_map(|r| r.prefill.as_ref().map(|p| (p.len() - r.session.len()) as u64))
             .sum();
-        metrics.set_session_gauges(
-            pool.free_pages() as u64,
-            cache.as_ref().map(|c| c.pages_held()).unwrap_or(0) as u64,
-            running.len() as u64,
-            waiting.len() as u64,
+        self.metrics.set_session_gauges(
+            self.pool.free_pages() as u64,
+            self.cache.as_ref().map(|c| c.pages_held()).unwrap_or(0) as u64,
+            self.running.len() as u64,
+            self.waiting.len() as u64,
             prefilling,
             backlog,
         );
     }
+
+    /// Structural self-check of the whole serving state, for the
+    /// verification layer (DESIGN.md §11).  Composes the page pool's and
+    /// radix cache's own checkers, then verifies the scheduler-level
+    /// invariants.  Returns `Err` describing the first violation:
+    ///
+    /// * **sub-checkers** — [`PagePool::verify`] (buffer conservation,
+    ///   capacity arithmetic) and [`RadixCache::verify`] (edge alignment,
+    ///   LRU/tree consistency, handle accounting);
+    /// * **no poisoned survivors** — a session poisoned by mid-step or
+    ///   mid-chunk [`PoolExhausted`] must never outlive the step that
+    ///   poisoned it (it is preempted whole and replayed);
+    /// * **page conservation** — the scheduler is the pool's only
+    ///   client, so the distinct physical pages reachable from the
+    ///   running sessions and the radix cache equal `pages_in_use`
+    ///   exactly (no leak, no double-count), and `in_use + free ==
+    ///   total_pages` matches the published gauge;
+    /// * **queue sanity** — responders are structurally present on every
+    ///   queued/running request (non-optional fields — checked here by
+    ///   construction); admission stamps are unique and within the
+    ///   counter; running sessions are within `seq_len`, unfinished, and
+    ///   phase-consistent (prefill cursor inside the replay prompt;
+    ///   decode phase has logits to emit); never-admitted waiters carry
+    ///   no generated tokens.
+    pub(crate) fn verify(&self) -> Result<(), String> {
+        self.pool.verify().map_err(|e| format!("page pool: {e}"))?;
+        if let Some(c) = self.cache.as_ref() {
+            c.verify().map_err(|e| format!("radix cache: {e}"))?;
+        }
+        for r in &self.running {
+            if r.session.is_poisoned() {
+                return Err(format!(
+                    "request {}: poisoned session retained in the running set",
+                    r.req.id
+                ));
+            }
+        }
+        let mut seen: HashSet<usize> = HashSet::new();
+        for r in &self.running {
+            for st in r.session.states() {
+                for p in st.pages() {
+                    seen.insert(Arc::as_ptr(p) as usize);
+                }
+            }
+        }
+        if let Some(c) = self.cache.as_ref() {
+            c.for_each_page(&mut |p| {
+                seen.insert(Arc::as_ptr(p) as usize);
+            });
+        }
+        if seen.len() != self.pool.pages_in_use() {
+            return Err(format!(
+                "page conservation violated: {} distinct page(s) reachable from \
+                 sessions + cache, but the pool reports {} in use",
+                seen.len(),
+                self.pool.pages_in_use()
+            ));
+        }
+        if self.pool.pages_in_use() + self.pool.free_pages() != self.scfg.total_pages {
+            return Err(format!(
+                "page arithmetic violated: in_use {} + free {} != total_pages {}",
+                self.pool.pages_in_use(),
+                self.pool.free_pages(),
+                self.scfg.total_pages
+            ));
+        }
+        if self.metrics.pool_pages.load(Ordering::Relaxed) != self.scfg.total_pages as u64 {
+            return Err("pool_pages gauge does not match the configured pool size".into());
+        }
+        let mut stamps: HashSet<u64> = HashSet::new();
+        for r in &self.running {
+            if r.admitted_at == 0 || r.admitted_at > self.admit_stamp {
+                return Err(format!(
+                    "request {}: admission stamp {} outside 1..={}",
+                    r.req.id, r.admitted_at, self.admit_stamp
+                ));
+            }
+            if !stamps.insert(r.admitted_at) {
+                return Err(format!(
+                    "request {}: duplicate admission stamp {}",
+                    r.req.id, r.admitted_at
+                ));
+            }
+            if r.session.len() > self.seq_len {
+                return Err(format!(
+                    "request {}: session length {} exceeds seq_len {}",
+                    r.req.id,
+                    r.session.len(),
+                    self.seq_len
+                ));
+            }
+            if r.generated.len() >= r.target_tokens() {
+                return Err(format!(
+                    "request {}: finished session ({} of {} tokens) still running",
+                    r.req.id,
+                    r.generated.len(),
+                    r.target_tokens()
+                ));
+            }
+            match r.prefill.as_ref() {
+                Some(p) => {
+                    if r.session.len() > p.len() {
+                        return Err(format!(
+                            "request {}: prefill cursor {} past the {}-token replay prompt",
+                            r.req.id,
+                            r.session.len(),
+                            p.len()
+                        ));
+                    }
+                    if p.len() != r.req.tokens.len() + r.generated.len() {
+                        return Err(format!(
+                            "request {}: replay prompt of {} tokens != request {} + generated {}",
+                            r.req.id,
+                            p.len(),
+                            r.req.tokens.len(),
+                            r.generated.len()
+                        ));
+                    }
+                }
+                None => {
+                    if r.session.logits().is_empty() {
+                        return Err(format!(
+                            "request {}: decode-phase session with no logits",
+                            r.req.id
+                        ));
+                    }
+                    if r.session.len() < r.req.tokens.len() {
+                        return Err(format!(
+                            "request {}: decode-phase session shorter than its prompt",
+                            r.req.id
+                        ));
+                    }
+                }
+            }
+        }
+        for p in &self.waiting {
+            if !p.admitted && !p.generated.is_empty() {
+                return Err(format!(
+                    "request {}: never-admitted waiter carries {} generated token(s)",
+                    p.req.id,
+                    p.generated.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Assert [`Scheduler::verify`] under `debug_assertions` or the
+    /// `paranoid` feature; compiled to a no-op in plain release builds,
+    /// so the serving hot loop pays nothing.  Every serving test runs
+    /// debug, so every scheduler step of every test is checked.
+    #[track_caller]
+    pub(crate) fn check_invariants(&self) {
+        if cfg!(any(debug_assertions, feature = "paranoid")) {
+            if let Err(msg) = self.verify() {
+                panic!("Scheduler invariant violated: {msg}");
+            }
+        }
+    }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::coordinator::native::NativeMlmConfig;
@@ -536,6 +790,22 @@ mod tests {
 
     fn prompt(seed: usize, len: usize) -> Vec<i32> {
         (0..len).map(|i| (2 + (seed * 13 + i * 7) % 60) as i32).collect()
+    }
+
+    /// A `Running` entry for direct injection into a scheduler under
+    /// test (invariant negative tests corrupt state deliberately).
+    fn running_entry(id: u64, tokens: Vec<i32>, session: LmSession, admitted_at: u64) -> Running {
+        let (rtx, rrx) = channel();
+        std::mem::forget(rrx); // keep the responder sendable
+        let prefill = Some(tokens.clone());
+        Running {
+            req: Request { id, tokens, gen_tokens: 4, arrived: Instant::now() },
+            resp: rtx,
+            session,
+            generated: Vec::new(),
+            prefill,
+            admitted_at,
+        }
     }
 
     #[test]
@@ -732,5 +1002,129 @@ mod tests {
         assert!(err.contains("total_pages"), "{err}");
         tx.send(Ingress::Shutdown).unwrap();
         handle.join().unwrap();
+    }
+
+    /// Drive a full request lifecycle step by step and re-verify all
+    /// three invariant checkers after every single step (on top of the
+    /// `check_invariants` call `step` itself makes) — admission,
+    /// chunked prefill, decode, finish and shutdown all leave the pool,
+    /// the cache and the queues consistent.
+    #[test]
+    fn invariants_hold_after_every_step_of_a_served_request() {
+        let scfg = SessionConfig {
+            total_pages: 64,
+            free_watermark: 0,
+            max_running: 4,
+            prefix_cache: true,
+            prefill_chunk_tokens: 16,
+        };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 1));
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(lm.clone(), scfg, metrics);
+        sched.verify().expect("fresh scheduler");
+        let (tx, rx) = sync_channel::<Ingress>(8);
+        let p = prompt(0, 36);
+        let rresp = send_req(&tx, 0, p.clone(), 5);
+        let mut steps = 0;
+        let resp = loop {
+            assert!(sched.step(&rx), "loop must stay live while work remains");
+            sched.verify().unwrap_or_else(|e| panic!("after step {steps}: {e}"));
+            steps += 1;
+            assert!(steps < 100, "request did not finish");
+            if let Ok(resp) = rresp.try_recv() {
+                break resp.expect("served response");
+            }
+        };
+        assert_eq!(resp.predictions, lm.generate(&p, 5).unwrap());
+        assert!(steps >= 3, "36-token prompt at chunk 16 must take multiple steps");
+        tx.send(Ingress::Shutdown).unwrap();
+        assert!(sched.step(&rx), "shutdown observation is one more step");
+        assert!(!sched.step(&rx), "drained scheduler must exit");
+        sched.verify().expect("post-shutdown state");
+    }
+
+    /// The scheduler-level checker must catch seeded corruption: a page
+    /// leaked outside the session/cache reachability set, and duplicate
+    /// admission stamps.  (The sub-checkers' own negative cases live in
+    /// the page/radix test suites.)
+    #[test]
+    fn verify_reports_seeded_scheduler_corruption() {
+        let scfg = SessionConfig {
+            total_pages: 64,
+            free_watermark: 0,
+            max_running: 4,
+            prefix_cache: false,
+            prefill_chunk_tokens: 64,
+        };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 1));
+        let mut sched = Scheduler::new(lm.clone(), scfg, Arc::new(Metrics::new()));
+        assert!(sched.verify().is_ok());
+        // (a) a page allocated behind the scheduler's back is a leak:
+        // reachable from neither a session nor the cache
+        let hog = sched.pool.try_alloc().unwrap();
+        let msg = sched.verify().unwrap_err();
+        assert!(msg.contains("conservation"), "{msg}");
+        drop(hog);
+        assert!(sched.verify().is_ok());
+        // (b) duplicate admission stamps break preemption's youngest-first
+        // ordering
+        let s1 = lm.begin_session(&prompt(0, 8), &sched.pool, None).unwrap();
+        let s2 = lm.begin_session(&prompt(1, 8), &sched.pool, None).unwrap();
+        sched.admit_stamp = 1;
+        sched.running.push(running_entry(0, prompt(0, 8), s1, 1));
+        assert!(sched.verify().is_ok());
+        sched.running.push(running_entry(1, prompt(1, 8), s2, 1));
+        let msg = sched.verify().unwrap_err();
+        assert!(msg.contains("stamp"), "{msg}");
+    }
+
+    /// Poisoned-session recovery, end to end: a session poisoned by
+    /// mid-step pool exhaustion (1) reports `is_poisoned`, (2) is
+    /// rejected by `Scheduler::verify` if it ever survives a step, and
+    /// (3) after being discarded, a replay of the same prompt on a
+    /// healthy pool reproduces `generate()`'s tokens bitwise — the
+    /// discard-and-replay contract the preemption paths rely on.
+    #[test]
+    fn poisoned_session_is_rejected_by_invariants_and_replays_bitwise() {
+        let scfg = SessionConfig {
+            total_pages: 2,
+            free_watermark: 0,
+            max_running: 4,
+            prefix_cache: false,
+            prefill_chunk_tokens: 256,
+        };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 1));
+        let mut sched = Scheduler::new(lm.clone(), scfg, Arc::new(Metrics::new()));
+        // prompt of exactly one block: prefill fits the 2-page pool
+        // (one page per stream), the first decode append needs a fresh
+        // block per stream and must exhaust mid-step
+        let p = prompt(0, 16);
+        let mut session = lm.new_session(&p, &sched.pool, None).unwrap();
+        sched.pool.check_invariants();
+        let err = lm.session_step(&mut session).unwrap_err();
+        assert!(format!("{err:#}").contains("pool exhausted"), "{err:#}");
+        assert!(session.is_poisoned(), "mid-step exhaustion must poison the session");
+        // (2) a poisoned session surviving in the running set is an
+        // invariant violation, not a tolerated state
+        sched.admit_stamp = 1;
+        sched.running.push(running_entry(0, p.clone(), session, 1));
+        let msg = sched.verify().unwrap_err();
+        assert!(msg.contains("poisoned"), "{msg}");
+        // (3) discard (pages return to the pool) and replay losslessly
+        sched.running.clear();
+        sched.verify().expect("discarding the poisoned session restores consistency");
+        assert_eq!(sched.pool.pages_in_use(), 0, "poisoned session's pages must return");
+        let healthy = lm.new_page_pool(64);
+        let mut replay = lm.new_session(&p, &healthy, None).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..4 {
+            got.push(lm.session_step(&mut replay).unwrap());
+        }
+        assert_eq!(got, lm.generate(&p, 5).unwrap()[..4], "replay diverged after poisoning");
+        // mid-chunk poisoning carries the same contract
+        let tiny = lm.new_page_pool(1);
+        let mut torn = lm.begin_session(&p, &tiny, None).unwrap();
+        assert_eq!(lm.prefill_chunk(&mut torn, &p, true).unwrap_err(), PoolExhausted);
+        assert!(torn.is_poisoned(), "mid-chunk exhaustion must poison the session");
     }
 }

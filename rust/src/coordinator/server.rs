@@ -23,6 +23,11 @@
 //! ([`crate::coordinator::scheduler`]) — paged KV cache, radix prefix
 //! sharing, per-step join/leave — behind the same submit API.
 
+// a panic in the batcher or a worker drops every responder it holds and
+// hangs the waiting clients — request paths handle errors, they don't
+// unwrap them.  `cargo xtask lint` enforces the same rule textually.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -309,7 +314,14 @@ fn worker_loop(
 ) {
     loop {
         let item = {
-            let guard = rx.lock().unwrap();
+            // a poisoned receiver mutex means a sibling worker panicked
+            // while holding it; the channel itself is still sound, so
+            // recover the guard — exiting here would strand every batch
+            // (and its responders) still in flight
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
             guard.recv()
         };
         let (batch, responders) = match item {
@@ -427,6 +439,7 @@ impl BatchRunner for LmRunner {
 // batcher loop are covered below without artifacts.
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -23,6 +23,11 @@
 //! of a stream is ever written, and writers copy-on-write when the tail
 //! is shared.  See DESIGN.md §9 for the page layout and lifetime rules.
 
+// public cache APIs that can panic must say so — the serving scheduler
+// treats any undocumented panic source in this module as a bug (the
+// invariant checkers below it rely on panic-free steady-state paths)
+#![warn(clippy::missing_panics_doc)]
+
 pub mod page;
 pub mod radix;
 

@@ -83,9 +83,24 @@ impl std::fmt::Debug for PagePool {
 /// Refcounted handle to one page; cloning shares the physical page.
 pub type PageRef = Arc<Page>;
 
+/// Recover a freelist guard even when a peer thread panicked while
+/// holding it.  The freelist is a `Vec<Box<[f32]>>` push/pop — every
+/// intermediate state is valid — so poisoning carries no information
+/// here, and propagating it from [`Page::drop`] would abort the process
+/// (panic-in-drop during unwind).
+fn recycled_lock(shared: &PoolShared) -> std::sync::MutexGuard<'_, Vec<Box<[f32]>>> {
+    shared.recycled.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 impl PagePool {
     /// Pool of at most `capacity` live pages sized for `(block, d)`
     /// streams.  Buffers are created lazily and recycled on free.
+    ///
+    /// # Panics
+    ///
+    /// Panics when `capacity == 0` or the `(block, d)` geometry is not
+    /// positive — a zero-page pool or zero-sized page is always a
+    /// configuration bug, never a runtime condition.
     pub fn new(capacity: usize, block: usize, d: usize) -> Self {
         assert!(capacity > 0, "page pool capacity must be positive");
         assert!(block > 0 && d > 0, "page geometry must be positive");
@@ -151,7 +166,7 @@ impl PagePool {
             self.shared.live.fetch_sub(1, Ordering::Relaxed);
             return Err(PoolExhausted);
         }
-        let reused = self.shared.recycled.lock().unwrap().pop();
+        let reused = recycled_lock(&self.shared).pop();
         Ok(reused.unwrap_or_else(|| {
             self.shared.created.fetch_add(1, Ordering::Relaxed);
             vec![0.0f32; self.shared.page_elems].into_boxed_slice()
@@ -181,6 +196,78 @@ impl PagePool {
             d: self.shared.d,
             pool: self.shared.clone(),
         }))
+    }
+
+    /// Structural self-check of the arena's accounting, for the
+    /// verification layer (DESIGN.md §11).  Returns `Err` with a
+    /// description of the first violated invariant:
+    ///
+    /// * **buffer conservation** — every buffer ever created is either
+    ///   inside a live page or parked on the freelist:
+    ///   `created == live + recycled`;
+    /// * **bound** — a bounded pool never has more live pages than its
+    ///   capacity, and `in_use + free == capacity`;
+    /// * **freelist hygiene** — recycled buffers all have the pool's
+    ///   exact page geometry (a foreign or truncated buffer would
+    ///   corrupt the next page allocated from it).
+    ///
+    /// Only meaningful at a quiescent point (no concurrent
+    /// alloc/drop in flight): `grab_buffer` reserves the live slot
+    /// before touching the freelist, so mid-allocation snapshots can
+    /// transiently observe `created < live + recycled`.
+    pub fn verify(&self) -> Result<(), String> {
+        let live = self.shared.live.load(Ordering::SeqCst);
+        let created = self.shared.created.load(Ordering::SeqCst);
+        let (recycled, bad_geometry) = {
+            let guard = recycled_lock(&self.shared);
+            let bad = guard.iter().filter(|b| b.len() != self.shared.page_elems).count();
+            (guard.len(), bad)
+        };
+        if bad_geometry != 0 {
+            return Err(format!(
+                "freelist holds {bad_geometry} buffer(s) with the wrong geometry \
+                 (expected {} floats each)",
+                self.shared.page_elems
+            ));
+        }
+        if created != live + recycled {
+            return Err(format!(
+                "buffer conservation violated: created {created} != live {live} + \
+                 recycled {recycled}"
+            ));
+        }
+        if self.shared.capacity != usize::MAX {
+            if live > self.shared.capacity {
+                return Err(format!(
+                    "live pages {live} exceed capacity {}",
+                    self.shared.capacity
+                ));
+            }
+            let free = self.free_pages();
+            if live + free != self.shared.capacity {
+                return Err(format!(
+                    "page accounting violated: in_use {live} + free {free} != capacity {}",
+                    self.shared.capacity
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Assert [`PagePool::verify`] under `debug_assertions` or the
+    /// `paranoid` feature; compiled to a no-op in plain release builds.
+    ///
+    /// # Panics
+    ///
+    /// Panics with the violated invariant's description when the arena
+    /// accounting is inconsistent.
+    #[track_caller]
+    pub fn check_invariants(&self) {
+        if cfg!(any(debug_assertions, feature = "paranoid")) {
+            if let Err(msg) = self.verify() {
+                panic!("PagePool invariant violated: {msg}");
+            }
+        }
     }
 }
 
@@ -284,7 +371,10 @@ impl Page {
 impl Drop for Page {
     fn drop(&mut self) {
         let buf = std::mem::take(&mut self.data);
-        self.pool.recycled.lock().unwrap().push(buf);
+        // recycled_lock (not .unwrap()): panicking here while another
+        // thread unwinds with the freelist held would turn that panic
+        // into a process abort
+        recycled_lock(&self.pool).push(buf);
         self.pool.live.fetch_sub(1, Ordering::Relaxed);
     }
 }
@@ -381,5 +471,47 @@ mod tests {
     fn pool_exhausted_error_is_descriptive() {
         let msg = PoolExhausted.to_string();
         assert!(msg.contains("page pool exhausted"), "{msg}");
+    }
+
+    #[test]
+    fn invariants_hold_across_alloc_share_drop_lifecycle() {
+        let pool = PagePool::new(3, 4, 8);
+        pool.check_invariants();
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        pool.check_invariants();
+        let shared = a.clone();
+        pool.check_invariants();
+        let c = pool.try_alloc().unwrap();
+        assert_eq!(pool.try_alloc().map(|_| ()), Err(PoolExhausted));
+        pool.check_invariants();
+        drop((a, shared));
+        pool.check_invariants();
+        drop((b, c));
+        pool.check_invariants();
+        assert_eq!(pool.buffers_created(), 3, "capacity-filling lifecycle created 3 buffers");
+        // unbounded pools skip the capacity arithmetic but keep conservation
+        let ub = PagePool::unbounded(2, 2);
+        let p = ub.try_alloc().unwrap();
+        ub.check_invariants();
+        drop(p);
+        ub.check_invariants();
+    }
+
+    #[test]
+    fn verify_reports_seeded_accounting_corruption() {
+        let pool = PagePool::new(2, 2, 2);
+        let _page = pool.try_alloc().unwrap();
+        assert!(pool.verify().is_ok());
+        // a leaked live count (page dropped without returning its buffer)
+        pool.shared.live.fetch_add(1, Ordering::SeqCst);
+        let msg = pool.verify().unwrap_err();
+        assert!(msg.contains("conservation"), "{msg}");
+        pool.shared.live.fetch_sub(1, Ordering::SeqCst);
+        assert!(pool.verify().is_ok());
+        // a foreign buffer smuggled onto the freelist
+        recycled_lock(&pool.shared).push(vec![0.0f32; 1].into_boxed_slice());
+        let msg = pool.verify().unwrap_err();
+        assert!(msg.contains("geometry"), "{msg}");
     }
 }

@@ -69,6 +69,11 @@ pub struct RadixCache {
 impl RadixCache {
     /// Cache for streams of `block`-token pages, `streams = layers * heads`
     /// pages per cached block.
+    ///
+    /// # Panics
+    ///
+    /// Panics when `block == 0` or `streams == 0` — degenerate geometry
+    /// is a wiring bug, never a runtime condition.
     pub fn new(block: usize, streams: usize) -> Self {
         assert!(block > 0 && streams > 0, "cache geometry must be positive");
         RadixCache {
@@ -120,6 +125,12 @@ impl RadixCache {
     /// (`(tokens.len() / block) * streams`).  Blocks already cached keep
     /// their existing (physically shared) pages; only the unmatched
     /// suffix inserts new handles.
+    ///
+    /// # Panics
+    ///
+    /// Panics when `tokens` is not a whole number of blocks or `pages`
+    /// does not carry exactly one handle per `(block, stream)` — a
+    /// misaligned insert would silently advertise torn KV state.
     pub fn insert(&mut self, tokens: &[i32], pages: &[PageRef]) {
         assert_eq!(tokens.len() % self.block, 0, "insert must be block-aligned");
         assert_eq!(
@@ -214,6 +225,119 @@ impl RadixCache {
     pub fn clear(&mut self) {
         self.stats.evicted_pages += self.pages_held() as u64;
         self.root.children.clear();
+    }
+
+    /// Visit every page handle held by the tree (block-major within each
+    /// edge).  Used by the scheduler's conservation check, which needs
+    /// the set of physical pages reachable from the cache.
+    pub(crate) fn for_each_page(&self, f: &mut impl FnMut(&PageRef)) {
+        fn rec(node: &Node, f: &mut impl FnMut(&PageRef)) {
+            for p in &node.pages {
+                f(p);
+            }
+            for c in &node.children {
+                rec(c, f);
+            }
+        }
+        rec(&self.root, f);
+    }
+
+    /// Structural self-check of the tree, for the verification layer
+    /// (DESIGN.md §11).  Returns `Err` describing the first violated
+    /// invariant:
+    ///
+    /// * **root shape** — the root's edge label and page list are empty;
+    /// * **edge alignment** — every non-root edge is a non-empty whole
+    ///   number of blocks carrying exactly one page per
+    ///   `(block, stream)`;
+    /// * **radix property** — the children of a node have pairwise
+    ///   distinct first blocks (otherwise lookups would be ambiguous);
+    /// * **LRU consistency** — every node's `last_used` is within the
+    ///   monotone tick, and a parent is never staler than its children
+    ///   (lookup/insert stamp the whole path, splits keep the tail's
+    ///   old stamp), so subtree LRU scores are well-founded;
+    /// * **handle accounting** — the O(1) [`RadixCache::pages_held`]
+    ///   counter equals the full-tree handle count.
+    pub fn verify(&self) -> Result<(), String> {
+        fn rec(
+            node: &Node,
+            is_root: bool,
+            block: usize,
+            streams: usize,
+            tick: u64,
+            held: &mut usize,
+        ) -> Result<(), String> {
+            if is_root {
+                if !node.tokens.is_empty() || !node.pages.is_empty() {
+                    return Err("root node must have an empty edge and no pages".into());
+                }
+            } else {
+                if node.tokens.is_empty() || node.tokens.len() % block != 0 {
+                    return Err(format!(
+                        "edge label of {} token(s) is not a positive multiple of block {block}",
+                        node.tokens.len()
+                    ));
+                }
+                let want = node.tokens.len() / block * streams;
+                if node.pages.len() != want {
+                    return Err(format!(
+                        "edge of {} block(s) holds {} page handle(s), expected {want}",
+                        node.tokens.len() / block,
+                        node.pages.len()
+                    ));
+                }
+            }
+            if node.last_used > tick {
+                return Err(format!(
+                    "node stamped at {} but the cache tick is only {tick}",
+                    node.last_used
+                ));
+            }
+            *held += node.pages.len();
+            for (i, a) in node.children.iter().enumerate() {
+                if a.last_used > node.last_used {
+                    return Err(format!(
+                        "parent stamped {} is staler than child stamped {}",
+                        node.last_used, a.last_used
+                    ));
+                }
+                for b in &node.children[..i] {
+                    if a.tokens[..block] == b.tokens[..block] {
+                        return Err(format!(
+                            "two children share the first block {:?}",
+                            &a.tokens[..block]
+                        ));
+                    }
+                }
+                rec(a, false, block, streams, tick, held)?;
+            }
+            Ok(())
+        }
+        let mut held = 0usize;
+        rec(&self.root, true, self.block, self.streams, self.tick, &mut held)?;
+        if held != self.pages_held() {
+            return Err(format!(
+                "pages_held() reports {} but the tree holds {held} handle(s)",
+                self.pages_held()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Assert [`RadixCache::verify`] under `debug_assertions` or the
+    /// `paranoid` feature; compiled to a no-op in plain release builds.
+    ///
+    /// # Panics
+    ///
+    /// Panics with the violated invariant's description when the tree
+    /// is inconsistent.
+    #[track_caller]
+    pub fn check_invariants(&self) {
+        if cfg!(any(debug_assertions, feature = "paranoid")) {
+            if let Err(msg) = self.verify() {
+                panic!("RadixCache invariant violated: {msg}");
+            }
+        }
     }
 }
 
@@ -552,5 +676,77 @@ mod tests {
         cache.clear();
         assert_eq!(walk(&cache), 0);
         assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    /// Randomized tries stay invariant-clean through every mutation the
+    /// cache supports (insert, split, lookup, eviction, clear) — the
+    /// checker itself is exercised against the full mutation surface, not
+    /// just hand-built shapes.
+    #[test]
+    fn invariants_hold_through_randomized_mutation_sequences() {
+        use crate::proptest::for_all_seeds;
+        for_all_seeds(8, |_, rng| {
+            let b = 1 + rng.below(3);
+            let streams = 1 + rng.below(2);
+            let pool = PagePool::unbounded(b, 2);
+            let mut cache = RadixCache::new(b, streams);
+            for _ in 0..24 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let nb = 1 + rng.below(4);
+                        let t: Vec<i32> = (0..nb * b).map(|_| rng.below(3) as i32).collect();
+                        cache.insert(&t, &pages(&pool, nb * streams));
+                    }
+                    2 => {
+                        let qlen = rng.below(5 * b + 1);
+                        let q: Vec<i32> = (0..qlen).map(|_| rng.below(3) as i32).collect();
+                        let _ = cache.lookup(&q);
+                    }
+                    _ => {
+                        let _ = cache.evict_lru(1 + rng.below(3));
+                    }
+                }
+                cache.verify().map_err(|e| format!("after mutation: {e}"))?;
+                let mut walked = 0usize;
+                cache.for_each_page(&mut |_| walked += 1);
+                if walked != cache.pages_held() {
+                    return Err(format!(
+                        "for_each_page visited {walked}, pages_held says {}",
+                        cache.pages_held()
+                    ));
+                }
+            }
+            cache.clear();
+            cache.verify().map_err(|e| format!("after clear: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn verify_reports_seeded_tree_corruption() {
+        let (b, streams) = (2usize, 1usize);
+        let pool = PagePool::unbounded(b, 2);
+        let mut cache = RadixCache::new(b, streams);
+        cache.insert(&toks(&[1, 2], b), &pages(&pool, 2));
+        assert!(cache.verify().is_ok());
+        // (a) torn edge: drop one page handle from a two-block edge
+        let stolen = cache.root.children[0].pages.pop().unwrap();
+        let msg = cache.verify().unwrap_err();
+        assert!(msg.contains("page handle"), "{msg}");
+        cache.root.children[0].pages.push(stolen);
+        assert!(cache.verify().is_ok());
+        // (b) LRU inversion: a child stamped fresher than its parent
+        cache.root.children[0].children.push(Node::leaf(
+            toks(&[9], b),
+            pages(&pool, 1),
+            u64::MAX - 1,
+        ));
+        let msg = cache.verify().unwrap_err();
+        assert!(msg.contains("tick") || msg.contains("staler"), "{msg}");
+        cache.root.children[0].children.clear();
+        // (c) counter drift: handle count no longer matches stats
+        cache.stats.inserted_pages += 1;
+        let msg = cache.verify().unwrap_err();
+        assert!(msg.contains("pages_held"), "{msg}");
     }
 }

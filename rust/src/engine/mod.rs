@@ -37,6 +37,10 @@ pub mod cache;
 pub mod decode;
 pub mod kernels;
 pub mod pool;
+#[cfg(all(loom, test))]
+mod pool_loom;
+#[cfg(test)]
+mod pool_model;
 pub mod tensor4;
 
 pub use cache::{CacheStats, Page, PagePool, PageRef, PoolExhausted, RadixCache};

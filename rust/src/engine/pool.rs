@@ -53,7 +53,10 @@ pub fn run_with<T: Send, S>(
         }
         return;
     }
-    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    // one setup allocation per drain, before any worker claims a task —
+    // the per-task worker loop below is allocation-free
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect(); // lint: allow(hot-path-alloc)
     let cursor = AtomicUsize::new(0);
     let (slots, cursor, init, f) = (&slots, &cursor, &init, &f);
     std::thread::scope(|s| {
@@ -65,7 +68,14 @@ pub fn run_with<T: Send, S>(
                     if i >= slots.len() {
                         break;
                     }
-                    let item = slots[i].lock().unwrap().take();
+                    // the lock is held only for the `take` (which cannot
+                    // panic), so poisoning carries no information here —
+                    // recover the guard instead of stacking a second
+                    // panic onto an already-unwinding scope
+                    let item = slots[i]
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                        .take();
                     if let Some(item) = item {
                         f(&mut state, item);
                     }

@@ -1,0 +1,85 @@
+//! `loom` model of the [`super::pool`] claim + shutdown protocol.
+//!
+//! Compiled only under `--cfg loom` (the nightly `verify-deep` CI job
+//! runs `cargo add loom --dev && RUSTFLAGS="--cfg loom" cargo test
+//! --release engine::pool_loom`); the offline tree carries no loom
+//! dependency, and the same protocol is exhaustively checked without it
+//! in `pool_model.rs`.
+//!
+//! Unlike the in-tree model, loom explores the protocol under the real
+//! C11 memory model — including the `Ordering::Relaxed` cursor claim,
+//! which the hand-rolled checker assumes is sequentially consistent.
+//! The property is the same: every task is executed exactly once, every
+//! worker terminates (the shutdown drain), and the scoped join observes
+//! all effects.
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Mutex;
+use loom::thread;
+use std::sync::Arc;
+
+/// The worker loop of `pool::run_with`, verbatim modulo loom types:
+/// claim an index with one `fetch_add(Relaxed)`, exit past the end,
+/// hand the item over through the slot's mutex.
+fn worker(slots: &[Mutex<Option<usize>>], cursor: &AtomicUsize, hits: &[AtomicUsize]) {
+    loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= slots.len() {
+            break;
+        }
+        let item = slots[i].lock().unwrap_or_else(std::sync::PoisonError::into_inner).take();
+        if let Some(item) = item {
+            hits[item].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// 2 workers x 3 tasks (loom's practical exhaustiveness budget for a
+/// protocol with a mutex per slot): no interleaving loses a task,
+/// double-executes one, or deadlocks the drain.
+#[test]
+fn claim_protocol_is_exactly_once_and_deadlock_free() {
+    loom::model(|| {
+        const TASKS: usize = 3;
+        let slots: Arc<Vec<Mutex<Option<usize>>>> =
+            Arc::new((0..TASKS).map(|i| Mutex::new(Some(i))).collect());
+        let cursor = Arc::new(AtomicUsize::new(0));
+        let hits: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..TASKS).map(|_| AtomicUsize::new(0)).collect());
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let (slots, cursor, hits) = (slots.clone(), cursor.clone(), hits.clone());
+                thread::spawn(move || worker(&slots, &cursor, &hits))
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} not executed exactly once");
+        }
+        // shutdown drain: the cursor moved past every slot
+        assert!(cursor.load(Ordering::Relaxed) >= TASKS);
+    });
+}
+
+/// More workers than tasks: surplus workers must observe an
+/// exhausted cursor and exit — the shutdown path cannot hang.
+#[test]
+fn surplus_workers_drain_and_exit() {
+    loom::model(|| {
+        let slots: Arc<Vec<Mutex<Option<usize>>>> = Arc::new(vec![Mutex::new(Some(0))]);
+        let cursor = Arc::new(AtomicUsize::new(0));
+        let hits: Arc<Vec<AtomicUsize>> = Arc::new(vec![AtomicUsize::new(0)]);
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let (slots, cursor, hits) = (slots.clone(), cursor.clone(), hits.clone());
+                thread::spawn(move || worker(&slots, &cursor, &hits))
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+        assert_eq!(hits[0].load(Ordering::Relaxed), 1);
+    });
+}

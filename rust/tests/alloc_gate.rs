@@ -1,0 +1,326 @@
+//! Allocation gate: turns the repo's "zero steady-state allocations"
+//! claims into failing tests (DESIGN.md §11).
+//!
+//! A counting `#[global_allocator]` wraps the system allocator and keeps
+//! **thread-local** tallies, so the parallel test harness cannot bleed one
+//! test's allocations into another's window.  Because a global allocator
+//! owns the whole process, this gate lives in its own integration-test
+//! binary (see the `[[test]]` entry in Cargo.toml) instead of the lib
+//! tests.  Every model here runs with `threads = 1`, which takes the
+//! inline path through `engine::pool::run` — all work stays on the test
+//! thread and is therefore counted.
+//!
+//! Three claims, in increasing scope, with honest semantics:
+//!
+//! 1. **Kernel level — literally zero.**  A warmed `attend_last_into` /
+//!    `attend_pos_into` / in-block `step_into` performs no allocator
+//!    calls at all: every transient lives in the reused scratch.
+//! 2. **Decode level — net zero and constant.**  A `step_sessions` step
+//!    at steady state (past the block boundary, scratch warm) makes a
+//!    small constant number of transient allocations (the task lists and
+//!    result vector), every byte of which is freed inside the step: the
+//!    per-step profile is identical across steps, net bytes are zero, and
+//!    the page pool creates no new buffers.
+//! 3. **Prefill level — replay reuses everything.**  Serving the same
+//!    chunked prefill a second time creates zero new page buffers and is
+//!    net-zero; a third run has the *exact* same allocation profile as
+//!    the second (replay determinism).  Per-chunk counts are not asserted
+//!    equal — later chunks legitimately touch more cached blocks.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::thread::LocalKey;
+
+use mra::coordinator::{NativeLm, NativeMlmConfig};
+use mra::engine::{DecodeScratch, DecodeState, PagePool};
+use mra::mra::Variant;
+
+// ---------------------------------------------------------------------------
+// counting allocator
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    // const-initialized Cells: reading/updating them never allocates and
+    // never runs a Drop, so the allocator cannot recurse or panic
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static FREES: Cell<u64> = const { Cell::new(0) };
+    static ALLOC_BYTES: Cell<u64> = const { Cell::new(0) };
+    static FREE_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn bump(key: &'static LocalKey<Cell<u64>>, by: u64) {
+    // try_with, not with: an allocation during TLS teardown must be
+    // forwarded untallied rather than panic inside the allocator
+    let _ = key.try_with(|c| c.set(c.get() + by));
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump(&ALLOCS, 1);
+        bump(&ALLOC_BYTES, layout.size() as u64);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump(&ALLOCS, 1);
+        bump(&ALLOC_BYTES, layout.size() as u64);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        bump(&FREES, 1);
+        bump(&FREE_BYTES, layout.size() as u64);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a realloc is one free of the old block plus one allocation of
+        // the new size — in-place growth inside a measured window shows
+        // up as a byte imbalance, which is exactly what the gates assert
+        // against
+        bump(&ALLOCS, 1);
+        bump(&ALLOC_BYTES, new_size as u64);
+        bump(&FREES, 1);
+        bump(&FREE_BYTES, layout.size() as u64);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+/// Point-in-time reading of this thread's allocator counters.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+struct Snap {
+    allocs: u64,
+    frees: u64,
+    alloc_bytes: u64,
+    free_bytes: u64,
+}
+
+fn snap() -> Snap {
+    Snap {
+        allocs: ALLOCS.with(Cell::get),
+        frees: FREES.with(Cell::get),
+        alloc_bytes: ALLOC_BYTES.with(Cell::get),
+        free_bytes: FREE_BYTES.with(Cell::get),
+    }
+}
+
+impl Snap {
+    /// Field-wise delta since `base` (counters are monotone).
+    fn since(self, base: Snap) -> Snap {
+        Snap {
+            allocs: self.allocs - base.allocs,
+            frees: self.frees - base.frees,
+            alloc_bytes: self.alloc_bytes - base.alloc_bytes,
+            free_bytes: self.free_bytes - base.free_bytes,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fixtures
+// ---------------------------------------------------------------------------
+
+/// Deterministic pseudo-row without an RNG dependency.
+fn fill_row(i: usize, buf: &mut [f32]) {
+    for (j, x) in buf.iter_mut().enumerate() {
+        *x = ((i * 31 + j * 7) % 13) as f32 * 0.1 - 0.6;
+    }
+}
+
+fn cfg() -> NativeMlmConfig {
+    NativeMlmConfig {
+        vocab: 64,
+        seq_len: 64,
+        d_model: 32,
+        heads: 2,
+        layers: 1,
+        block: 16,
+        budget: 0,
+        attention: "mra2".to_string(),
+        seed: 7,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. kernel level: literally zero
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_decode_attention_is_literally_allocation_free() {
+    let (d, b) = (16usize, 8usize);
+    let pool = PagePool::new(64, b, d);
+    let mut st = DecodeState::with_pool(&pool, 2, Variant::Full);
+    let mut q = vec![0.0f32; d];
+    let mut k = vec![0.0f32; d];
+    let mut v = vec![0.0f32; d];
+    let mut out = vec![0.0f32; d];
+
+    // warm to 65 cached rows: full pyramid depth reached, every scratch
+    // vector grown past its steady footprint, 65 not a power of two so
+    // the KV vectors have amortized slack
+    for i in 0..65 {
+        fill_row(i, &mut k);
+        fill_row(i + 100, &mut v);
+        fill_row(i + 200, &mut q);
+        st.step_into(&q, &k, &v, &mut out);
+    }
+
+    // in-block steps: append positions 65..=70 are never a multiple of
+    // the block, so no page is taken and no panel is finalized — the
+    // whole step must be allocator-silent
+    let base = snap();
+    for i in 65..71 {
+        fill_row(i, &mut k);
+        fill_row(i + 100, &mut v);
+        fill_row(i + 200, &mut q);
+        st.step_into(&q, &k, &v, &mut out);
+    }
+    let d_step = snap().since(base);
+    assert_eq!(
+        d_step,
+        Snap::default(),
+        "warmed in-block step_into touched the allocator"
+    );
+
+    // pure re-attention of the newest position
+    let base = snap();
+    st.attend_last_into(&q, &mut out);
+    let d_last = snap().since(base);
+    assert_eq!(
+        d_last,
+        Snap::default(),
+        "warmed attend_last_into touched the allocator"
+    );
+
+    // historical position with a caller-owned, warmed scratch
+    let mut scratch = DecodeScratch::default();
+    st.attend_pos_into(&q, 40, &mut scratch, &mut out); // warm the scratch
+    let base = snap();
+    st.attend_pos_into(&q, 40, &mut scratch, &mut out);
+    let d_pos = snap().since(base);
+    assert_eq!(
+        d_pos,
+        Snap::default(),
+        "warmed attend_pos_into touched the allocator"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. decode level: net zero, constant profile, no new pool buffers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn decode_steady_state_is_net_zero_and_constant() {
+    let lm = NativeLm::new(cfg(), 1);
+    let pool = PagePool::new(64, 16, 16);
+    let prompt: Vec<i32> = (0..8).map(|i| ((i * 17 + 3) % 64) as i32).collect();
+    let mut sess = lm.new_session(&prompt, &pool, None).expect("prefill");
+
+    // warm two steps: the first decode resizes the token/logit buffers to
+    // their steady capacity
+    for _ in 0..2 {
+        let r = lm.step_sessions(&mut [&mut sess]);
+        assert!(r.iter().all(Result::is_ok), "warm step failed: {r:?}");
+    }
+
+    let pages = pool.pages_in_use();
+    let buffers = pool.buffers_created();
+
+    // five steps at len 10..15 — strictly inside the first 16-token
+    // block, so no stream takes a page mid-measurement
+    let mut deltas = Vec::new();
+    for _ in 0..5 {
+        let base = snap();
+        let r = lm.step_sessions(&mut [&mut sess]);
+        let ok = r.iter().all(Result::is_ok);
+        drop(r);
+        let d = snap().since(base);
+        assert!(ok, "decode step failed mid-measurement");
+        deltas.push(d);
+    }
+
+    for d in &deltas {
+        // every transient (task lists, result vector) dies inside the
+        // step: count- and byte-balanced, and small
+        assert_eq!(d.allocs, d.frees, "step leaked allocations: {d:?}");
+        assert_eq!(d.alloc_bytes, d.free_bytes, "step leaked bytes: {d:?}");
+        assert!(
+            d.allocs <= 12,
+            "decode step makes {} transient allocations (budget 12)",
+            d.allocs
+        );
+    }
+    assert!(
+        deltas.windows(2).all(|w| w[0] == w[1]),
+        "per-step allocation profile drifted across steady-state steps: {deltas:?}"
+    );
+
+    assert_eq!(pool.pages_in_use(), pages, "steady decode consumed pages");
+    assert_eq!(
+        pool.buffers_created(),
+        buffers,
+        "steady decode created new page buffers"
+    );
+    assert_eq!(sess.len(), 15, "session length after 2 warm + 5 measured steps");
+}
+
+// ---------------------------------------------------------------------------
+// 3. prefill level: replay creates nothing and is bit-for-bit repeatable
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chunked_prefill_steady_state_reuses_every_buffer() {
+    let lm = NativeLm::new(cfg(), 1);
+    let pool = PagePool::new(16, 16, 16);
+    let prompt: Vec<i32> = (0..40).map(|i| ((i * 29 + 11) % 64) as i32).collect();
+
+    // one full serve: begin, prefill in 16-token chunks (logits only on
+    // the final chunk, like the scheduler), then drop the session so its
+    // pages return to the free list
+    let serve_once = |lm: &NativeLm, pool: &PagePool| -> Snap {
+        let base = snap();
+        let mut sess = lm.begin_session(&prompt, pool, None).expect("begin");
+        let mut done = sess.len();
+        while done < prompt.len() {
+            let c = 16.min(prompt.len() - done);
+            lm.prefill_chunk(&mut sess, &prompt[done..done + c], done + c == prompt.len())
+                .expect("chunk");
+            done += c;
+        }
+        assert_eq!(sess.len(), prompt.len(), "prefill incomplete");
+        drop(sess);
+        snap().since(base)
+    };
+
+    // run 1 warms everything: page buffers are created, the free list and
+    // per-stream scratch grow to their steady footprint
+    let _first = serve_once(&lm, &pool);
+    assert_eq!(pool.pages_in_use(), 0, "dropped session kept pages");
+    let buffers = pool.buffers_created();
+
+    // run 2: steady state — the pool hands back recycled buffers and
+    // every transient (session struct, page handles) dies with the run
+    let second = serve_once(&lm, &pool);
+    assert_eq!(
+        pool.buffers_created(),
+        buffers,
+        "steady-state prefill created new page buffers"
+    );
+    assert_eq!(second.allocs, second.frees, "prefill run leaked allocations: {second:?}");
+    assert_eq!(second.alloc_bytes, second.free_bytes, "prefill run leaked bytes: {second:?}");
+
+    // run 3: replay determinism — identical input, identical profile
+    let third = serve_once(&lm, &pool);
+    assert_eq!(
+        third, second,
+        "replaying an identical prefill changed its allocation profile"
+    );
+    assert_eq!(pool.pages_in_use(), 0);
+    assert_eq!(pool.buffers_created(), buffers);
+}

@@ -1,0 +1,732 @@
+//! `cargo xtask lint` — custom repo lint (DESIGN.md §11).
+//!
+//! Three rules the stock toolchain cannot express, enforced token-wise
+//! over `rust/src` (a hand-rolled lexer strips comments, strings and
+//! char literals, then tracks `fn` bodies by brace depth — no `syn`,
+//! because the offline build cannot fetch dependencies):
+//!
+//! * **hot-path-alloc** — no allocating calls (`Vec::new`, `vec!`,
+//!   `.to_vec`, `.collect`, `.clone`, `Box::new`, `String::new`,
+//!   `.to_string`, `format!`, `.with_capacity`) inside the fn bodies
+//!   registered in [`HOT_PATH_MANIFEST`].  These are the serving/decode
+//!   hot loops whose zero-steady-state-allocation claims the
+//!   `alloc_gate` test asserts dynamically; the lint keeps casual
+//!   allocations from creeping in between benchmark runs.  A registered
+//!   fn that no longer exists in its file is itself a violation, so the
+//!   manifest cannot silently rot.
+//! * **no-unwrap** — no `.unwrap()` / `.expect(` in the coordinator
+//!   request/responder paths ([`NO_UNWRAP_FILES`]): a panic on the
+//!   scheduler or worker thread drops every responder it holds and
+//!   hangs the waiting clients.  (`unwrap_or`/`unwrap_or_else` are
+//!   fine — the token must be followed by an open paren directly.)
+//! * **no-wallclock** — no `Instant::now` / `SystemTime` in the
+//!   bitwise-gated modules (`mra/`, `tensor/`, `engine/decode.rs`):
+//!   their outputs are replay-deterministic and property-tested
+//!   bitwise; time must never feed a computation there.
+//!
+//! Escape hatch: a line ending in `// lint: allow(<rule>)` suppresses
+//! `<rule>` on that line.  Every use must carry a justification comment
+//! nearby — the escape hatch is grep-able (`git grep 'lint: allow'`)
+//! and reviewed like an `unsafe` block.
+//!
+//! `#[cfg(test)] mod` bodies are exempt from every rule (tests allocate
+//! and unwrap freely); the module-level clippy `deny(unwrap_used)`
+//! attributes mirror the same split.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Hot-path fn registry: `(file, fn names)` relative to `rust/`.
+/// Adding a fn here bans allocation in its body; removing a fn from the
+/// source without updating this table fails the lint.
+const HOT_PATH_MANIFEST: &[(&str, &[&str])] = &[
+    ("src/mra/attention.rs", &["mra2_apply_blocks"]),
+    (
+        "src/engine/decode.rs",
+        &[
+            "attend_last_into",
+            "attend_pos_into",
+            "step_into",
+            "attend_row_core",
+            "attend_row_paged",
+        ],
+    ),
+    (
+        "src/tensor/kernel.rs",
+        &["softmax_accum_panel", "score_panel", "dot", "axpy", "scale", "pack_transpose"],
+    ),
+    ("src/engine/pool.rs", &["run_with"]),
+];
+
+/// Coordinator request paths: a panic here drops client responders.
+const NO_UNWRAP_FILES: &[&str] = &[
+    "src/coordinator/scheduler.rs",
+    "src/coordinator/server.rs",
+    "src/coordinator/batcher.rs",
+];
+
+/// Bitwise-gated modules: no wall-clock reads.
+const NO_WALLCLOCK_PREFIXES: &[&str] = &["src/mra/", "src/tensor/"];
+const NO_WALLCLOCK_FILES: &[&str] = &["src/engine/decode.rs"];
+
+/// Banned tokens for `hot-path-alloc`: `(pattern, ident boundary
+/// required before, ident boundary required after)`.
+const HOT_BANNED: &[(&str, bool, bool)] = &[
+    ("Vec::new", true, true),
+    ("vec!", true, false),
+    ("Box::new", true, true),
+    ("String::new", true, true),
+    ("format!", true, false),
+    (".to_vec", false, true),
+    (".to_string", false, true),
+    (".collect", false, true),
+    (".clone", false, true),
+    (".with_capacity", false, true),
+];
+
+const UNWRAP_BANNED: &[(&str, bool, bool)] =
+    &[(".unwrap(", false, false), (".expect(", false, false)];
+
+const WALLCLOCK_BANNED: &[(&str, bool, bool)] =
+    &[("Instant::now", true, true), ("SystemTime", true, true)];
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {}
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            eprintln!("  custom repo lint over rust/src — see DESIGN.md §11");
+            return ExitCode::from(2);
+        }
+    }
+    let root = src_root();
+    let (files, violations) = lint_tree(&root);
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("xtask lint: OK ({files} files checked)");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask lint: {} violation(s) in {files} files", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// `rust/src`, anchored on this crate's manifest dir so the lint works
+/// from any CWD (CI, `cargo test`, editor integrations).
+fn src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+}
+
+/// Lint every `.rs` file under `root`; returns `(files checked,
+/// violations)`.
+fn lint_tree(root: &Path) -> (usize, Vec<Violation>) {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files);
+    files.sort();
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path.strip_prefix(root).unwrap_or(path);
+        let label = format!(
+            "src/{}",
+            rel.components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/")
+        );
+        match fs::read_to_string(path) {
+            Ok(raw) => violations.extend(check_source(&label, &raw)),
+            Err(e) => violations.push(Violation {
+                file: label,
+                line: 0,
+                rule: "io",
+                msg: format!("unreadable: {e}"),
+            }),
+        }
+    }
+    (files.len(), violations)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// All rules over one source file.  `label` is the `rust/`-relative
+/// path (`src/...`) and selects which rules apply; self-tests feed
+/// fixture strings under real labels.
+fn check_source(label: &str, raw: &str) -> Vec<Violation> {
+    let stripped = strip(raw);
+    let allows = allowed_rules(raw);
+    let in_test = test_mask(&stripped);
+    let starts = line_starts(&stripped);
+    let mut out = Vec::new();
+
+    let mut flag = |pos: usize, rule: &'static str, msg: String, out: &mut Vec<Violation>| {
+        let line = line_of(&starts, pos);
+        if in_test[pos] {
+            return;
+        }
+        if allows.get(&line).is_some_and(|rs| rs.iter().any(|r| r == rule)) {
+            return;
+        }
+        out.push(Violation { file: label.to_string(), line, rule, msg });
+    };
+
+    if let Some((_, fns)) = HOT_PATH_MANIFEST.iter().find(|(f, _)| *f == label) {
+        let bodies = fn_body_ranges(&stripped, fns, &in_test);
+        for name in *fns {
+            if !bodies.iter().any(|(_, _, n)| n == name) {
+                out.push(Violation {
+                    file: label.to_string(),
+                    line: 1,
+                    rule: "hot-path-alloc",
+                    msg: format!(
+                        "manifest-registered hot-path fn `{name}` not found — \
+                         update HOT_PATH_MANIFEST in xtask/src/main.rs"
+                    ),
+                });
+            }
+        }
+        for &(pat, pre, post) in HOT_BANNED {
+            for pos in find_tokens(&stripped, pat, pre, post) {
+                if let Some((_, _, name)) = bodies.iter().find(|&&(a, b, _)| pos >= a && pos < b) {
+                    flag(
+                        pos,
+                        "hot-path-alloc",
+                        format!("`{pat}` allocates inside hot-path fn `{name}`"),
+                        &mut out,
+                    );
+                }
+            }
+        }
+    }
+
+    if NO_UNWRAP_FILES.contains(&label) {
+        for &(pat, pre, post) in UNWRAP_BANNED {
+            for pos in find_tokens(&stripped, pat, pre, post) {
+                flag(
+                    pos,
+                    "no-unwrap",
+                    format!(
+                        "`{pat})` on a coordinator request path — handle the error; \
+                         a panic here drops client responders"
+                    ),
+                    &mut out,
+                );
+            }
+        }
+    }
+
+    let wallclock = NO_WALLCLOCK_FILES.contains(&label)
+        || NO_WALLCLOCK_PREFIXES.iter().any(|p| label.starts_with(p));
+    if wallclock {
+        for &(pat, pre, post) in WALLCLOCK_BANNED {
+            for pos in find_tokens(&stripped, pat, pre, post) {
+                flag(
+                    pos,
+                    "no-wallclock",
+                    format!("`{pat}` in a bitwise-gated module — results must not depend on time"),
+                    &mut out,
+                );
+            }
+        }
+    }
+
+    out.sort_by_key(|v| v.line);
+    out
+}
+
+/// Per-line escape hatches: `// lint: allow(rule)` (scanned on the raw
+/// line, so the annotation itself lives in a comment).
+fn allowed_rules(raw: &str) -> HashMap<usize, Vec<String>> {
+    let mut map: HashMap<usize, Vec<String>> = HashMap::new();
+    for (ln, line) in raw.lines().enumerate() {
+        let mut rest = line;
+        while let Some(i) = rest.find("lint: allow(") {
+            let after = &rest[i + "lint: allow(".len()..];
+            if let Some(end) = after.find(')') {
+                map.entry(ln + 1).or_default().push(after[..end].trim().to_string());
+                rest = &after[end..];
+            } else {
+                break;
+            }
+        }
+    }
+    map
+}
+
+/// Replace comments, string literals and char literals with spaces,
+/// preserving newlines — line numbers and code tokens survive, prose
+/// does not.  Handles nested block comments, raw strings (`r"…"`,
+/// `r#"…"#`), escapes, and the char-literal/lifetime ambiguity.
+fn strip(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out: Vec<char> = Vec::with_capacity(b.len());
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+        } else if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+        } else if c == 'r'
+            && !ident_char_at(&b, i.wrapping_sub(1))
+            && raw_string_at(&b, i).is_some()
+        {
+            let hashes = raw_string_at(&b, i).unwrap_or(0);
+            // r, hashes, opening quote
+            for _ in 0..(hashes + 2) {
+                out.push(' ');
+            }
+            i += hashes + 2;
+            while i < b.len() {
+                if b[i] == '"' && (0..hashes).all(|h| b.get(i + 1 + h) == Some(&'#')) {
+                    for _ in 0..(hashes + 1) {
+                        out.push(' ');
+                    }
+                    i += hashes + 1;
+                    break;
+                }
+                out.push(blank(b[i]));
+                i += 1;
+            }
+        } else if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' {
+                    // the escaped char may be a newline (string line
+                    // continuation) — newlines must survive stripping
+                    out.push(' ');
+                    out.push(b.get(i + 1).map_or(' ', |&e| blank(e)));
+                    i += 2;
+                } else if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+        } else if c == '\'' {
+            if b.get(i + 1) == Some(&'\\') {
+                // escaped char literal: '\n', '\\', '\u{..}' — to closing quote
+                out.push(' ');
+                out.push(' ');
+                i += 2;
+                while i < b.len() && b[i] != '\'' {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+                if i < b.len() {
+                    out.push(' ');
+                    i += 1;
+                }
+            } else if b.get(i + 2) == Some(&'\'') && b.get(i + 1).is_some_and(|&x| x != '\'') {
+                out.push(' ');
+                out.push(' ');
+                out.push(' ');
+                i += 3;
+            } else {
+                // lifetime ('a, '_) — keep the tick, tokens stay intact
+                out.push('\'');
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// `Some(hash count)` when `b[i..]` opens a raw string (`r"`, `r#"`,
+/// `br"` is caught via its `r`).
+fn raw_string_at(b: &[char], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (b.get(j) == Some(&'"')).then_some(hashes)
+}
+
+fn ident_char_at(b: &[char], i: usize) -> bool {
+    b.get(i).is_some_and(|c| c.is_alphanumeric() || *c == '_')
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte mask: `true` where the byte lies inside a `#[cfg(test)] mod {…}`
+/// body.  (`#[cfg(test)] mod x;` declarations guard files compiled out
+/// entirely — nothing to mask.)
+fn test_mask(stripped: &str) -> Vec<bool> {
+    let bytes = stripped.as_bytes();
+    let mut mask = vec![false; bytes.len() + 1]; // +1: patterns ending at EOF
+    let mut from = 0;
+    while let Some(off) = stripped[from..].find("#[cfg(test)]") {
+        let attr_end = from + off + "#[cfg(test)]".len();
+        // skip whitespace and further attributes (#[allow(...)], …)
+        let mut j = attr_end;
+        loop {
+            while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j + 1 < bytes.len() && bytes[j] == b'#' && bytes[j + 1] == b'[' {
+                let mut depth = 0usize;
+                while j < bytes.len() {
+                    match bytes[j] {
+                        b'[' => depth += 1,
+                        b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        // a `;` before any `{` is a module declaration — no body to mask
+        while j < bytes.len() && bytes[j] != b'{' && bytes[j] != b';' {
+            j += 1;
+        }
+        if j < bytes.len() && bytes[j] == b'{' {
+            let open = j;
+            let mut depth = 0usize;
+            while j < bytes.len() {
+                match bytes[j] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            for m in mask.iter_mut().take(j.min(bytes.len()) + 1).skip(open) {
+                *m = true;
+            }
+        }
+        from = attr_end;
+    }
+    mask
+}
+
+/// Byte offsets where each line starts (line 1 at offset 0).
+fn line_starts(stripped: &str) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, b) in stripped.bytes().enumerate() {
+        if b == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+fn line_of(starts: &[usize], pos: usize) -> usize {
+    starts.partition_point(|&s| s <= pos)
+}
+
+/// Body byte ranges `(open brace, close brace, name)` of every fn in
+/// `names` defined outside test mods.  Trait method *declarations*
+/// (`fn f(…);`) have no body and are skipped.
+fn fn_body_ranges(stripped: &str, names: &[&str], in_test: &[bool]) -> Vec<(usize, usize, String)> {
+    let bytes = stripped.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        // next ident token
+        if !is_ident(bytes[i] as char) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < bytes.len() && is_ident(bytes[i] as char) {
+            i += 1;
+        }
+        if &stripped[start..i] != "fn" || (start > 0 && is_ident(bytes[start - 1] as char)) {
+            continue;
+        }
+        // the fn name
+        let mut j = i;
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < bytes.len() && is_ident(bytes[j] as char) {
+            j += 1;
+        }
+        let name = &stripped[name_start..j];
+        if !names.contains(&name) || in_test.get(name_start).copied().unwrap_or(false) {
+            continue;
+        }
+        // signature runs to `{` (body) or `;` (trait declaration)
+        while j < bytes.len() && bytes[j] != b'{' && bytes[j] != b';' {
+            j += 1;
+        }
+        if j >= bytes.len() || bytes[j] == b';' {
+            continue;
+        }
+        let open = j;
+        let mut depth = 0usize;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        out.push((open, j.min(bytes.len()), name.to_string()));
+        i = j;
+    }
+    out
+}
+
+/// Byte offsets of `pat` in `stripped`, honoring ident boundaries:
+/// `pre` requires a non-ident char before the match, `post` one after.
+fn find_tokens(stripped: &str, pat: &str, pre: bool, post: bool) -> Vec<usize> {
+    let bytes = stripped.as_bytes();
+    let mut out = Vec::new();
+    for (pos, _) in stripped.match_indices(pat) {
+        if pre && pos > 0 && is_ident(bytes[pos - 1] as char) {
+            continue;
+        }
+        if post {
+            let end = pos + pat.len();
+            if end < bytes.len() && is_ident(bytes[end] as char) {
+                continue;
+            }
+        }
+        out.push(pos);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(violations: &[Violation]) -> Vec<(&'static str, usize)> {
+        violations.iter().map(|v| (v.rule, v.line)).collect()
+    }
+
+    #[test]
+    fn seeded_hot_path_allocation_is_flagged_with_file_and_line() {
+        let fixture = "\
+pub fn attend_last_into(&mut self, q: &[f32], out: &mut [f32]) {
+    let tmp: Vec<f32> = q.iter().copied().collect();
+    out.copy_from_slice(&tmp);
+}
+pub fn attend_pos_into(&mut self) {}
+pub fn step_into(&mut self) {}
+fn attend_row_core(&self) {}
+fn attend_row_paged(&self) {}
+";
+        let v = check_source("src/engine/decode.rs", fixture);
+        assert_eq!(rules_of(&v), vec![("hot-path-alloc", 2)], "{v:?}");
+        assert!(v[0].msg.contains("attend_last_into"), "{}", v[0].msg);
+        assert!(v[0].to_string().starts_with("src/engine/decode.rs:2:"), "{}", v[0]);
+    }
+
+    #[test]
+    fn escape_hatch_suppresses_exactly_the_named_rule() {
+        let fixture = "\
+pub fn attend_last_into(&mut self) {
+    let tmp = q.to_vec(); // setup only, hoisted by caller — lint: allow(hot-path-alloc)
+    let bad = r.to_vec(); // lint: allow(no-unwrap) — wrong rule, still flagged
+}
+pub fn attend_pos_into(&mut self) {}
+pub fn step_into(&mut self) {}
+fn attend_row_core(&self) {}
+fn attend_row_paged(&self) {}
+";
+        let v = check_source("src/engine/decode.rs", fixture);
+        assert_eq!(rules_of(&v), vec![("hot-path-alloc", 3)], "{v:?}");
+    }
+
+    #[test]
+    fn a_renamed_hot_path_fn_fails_the_manifest() {
+        let fixture = "pub fn run_with_renamed() {}\n";
+        let v = check_source("src/engine/pool.rs", fixture);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("`run_with` not found"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn unwrap_on_a_request_path_is_flagged_but_unwrap_or_else_is_not() {
+        let fixture = "\
+fn admit(&mut self) {
+    let p = self.waiting.pop_front().unwrap();
+    let q = self.waiting.pop_front().expect(\"front\");
+    let g = lock.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let d = self.cache.as_ref().map(|c| c.pages_held()).unwrap_or(0);
+}
+";
+        let v = check_source("src/coordinator/scheduler.rs", fixture);
+        assert_eq!(rules_of(&v), vec![("no-unwrap", 2), ("no-unwrap", 3)], "{v:?}");
+    }
+
+    #[test]
+    fn test_modules_are_exempt_from_every_rule() {
+        let fixture = "\
+fn admit(&mut self) {
+    let ok = self.waiting.pop_front();
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    fn helper() {
+        let p = queue.pop_front().unwrap();
+        let t = Instant::now();
+    }
+}
+";
+        let v = check_source("src/coordinator/scheduler.rs", fixture);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn wallclock_reads_in_bitwise_gated_modules_are_flagged() {
+        let fixture = "\
+fn mra2_apply_blocks() {
+    let t0 = Instant::now();
+}
+";
+        let v = check_source("src/mra/attention.rs", fixture);
+        assert_eq!(rules_of(&v), vec![("no-wallclock", 2)], "{v:?}");
+        // SystemTime too, and prefix matching covers any file in tensor/
+        let v = check_source("src/tensor/new_kernel.rs", "fn f() { SystemTime::now(); }\n");
+        assert_eq!(rules_of(&v), vec![("no-wallclock", 1)], "{v:?}");
+    }
+
+    #[test]
+    fn strings_and_comments_never_trigger_rules() {
+        let fixture = "\
+fn admit(&mut self) {
+    // prose about .unwrap() and Instant::now and vec![] patterns
+    let msg = \".unwrap( in a string is fine\";
+    let raw = r#\"so is .expect( here\"#;
+    let ch = '\\n';
+}
+";
+        let v = check_source("src/coordinator/scheduler.rs", fixture);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn lifetimes_do_not_derail_the_lexer() {
+        let fixture = "\
+fn admit<'a>(&'a mut self, x: &'a str) {
+    let p = self.waiting.pop_front().unwrap();
+}
+";
+        let v = check_source("src/coordinator/scheduler.rs", fixture);
+        assert_eq!(rules_of(&v), vec![("no-unwrap", 2)], "{v:?}");
+    }
+
+    #[test]
+    fn unregistered_files_and_fns_are_untouched() {
+        // allocations outside registered fns of a registered file: fine
+        let fixture = "\
+pub fn helper() {
+    let v: Vec<f32> = xs.to_vec();
+}
+pub fn mra2_apply_blocks() {
+    let x = 1;
+}
+";
+        let v = check_source("src/mra/attention.rs", fixture);
+        assert!(v.is_empty(), "{v:?}");
+        // a file under no rule at all
+        let v = check_source(
+            "src/runtime/pjrt.rs",
+            "fn f() { x.unwrap(); let t = Instant::now(); }\n",
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    /// The shipped tree must be lint-clean: this is the same check CI
+    /// runs as `cargo xtask lint`, wired into `cargo test` so a
+    /// violation cannot land even when CI's lint job is skipped.
+    #[test]
+    fn the_real_tree_is_clean() {
+        let root = src_root();
+        assert!(root.is_dir(), "source root missing: {}", root.display());
+        let (files, violations) = lint_tree(&root);
+        assert!(files > 20, "walked only {files} files — wrong root?");
+        assert!(
+            violations.is_empty(),
+            "tree has lint violations:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -5,6 +5,7 @@ committed baseline and fail on throughput regressions.
 Usage:
     bench_diff.py BASELINE.json CURRENT.json [--max-regression 0.20]
                   [--fields f1,f2,...]
+    bench_diff.py --list-metrics [BASELINE.json]
 
 Both files use the repo's BenchJson schema:
     {"bench": "<name>", "rows": [{<identity and metric fields>}, ...]}
@@ -68,10 +69,37 @@ def fmt_key(key):
     return " ".join(f"{k}={v}" for k, v in key)
 
 
+def list_metrics(baseline):
+    """Print the gate's metric vocabulary (and, given a baseline, which of
+    it that file actually carries) — the discoverable answer to "what can
+    I pass to --fields?"."""
+    print("tracked (regression-gated, higher is better):")
+    for f in TRACKED:
+        print(f"  {f}")
+    print("informational (recognized as metrics, never gated):")
+    for f in sorted(METRIC_FIELDS - set(TRACKED)):
+        print(f"  {f}")
+    if baseline is not None:
+        _, rows = load_rows(baseline)
+        present = sorted({f for row in rows.values() for f in row if f in METRIC_FIELDS})
+        print(f"metrics present in {baseline}:")
+        for f in present:
+            gated = "tracked" if f in TRACKED else "informational"
+            print(f"  {f} ({gated})")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("baseline")
-    ap.add_argument("current")
+    # positionals are optional only so --list-metrics can run without
+    # them; a compare invocation missing either is still a usage error
+    ap.add_argument("baseline", nargs="?")
+    ap.add_argument("current", nargs="?")
+    ap.add_argument(
+        "--list-metrics",
+        action="store_true",
+        help="print the tracked and informational metric fields (plus, if a "
+        "baseline is given, which ones it carries) and exit",
+    )
     ap.add_argument(
         "--max-regression",
         type=float,
@@ -91,6 +119,11 @@ def main():
         "shrink coverage)",
     )
     args = ap.parse_args()
+    if args.list_metrics:
+        list_metrics(args.baseline)
+        return
+    if args.baseline is None or args.current is None:
+        ap.error("baseline and current are required unless --list-metrics is given")
     fields = [f.strip() for f in args.fields.split(",") if f.strip()]
     # a typo'd --fields entry must fail loudly up front, not silently
     # compare nothing (or, worse, be treated as a row-identity field)
