@@ -5,8 +5,11 @@
 //! cache — the run must report a cache hit (the block-aligned prompt
 //! prefix served from physically shared pages) and produce the identical
 //! token stream.  Finally the prompt rides the serving path
-//! (`Server::start_native_lm_sessions` + `Server::generate`) to show
-//! generation requests flowing through the continuous-batching scheduler.
+//! (`Server::start_native_lm_sessions` + `Server::generate_stream`):
+//! tokens arrive on a `TokenStream` as the continuous-batching scheduler
+//! decodes them, and the streamed sequence is asserted bitwise identical
+//! to the one-shot `Server::generate` result (greedy decoding is
+//! deterministic, so streaming changes delivery, never content).
 //!
 //! Runs entirely on the native CPU path — no artifacts required.
 //!
@@ -20,7 +23,7 @@ use std::io::Write;
 use anyhow::Result;
 use mra::cli::Args;
 use mra::config::{ServeConfig, SessionConfig};
-use mra::coordinator::{NativeLm, NativeMlmConfig, Server};
+use mra::coordinator::{GenOptions, NativeLm, NativeMlmConfig, Server};
 use mra::data::{Corpus, CorpusConfig};
 use mra::engine::pool;
 
@@ -119,10 +122,30 @@ fn main() -> Result<()> {
     };
     let scfg = SessionConfig { total_pages: 4096, ..Default::default() };
     let server = Server::start_native_lm_sessions(serve, mcfg, threads, scfg)?;
-    let resp = server.generate(prompt.clone(), max_new)?;
+    print!("server :");
+    let mut stream = server.generate_stream(prompt.clone(), GenOptions::new(max_new))?;
+    let mut streamed = Vec::with_capacity(max_new);
+    for tok in stream.by_ref() {
+        streamed.push(tok);
+        print!(" {tok}");
+        let _ = std::io::stdout().flush();
+    }
+    let resp = stream.wait()?;
+    assert_eq!(
+        streamed, resp.predictions,
+        "every streamed token must appear exactly once, in response order"
+    );
     assert_eq!(resp.predictions, toks, "server decode must match the direct path");
+    // one-shot delivery of the same request: greedy decoding is
+    // deterministic, so streaming only changes *when* tokens arrive
+    let oneshot = server.generate(prompt.clone(), max_new)?;
+    assert_eq!(
+        oneshot.predictions, streamed,
+        "stream and one-shot must be bitwise identical under greedy decoding"
+    );
     println!(
-        "server : {} tokens via the session scheduler in {:.1} ms (bitwise identical)",
+        "\nserver : {} tokens streamed via the session scheduler in {:.1} ms (bitwise \
+         identical to one-shot)",
         resp.predictions.len(),
         resp.latency.as_secs_f64() * 1e3
     );

@@ -4,6 +4,13 @@
 //! forks interleaved — showing that the shared prefix is *physically* the
 //! same memory (page pointers and pool occupancy), not a numeric copy.
 //!
+//! Clients consume their responses **token by token** over
+//! `Server::generate_stream` with mixed QoS priorities, and each asserts
+//! its streamed sequence is bitwise identical to the one-shot
+//! `Server::generate` result (greedy decoding).  A final request with an
+//! already-expired admission deadline shows deadline-expired waiters being
+//! answered with a descriptive error instead of hanging.
+//!
 //! Runs entirely on the native CPU path — no artifacts required.
 //!
 //! ```bash
@@ -16,7 +23,9 @@ use std::sync::Arc;
 use anyhow::Result;
 use mra::cli::Args;
 use mra::config::{ServeConfig, SessionConfig};
-use mra::coordinator::{LmSession, NativeLm, NativeMlmConfig, Server};
+use mra::coordinator::{
+    GenOptions, LmSession, NativeLm, NativeMlmConfig, Server, PRIORITY_NORMAL,
+};
 use mra::engine::pool;
 
 fn main() -> Result<()> {
@@ -98,6 +107,7 @@ fn main() -> Result<()> {
         // one block per step keeps the demo's interleaving visible in the
         // prefill_chunks / prefill_backlog metrics below
         prefill_chunk_tokens: block,
+        ..SessionConfig::default()
     };
     let server = Arc::new(Server::start_native_lm_sessions(serve, mcfg, threads, scfg)?);
     let t0 = std::time::Instant::now();
@@ -107,8 +117,27 @@ fn main() -> Result<()> {
             let mut prompt = system.clone();
             s.spawn(move || {
                 prompt.extend((0..6).map(|j| 4 + (c * 11 + j) as i32 % 40));
-                let resp = server.generate(prompt, max_new).expect("generate");
+                // alternate QoS priorities: even clients boosted, odd ones
+                // deprioritized (aging still guarantees the odd ones run)
+                let prio =
+                    if c % 2 == 0 { PRIORITY_NORMAL + 10 } else { PRIORITY_NORMAL - 10 };
+                let opts = GenOptions::new(max_new).priority(prio);
+                let mut stream =
+                    server.generate_stream(prompt.clone(), opts).expect("stream");
+                let streamed: Vec<i32> = stream.by_ref().collect();
+                let resp = stream.wait().expect("generate");
                 assert_eq!(resp.predictions.len(), max_new);
+                assert_eq!(
+                    streamed, resp.predictions,
+                    "streamed tokens must equal the final response exactly"
+                );
+                // greedy decoding: one-shot delivery of the same prompt is
+                // bitwise identical to the streamed sequence
+                let oneshot = server.generate(prompt, max_new).expect("one-shot");
+                assert_eq!(
+                    oneshot.predictions, streamed,
+                    "stream and one-shot must be bitwise identical under greedy"
+                );
             });
         }
     });
@@ -129,6 +158,19 @@ fn main() -> Result<()> {
             "clients sharing a system prompt must hit the radix cache"
         );
     }
+    // a request whose admission deadline has already passed is answered
+    // with a descriptive error instead of hanging its client (deadline
+    // expiry runs before admission each step, so a zero TTL always fires)
+    let expired = server.generate_opts(
+        system.clone(),
+        GenOptions::new(max_new).deadline(std::time::Duration::ZERO),
+    );
+    let err = expired.expect_err("a zero admission deadline must expire");
+    assert!(
+        err.to_string().contains("admission deadline"),
+        "expiry error must be descriptive, got: {err}"
+    );
+    println!("deadline: zero-TTL request answered with a descriptive error");
     if let Ok(s) = Arc::try_unwrap(server) {
         s.shutdown();
     }

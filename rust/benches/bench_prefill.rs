@@ -154,6 +154,7 @@ fn main() {
             max_running: 8,
             prefix_cache: true,
             prefill_chunk_tokens: 256,
+            ..SessionConfig::default()
         };
         let server = Server::start_native_lm_sessions(serve_cfg, mcfg.clone(), threads, scfg)
             .expect("session server");

@@ -19,6 +19,14 @@
 //! `(session, head)` tasks from one pool instead of per-request
 //! mini-forwards, and never stalls a round on its slowest request.
 //!
+//! A second gated section measures **delivery latency**: time-to-first-
+//! token (TTFT) and inter-token latency (ITL) percentiles of per-token
+//! streaming (`Server::generate_stream`) against finish-only delivery
+//! (`Server::generate`, where the first token only reaches the client
+//! with the full response).  The gate asserts streaming TTFT (p50) is at
+//! most 1/5 of finish-only first-token delivery — the entire point of the
+//! streaming API.
+//!
 //! ```bash
 //! cargo bench --bench bench_serve                    # 32 requests
 //! MRA_BENCH_SMALL=1 cargo bench --bench bench_serve  # 12 requests (CI)
@@ -31,7 +39,7 @@ use std::time::Instant;
 
 use mra::bench::{BenchJson, Table};
 use mra::config::{ServeConfig, SessionConfig};
-use mra::coordinator::{NativeLm, NativeMlmConfig, Server};
+use mra::coordinator::{GenOptions, NativeLm, NativeMlmConfig, Server};
 use mra::engine::pool;
 use mra::tensor::Rng;
 
@@ -59,6 +67,17 @@ fn build_workload(requests: usize) -> Vec<Case> {
             Case { prompt, gen }
         })
         .collect()
+}
+
+/// Percentile of `xs` in milliseconds (nearest-rank; `0.0` when empty).
+fn pctl_ms(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
 }
 
 /// Fire the whole workload from `clients` concurrent client threads;
@@ -163,6 +182,7 @@ fn main() {
         max_running: 64,
         prefix_cache: true,
         prefill_chunk_tokens: 256,
+        ..SessionConfig::default()
     };
     let continuous = Arc::new(
         Server::start_native_lm_sessions(serve_cfg, mcfg, threads, scfg.clone())
@@ -180,6 +200,51 @@ fn main() {
     }
     let (cont_wall, cont_tokens) = run_workload(&continuous, &cases, clients);
     println!("continuous  : {}", continuous.metrics.summary());
+
+    // --- streaming vs finish-only delivery latency ------------------------
+    // One request in flight at a time: the comparison isolates *delivery*
+    // (when tokens reach the client), not scheduling contention.  Both
+    // paths run against the same warm server and radix cache.
+    let mut ttft_stream: Vec<f64> = Vec::with_capacity(cases.len());
+    let mut ttft_finish: Vec<f64> = Vec::with_capacity(cases.len());
+    let mut itl: Vec<f64> = Vec::new();
+    for case in &cases {
+        let t0 = Instant::now();
+        let mut stream = continuous
+            .generate_stream(case.prompt.clone(), GenOptions::new(case.gen))
+            .expect("streaming generate");
+        let mut last = t0;
+        let mut received = 0usize;
+        while let Some(_tok) = stream.next_token() {
+            let now = Instant::now();
+            if received == 0 {
+                ttft_stream.push(now.duration_since(t0).as_secs_f64() * 1e3);
+            } else {
+                itl.push(now.duration_since(last).as_secs_f64() * 1e3);
+            }
+            last = now;
+            received += 1;
+        }
+        let resp = stream.wait().expect("stream wait");
+        assert_eq!(
+            received,
+            resp.predictions.len(),
+            "stream must deliver every generated token exactly once"
+        );
+        // finish-only: the first token is only *delivered* with the full
+        // response, so its TTFT is the whole request latency
+        let t0 = Instant::now();
+        let resp = continuous
+            .generate(case.prompt.clone(), case.gen)
+            .expect("finish-only generate");
+        ttft_finish.push(t0.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(resp.predictions.len(), case.gen);
+    }
+    let ttft_stream_p50 = pctl_ms(&ttft_stream, 0.50);
+    let ttft_finish_p50 = pctl_ms(&ttft_finish, 0.50);
+    let itl_p50 = pctl_ms(&itl, 0.50);
+    let itl_p95 = pctl_ms(&itl, 0.95);
+    let ttft_speedup = ttft_finish_p50 / ttft_stream_p50.max(1e-9);
     let hit_tokens = continuous.metrics.prefix_hit_tokens.load(Ordering::Relaxed);
     let pool_pages = continuous.metrics.pool_pages.load(Ordering::Relaxed);
     let free_pages = continuous.metrics.free_pages.load(Ordering::Relaxed);
@@ -219,6 +284,21 @@ fn main() {
     ]);
     table.print();
 
+    let mut lat = Table::new(&["delivery", "ttft p50 ms", "itl p50 ms", "itl p95 ms"]);
+    lat.row(&[
+        "finish-only".to_string(),
+        format!("{ttft_finish_p50:.2}"),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
+    lat.row(&[
+        "streaming".to_string(),
+        format!("{ttft_stream_p50:.2}"),
+        format!("{itl_p50:.2}"),
+        format!("{itl_p95:.2}"),
+    ]);
+    lat.print();
+
     let mut json = BenchJson::new("serve");
     json.row(&[
         ("impl", BenchJson::str_field("fixed-round")),
@@ -232,6 +312,15 @@ fn main() {
         ("tokens_per_sec", format!("{cont_tps:.1}")),
         ("speedup_vs_fixed", format!("{speedup:.3}")),
     ]);
+    json.row(&[
+        ("impl", BenchJson::str_field("streaming")),
+        ("requests", format!("{requests}")),
+        ("ttft_ms", format!("{ttft_stream_p50:.3}")),
+        ("ttft_finish_ms", format!("{ttft_finish_p50:.3}")),
+        ("itl_p50_ms", format!("{itl_p50:.3}")),
+        ("itl_p95_ms", format!("{itl_p95:.3}")),
+        ("ttft_speedup_vs_finish", format!("{ttft_speedup:.3}")),
+    ]);
     json.write_if_requested();
 
     assert_eq!(fixed_tokens, cont_tokens, "both paths must serve the same workload");
@@ -240,8 +329,14 @@ fn main() {
         "acceptance gate: continuous batching must beat the fixed-round batcher \
          on the mixed-length workload ({cont_tps:.1} vs {fixed_tps:.1} tokens/s)"
     );
+    assert!(
+        ttft_stream_p50 <= ttft_finish_p50 / 5.0,
+        "acceptance gate: streaming TTFT must be at most 1/5 of finish-only \
+         first-token delivery ({ttft_stream_p50:.2} ms vs {ttft_finish_p50:.2} ms)"
+    );
     println!(
         "\nbench_serve OK (bitwise serving gates, bounded pool, prefix hits {hit_tokens} \
-         tokens, continuous {speedup:.2}x fixed)"
+         tokens, continuous {speedup:.2}x fixed, streaming TTFT {ttft_speedup:.1}x \
+         earlier than finish-only)"
     );
 }

@@ -115,6 +115,42 @@ impl ServeConfig {
     }
 }
 
+/// Token-selection policy for language-model decoding.
+///
+/// The default is **greedy** (argmax), the bitwise reference path used by
+/// every correctness gate in the repo.  Setting `temperature > 0` enables
+/// stochastic sampling: logits are divided by `temperature`, optionally
+/// truncated to the `top_k` highest and/or the smallest `top_p` nucleus,
+/// then sampled with a counter-based deterministic RNG
+/// (`crate::engine::DrawState`) so the same `(seed, draw index)` always
+/// selects the same token — the property that makes preemption replay
+/// lossless (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `<= 0` selects greedy argmax decoding.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit candidates (`0` disables).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest candidate prefix whose
+    /// probability mass reaches `top_p` (`>= 1.0` disables).
+    pub top_p: f32,
+    /// RNG seed for the per-session draw sequence.
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SamplingParams {
+    /// True when this policy is deterministic argmax (no RNG draws).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
 /// Session-serving scheduler configuration (`[sessions]` section) — the
 /// continuous-batching knobs of `Server::start_native_lm_sessions`
 /// (DESIGN.md §9).
@@ -138,6 +174,19 @@ pub struct SessionConfig {
     /// Chunks snap to block boundaries; the budget is clamped up to one
     /// block at runtime so prefill always progresses.
     pub prefill_chunk_tokens: usize,
+    /// Capacity of each per-request bounded token stream channel.  The
+    /// scheduler delivers with a non-blocking `try_send`: a slow consumer
+    /// stalls its own stream (tokens are retried next step and the tail is
+    /// always recoverable from the final `Response`), never the scheduler.
+    pub stream_buffer: usize,
+    /// Priority aging: a waiting request gains one effective priority
+    /// point per `aging_steps` scheduler steps, so low-priority work
+    /// cannot starve behind a stream of high-priority arrivals (`0`
+    /// disables aging).
+    pub aging_steps: usize,
+    /// Default token-selection policy for requests that do not carry
+    /// their own [`SamplingParams`] (greedy unless overridden).
+    pub sampling: SamplingParams,
 }
 
 impl Default for SessionConfig {
@@ -148,6 +197,9 @@ impl Default for SessionConfig {
             max_running: 32,
             prefix_cache: true,
             prefill_chunk_tokens: 256,
+            stream_buffer: 32,
+            aging_steps: 32,
+            sampling: SamplingParams::default(),
         }
     }
 }
@@ -162,6 +214,15 @@ impl SessionConfig {
             prefix_cache: c.bool_or("sessions.prefix_cache", d.prefix_cache)?,
             prefill_chunk_tokens: c
                 .usize_or("sessions.prefill_chunk_tokens", d.prefill_chunk_tokens)?,
+            stream_buffer: c.usize_or("sessions.stream_buffer", d.stream_buffer)?.max(1),
+            aging_steps: c.usize_or("sessions.aging_steps", d.aging_steps)?,
+            sampling: SamplingParams {
+                temperature: c.f64_or("sessions.temperature", d.sampling.temperature as f64)?
+                    as f32,
+                top_k: c.usize_or("sessions.top_k", d.sampling.top_k)?,
+                top_p: c.f64_or("sessions.top_p", d.sampling.top_p as f64)? as f32,
+                seed: c.usize_or("sessions.seed", d.sampling.seed as usize)? as u64,
+            },
         })
     }
 }
@@ -254,6 +315,41 @@ lr = 0.001
             256,
             "default prefill budget documented in DESIGN.md §10"
         );
+    }
+
+    #[test]
+    fn sampling_defaults_are_greedy() {
+        let p = SamplingParams::default();
+        assert!(p.is_greedy());
+        assert_eq!(p.top_k, 0);
+        assert_eq!(p.top_p, 1.0);
+        let s = SessionConfig::default();
+        assert!(s.sampling.is_greedy(), "server default must stay the bitwise greedy path");
+        assert!(s.stream_buffer >= 1);
+    }
+
+    #[test]
+    fn sampling_and_qos_knobs_parse() {
+        let c = Config::parse(
+            "[sessions]\ntemperature = 0.8\ntop_k = 40\ntop_p = 0.95\nseed = 7\n\
+             stream_buffer = 4\naging_steps = 16\n",
+        )
+        .unwrap();
+        let s = SessionConfig::from_config(&c).unwrap();
+        assert!(!s.sampling.is_greedy());
+        assert_eq!(s.sampling.temperature, 0.8);
+        assert_eq!(s.sampling.top_k, 40);
+        assert_eq!(s.sampling.top_p, 0.95);
+        assert_eq!(s.sampling.seed, 7);
+        assert_eq!(s.stream_buffer, 4);
+        assert_eq!(s.aging_steps, 16);
+    }
+
+    #[test]
+    fn stream_buffer_clamped_to_one() {
+        let c = Config::parse("[sessions]\nstream_buffer = 0\n").unwrap();
+        let s = SessionConfig::from_config(&c).unwrap();
+        assert_eq!(s.stream_buffer, 1, "a zero-capacity stream could never drain");
     }
 
     #[test]

@@ -17,31 +17,78 @@
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::VecDeque;
+use std::sync::mpsc::SyncSender;
 use std::time::{Duration, Instant};
+
+use crate::config::SamplingParams;
+
+/// Default request priority — the midpoint of the `u8` range, so callers
+/// can both boost and deprioritize relative to unmarked traffic.
+pub const PRIORITY_NORMAL: u8 = 100;
 
 /// One inference request (token ids, any length <= the model's seq_len).
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-assigned request id, echoed in the `Response`.
     pub id: u64,
+    /// Prompt token ids.
     pub tokens: Vec<i32>,
     /// Autoregressive decode request: how many tokens to generate from
     /// `tokens` as a prompt.  `0` = MLM predict-all-positions request;
     /// LM runners clamp it to at least 1 (`Server::generate`).
     pub gen_tokens: usize,
+    /// Arrival timestamp (admission-deadline and latency reference point).
     pub arrived: Instant,
+    /// QoS priority: higher admits sooner ([`PRIORITY_NORMAL`] default).
+    /// The session scheduler ages waiting requests so low priority means
+    /// *later*, never *never* (DESIGN.md §12).
+    pub priority: u8,
+    /// Admission deadline, as a time-to-live from `arrived`: a request
+    /// still **waiting (never admitted)** past this duration is answered
+    /// with a descriptive error instead of being served late.  Once
+    /// admitted, a request is never expired — accepted means served, even
+    /// across preemption.  `None` = wait indefinitely.
+    pub deadline: Option<Duration>,
+    /// Token-selection policy for this request (greedy default).
+    pub sampling: SamplingParams,
+    /// Per-token streaming channel: when set, the scheduler delivers each
+    /// generated token with a non-blocking send as soon as it is chosen
+    /// (the final `Response` still carries the full sequence, so a slow
+    /// consumer can always recover the tail).  `None` = finish-only.
+    pub stream: Option<SyncSender<i32>>,
+}
+
+impl Request {
+    /// A request with default QoS (normal priority, no deadline), greedy
+    /// sampling and finish-only delivery — override fields as needed.
+    pub fn new(id: u64, tokens: Vec<i32>, gen_tokens: usize) -> Self {
+        Request {
+            id,
+            tokens,
+            gen_tokens,
+            arrived: Instant::now(),
+            priority: PRIORITY_NORMAL,
+            deadline: None,
+            sampling: SamplingParams::default(),
+            stream: None,
+        }
+    }
 }
 
 /// A formed batch, FIFO order preserved.
 #[derive(Debug)]
 pub struct Batch {
+    /// The batched requests, in arrival (FIFO) order.
     pub requests: Vec<Request>,
 }
 
 impl Batch {
+    /// Number of requests in the batch.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// Whether the batch holds no requests.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
@@ -55,6 +102,8 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// A batcher that releases full batches of `max_batch` requests and
+    /// flushes partial ones once the oldest has waited `flush_after`.
     pub fn new(max_batch: usize, flush_after: Duration) -> Self {
         assert!(max_batch > 0);
         Batcher { queue: VecDeque::new(), max_batch, flush_after }
@@ -107,6 +156,7 @@ impl Batcher {
         Some(Batch { requests })
     }
 
+    /// Queued requests not yet released in a batch.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
@@ -118,7 +168,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> Request {
-        Request { id, tokens: vec![2, 5, 6], gen_tokens: 0, arrived: Instant::now() }
+        Request::new(id, vec![2, 5, 6], 0)
     }
 
     #[test]
@@ -165,9 +215,9 @@ mod tests {
         let mut b = Batcher::new(8, Duration::from_millis(50));
         assert!(b.next_deadline(Instant::now()).is_none());
         let t0 = Instant::now();
-        b.push(Request { id: 0, tokens: vec![2], gen_tokens: 0, arrived: t0 });
+        b.push(Request { arrived: t0, ..Request::new(0, vec![2], 0) });
         std::thread::sleep(Duration::from_millis(2));
-        b.push(Request { id: 1, tokens: vec![2], gen_tokens: 0, arrived: Instant::now() });
+        b.push(Request::new(1, vec![2], 0));
         // deadline follows the oldest request, not the newest
         let d = b.next_deadline(Instant::now()).unwrap();
         assert!(d <= Duration::from_millis(49), "{d:?}");

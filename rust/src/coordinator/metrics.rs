@@ -20,6 +20,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram (power-of-two microsecond buckets).
     pub fn new() -> Self {
         Histogram {
             buckets: (0..31).map(|_| AtomicU64::new(0)).collect(),
@@ -28,6 +29,7 @@ impl Histogram {
         }
     }
 
+    /// Record one duration (clamped into the top bucket).
     pub fn record(&self, d: Duration) {
         let us = d.as_micros().max(1) as u64;
         let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
@@ -36,10 +38,12 @@ impl Histogram {
         self.sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    /// Total samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean recorded latency in microseconds (`0.0` when empty).
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -75,11 +79,18 @@ impl Histogram {
 /// refreshed by the scheduler once per decode step.
 #[derive(Default)]
 pub struct Metrics {
+    /// End-to-end request latency (submit to response).
     pub request_latency: Histogram,
+    /// Per-batch (or per-step) execution latency of the worker body.
     pub batch_exec: Histogram,
+    /// Requests accepted into the serving queue.
     pub requests: AtomicU64,
+    /// Batches executed by the workers (fixed-round path).
     pub batches: AtomicU64,
+    /// Requests refused at ingress (full queue) or expired past their
+    /// admission deadline.
     pub rejected: AtomicU64,
+    /// Padding slots added to fill routed batch buckets.
     pub padded_slots: AtomicU64,
     // --- session-serving counters ---
     /// Sessions admitted by the scheduler (their prompt prefill may still
@@ -102,6 +113,16 @@ pub struct Metrics {
     /// Prompt tokens prefilled through chunks (radix-cached tokens are
     /// *not* counted — they were never recomputed).
     pub prefill_tokens: AtomicU64,
+    /// Tokens delivered on per-request stream channels (each generated
+    /// token is streamed at most once, preemption or not).
+    pub streamed_tokens: AtomicU64,
+    /// Non-blocking stream sends refused by a full channel (consumer
+    /// backpressure; the tokens retry next step, the scheduler never
+    /// blocks).
+    pub stream_stalls: AtomicU64,
+    /// Waiting requests expired past their admission deadline (answered
+    /// with a descriptive error, never silently dropped).
+    pub deadline_expired: AtomicU64,
     // --- session-serving gauges ---
     /// Page-pool capacity (constant once serving starts).
     pub pool_pages: AtomicU64,
@@ -123,19 +144,23 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh metrics with every counter and gauge at zero.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Count one accepted request.
     pub fn inc_requests(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one executed batch and the padding slots it carried.
     pub fn inc_batches(&self, padded: u64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.padded_slots.fetch_add(padded, Ordering::Relaxed);
     }
 
+    /// Count one refused (or deadline-expired) request.
     pub fn inc_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
@@ -199,7 +224,7 @@ impl Metrics {
         );
         if self.sessions.load(Ordering::Relaxed) > 0 {
             s.push_str(&format!(
-                " sessions={} preemptions={} prefix_hit_rate={:.2} prefix_hit_tokens={} gen_tokens={} steps={} prefill_chunks={} prefill_tokens={} pages={}/{} cache_pages={} running={} waiting={} prefilling={} prefill_backlog={}",
+                " sessions={} preemptions={} prefix_hit_rate={:.2} prefix_hit_tokens={} gen_tokens={} steps={} prefill_chunks={} prefill_tokens={} streamed={} stream_stalls={} expired={} pages={}/{} cache_pages={} running={} waiting={} prefilling={} prefill_backlog={}",
                 self.sessions.load(Ordering::Relaxed),
                 self.preemptions.load(Ordering::Relaxed),
                 self.prefix_hit_rate(),
@@ -208,6 +233,9 @@ impl Metrics {
                 self.decode_steps.load(Ordering::Relaxed),
                 self.prefill_chunks.load(Ordering::Relaxed),
                 self.prefill_tokens.load(Ordering::Relaxed),
+                self.streamed_tokens.load(Ordering::Relaxed),
+                self.stream_stalls.load(Ordering::Relaxed),
+                self.deadline_expired.load(Ordering::Relaxed),
                 self.free_pages.load(Ordering::Relaxed),
                 self.pool_pages.load(Ordering::Relaxed),
                 self.cache_pages.load(Ordering::Relaxed),
@@ -320,6 +348,19 @@ mod tests {
         assert!(s.contains("prefill_chunks=1"), "{s}");
         assert!(s.contains("prefill_tokens=48"), "{s}");
         assert!(s.contains("prefill_backlog=96"), "{s}");
+    }
+
+    #[test]
+    fn summary_surfaces_streaming_and_qos_counters() {
+        let m = Metrics::new();
+        m.sessions.fetch_add(1, Ordering::Relaxed);
+        m.streamed_tokens.fetch_add(9, Ordering::Relaxed);
+        m.stream_stalls.fetch_add(2, Ordering::Relaxed);
+        m.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("streamed=9"), "{s}");
+        assert!(s.contains("stream_stalls=2"), "{s}");
+        assert!(s.contains("expired=1"), "{s}");
     }
 
     #[test]

@@ -18,6 +18,12 @@
 //!   incremental decode).
 //! * [`trainer`] — training driver over the AOT `train_step` artifacts,
 //!   plus a native batched-engine evaluation fallback.
+//!
+//! This module is the crate's serving API surface, so every public item
+//! must carry documentation (`missing_docs` is enforced below and CI
+//! builds the docs with `-D warnings`).
+
+#![warn(missing_docs)]
 
 pub mod batcher;
 pub mod metrics;
@@ -27,10 +33,10 @@ pub mod scheduler;
 pub mod server;
 pub mod trainer;
 
-pub use batcher::{Batch, Batcher, Request};
+pub use batcher::{Batch, Batcher, Request, PRIORITY_NORMAL};
 pub use metrics::Metrics;
 pub use native::{LmSession, NativeLm, NativeMlm, NativeMlmConfig};
 pub use router::Router;
 pub use scheduler::SessionConfig;
-pub use server::Server;
+pub use server::{GenOptions, Response, Server, TokenStream};
 pub use trainer::Trainer;

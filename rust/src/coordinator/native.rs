@@ -10,7 +10,7 @@
 //! across runs and across engine thread counts (the MRA-2 parallel path is
 //! bitwise deterministic).
 //!
-//! Two heads share one weight core ([`NativeCore`]):
+//! Two heads share one weight core (the private `NativeCore`):
 //!
 //! * [`NativeMlm`] — bidirectional attention, per-position MLM argmax.
 //! * [`NativeLm`]  — causal attention: a batch scoring path through the
@@ -23,9 +23,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 
 use anyhow::{bail, Result};
 
+use crate::config::SamplingParams;
 use crate::data::corpus::MlmBatch;
 use crate::engine::{
-    kernel_by_name, pool, BatchedTensor, DecodeScratch, DecodeState, Engine, PagePool,
+    kernel_by_name, pool, BatchedTensor, DecodeScratch, DecodeState, DrawState, Engine, PagePool,
     PoolExhausted, RadixCache,
 };
 use crate::mra::Variant;
@@ -37,10 +38,15 @@ use crate::tensor::{kernel, mat::dot, ops, Mat, Rng};
 /// path).
 #[derive(Clone, Debug)]
 pub struct NativeMlmConfig {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Sequence length of the MLM forward (and LM context bound).
     pub seq_len: usize,
+    /// Model (embedding) width.
     pub d_model: usize,
+    /// Attention heads per layer.
     pub heads: usize,
+    /// Transformer layers.
     pub layers: usize,
     /// MRA-2 block size (clamped to divide `seq_len`).
     pub block: usize,
@@ -49,6 +55,7 @@ pub struct NativeMlmConfig {
     /// Attention kernel short name: `mra2`, `mra2s` or `exact` (the LM
     /// path maps these onto their `-causal` siblings).
     pub attention: String,
+    /// Seed all weights are derived from.
     pub seed: u64,
 }
 
@@ -277,10 +284,12 @@ impl NativeMlm {
         NativeMlm { core: NativeCore::new(cfg, threads, false) }
     }
 
+    /// Model configuration (as parsed from the tag).
     pub fn config(&self) -> &NativeMlmConfig {
         &self.core.cfg
     }
 
+    /// Short name of the attention kernel the engine runs.
     pub fn kernel_name(&self) -> String {
         self.core.engine.kernel_name()
     }
@@ -372,6 +381,17 @@ pub struct LmSession {
     /// append the same K/V rows twice and silently diverge.  Every
     /// further use asserts against this.
     poisoned: bool,
+    /// Token-selection policy (greedy by default; see
+    /// [`LmSession::set_sampling`]).
+    sampling: SamplingParams,
+    /// Counter-based RNG draw stream for stochastic selection.  Persisting
+    /// `(seed, draws)` and calling [`LmSession::restore_sampling`] after
+    /// recompute-on-readmit replays the identical token sequence.
+    draw: DrawState,
+    /// Candidate-index scratch for sampled selection (reused per step).
+    samp_idx: Vec<u32>,
+    /// Candidate-probability scratch for sampled selection.
+    samp_probs: Vec<f32>,
 }
 
 impl LmSession {
@@ -380,6 +400,7 @@ impl LmSession {
         self.len
     }
 
+    /// Whether the session holds no committed tokens yet.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -395,11 +416,103 @@ impl LmSession {
         &self.logits
     }
 
-    /// Greedy next token (argmax over [`LmSession::logits`]).
+    /// Greedy next token (argmax over [`LmSession::logits`]) — the
+    /// bitwise reference selection every correctness gate uses.
     pub fn next_token(&self) -> i32 {
         assert!(!self.poisoned, "session poisoned by pool exhaustion — discard and recompute");
         assert!(!self.logits.is_empty(), "session has no logits yet");
         ops::argmax(&self.logits) as i32
+    }
+
+    /// Install a token-selection policy; resets the RNG draw stream to
+    /// the start of `params.seed`'s sequence.  Greedy params make this
+    /// session bitwise identical to one that never called it.
+    pub fn set_sampling(&mut self, params: SamplingParams) {
+        self.sampling = params;
+        self.draw = DrawState::new(params.seed);
+    }
+
+    /// Install a policy with `draws` RNG draws already consumed — the
+    /// replay hook for recompute-on-readmit: after the generated suffix is
+    /// re-fed ([`NativeLm::extend_session`]), restoring `(params,
+    /// suffix_len)` makes every further [`LmSession::choose_token`] draw
+    /// the exact value it would have drawn without the preemption.
+    pub fn restore_sampling(&mut self, params: SamplingParams, draws: u64) {
+        self.sampling = params;
+        self.draw = DrawState::replay(params.seed, draws);
+    }
+
+    /// The session's token-selection policy.
+    pub fn sampling(&self) -> &SamplingParams {
+        &self.sampling
+    }
+
+    /// RNG draws consumed so far — equals the number of sampled tokens
+    /// chosen, the coherence invariant `Scheduler::verify` asserts.
+    pub fn draws(&self) -> u64 {
+        self.draw.draws()
+    }
+
+    /// Select the next token under the session's sampling policy: greedy
+    /// argmax when `temperature <= 0` (no RNG draw consumed — identical to
+    /// [`LmSession::next_token`]), otherwise temperature-scaled softmax
+    /// over the top-k / top-p candidate set, sampled with one
+    /// deterministic [`DrawState`] draw.
+    ///
+    /// Candidates are ordered by `(logit desc, index asc)` — a total
+    /// order, so ties cannot make replay diverge.  Selection reuses the
+    /// session's scratch buffers (allocation-free once warm).
+    pub fn choose_token(&mut self) -> i32 {
+        if self.sampling.is_greedy() {
+            return self.next_token();
+        }
+        assert!(!self.poisoned, "session poisoned by pool exhaustion — discard and recompute");
+        assert!(!self.logits.is_empty(), "session has no logits yet");
+        let params = self.sampling;
+        let logits = &self.logits;
+        let idx = &mut self.samp_idx;
+        let probs = &mut self.samp_probs;
+        idx.clear();
+        idx.extend(0..logits.len() as u32);
+        idx.sort_unstable_by(|&a, &b| {
+            logits[b as usize].total_cmp(&logits[a as usize]).then(a.cmp(&b))
+        });
+        let mut kept = idx.len();
+        if params.top_k > 0 {
+            kept = kept.min(params.top_k);
+        }
+        // temperature softmax over the kept prefix, max-subtracted for
+        // stability (idx[0] holds the max by construction)
+        let max_l = logits[idx[0] as usize];
+        let inv_t = 1.0 / params.temperature;
+        probs.clear();
+        probs.extend(idx[..kept].iter().map(|&i| ((logits[i as usize] - max_l) * inv_t).exp()));
+        // nucleus cut: smallest prefix reaching top_p of the kept mass
+        // (at least one candidate survives)
+        let mut cut = kept;
+        if params.top_p < 1.0 {
+            let total: f32 = probs.iter().sum();
+            let target = params.top_p * total;
+            let mut acc = 0.0f32;
+            for (i, &p) in probs.iter().enumerate() {
+                acc += p;
+                if acc >= target {
+                    cut = i + 1;
+                    break;
+                }
+            }
+        }
+        let mass: f32 = probs[..cut].iter().sum();
+        let u = self.draw.next_uniform() * mass;
+        let mut acc = 0.0f32;
+        for (i, &p) in probs[..cut].iter().enumerate() {
+            acc += p;
+            if u < acc {
+                return idx[i] as i32;
+            }
+        }
+        // float round-off can leave u a hair past the final prefix sum
+        idx[cut - 1] as i32
     }
 
     /// True once an advance failed with pool exhaustion: the session's
@@ -447,6 +560,12 @@ impl LmSession {
             len: self.len,
             cached_tokens: self.len,
             poisoned: false,
+            // forks continue the parent's draw sequence; call
+            // `set_sampling` to give a fork an independent stream
+            sampling: self.sampling,
+            draw: self.draw,
+            samp_idx: Vec::new(),
+            samp_probs: Vec::new(),
         }
     }
 }
@@ -485,10 +604,12 @@ impl NativeLm {
         NativeLm { core, decode_budget }
     }
 
+    /// Model configuration (as parsed from the tag).
     pub fn config(&self) -> &NativeMlmConfig {
         &self.core.cfg
     }
 
+    /// Short name of the (causal) attention kernel the engine runs.
     pub fn kernel_name(&self) -> String {
         self.core.engine.kernel_name()
     }
@@ -606,6 +727,10 @@ impl NativeLm {
             len: cached,
             cached_tokens: cached,
             poisoned: false,
+            sampling: SamplingParams::default(),
+            draw: DrawState::new(0),
+            samp_idx: Vec::new(),
+            samp_probs: Vec::new(),
         })
     }
 
@@ -658,7 +783,7 @@ impl NativeLm {
     /// at once — the engine-parallel prefill body.  Per layer:
     ///
     /// 1. one task per head projects the whole chunk's Q/K/V rows (the
-    ///    same [`row_project_into`] calls as the per-token path) and
+    ///    same `row_project_into` calls as the per-token path) and
     ///    bulk-appends K/V ([`DecodeState::try_append_rows`] — appends are
     ///    order-dependent within a stream, so this phase is sequential
     ///    per head but parallel across heads);
@@ -669,7 +794,7 @@ impl NativeLm {
     /// 3. residual + layer norm row by row.
     ///
     /// Each row's float sequence is identical to the per-token decode
-    /// body ([`NativeLm::advance_batch`]), so chunked prefill is **bitwise
+    /// body (`NativeLm::advance_batch`), so chunked prefill is **bitwise
     /// identical** to per-token prefill and to prefix recompute
     /// (property-tested).  Logits are projected only when `with_logits`
     /// (the final chunk of a prompt).
@@ -847,22 +972,24 @@ impl NativeLm {
         Ok(())
     }
 
-    /// One greedy decode step for a single session: commit the argmax
-    /// token, advance the caches, recompute logits.  Returns the emitted
-    /// token.  Bitwise identical to the same session stepping inside a
+    /// One decode step for a single session: commit the next token under
+    /// the session's sampling policy (greedy argmax by default), advance
+    /// the caches, recompute logits.  Returns the emitted token.  Bitwise
+    /// identical to the same session stepping inside a
     /// [`NativeLm::step_sessions`] batch.
     ///
     /// On a [`PoolExhausted`] error the session is **poisoned** and must
     /// be discarded and recomputed ([`LmSession::is_poisoned`]) — unlike
     /// [`DecodeState::try_append`], the multi-stream step is not atomic.
     pub fn session_step(&self, session: &mut LmSession) -> Result<i32> {
-        let tok = session.next_token();
+        let tok = session.choose_token();
         self.advance_session(session, tok, true)?;
         Ok(tok)
     }
 
     /// One continuous-batching decode step: every session commits its
-    /// greedy next token and advances one position, parallel over
+    /// next token (per its own sampling policy; greedy argmax by default)
+    /// and advances one position, parallel over
     /// `(session, head)` tasks on the engine pool (layers in lockstep).
     /// Per-session results: the emitted token, or [`PoolExhausted`] when
     /// that session could not get a page — the failed session's caches are
@@ -877,7 +1004,7 @@ impl NativeLm {
         &self,
         sessions: &mut [&mut LmSession],
     ) -> Vec<Result<i32, PoolExhausted>> {
-        let toks: Vec<i32> = sessions.iter().map(|s| s.next_token()).collect();
+        let toks: Vec<i32> = sessions.iter_mut().map(|s| s.choose_token()).collect();
         let results = self.advance_batch(sessions, &toks, true);
         results.into_iter().zip(toks).map(|(r, tok)| r.map(|()| tok)).collect()
     }
@@ -1005,6 +1132,33 @@ impl NativeLm {
         &self,
         prompt: &[i32],
         max_new: usize,
+        on_token: impl FnMut(usize, i32),
+    ) -> Result<Vec<i32>> {
+        self.generate_sampled_with(prompt, max_new, SamplingParams::default(), on_token)
+    }
+
+    /// Stochastic generation under `params` (see [`SamplingParams`]):
+    /// the unbatched reference for sampled serving — the scheduler's
+    /// preempt-and-replay path is asserted bitwise identical to this.
+    /// Greedy `params` reduce to [`NativeLm::generate`] exactly.
+    pub fn generate_sampled(
+        &self,
+        prompt: &[i32],
+        max_new: usize,
+        params: SamplingParams,
+    ) -> Result<Vec<i32>> {
+        self.generate_sampled_with(prompt, max_new, params, |_, _| {})
+    }
+
+    /// [`Self::generate_sampled`] with a per-token callback
+    /// `(position, token)` — the most general one-shot entry point; the
+    /// greedy and sampled generate paths are thin wrappers, so streaming
+    /// and finish-only delivery cannot drift apart.
+    pub fn generate_sampled_with(
+        &self,
+        prompt: &[i32],
+        max_new: usize,
+        params: SamplingParams,
         mut on_token: impl FnMut(usize, i32),
     ) -> Result<Vec<i32>> {
         let cfg = &self.core.cfg;
@@ -1021,9 +1175,10 @@ impl NativeLm {
         }
         let pool = PagePool::unbounded(cfg.block, self.d_head());
         let mut session = self.new_session(prompt, &pool, None)?;
+        session.set_sampling(params);
         let mut out = Vec::with_capacity(max_new);
         for gi in 0..max_new {
-            let next = session.next_token();
+            let next = session.choose_token();
             out.push(next);
             on_token(prompt.len() + gi, next);
             if gi + 1 < max_new {
@@ -1231,6 +1386,91 @@ mod tests {
         assert_eq!(streamed.iter().map(|&(_, t)| t).collect::<Vec<_>>(), toks);
         assert_eq!(streamed[0].0, 2); // first generated position
         assert_eq!(streamed[3].0, 5);
+    }
+
+    // ---- sampling -------------------------------------------------------
+
+    #[test]
+    fn sampled_generation_is_deterministic_for_a_seed() {
+        let model = NativeLm::new(small_cfg(), 2);
+        let params = SamplingParams { temperature: 0.9, top_k: 8, top_p: 0.95, seed: 13 };
+        let a = model.generate_sampled(&[2, 7, 9], 8, params).unwrap();
+        let b = model.generate_sampled(&[2, 7, 9], 8, params).unwrap();
+        assert_eq!(a, b, "same seed must reproduce the identical stream");
+        assert!(a.iter().all(|&t| t >= 0 && (t as usize) < 64));
+        // greedy params reduce to the bitwise reference path
+        let g = model.generate_sampled(&[2, 7, 9], 8, SamplingParams::default()).unwrap();
+        assert_eq!(g, model.generate(&[2, 7, 9], 8).unwrap());
+    }
+
+    #[test]
+    fn top_k_one_is_argmax_at_any_temperature() {
+        // candidates sort (logit desc, index asc), so top_k = 1 keeps
+        // exactly the argmax ops::argmax would return — a sharp check
+        // that sampled and greedy selection share one candidate order
+        let model = NativeLm::new(small_cfg(), 2);
+        let params = SamplingParams { temperature: 5.0, top_k: 1, top_p: 1.0, seed: 99 };
+        let sampled = model.generate_sampled(&[4, 11], 6, params).unwrap();
+        let greedy = model.generate(&[4, 11], 6).unwrap();
+        assert_eq!(sampled, greedy);
+    }
+
+    #[test]
+    fn greedy_choose_token_consumes_no_draws() {
+        let model = NativeLm::new(small_cfg(), 2);
+        let pool = model.new_page_pool(1024);
+        let mut sess = model.new_session(&[2, 7, 9], &pool, None).unwrap();
+        for _ in 0..4 {
+            model.session_step(&mut sess).unwrap();
+        }
+        assert_eq!(sess.draws(), 0, "greedy selection must not touch the RNG");
+        assert!(sess.sampling().is_greedy());
+    }
+
+    /// The replay contract behind preemption: restore `(params, k)` after
+    /// re-feeding the first `k` sampled tokens, and the remaining stream
+    /// is bitwise identical to the uninterrupted one — for random cut
+    /// points and random sampling knobs.
+    #[test]
+    fn sampled_replay_after_interruption_is_bitwise() {
+        use crate::proptest::for_all_seeds;
+        let model = NativeLm::new(small_cfg(), 2);
+        let prompt = vec![2i32, 8, 4, 19, 33, 5];
+        for_all_seeds(8, |seed, rng| {
+            let gen = 10usize;
+            let params = SamplingParams {
+                temperature: 0.5 + rng.uniform(),
+                top_k: [0usize, 4, 16][rng.below(3)],
+                top_p: 0.7 + 0.3 * rng.uniform(),
+                seed,
+            };
+            let full = model
+                .generate_sampled(&prompt, gen, params)
+                .map_err(|e| e.to_string())?;
+            let cut = 1 + rng.below(gen - 1);
+            // recompute-on-readmit: fresh caches over prompt + emitted
+            // prefix, RNG fast-forwarded to `cut` draws
+            let mut ext = prompt.clone();
+            ext.extend_from_slice(&full[..cut]);
+            let pool = model.new_page_pool(4096);
+            let mut sess =
+                model.new_session(&ext, &pool, None).map_err(|e| e.to_string())?;
+            sess.restore_sampling(params, cut as u64);
+            let mut tail = Vec::with_capacity(gen - cut);
+            for _ in cut..gen {
+                tail.push(model.session_step(&mut sess).map_err(|e| e.to_string())?);
+            }
+            if tail != full[cut..] {
+                return Err(format!(
+                    "replay diverged at cut {cut}: {tail:?} vs {:?}",
+                    &full[cut..]
+                ));
+            }
+            if sess.draws() != gen as u64 {
+                return Err(format!("draw count {} != {gen}", sess.draws()));
+            }
+            Ok(())
+        });
     }
 
     // ---- session-serving path -------------------------------------------

@@ -19,14 +19,19 @@ use crate::runtime::Manifest;
 /// Routing decision for one batch.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Route {
+    /// Artifact to execute (`fwd_<tag>_b<bucket>`).
     pub artifact: String,
+    /// Chosen batch bucket (slot count).
     pub bucket: usize,
+    /// Padding slots added to fill the bucket.
     pub padded_slots: usize,
 }
 
 /// Router over the `fwd_<tag>_b*` artifacts of one model.
 pub struct Router {
+    /// Model tag the router serves.
     pub tag: String,
+    /// Model sequence length (from the artifact config).
     pub seq_len: usize,
     /// Available batch buckets, ascending.
     buckets: Vec<usize>,
@@ -59,6 +64,7 @@ impl Router {
         Router { tag: tag.to_string(), seq_len, buckets }
     }
 
+    /// Largest available batch bucket.
     pub fn max_bucket(&self) -> usize {
         *self.buckets.last().unwrap()
     }

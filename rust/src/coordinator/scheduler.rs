@@ -11,8 +11,9 @@
 //!
 //! Prompt prefill is **chunked and interleaved** (Sarathi-style): an
 //! admitted session enters a `Prefilling` phase and each scheduler step
-//! spends a configurable token budget ([`SessionConfig::
-//! prefill_chunk_tokens`]) on block-aligned prefill chunks — run through
+//! spends a configurable token budget
+//! ([`SessionConfig::prefill_chunk_tokens`]) on block-aligned prefill
+//! chunks — run through
 //! the engine-parallel [`NativeLm::prefill_chunk`] path — *alongside* the
 //! one-token decode of the running set.  A 16k-token prompt therefore no
 //! longer freezes every running decode for its whole prefill; it
@@ -20,17 +21,38 @@
 //! Chunked prefill is bitwise identical to the historical per-token
 //! prefill (property-tested), so interleaving never changes outputs.
 //!
-//! State machine per request (DESIGN.md §9, §10):
+//! State machine per request (DESIGN.md §9, §10, §12):
 //!
 //! ```text
-//!          admit (pages >= est + watermark)    prefill complete
+//!          admit (pages >= est + watermark;    prefill complete
+//!          priority + aging order)
 //!  WAITING ---------------------------> PREFILLING ----------> RUNNING --+-- finished
-//!     ^                                        |                          |
-//!     |     preempt (pool pressure; youngest   |                          |
-//!     +---- first, generated tokens kept for --+--------------------------+
-//!     |     replay)
+//!     ^  |                                     |                          |
+//!     |  | deadline TTL elapses while never    |                          |
+//!     |  | admitted: descriptive error         |                          |
+//!     |  v                                     |                          |
+//!     |     preempt (pool pressure; lowest     |                          |
+//!     +---- priority then youngest; generated -+--------------------------+
+//!     |     tokens and stream cursor kept)
 //!     `-- shutdown: never-admitted waiters get a descriptive error
 //! ```
+//!
+//! **Streaming**: a request may carry a bounded per-token channel
+//! (`Request::stream`).  After every step the scheduler pushes each
+//! session's not-yet-delivered generated tokens with a *non-blocking*
+//! `try_send` — a slow consumer stalls only its own stream (the cursor
+//! holds and retries next step; the final `Response` always carries the
+//! full sequence, so the tail is never lost), and the scheduler never
+//! blocks on a client.  The delivery cursor survives preemption, so a
+//! replayed session resumes its stream silently: no token is ever
+//! streamed twice, none is skipped.
+//!
+//! **Sampling**: each request's `SamplingParams` are installed into its
+//! session at (re)admission.  Stochastic selection draws from a
+//! counter-based RNG (`crate::engine::DrawState`) whose cursor is
+//! restored to `generated.len()` on readmission — one draw per emitted
+//! token, so replay reproduces the identical stream (`Scheduler::verify`
+//! asserts this draw-count coherence every step).
 //!
 //! Memory control is page-based: the KV state of every session lives in
 //! one bounded [`PagePool`].  Admission requires the pool to hold a
@@ -44,17 +66,26 @@
 //! recompute-on-readmit is lossless (asserted in tests), and the radix
 //! prefix cache usually turns the replay into a page-sharing hit.
 //!
-//! Fairness: admission is strictly FIFO (head-of-line requests that can
-//! never fit the pool are rejected, not allowed to wedge the queue); the
+//! Fairness and QoS: admission picks the waiting request with the
+//! highest *effective* priority — `Request::priority` plus one point per
+//! [`SessionConfig::aging_steps`] scheduler steps waited, so low priority
+//! means later, never never — with preempted sessions resuming first
+//! (accepted means served) and FIFO order breaking exact ties.  The
+//! selected head is admitted or waited for, never bypassed (no
+//! starvation-by-overtaking of large requests); head-of-line requests
+//! that can never fit the pool are rejected, not allowed to wedge the
+//! queue, and waiting requests whose admission deadline (`Request::
+//! deadline`) elapses are answered with a descriptive error.  The
 //! prefill budget is spent oldest-admitted first; every decodable session
-//! gets exactly one token per step; preemption takes the youngest session
-//! so older sessions keep their progress.  On shutdown, requests still
-//! waiting for admission are answered with a descriptive error instead of
-//! having their responders dropped (a hung client); sessions that were
-//! already admitted (including preempted ones) still run to completion.
+//! gets exactly one token per step; preemption takes the lowest-priority,
+//! then youngest, session so high-priority and older sessions keep their
+//! progress.  On shutdown, requests still waiting for admission are
+//! answered with a descriptive error instead of having their responders
+//! dropped (a hung client); sessions that were already admitted
+//! (including preempted ones) still run to completion.
 //!
-//! State lives in the [`Scheduler`] struct, one phase per method, and
-//! every step ends in [`Scheduler::check_invariants`] (compiled under
+//! State lives in the crate-internal `Scheduler` struct, one phase per
+//! method, and every step ends in `Scheduler::check_invariants` (compiled under
 //! `debug_assertions` or the `paranoid` feature — see DESIGN.md §11):
 //! the page pool's conservation accounting, the radix tree's structure,
 //! and the scheduler's own queue/page arithmetic are machine-checked
@@ -67,7 +98,7 @@
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
 
 pub use crate::config::SessionConfig;
@@ -87,8 +118,16 @@ struct Pending {
     generated: Vec<i32>,
     /// True once this request has been admitted at least once (a
     /// preempted session awaiting readmission).  Admitted requests are
-    /// never shed at shutdown — accepted means served.
+    /// never shed at shutdown and never deadline-expired — accepted
+    /// means served.
     admitted: bool,
+    /// Stream-delivery cursor: `generated[..streamed]` has been sent on
+    /// the request's token channel.  Survives preemption so replay never
+    /// re-streams a token.
+    streamed: usize,
+    /// Scheduler step at which this entry (re)joined the waiting queue —
+    /// the reference point for priority aging.
+    enqueued_step: u64,
 }
 
 /// A request in the running set (prefilling or decoding).
@@ -101,8 +140,11 @@ struct Running {
     /// (request tokens + any pre-preemption generation to replay); the
     /// session's `len()` is the prefill cursor.  `None` once decoding.
     prefill: Option<Vec<i32>>,
-    /// Admission stamp; preemption evicts the largest (youngest).
+    /// Admission stamp; preemption evicts the lowest priority, then the
+    /// largest stamp (youngest).
     admitted_at: u64,
+    /// Stream-delivery cursor (see [`Pending::streamed`]).
+    streamed: usize,
 }
 
 impl Running {
@@ -139,6 +181,9 @@ pub(crate) struct Scheduler {
     block: usize,
     /// At least one block per step so prefill always progresses.
     chunk_budget: usize,
+    /// Monotone step counter — the clock priority aging reads.  Step-based
+    /// (not wall-clock) so QoS ordering is deterministic under test.
+    steps: u64,
 }
 
 /// The scheduler thread body: drains `ingress` until shutdown *and* all
@@ -174,6 +219,7 @@ impl Scheduler {
             seq_len,
             block,
             chunk_budget,
+            steps: 0,
         }
     }
 
@@ -206,11 +252,14 @@ impl Scheduler {
             }
         }
 
+        self.steps = self.steps.wrapping_add(1);
         self.shed_unadmitted_waiters();
+        self.expire_deadlines();
         self.admit();
         self.finish_ready();
 
         if self.running.is_empty() {
+            self.stream_progress();
             self.publish_gauges();
             self.check_invariants();
             return true;
@@ -219,13 +268,21 @@ impl Scheduler {
         let plan = self.plan_and_reserve();
         self.run_prefill_chunks(&plan);
         self.decode_step();
+        self.stream_progress();
         self.publish_gauges();
         self.check_invariants();
         true
     }
 
     fn enqueue(&mut self, req: Request, resp: Responder) {
-        self.waiting.push_back(Pending { req, resp, generated: Vec::new(), admitted: false });
+        self.waiting.push_back(Pending {
+            req,
+            resp,
+            generated: Vec::new(),
+            admitted: false,
+            streamed: 0,
+            enqueued_step: self.steps,
+        });
     }
 
     /// Shutdown shed (§bugfix): never-admitted waiters get a descriptive
@@ -252,13 +309,109 @@ impl Scheduler {
         });
     }
 
-    /// Admission: FIFO against the free-page watermark.
+    /// Deadline expiry: a waiting request whose admission TTL
+    /// (`Request::deadline`, measured from `Request::arrived`) elapses
+    /// before it is ever admitted is answered with a descriptive error —
+    /// a deadline-carrying client prefers a prompt refusal to a late
+    /// answer.  Preempted (once-admitted) requests are exempt: accepted
+    /// means served.
+    fn expire_deadlines(&mut self) {
+        let metrics = &self.metrics;
+        self.waiting.retain(|p| {
+            if p.admitted {
+                return true;
+            }
+            let Some(ttl) = p.req.deadline else { return true };
+            let waited = p.req.arrived.elapsed();
+            if waited < ttl {
+                return true;
+            }
+            metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            metrics.inc_rejected();
+            let _ = p.resp.send(Err(format!(
+                "request {} missed its {ttl:?} admission deadline after waiting \
+                 {waited:?} — raise the deadline, lower the load, or raise \
+                 sessions.total_pages",
+                p.req.id
+            )));
+            false
+        });
+    }
+
+    /// The waiting entry admission should try next: preempted sessions
+    /// first (accepted means served), then highest *effective* priority —
+    /// `Request::priority` plus one point per `SessionConfig::aging_steps`
+    /// steps spent waiting, so low priority means later, never never —
+    /// with queue order (earlier enqueue step, then earlier position)
+    /// breaking exact ties.  Every key component is deterministic, so the
+    /// admission sequence is reproducible under test.
+    fn pick_waiting(&self) -> Option<usize> {
+        use std::cmp::Reverse;
+        let aging = self.scfg.aging_steps as u64;
+        (0..self.waiting.len()).max_by_key(|&i| {
+            let p = &self.waiting[i];
+            let waited = self.steps.saturating_sub(p.enqueued_step);
+            let boost = if aging > 0 { waited / aging } else { 0 };
+            (p.admitted, (p.req.priority as u64).saturating_add(boost), Reverse(p.enqueued_step), Reverse(i))
+        })
+    }
+
+    /// Push `generated[*streamed..]` down a request's token channel with
+    /// non-blocking sends.  Full buffer: count a stall and retry next step
+    /// (the cursor holds, nothing is dropped).  Disconnected receiver:
+    /// forget the channel — the requester kept the `Response` path, which
+    /// always carries the full sequence.
+    fn stream_tokens(
+        metrics: &Metrics,
+        stream: &mut Option<SyncSender<i32>>,
+        generated: &[i32],
+        streamed: &mut usize,
+    ) {
+        let Some(tx) = stream.as_ref() else {
+            return;
+        };
+        while *streamed < generated.len() {
+            match tx.try_send(generated[*streamed]) {
+                Ok(()) => {
+                    *streamed += 1;
+                    metrics.streamed_tokens.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(TrySendError::Full(_)) => {
+                    metrics.stream_stalls.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    *stream = None;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Streaming phase: flush every session's undelivered tokens —
+    /// running sessions and preempted waiters alike (a preempted session's
+    /// already-generated tokens keep streaming while it waits for
+    /// readmission; the cursor guarantees its replay never re-sends one).
+    fn stream_progress(&mut self) {
+        for r in &mut self.running {
+            Self::stream_tokens(&self.metrics, &mut r.req.stream, &r.generated, &mut r.streamed);
+        }
+        for p in &mut self.waiting {
+            if p.admitted {
+                Self::stream_tokens(&self.metrics, &mut p.req.stream, &p.generated, &mut p.streamed);
+            }
+        }
+    }
+
+    /// Admission: highest effective priority first ([`Scheduler::
+    /// pick_waiting`]) against the free-page watermark.
     fn admit(&mut self) {
         while self.running.len() < self.scfg.max_running.max(1) {
-            // inspect the head; `est` is the page estimate the timing
+            // inspect the pick; `est` is the page estimate the timing
             // check uses, `reject` a terminal refusal for this request
+            let Some(bi) = self.pick_waiting() else { break };
             let (reject, est) = {
-                let Some(front) = self.waiting.front() else { break };
+                let Some(front) = self.waiting.get(bi) else { break };
                 let gen = front.req.gen_tokens.max(1);
                 if front.req.tokens.is_empty() {
                     (Some("empty prompt".to_string()), 0)
@@ -307,7 +460,7 @@ impl Scheduler {
                 }
             };
             if let Some(msg) = reject {
-                let Some(p) = self.waiting.pop_front() else { break };
+                let Some(p) = self.waiting.remove(bi) else { break };
                 self.metrics.inc_rejected();
                 let _ = p.resp.send(Err(msg));
                 continue;
@@ -319,10 +472,12 @@ impl Scheduler {
                     c.evict_lru(need);
                 }
                 if self.pool.free_pages() < est + self.scfg.free_watermark {
-                    break; // wait for running sessions to finish
+                    // the picked request waits; it is never bypassed by a
+                    // smaller one (no starvation-by-overtaking)
+                    break;
                 }
             }
-            let Some(mut p) = self.waiting.pop_front() else { break };
+            let Some(mut p) = self.waiting.remove(bi) else { break };
             // replay = prompt + any generation from before a preemption
             let mut prompt = p.req.tokens.clone();
             prompt.extend_from_slice(&p.generated);
@@ -330,7 +485,7 @@ impl Scheduler {
             // it only attaches the radix-cached prefix; the prompt then
             // prefills in budgeted chunks across the following steps
             match self.lm.begin_session(&prompt, &self.pool, self.cache.as_mut()) {
-                Ok(session) => {
+                Ok(mut session) => {
                     self.metrics.sessions.fetch_add(1, Ordering::Relaxed);
                     // readmissions of preempted sessions mostly re-find
                     // their *own* blocks — real recompute savings, but not
@@ -338,6 +493,17 @@ impl Scheduler {
                     // prefix-hit metrics
                     if p.generated.is_empty() {
                         self.metrics.record_prefix_lookup(session.cached_tokens());
+                    }
+                    // install the request's sampling policy; a readmitted
+                    // stochastic session fast-forwards its draw counter to
+                    // one draw per already-emitted token, so its replay
+                    // re-selects the identical sequence (greedy keeps the
+                    // counter at zero — `verify` asserts both)
+                    let params = p.req.sampling;
+                    if params.is_greedy() {
+                        session.set_sampling(params);
+                    } else {
+                        session.restore_sampling(params, p.generated.len() as u64);
                     }
                     self.admit_stamp += 1;
                     self.running.push(Running {
@@ -347,6 +513,7 @@ impl Scheduler {
                         generated: std::mem::take(&mut p.generated),
                         prefill: Some(prompt),
                         admitted_at: self.admit_stamp,
+                        streamed: p.streamed,
                     });
                 }
                 Err(e) => {
@@ -368,8 +535,12 @@ impl Scheduler {
                 && self.running[i].generated.len() + 1 >= self.running[i].target_tokens()
             {
                 let mut r = self.running.remove(i);
-                r.generated.push(r.session.next_token());
+                r.generated.push(r.session.choose_token());
                 self.metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                // best-effort final flush; the sender drops with `r`, so a
+                // streaming consumer sees end-of-stream and recovers any
+                // unflushed tail from the Response's full sequence
+                Self::stream_tokens(&self.metrics, &mut r.req.stream, &r.generated, &mut r.streamed);
                 let latency = r.req.arrived.elapsed();
                 self.metrics.request_latency.record(latency);
                 let _ = r.resp.send(Ok(Response {
@@ -383,7 +554,19 @@ impl Scheduler {
         }
     }
 
-    /// Plan + reserve this step (evict, then preempt youngest).  The
+    /// The running session preemption takes when pages run short: lowest
+    /// request priority first, youngest admission stamp breaking ties —
+    /// high-priority and long-resident sessions keep their progress.
+    fn preempt_victim(&self) -> Option<usize> {
+        self.running
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| (r.req.priority, std::cmp::Reverse(r.admitted_at)))
+            .map(|(i, _)| i)
+    }
+
+    /// Plan + reserve this step (evict, then preempt lowest-priority,
+    /// youngest — [`Scheduler::preempt_victim`]).  The
     /// prefill plan is pure arithmetic, so it can be recomputed after
     /// every preemption until the step's page demand fits: one
     /// block-aligned chunk per prefilling session (oldest first) from
@@ -442,13 +625,7 @@ impl Scheduler {
                 // PoolExhausted and the session is preempted whole
                 return plan;
             }
-            let Some(vi) = self
-                .running
-                .iter()
-                .enumerate()
-                .max_by_key(|(_, r)| r.admitted_at)
-                .map(|(i, _)| i)
-            else {
+            let Some(vi) = self.preempt_victim() else {
                 return plan;
             };
             let victim = self.running.swap_remove(vi);
@@ -458,6 +635,8 @@ impl Scheduler {
                 resp: victim.resp,
                 generated: victim.generated,
                 admitted: true,
+                streamed: victim.streamed,
+                enqueued_step: self.steps,
             });
             // victim.session drops here; its exclusive pages return
         }
@@ -508,6 +687,8 @@ impl Scheduler {
                     resp: r.resp,
                     generated: r.generated,
                     admitted: true,
+                    streamed: r.streamed,
+                    enqueued_step: self.steps,
                 });
             } else {
                 self.metrics.inc_rejected();
@@ -562,6 +743,8 @@ impl Scheduler {
                 resp: r.resp,
                 generated: r.generated,
                 admitted: true,
+                streamed: r.streamed,
+                enqueued_step: self.steps,
             });
         }
     }
@@ -605,7 +788,15 @@ impl Scheduler {
     ///   counter; running sessions are within `seq_len`, unfinished, and
     ///   phase-consistent (prefill cursor inside the replay prompt;
     ///   decode phase has logits to emit); never-admitted waiters carry
-    ///   no generated tokens.
+    ///   no generated tokens;
+    /// * **draw-count coherence** — a stochastic session has consumed
+    ///   exactly one RNG draw per generated token (the replay-safety
+    ///   contract: a readmitted session's fast-forwarded counter lands on
+    ///   the same value), and a greedy session has consumed none;
+    /// * **stream cursors** — never past the generated sequence, on
+    ///   running sessions and preempted waiters alike (a cursor beyond
+    ///   `generated` would mean a token was streamed that was never
+    ///   generated — or would double-stream after replay).
     pub(crate) fn verify(&self) -> Result<(), String> {
         self.pool.verify().map_err(|e| format!("page pool: {e}"))?;
         if let Some(c) = self.cache.as_ref() {
@@ -681,6 +872,27 @@ impl Scheduler {
                     r.target_tokens()
                 ));
             }
+            let want_draws =
+                if r.req.sampling.is_greedy() { 0 } else { r.generated.len() as u64 };
+            if r.session.draws() != want_draws {
+                return Err(format!(
+                    "request {}: draw-count incoherence — session consumed {} RNG \
+                     draw(s) but {} generated token(s) require exactly {} (replay \
+                     would diverge)",
+                    r.req.id,
+                    r.session.draws(),
+                    r.generated.len(),
+                    want_draws
+                ));
+            }
+            if r.streamed > r.generated.len() {
+                return Err(format!(
+                    "request {}: stream cursor {} past the {} generated token(s)",
+                    r.req.id,
+                    r.streamed,
+                    r.generated.len()
+                ));
+            }
             match r.prefill.as_ref() {
                 Some(p) => {
                     if r.session.len() > p.len() {
@@ -725,6 +937,14 @@ impl Scheduler {
                     p.generated.len()
                 ));
             }
+            if p.streamed > p.generated.len() {
+                return Err(format!(
+                    "request {}: waiting stream cursor {} past the {} generated token(s)",
+                    p.req.id,
+                    p.streamed,
+                    p.generated.len()
+                ));
+            }
         }
         Ok(())
     }
@@ -747,9 +967,11 @@ impl Scheduler {
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+    use crate::config::SamplingParams;
+    use crate::coordinator::batcher::PRIORITY_NORMAL;
     use crate::coordinator::native::NativeMlmConfig;
     use std::sync::mpsc::{channel, sync_channel, SyncSender};
-    use std::time::Instant;
+    use std::time::Duration;
 
     fn small_cfg() -> NativeMlmConfig {
         NativeMlmConfig {
@@ -782,14 +1004,37 @@ mod tests {
         prompt: Vec<i32>,
         gen: usize,
     ) -> std::sync::mpsc::Receiver<Result<Response, String>> {
+        send_req_cfg(tx, Request::new(id, prompt, gen))
+    }
+
+    /// `send_req` for a caller-built request (priority / deadline /
+    /// sampling / stream fields set).
+    fn send_req_cfg(
+        tx: &SyncSender<Ingress>,
+        req: Request,
+    ) -> std::sync::mpsc::Receiver<Result<Response, String>> {
         let (rtx, rrx) = channel();
-        let req = Request { id, tokens: prompt, gen_tokens: gen, arrived: Instant::now() };
         tx.send(Ingress::Req(req, rtx)).unwrap();
         rrx
     }
 
     fn prompt(seed: usize, len: usize) -> Vec<i32> {
         (0..len).map(|i| (2 + (seed * 13 + i * 7) % 60) as i32).collect()
+    }
+
+    /// A `Pending` waiting-queue entry for direct `pick_waiting` /
+    /// `expire_deadlines` unit tests.
+    fn pending_entry(id: u64, priority: u8, enqueued_step: u64) -> Pending {
+        let (rtx, rrx) = channel();
+        std::mem::forget(rrx); // keep the responder sendable
+        Pending {
+            req: Request { priority, ..Request::new(id, vec![2, 3], 2) },
+            resp: rtx,
+            generated: Vec::new(),
+            admitted: false,
+            streamed: 0,
+            enqueued_step,
+        }
     }
 
     /// A `Running` entry for direct injection into a scheduler under
@@ -799,12 +1044,13 @@ mod tests {
         std::mem::forget(rrx); // keep the responder sendable
         let prefill = Some(tokens.clone());
         Running {
-            req: Request { id, tokens, gen_tokens: 4, arrived: Instant::now() },
+            req: Request::new(id, tokens, 4),
             resp: rtx,
             session,
             generated: Vec::new(),
             prefill,
             admitted_at,
+            streamed: 0,
         }
     }
 
@@ -870,6 +1116,7 @@ mod tests {
             max_running: 8,
             prefix_cache: false,
             prefill_chunk_tokens: 256,
+            ..Default::default()
         };
         let lm = Arc::new(NativeLm::new(small_cfg(), 2));
         let metrics = Arc::new(Metrics::new());
@@ -916,6 +1163,7 @@ mod tests {
             max_running: 8,
             prefix_cache: false,
             prefill_chunk_tokens: 16,
+            ..Default::default()
         };
         let lm = Arc::new(NativeLm::new(small_cfg(), 2));
         let metrics = Arc::new(Metrics::new());
@@ -994,6 +1242,7 @@ mod tests {
             max_running: 4,
             prefix_cache: true,
             prefill_chunk_tokens: 256,
+            ..Default::default()
         };
         let (tx, _lm, _metrics, handle) = spawn_scheduler(scfg);
         // est = 2 streams * ceil(48/16) = 6 pages > 4 - watermark
@@ -1017,6 +1266,7 @@ mod tests {
             max_running: 4,
             prefix_cache: true,
             prefill_chunk_tokens: 16,
+            ..Default::default()
         };
         let lm = Arc::new(NativeLm::new(small_cfg(), 1));
         let metrics = Arc::new(Metrics::new());
@@ -1055,6 +1305,7 @@ mod tests {
             max_running: 4,
             prefix_cache: false,
             prefill_chunk_tokens: 64,
+            ..Default::default()
         };
         let lm = Arc::new(NativeLm::new(small_cfg(), 1));
         let mut sched = Scheduler::new(lm.clone(), scfg, Arc::new(Metrics::new()));
@@ -1092,6 +1343,7 @@ mod tests {
             max_running: 4,
             prefix_cache: false,
             prefill_chunk_tokens: 256,
+            ..Default::default()
         };
         let lm = Arc::new(NativeLm::new(small_cfg(), 1));
         let mut sched = Scheduler::new(lm.clone(), scfg, Arc::new(Metrics::new()));
@@ -1126,5 +1378,289 @@ mod tests {
         let mut torn = lm.begin_session(&p, &tiny, None).unwrap();
         assert_eq!(lm.prefill_chunk(&mut torn, &p, true).unwrap_err(), PoolExhausted);
         assert!(torn.is_poisoned(), "mid-chunk exhaustion must poison the session");
+    }
+
+    // ---- streaming, sampling and QoS --------------------------------
+
+    #[test]
+    fn streaming_delivers_exactly_the_response_tokens_in_order() {
+        let scfg = SessionConfig { total_pages: 512, free_watermark: 8, ..Default::default() };
+        let (tx, lm, metrics, handle) = spawn_scheduler(scfg);
+        let p = prompt(0, 8);
+        let (stx, srx) = sync_channel::<i32>(64);
+        let rx = send_req_cfg(&tx, Request { stream: Some(stx), ..Request::new(0, p.clone(), 6) });
+        // the sender drops when the request finishes, ending the iterator
+        let streamed: Vec<i32> = srx.iter().collect();
+        let resp = rx.recv().unwrap().expect("streamed response");
+        assert_eq!(streamed, resp.predictions, "stream must carry the full sequence, in order");
+        assert_eq!(resp.predictions, lm.generate(&p, 6).unwrap(), "streaming changed the output");
+        tx.send(Ingress::Shutdown).unwrap();
+        handle.join().unwrap();
+        assert_eq!(metrics.streamed_tokens.load(Ordering::Relaxed), 6, "{}", metrics.summary());
+    }
+
+    #[test]
+    fn priority_orders_service_under_a_serial_bottleneck() {
+        // max_running = 1 serializes service; all three requests are
+        // queued before the first step, so completion order is exactly
+        // admission order.  FIFO would serve 0, 1, 2 — priority must
+        // serve 2 (high), 1 (normal), 0 (low).
+        let scfg = SessionConfig {
+            total_pages: 512,
+            free_watermark: 0,
+            max_running: 1,
+            prefix_cache: false,
+            prefill_chunk_tokens: 256,
+            ..Default::default()
+        };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 1));
+        let mut sched = Scheduler::new(lm, scfg, Arc::new(Metrics::new()));
+        let (tx, rx) = sync_channel::<Ingress>(8);
+        let low = send_req_cfg(&tx, Request { priority: 10, ..Request::new(0, prompt(0, 8), 3) });
+        let norm = send_req_cfg(&tx, Request::new(1, prompt(1, 8), 3));
+        let high = send_req_cfg(&tx, Request { priority: 200, ..Request::new(2, prompt(2, 8), 3) });
+        let mut order: Vec<u64> = Vec::new();
+        for _ in 0..100 {
+            if order.len() == 3 {
+                break;
+            }
+            assert!(sched.step(&rx), "work remains");
+            for (id, rxr) in [(0u64, &low), (1, &norm), (2, &high)] {
+                if let Ok(resp) = rxr.try_recv() {
+                    resp.expect("served");
+                    order.push(id);
+                }
+            }
+        }
+        assert_eq!(order, vec![2, 1, 0], "service order must follow priority, not FIFO");
+        tx.send(Ingress::Shutdown).unwrap();
+        while sched.step(&rx) {}
+    }
+
+    #[test]
+    fn aging_lifts_a_starved_low_priority_request_over_fresh_arrivals() {
+        let scfg = SessionConfig { aging_steps: 4, ..Default::default() };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 1));
+        let mut sched = Scheduler::new(lm, scfg, Arc::new(Metrics::new()));
+        // not yet aged past a fresh normal-priority arrival
+        sched.steps = 36; // low has waited 36 steps: boost 36/4 = 9 -> 99
+        sched.waiting.push_back(pending_entry(0, 90, 0));
+        sched.waiting.push_back(pending_entry(1, PRIORITY_NORMAL, 36));
+        assert_eq!(sched.pick_waiting(), Some(1), "priority still outranks a young wait");
+        // 8 steps later the boost reaches +11 -> 101 > any fresh normal
+        sched.waiting.clear();
+        sched.steps = 44;
+        sched.waiting.push_back(pending_entry(0, 90, 0));
+        sched.waiting.push_back(pending_entry(1, PRIORITY_NORMAL, 44));
+        assert_eq!(sched.pick_waiting(), Some(0), "aging must lift the starved request");
+        // a preempted (admitted) session resumes before any fresh arrival,
+        // regardless of priority — accepted means served
+        let mut preempted = pending_entry(2, 0, 44);
+        preempted.admitted = true;
+        sched.waiting.push_back(preempted);
+        assert_eq!(sched.pick_waiting(), Some(2), "preempted sessions resume first");
+        // exact ties fall back to queue order (earlier enqueue step wins)
+        sched.waiting.clear();
+        sched.waiting.push_back(pending_entry(3, PRIORITY_NORMAL, 40));
+        sched.waiting.push_back(pending_entry(4, PRIORITY_NORMAL, 38));
+        assert_eq!(sched.pick_waiting(), Some(1), "FIFO breaks exact priority ties");
+    }
+
+    #[test]
+    fn deadline_expires_only_never_admitted_waiters() {
+        // max_running = 1: request 0 is admitted first (FIFO tie-break),
+        // request 1 with a zero TTL can never be admitted before its
+        // deadline check and must be answered with a descriptive error.
+        let scfg = SessionConfig {
+            total_pages: 512,
+            free_watermark: 0,
+            max_running: 1,
+            prefix_cache: false,
+            prefill_chunk_tokens: 256,
+            ..Default::default()
+        };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 1));
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(lm.clone(), scfg, metrics.clone());
+        let (tx, rx) = sync_channel::<Ingress>(8);
+        let ra = send_req(&tx, 0, prompt(0, 8), 4);
+        let rb = send_req_cfg(
+            &tx,
+            Request { deadline: Some(Duration::ZERO), ..Request::new(1, prompt(1, 8), 4) },
+        );
+        let mut served = None;
+        for _ in 0..100 {
+            assert!(sched.step(&rx), "work remains");
+            if let Ok(resp) = ra.try_recv() {
+                served = Some(resp.expect("undeadlined request served"));
+                break;
+            }
+        }
+        let served = served.expect("request 0 must finish");
+        assert_eq!(served.predictions, lm.generate(&prompt(0, 8), 4).unwrap());
+        let err = rb.recv().unwrap().unwrap_err();
+        assert!(err.contains("deadline") && err.contains('1'), "{err}");
+        assert_eq!(metrics.deadline_expired.load(Ordering::Relaxed), 1);
+        // once admitted, a deadline never expires a request — accepted
+        // means served, even while preempted with an elapsed TTL
+        let mut preempted = pending_entry(9, PRIORITY_NORMAL, 0);
+        preempted.req.deadline = Some(Duration::ZERO);
+        preempted.admitted = true;
+        preempted.generated.push(5);
+        sched.waiting.push_back(preempted);
+        sched.expire_deadlines();
+        assert_eq!(sched.waiting.len(), 1, "admitted requests are never expired");
+        assert_eq!(metrics.deadline_expired.load(Ordering::Relaxed), 1, "counter unchanged");
+        sched.waiting.clear();
+        tx.send(Ingress::Shutdown).unwrap();
+        while sched.step(&rx) {}
+    }
+
+    #[test]
+    fn preemption_takes_the_lowest_priority_then_the_youngest() {
+        let scfg = SessionConfig {
+            total_pages: 64,
+            free_watermark: 0,
+            max_running: 4,
+            prefix_cache: false,
+            prefill_chunk_tokens: 64,
+            ..Default::default()
+        };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 1));
+        let mut sched = Scheduler::new(lm.clone(), scfg, Arc::new(Metrics::new()));
+        let s0 = lm.begin_session(&prompt(0, 8), &sched.pool, None).unwrap();
+        let s1 = lm.begin_session(&prompt(1, 8), &sched.pool, None).unwrap();
+        let s2 = lm.begin_session(&prompt(2, 8), &sched.pool, None).unwrap();
+        sched.admit_stamp = 3;
+        let mut high = running_entry(0, prompt(0, 8), s0, 1);
+        high.req.priority = 200;
+        sched.running.push(high);
+        sched.running.push(running_entry(1, prompt(1, 8), s1, 2));
+        sched.running.push(running_entry(2, prompt(2, 8), s2, 3));
+        sched.verify().expect("constructed running set is consistent");
+        assert_eq!(
+            sched.preempt_victim(),
+            Some(2),
+            "equal priority: the youngest admission is the victim"
+        );
+        sched.running[1].req.priority = 50;
+        assert_eq!(
+            sched.preempt_victim(),
+            Some(1),
+            "a lower priority session is preempted before younger, higher-priority ones"
+        );
+    }
+
+    #[test]
+    fn verify_reports_draw_incoherence_and_stream_cursor_overrun() {
+        let scfg = SessionConfig {
+            total_pages: 64,
+            free_watermark: 0,
+            max_running: 4,
+            prefix_cache: false,
+            prefill_chunk_tokens: 64,
+            ..Default::default()
+        };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 1));
+        let mut sched = Scheduler::new(lm.clone(), scfg, Arc::new(Metrics::new()));
+        let p = prompt(0, 16);
+        // full prefill so the entry passes the decode-phase logits check
+        let session = lm.new_session(&p, &sched.pool, None).unwrap();
+        sched.admit_stamp = 1;
+        let mut entry = running_entry(0, p, session, 1);
+        entry.prefill = None;
+        entry.generated.push(5);
+        sched.running.push(entry);
+        // greedy with zero draws and one generated token: coherent
+        sched.verify().expect("greedy session with zero draws is coherent");
+        // stochastic sampling demands one draw per generated token
+        let params = SamplingParams { temperature: 0.7, seed: 3, ..Default::default() };
+        sched.running[0].req.sampling = params;
+        let msg = sched.verify().unwrap_err();
+        assert!(msg.contains("draw"), "{msg}");
+        // fast-forwarding the counter to generated.len() restores coherence
+        sched.running[0].session.restore_sampling(params, 1);
+        sched.verify().expect("restored draw counter is coherent");
+        // a stream cursor past the generated sequence is corruption
+        sched.running[0].streamed = 3;
+        let msg = sched.verify().unwrap_err();
+        assert!(msg.contains("stream cursor"), "{msg}");
+    }
+
+    /// The tentpole property: sampled, streamed generation under a pool
+    /// tight enough to force preemption (a) matches the un-preempted
+    /// `generate_sampled` reference bitwise — the fast-forwarded draw
+    /// counter replays the identical stochastic choices — and (b) every
+    /// token observed on a stream is an in-order prefix token of the
+    /// final sequence: none duplicated across preempt/replay, none
+    /// skipped, even with tiny stream buffers forcing retries.
+    #[test]
+    fn sampled_streaming_replays_bitwise_under_random_preemption() {
+        use crate::proptest::for_all_seeds;
+        for_all_seeds(6, |_, rng| {
+            let scfg = SessionConfig {
+                total_pages: 10,
+                free_watermark: 0,
+                max_running: 8,
+                prefix_cache: false,
+                prefill_chunk_tokens: 256,
+                ..Default::default()
+            };
+            let lm = Arc::new(NativeLm::new(small_cfg(), 2));
+            let metrics = Arc::new(Metrics::new());
+            let (tx, rx) = sync_channel::<Ingress>(64);
+            let mut cases = Vec::new();
+            let mut consumers = Vec::new();
+            let mut receivers = Vec::new();
+            for i in 0..5u64 {
+                let p = prompt(i as usize, 16);
+                let sampling = if rng.below(3) == 0 {
+                    SamplingParams::default() // greedy mixes with sampled
+                } else {
+                    SamplingParams {
+                        temperature: 0.5 + rng.uniform(),
+                        top_k: [0usize, 4, 16][rng.below(3)],
+                        top_p: 0.7 + 0.3 * rng.uniform(),
+                        seed: rng.next_u64(),
+                    }
+                };
+                let (stx, srx) = sync_channel::<i32>(1 + rng.below(3));
+                consumers.push(std::thread::spawn(move || srx.iter().collect::<Vec<i32>>()));
+                receivers.push(send_req_cfg(
+                    &tx,
+                    Request { sampling, stream: Some(stx), ..Request::new(i, p.clone(), 6) },
+                ));
+                cases.push((p, sampling));
+            }
+            let (lm2, m2) = (lm.clone(), metrics.clone());
+            let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2));
+            for (((p, sampling), rxr), consumer) in
+                cases.iter().zip(receivers).zip(consumers)
+            {
+                let resp = rxr.recv().unwrap().expect("served under memory pressure");
+                let want = lm.generate_sampled(p, 6, *sampling).unwrap();
+                if resp.predictions != want {
+                    return Err(format!(
+                        "preempt/replay diverged: {:?} != {:?} under {sampling:?}",
+                        resp.predictions, want
+                    ));
+                }
+                let streamed = consumer.join().unwrap();
+                if streamed.len() > resp.predictions.len()
+                    || streamed != resp.predictions[..streamed.len()]
+                {
+                    return Err(format!(
+                        "streamed {streamed:?} is not a prefix of {:?} (dup/drop/reorder)",
+                        resp.predictions
+                    ));
+                }
+            }
+            tx.send(Ingress::Shutdown).unwrap();
+            handle.join().unwrap();
+            if metrics.preemptions.load(Ordering::Relaxed) < 1 {
+                return Err("the 10-page pool must force at least one preemption".into());
+            }
+            Ok(())
+        });
     }
 }

@@ -9,7 +9,7 @@
 //!     `-- backpressure: TrySendError => Busy                ...
 //! ```
 //!
-//! Workers execute batches through a [`BatchRunner`]: the AOT artifact
+//! Workers execute batches through a `BatchRunner`: the AOT artifact
 //! path (PJRT runtime + bucket router, [`Server::start`]), the native MLM
 //! fallback ([`Server::start_native`]) that routes the batch through the
 //! parallel batched engine when `artifacts/` is absent, or the native
@@ -22,6 +22,14 @@
 //! the continuous-batching session scheduler
 //! ([`crate::coordinator::scheduler`]) — paged KV cache, radix prefix
 //! sharing, per-step join/leave — behind the same submit API.
+//!
+//! Generation supports **per-token streaming**: [`Server::generate_stream`]
+//! returns a [`TokenStream`] whose tokens arrive as they are decoded (a
+//! bounded channel; the scheduler never blocks on a slow consumer), and
+//! [`GenOptions`] carries the per-request QoS (priority, admission
+//! deadline) and [`SamplingParams`] knobs.  Both serving backends honor
+//! the same options; outputs under greedy sampling are bitwise identical
+//! to the finish-only [`Server::generate`] path.
 
 // a panic in the batcher or a worker drops every responder it holds and
 // hangs the waiting clients — request paths handle errors, they don't
@@ -36,8 +44,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::ServeConfig;
-use crate::coordinator::batcher::{Batch, Batcher, Request};
+use crate::config::{SamplingParams, ServeConfig};
+use crate::coordinator::batcher::{Batch, Batcher, Request, PRIORITY_NORMAL};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::native::{NativeLm, NativeMlm, NativeMlmConfig};
 use crate::coordinator::router::Router;
@@ -48,8 +56,13 @@ use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
 /// autoregressive requests ([`Server::generate`]).
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Server-assigned request id.
     pub id: u64,
+    /// Predicted token ids — the full generated sequence for generation
+    /// requests (even when tokens were also streamed), per-position
+    /// predictions for MLM requests.
     pub predictions: Vec<i32>,
+    /// Submission-to-completion latency.
     pub latency: Duration,
 }
 
@@ -58,6 +71,130 @@ pub(crate) type Responder = Sender<Result<Response, String>>;
 pub(crate) enum Ingress {
     Req(Request, Responder),
     Shutdown,
+}
+
+/// Per-request generation options: decode length, QoS and sampling.
+///
+/// Built fluently: `GenOptions::new(16).priority(200).sampling(params)`.
+#[derive(Clone, Debug)]
+pub struct GenOptions {
+    /// Tokens to generate (clamped to at least 1).
+    pub max_new: usize,
+    /// QoS priority — higher admits sooner ([`PRIORITY_NORMAL`] default);
+    /// the session scheduler ages waiters so low never means never.
+    pub priority: u8,
+    /// Admission deadline (time-to-live while waiting, `None` = wait
+    /// indefinitely).  Only the session scheduler enforces it.
+    pub deadline: Option<Duration>,
+    /// Token-selection override; `None` uses the server's default policy
+    /// (`sessions.sampling` on the session server, greedy elsewhere).
+    pub sampling: Option<SamplingParams>,
+}
+
+impl GenOptions {
+    /// Options for `max_new` tokens with default QoS and sampling.
+    pub fn new(max_new: usize) -> Self {
+        GenOptions { max_new, priority: PRIORITY_NORMAL, deadline: None, sampling: None }
+    }
+
+    /// Set the QoS priority.
+    pub fn priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set the admission deadline.
+    pub fn deadline(mut self, ttl: Duration) -> Self {
+        self.deadline = Some(ttl);
+        self
+    }
+
+    /// Set the token-selection policy.
+    pub fn sampling(mut self, params: SamplingParams) -> Self {
+        self.sampling = Some(params);
+        self
+    }
+}
+
+/// Handle to an in-flight streaming generation request
+/// ([`Server::generate_stream`]).
+///
+/// Iterate it (or call [`TokenStream::next_token`]) to receive tokens as
+/// they are decoded; call [`TokenStream::wait`] for the final
+/// [`Response`].  Every generated token is yielded **exactly once**, in
+/// order: tokens the server could not stream before the request finished
+/// (slow consumer, tiny buffer) are recovered from the response's full
+/// sequence, and a preempted-and-replayed session resumes its stream
+/// without duplicating a token.
+pub struct TokenStream {
+    tokens: Receiver<i32>,
+    done: Receiver<Result<Response, String>>,
+    /// Tokens already yielded to the consumer (stream + recovered tail).
+    yielded: usize,
+    /// The resolved terminal result, once observed.
+    finished: Option<Result<Response, String>>,
+}
+
+impl TokenStream {
+    /// Blocking receive of the next token; `None` once the request has
+    /// finished and every generated token has been yielded.  A request
+    /// that failed (rejected, expired, shut down) ends the stream early —
+    /// [`TokenStream::wait`] returns the error.
+    pub fn next_token(&mut self) -> Option<i32> {
+        if self.finished.is_none() {
+            if let Ok(t) = self.tokens.recv() {
+                self.yielded += 1;
+                return Some(t);
+            }
+        }
+        // channel closed: the request left the server.  Drain any tokens
+        // still buffered, then serve the unstreamed tail from the final
+        // response so the stream always yields the complete sequence.
+        if let Ok(t) = self.tokens.try_recv() {
+            self.yielded += 1;
+            return Some(t);
+        }
+        match self.resolve() {
+            Ok(r) if self.yielded < r.predictions.len() => {
+                let t = r.predictions[self.yielded];
+                self.yielded += 1;
+                Some(t)
+            }
+            _ => None,
+        }
+    }
+
+    /// Block until the request completes and return the final
+    /// [`Response`] (its `predictions` always hold the full sequence,
+    /// independent of how many tokens were streamed).
+    pub fn wait(mut self) -> Result<Response> {
+        self.resolve();
+        match self.finished.take() {
+            Some(Ok(r)) => Ok(r),
+            Some(Err(e)) => Err(anyhow::anyhow!(e)),
+            None => bail!("server dropped the request"),
+        }
+    }
+
+    fn resolve(&mut self) -> &Result<Response, String> {
+        if self.finished.is_none() {
+            let r = self
+                .done
+                .recv()
+                .unwrap_or_else(|_| Err("server dropped the request".to_string()));
+            self.finished = Some(r);
+        }
+        // just populated above; the closure is unreachable
+        self.finished.get_or_insert_with(|| Err("unreachable".to_string()))
+    }
+}
+
+impl Iterator for TokenStream {
+    type Item = i32;
+
+    fn next(&mut self) -> Option<i32> {
+        self.next_token()
+    }
 }
 
 /// Executes one formed batch; implemented by the artifact path and the
@@ -69,9 +206,14 @@ trait BatchRunner: Send {
 /// Handle to a running server.
 pub struct Server {
     ingress: SyncSender<Ingress>,
+    /// Live serving metrics (counters, gauges, latency histograms).
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     threads: Vec<JoinHandle<()>>,
+    /// Capacity of each per-request token stream channel.
+    stream_buffer: usize,
+    /// Policy for requests without a [`GenOptions::sampling`] override.
+    default_sampling: SamplingParams,
 }
 
 impl Server {
@@ -160,6 +302,8 @@ impl Server {
         let model = Arc::new(NativeLm::new(model_cfg, engine_threads));
         let metrics = Arc::new(Metrics::new());
         let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_depth);
+        let stream_buffer = session_cfg.stream_buffer;
+        let default_sampling = session_cfg.sampling;
         let sched_metrics = metrics.clone();
         let threads = vec![std::thread::spawn(move || {
             crate::coordinator::scheduler::scheduler_loop(
@@ -169,7 +313,14 @@ impl Server {
                 sched_metrics,
             );
         })];
-        Ok(Server { ingress: ingress_tx, metrics, next_id: AtomicU64::new(0), threads })
+        Ok(Server {
+            ingress: ingress_tx,
+            metrics,
+            next_id: AtomicU64::new(0),
+            threads,
+            stream_buffer,
+            default_sampling,
+        })
     }
 
     /// Shared startup: batcher thread + `cfg.workers` workers, one runner
@@ -201,7 +352,14 @@ impl Server {
                 worker_loop(rx, runner, metrics);
             }));
         }
-        Ok(Server { ingress: ingress_tx, metrics, next_id: AtomicU64::new(0), threads })
+        Ok(Server {
+            ingress: ingress_tx,
+            metrics,
+            next_id: AtomicU64::new(0),
+            threads,
+            stream_buffer: 32,
+            default_sampling: SamplingParams::default(),
+        })
     }
 
     /// Submit a request; blocks until the response arrives.
@@ -220,19 +378,84 @@ impl Server {
         self.submit(tokens, max_new.max(1))
     }
 
-    fn submit(&self, tokens: Vec<i32>, gen_tokens: usize) -> Result<Response> {
+    /// [`Server::generate`] with explicit [`GenOptions`] (priority,
+    /// admission deadline, sampling), blocking until the full response.
+    pub fn generate_opts(&self, tokens: Vec<i32>, opts: GenOptions) -> Result<Response> {
+        let rx = self.post(self.make_req(tokens, &opts, None))?;
+        rx.recv()
+            .context("server dropped request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Submit a generation request for **per-token streaming**: returns a
+    /// [`TokenStream`] immediately; tokens arrive on it as they are
+    /// decoded (bounded buffer `sessions.stream_buffer`; the scheduler
+    /// never blocks on a slow consumer, and any unstreamed tail is
+    /// recovered from the final [`Response`]).  Under greedy sampling the
+    /// streamed sequence is bitwise identical to [`Server::generate`]'s.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use mra::config::{ServeConfig, SessionConfig};
+    /// use mra::coordinator::native::NativeMlmConfig;
+    /// use mra::coordinator::server::{GenOptions, Server};
+    ///
+    /// let cfg = ServeConfig {
+    ///     model: "mlm_mra2_n64_d32_l1_h2_v64".to_string(),
+    ///     ..ServeConfig::default_config()
+    /// };
+    /// let model_cfg = NativeMlmConfig::from_tag(&cfg.model);
+    /// let server = Server::start_native_lm_sessions(
+    ///     cfg, model_cfg, 2, SessionConfig::default())?;
+    ///
+    /// let mut stream = server.generate_stream(vec![2, 9, 11], GenOptions::new(4))?;
+    /// let tokens: Vec<i32> = stream.by_ref().collect(); // arrive per token
+    /// let response = stream.wait()?;                    // full sequence
+    /// assert_eq!(tokens, response.predictions);
+    /// server.shutdown();
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn generate_stream(&self, tokens: Vec<i32>, opts: GenOptions) -> Result<TokenStream> {
+        let (stx, srx) = sync_channel::<i32>(self.stream_buffer.max(1));
+        let done = self.post(self.make_req(tokens, &opts, Some(stx)))?;
+        Ok(TokenStream { tokens: srx, done, yielded: 0, finished: None })
+    }
+
+    fn make_req(
+        &self,
+        tokens: Vec<i32>,
+        opts: &GenOptions,
+        stream: Option<SyncSender<i32>>,
+    ) -> Request {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Request {
+            priority: opts.priority,
+            deadline: opts.deadline,
+            sampling: opts.sampling.unwrap_or(self.default_sampling),
+            stream,
+            ..Request::new(id, tokens, opts.max_new.max(1))
+        }
+    }
+
+    /// Enqueue a request; the returned receiver resolves to its terminal
+    /// result.  `Err` on backpressure or a stopped server.
+    fn post(&self, req: Request) -> Result<Receiver<Result<Response, String>>> {
         let (tx, rx) = std::sync::mpsc::channel();
-        let req = Request { id, tokens, gen_tokens, arrived: Instant::now() };
         self.metrics.inc_requests();
         match self.ingress.try_send(Ingress::Req(req, tx)) {
-            Ok(()) => {}
+            Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => {
                 self.metrics.inc_rejected();
                 bail!("server busy (queue full)");
             }
             Err(TrySendError::Disconnected(_)) => bail!("server stopped"),
         }
+    }
+
+    fn submit(&self, tokens: Vec<i32>, gen_tokens: usize) -> Result<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let rx = self.post(Request::new(id, tokens, gen_tokens))?;
         rx.recv()
             .context("server dropped request")?
             .map_err(|e| anyhow::anyhow!(e))
@@ -423,7 +646,32 @@ impl BatchRunner for LmRunner {
         let t0 = Instant::now();
         let mut out = Vec::with_capacity(batch.len());
         for req in &batch.requests {
-            let predictions = self.model.generate(&req.tokens, req.gen_tokens.max(1))?;
+            let n = req.gen_tokens.max(1);
+            let predictions = match req.stream.as_ref() {
+                Some(stx) => {
+                    // non-blocking delivery with prefix semantics: on the
+                    // first full/closed buffer, stop streaming this request
+                    // entirely (the fixed-round path has no retry step), so
+                    // the stream stays an exact prefix — never a token
+                    // skipped mid-stream — and the tail comes from the
+                    // Response's full sequence
+                    let mut open = true;
+                    self.model.generate_sampled_with(&req.tokens, n, req.sampling, |_, t| {
+                        if open {
+                            match stx.try_send(t) {
+                                Ok(()) => {
+                                    metrics.streamed_tokens.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(_) => {
+                                    metrics.stream_stalls.fetch_add(1, Ordering::Relaxed);
+                                    open = false;
+                                }
+                            }
+                        }
+                    })?
+                }
+                None => self.model.generate_sampled(&req.tokens, n, req.sampling)?,
+            };
             let latency = req.arrived.elapsed();
             metrics.request_latency.record(latency);
             out.push(Response { id: req.id, predictions, latency });
@@ -584,6 +832,58 @@ mod tests {
         assert_eq!(one.predictions.len(), 1);
         let err = server.generate(vec![2; 64], 8).unwrap_err();
         assert!(format!("{err:#}").contains("seq_len"), "{err:#}");
+        server.shutdown();
+    }
+
+    /// Stream-vs-one-shot equality under greedy decoding, on both LM
+    /// backends: the streamed token sequence and the final response are
+    /// bitwise identical to the finish-only `generate` path.
+    #[test]
+    fn generate_stream_matches_generate_on_both_backends() {
+        use crate::config::SessionConfig;
+        let cfg = serve_cfg(4, 500);
+        let model_cfg = NativeMlmConfig::from_tag(&cfg.model);
+        let scfg = SessionConfig { total_pages: 512, free_watermark: 8, ..Default::default() };
+        let sessions = Server::start_native_lm_sessions(cfg.clone(), model_cfg.clone(), 2, scfg)
+            .expect("session server");
+        let fixed = Server::start_native_lm(cfg, model_cfg, 2).expect("lm server");
+        let prompt = vec![2, 9, 11, 30];
+        let want = fixed.generate(prompt.clone(), 6).expect("finish-only").predictions;
+        for server in [&sessions, &fixed] {
+            let mut stream =
+                server.generate_stream(prompt.clone(), GenOptions::new(6)).expect("stream");
+            let tokens: Vec<i32> = stream.by_ref().collect();
+            let resp = stream.wait().expect("streamed response");
+            assert_eq!(tokens, want, "stream-vs-one-shot mismatch");
+            assert_eq!(resp.predictions, want, "response must carry the full sequence");
+        }
+        assert_eq!(sessions.metrics.streamed_tokens.load(Ordering::Relaxed), 6);
+        assert_eq!(fixed.metrics.streamed_tokens.load(Ordering::Relaxed), 6);
+        sessions.shutdown();
+        fixed.shutdown();
+    }
+
+    /// Sampled serving is deterministic per seed and matches the direct
+    /// (serverless) sampled decode bitwise.
+    #[test]
+    fn sampled_requests_reproduce_per_seed_and_match_the_direct_path() {
+        use crate::config::SessionConfig;
+        let cfg = serve_cfg(4, 500);
+        let model_cfg = NativeMlmConfig::from_tag(&cfg.model);
+        let scfg = SessionConfig { total_pages: 512, free_watermark: 8, ..Default::default() };
+        let server = Server::start_native_lm_sessions(cfg, model_cfg.clone(), 2, scfg)
+            .expect("session server");
+        let prompt = vec![2, 9, 11, 30];
+        let params = SamplingParams { temperature: 0.8, top_k: 8, top_p: 0.95, seed: 42 };
+        let a = server
+            .generate_opts(prompt.clone(), GenOptions::new(6).sampling(params))
+            .expect("sampled");
+        let b = server
+            .generate_opts(prompt.clone(), GenOptions::new(6).sampling(params))
+            .expect("sampled repeat");
+        assert_eq!(a.predictions, b.predictions, "same seed must reproduce bitwise");
+        let direct = NativeLm::new(model_cfg, 2).generate_sampled(&prompt, 6, params).unwrap();
+        assert_eq!(a.predictions, direct, "served sampling diverged from the direct path");
         server.shutdown();
     }
 

@@ -14,12 +14,16 @@ use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
 /// Loss/accuracy trace of a training run.
 #[derive(Debug, Default, Clone)]
 pub struct TrainLog {
+    /// Step index of each recorded sample.
     pub steps: Vec<usize>,
+    /// Training loss at each recorded step.
     pub losses: Vec<f32>,
+    /// Masked-prediction accuracy at each recorded step.
     pub accs: Vec<f32>,
 }
 
 impl TrainLog {
+    /// Last recorded loss (`NaN` when the log is empty).
     pub fn final_loss(&self) -> f32 {
         *self.losses.last().unwrap_or(&f32::NAN)
     }
@@ -39,7 +43,9 @@ pub struct Trainer {
     rt: RuntimeHandle,
     #[allow(dead_code)]
     manifest: std::sync::Arc<Manifest>,
+    /// Training hyperparameters and model tag.
     pub cfg: TrainConfig,
+    /// Flattened parameter vector in the `train_step` artifact's layout.
     pub params: Vec<f32>,
     m: Vec<f32>,
     v: Vec<f32>,
@@ -51,6 +57,8 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Set up training over `cfg.model`'s artifacts: initial parameters
+    /// from the manifest, fresh Adam moments, a seeded corpus.
     pub fn new(
         rt: RuntimeHandle,
         #[allow(dead_code)]

@@ -687,6 +687,76 @@ pub fn causal_row_oracle(
     out
 }
 
+/// Counter-based deterministic RNG state for stochastic token selection —
+/// the piece of session state that makes sampled decode **replayable**.
+///
+/// Draw `i` is a pure function of `(seed, i)`: the SplitMix64 output
+/// function applied to `seed + (i + 1) * GAMMA`.  The sequence is
+/// identical to [`crate::tensor::Rng::new(seed)`](crate::tensor::Rng)
+/// calling `uniform()` repeatedly, but the state is just two integers —
+/// so a preempted session persists `(seed, draws)`, and
+/// [`DrawState::replay`] fast-forwards in O(1) to reproduce the *exact*
+/// remaining draw sequence after recompute-on-readmit (DESIGN.md §12).
+///
+/// Lives in `engine/decode.rs` because it is decode-time session state
+/// with the same lifecycle as [`DecodeState`]; like the KV pyramid it must
+/// survive page eviction by being cheap to serialize (two `u64`s).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DrawState {
+    seed: u64,
+    draws: u64,
+}
+
+const SPLITMIX_GAMMA: u64 = 0x9E3779B97F4A7C15;
+
+#[inline]
+fn splitmix_finalize(x: u64) -> u64 {
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl DrawState {
+    /// Fresh draw stream for `seed` (no draws consumed yet).
+    pub fn new(seed: u64) -> Self {
+        DrawState { seed, draws: 0 }
+    }
+
+    /// Reconstruct a stream that has already consumed `draws` draws —
+    /// O(1), the replay primitive used at session readmission.
+    pub fn replay(seed: u64, draws: u64) -> Self {
+        DrawState { seed, draws }
+    }
+
+    /// Seed this stream was created with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Number of draws consumed so far (the replay cursor).
+    pub fn draws(&self) -> u64 {
+        self.draws
+    }
+
+    /// Next raw 64-bit draw.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.draws = self.draws.wrapping_add(1);
+        // `Rng::new` pre-advances one GAMMA, so its draw i sits at counter
+        // i + 1; mirroring that keeps the two sequences bitwise equal.
+        let ctr = self.draws.wrapping_add(1).wrapping_mul(SPLITMIX_GAMMA);
+        splitmix_finalize(self.seed.wrapping_add(ctr))
+    }
+
+    /// Next uniform draw in `[0, 1)` (top 24 bits, matching
+    /// [`crate::tensor::Rng::uniform`] bitwise).
+    #[inline]
+    pub fn next_uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1020,5 +1090,51 @@ mod tests {
     fn attend_on_empty_cache_panics() {
         let mut st = DecodeState::new(4, 1, Variant::Full, 4);
         let _ = st.attend_last(&[0.0; 4]);
+    }
+
+    #[test]
+    fn draw_state_matches_rng_uniform_bitwise() {
+        for seed in [0u64, 1, 42, 0xDEAD_BEEF] {
+            let mut rng = Rng::new(seed);
+            let mut ds = DrawState::new(seed);
+            for i in 0..64 {
+                assert_eq!(
+                    rng.uniform().to_bits(),
+                    ds.next_uniform().to_bits(),
+                    "seed {seed} draw {i}"
+                );
+            }
+            assert_eq!(ds.draws(), 64);
+            assert_eq!(ds.seed(), seed);
+        }
+    }
+
+    #[test]
+    fn draw_state_replay_is_exact_fast_forward() {
+        for_all_seeds(16, |seed, rng| {
+            let cut = (rng.below(30) + 1) as u64;
+            let mut full = DrawState::new(seed);
+            let mut head = Vec::new();
+            for _ in 0..cut {
+                head.push(full.next_u64());
+            }
+            // replay from (seed, cut) must continue the identical sequence
+            let mut replayed = DrawState::replay(seed, cut);
+            assert_eq!(replayed, full, "replay state mismatch");
+            for i in 0..40 {
+                let (a, b) = (full.next_u64(), replayed.next_u64());
+                if a != b {
+                    return Err(format!("post-replay draw {i}: {a} vs {b}"));
+                }
+            }
+            // and the head is reproducible from scratch
+            let mut again = DrawState::new(seed);
+            for (i, h) in head.iter().enumerate() {
+                if again.next_u64() != *h {
+                    return Err(format!("head draw {i} not reproducible"));
+                }
+            }
+            Ok(())
+        });
     }
 }

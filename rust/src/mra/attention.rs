@@ -316,7 +316,7 @@ fn mra2_select(s_low: &Mat, nb: usize, m: usize, causality: Causality) -> Vec<bo
 ///
 /// In causal mode ([`Causality::Causal`]) the selection runs over the
 /// lower-triangular block set with a per-query-block budget (see
-/// [`mra2_select`]) and the stabilization floor only scans visible blocks.
+/// `mra2_select`) and the stabilization floor only scans visible blocks.
 #[allow(clippy::too_many_arguments)]
 pub fn mra2_plan(
     q: &[f32],

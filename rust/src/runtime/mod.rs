@@ -2,7 +2,7 @@
 //!
 //! Two backends share one API surface:
 //!
-//! * **`pjrt-xla` feature on** — [`pjrt::Runtime`] compiles
+//! * **`pjrt-xla` feature on** — `pjrt::Runtime` compiles
 //!   `artifacts/*.hlo.txt` through the PJRT CPU client (compile-once
 //!   executable cache, literal marshalling).  Requires the vendored `xla`
 //!   path dependency (see `Cargo.toml`).
@@ -13,7 +13,7 @@
 //!   engine ([`crate::engine::Engine`]).
 //!
 //! The plain `pjrt` feature compiles the executor module against a typed
-//! shim of the `xla` API ([`xla_shim`]) with no extra dependency, so CI
+//! shim of the `xla` API (`xla_shim`) with no extra dependency, so CI
 //! can `cargo check --features pjrt` and the gated module cannot silently
 //! rot; the exported [`Runtime`] stays the stub until `pjrt-xla` swaps in
 //! the real backend.

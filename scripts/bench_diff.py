@@ -39,6 +39,7 @@ TRACKED = (
     "speedup_vs_exact",
     "speedup_vs_fixed",
     "prefill_speedup_vs_per_token",
+    "ttft_speedup_vs_finish",
 )
 # fields that are metrics (never part of a row's identity key)
 METRIC_FIELDS = set(TRACKED) | {
@@ -47,6 +48,10 @@ METRIC_FIELDS = set(TRACKED) | {
     "p95_ms",
     "min_ms",
     "us_per_token",
+    "ttft_ms",
+    "ttft_finish_ms",
+    "itl_p50_ms",
+    "itl_p95_ms",
 }
 
 
