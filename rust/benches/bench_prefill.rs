@@ -20,6 +20,17 @@
 //!   prefill wall time it used to stall behind (no full-prompt stall),
 //!   and the decode advances once per chunk.
 //!
+//! Acceptance gates (ISSUE 8, fused step):
+//!
+//! * serving with `fused_step` (one heterogeneous task list per step)
+//!   keeps throughput at least at the phased prefill->decode level and
+//!   the decode-step p95 no higher, on an identical mixed workload;
+//! * an identical prompt admitted mid-prefill dedups against the
+//!   per-chunk published prompt blocks (`midprefill_prefix_hits > 0`),
+//!   in both fused and phased modes;
+//! * the AIMD chunk-budget controller converges onto the equilibrium
+//!   band of a synthetic step-cost model (deterministic manual clock).
+//!
 //! ```bash
 //! cargo bench --bench bench_prefill                    # 3 timing reps
 //! MRA_BENCH_SMALL=1 cargo bench --bench bench_prefill  # 1 rep (CI)
@@ -31,7 +42,7 @@ use std::time::Instant;
 
 use mra::bench::{BenchJson, Table};
 use mra::config::{ServeConfig, SessionConfig};
-use mra::coordinator::{NativeLm, NativeMlmConfig, Server};
+use mra::coordinator::{AutotuneBudget, GenOptions, ManualClock, NativeLm, NativeMlmConfig, Server};
 use mra::engine::pool;
 use mra::tensor::Rng;
 
@@ -178,6 +189,116 @@ fn main() {
     };
     println!("scheduler   : {sched_metrics}");
 
+    // --- fused single-pass step vs legacy phased prefill->decode step ----
+    // Two servers, identical config and workload, differing only in
+    // `fused_step`.  The workload overlaps a long chunked prefill with a
+    // decode-heavy session (the barrier the fused path removes) and
+    // admits a second, identical long prompt mid-prefill, so the
+    // per-chunk prompt-block publication must dedup its shared prefix
+    // (`midprefill_prefix_hits`).  Both modes run a static chunk budget
+    // so the wall-clock comparison isolates the step fusion.
+    let serve = |fused: bool| -> (f64, u64) {
+        let serve_cfg = ServeConfig {
+            max_batch: 8,
+            flush_us: 1_000,
+            workers: 1,
+            queue_depth: 64,
+            model: MODEL.to_string(),
+            artifacts_dir: "artifacts".to_string(),
+        };
+        let scfg = SessionConfig {
+            total_pages: 2048,
+            free_watermark: 16,
+            max_running: 8,
+            prefix_cache: true,
+            prefill_chunk_tokens: 256,
+            fused_step: fused,
+            autotune_prefill: false,
+            ..SessionConfig::default()
+        };
+        let server = Server::start_native_lm_sessions(serve_cfg, mcfg.clone(), threads, scfg)
+            .expect("session server");
+        let long_req: Vec<i32> = prompt[..if small { 1024 } else { 2048 }].to_vec();
+        let t0 = Instant::now();
+        let first = server
+            .generate_stream(long_req.clone(), GenOptions::new(4))
+            .expect("submit long prompt");
+        let dec = server
+            .generate_stream(short.clone(), GenOptions::new(32))
+            .expect("submit decode-heavy request");
+        // once at least one chunk has prefilled (and published its prompt
+        // blocks), admit an identical prompt: it must dedup mid-prefill
+        let spin = Instant::now();
+        while server.metrics.prefill_tokens.load(Ordering::Relaxed) < 256 {
+            assert!(spin.elapsed().as_secs() < 60, "first prefill chunk never landed");
+            std::thread::yield_now();
+        }
+        let twin = server
+            .generate_stream(long_req.clone(), GenOptions::new(4))
+            .expect("submit twin prompt");
+        let r_first = first.wait().expect("long response");
+        let r_twin = twin.wait().expect("twin response");
+        let r_dec = dec.wait().expect("decode-heavy response");
+        let wall = t0.elapsed().as_secs_f64();
+        let mode = if fused { "fused" } else { "phased" };
+        let want_long = model.generate(&long_req, 4).expect("direct long decode");
+        assert_eq!(r_first.predictions, want_long, "{mode} serving diverged on the long prompt");
+        assert_eq!(r_twin.predictions, want_long, "{mode} serving diverged on the twin prompt");
+        assert_eq!(
+            r_dec.predictions,
+            model.generate(&short, 32).expect("direct short decode"),
+            "{mode} serving diverged on the decode-heavy request"
+        );
+        let m = &server.metrics;
+        let hits = m.midprefill_prefix_hits.load(Ordering::Relaxed);
+        assert!(
+            hits > 0,
+            "{mode}: identical prompt admitted mid-prefill must hit published blocks"
+        );
+        let work =
+            m.prefill_tokens.load(Ordering::Relaxed) + m.generated_tokens.load(Ordering::Relaxed);
+        let p95 = m.decode_step_latency.percentile_us(0.95).max(1);
+        println!("serve-{mode:<6}: {}", m.summary());
+        server.shutdown();
+        (work as f64 / wall.max(1e-9), p95)
+    };
+    let (phased_tps, phased_p95) = serve(false);
+    let (fused_tps, fused_p95) = serve(true);
+    let fused_speedup = fused_tps / phased_tps.max(1e-9);
+    let p95_gain = phased_p95 as f64 / fused_p95 as f64;
+    println!(
+        "fused step  : {fused_tps:.0} vs {phased_tps:.0} tokens/s ({fused_speedup:.2}x), \
+         decode-step p95 {:.2} ms vs {:.2} ms",
+        fused_p95 as f64 / 1e3,
+        phased_p95 as f64 / 1e3
+    );
+
+    // --- autotune convergence: AIMD budget vs a synthetic step cost ------
+    // Deterministic (manual clock): each step costs 500us + 4us/token of
+    // budget against a 2 ms p95 target, so the over-target boundary sits
+    // at 375 tokens.  From an oversized 1024-token cap the controller
+    // must halve down into, then saw-tooth inside, [192, 384].
+    let (settled_budget, autotune_converged) = {
+        let clock = ManualClock::new();
+        let hand = clock.handle();
+        let mut ctl = AutotuneBudget::new(1024, block, 2_000, true, Box::new(clock));
+        for _ in 0..400 {
+            ctl.begin_step();
+            hand.fetch_add(500 + 4 * ctl.current() as u64, Ordering::Relaxed);
+            ctl.end_step(true);
+        }
+        let settled = ctl.current();
+        let converged =
+            (192..=384).contains(&settled) && ctl.halvings() >= 2 && ctl.raises() >= 10;
+        println!(
+            "autotune    : settled at {settled} tokens (halvings {}, raises {}) around the \
+             375-token equilibrium",
+            ctl.halvings(),
+            ctl.raises()
+        );
+        (settled, if converged { 1.0f64 } else { 0.0 })
+    };
+
     // --- report + acceptance gates ---------------------------------------
     let mut table = Table::new(&["impl", "n", "wall ms", "tokens/s", "speedup"]);
     table.row(&[
@@ -214,6 +335,28 @@ fn main() {
         ("tokens_per_sec", format!("{chunked_tps:.1}")),
         ("prefill_speedup_vs_per_token", format!("{speedup:.3}")),
     ]);
+    json.row(&[
+        ("impl", BenchJson::str_field("serve-phased")),
+        ("n", BenchJson::str_field("mixed")),
+        ("tokens_per_sec", format!("{phased_tps:.1}")),
+        ("p95_ms", format!("{:.3}", phased_p95 as f64 / 1e3)),
+        ("fused_serve_speedup_vs_phased", "1.0".to_string()),
+        ("fused_decode_p95_gain_vs_phased", "1.0".to_string()),
+    ]);
+    json.row(&[
+        ("impl", BenchJson::str_field("serve-fused")),
+        ("n", BenchJson::str_field("mixed")),
+        ("tokens_per_sec", format!("{fused_tps:.1}")),
+        ("p95_ms", format!("{:.3}", fused_p95 as f64 / 1e3)),
+        ("fused_serve_speedup_vs_phased", format!("{fused_speedup:.3}")),
+        ("fused_decode_p95_gain_vs_phased", format!("{p95_gain:.3}")),
+    ]);
+    json.row(&[
+        ("impl", BenchJson::str_field("autotune")),
+        ("n", BenchJson::str_field("mixed")),
+        ("autotune_converged", format!("{autotune_converged:.1}")),
+        ("settled_budget_tokens", format!("{settled_budget}")),
+    ]);
     json.write_if_requested();
 
     assert!(
@@ -227,8 +370,24 @@ fn main() {
          full-prompt stall (median {p50_step_ms:.3} ms vs {:.1} ms monolithic prefill)",
         per_tok_wall * 1e3
     );
+    assert!(
+        fused_tps >= 0.9 * phased_tps,
+        "acceptance gate: fused-step serving must not fall behind the phased path \
+         ({fused_tps:.0} vs {phased_tps:.0} tokens/s)"
+    );
+    assert!(
+        fused_p95 <= phased_p95,
+        "acceptance gate: fused decode-step p95 must not exceed the phased path \
+         ({fused_p95} us vs {phased_p95} us)"
+    );
+    assert!(
+        autotune_converged == 1.0,
+        "acceptance gate: AIMD budget controller failed to converge (settled at \
+         {settled_budget} tokens)"
+    );
     println!(
         "\nbench_prefill OK (bitwise chunked == per-token, chunked {speedup:.2}x, \
-         decode bounded at {p50_step_ms:.3} ms median during prefill)"
+         decode bounded at {p50_step_ms:.3} ms median during prefill, fused step \
+         {fused_speedup:.2}x vs phased, autotune settled at {settled_budget} tokens)"
     );
 }

@@ -199,7 +199,14 @@ fn main() {
         );
     }
     let (cont_wall, cont_tokens) = run_workload(&continuous, &cases, clients);
-    println!("continuous  : {}", continuous.metrics.summary());
+    let cont_summary = continuous.metrics.summary();
+    for field in ["chunk_budget=", "reoffers=", "midprefill_hits=", "decode_step_p95="] {
+        assert!(
+            cont_summary.contains(field),
+            "metrics summary must surface the fused-step counter {field} (got: {cont_summary})"
+        );
+    }
+    println!("continuous  : {cont_summary}");
 
     // --- streaming vs finish-only delivery latency ------------------------
     // One request in flight at a time: the comparison isolates *delivery*

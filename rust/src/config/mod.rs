@@ -173,7 +173,27 @@ pub struct SessionConfig {
     /// prompt never stalls running decodes for its whole prefill).
     /// Chunks snap to block boundaries; the budget is clamped up to one
     /// block at runtime so prefill always progresses.
+    ///
+    /// With `autotune_prefill` on (the default) this is the controller's
+    /// **initial value and hard cap**, not the fixed per-step spend — the
+    /// AIMD controller moves the live budget inside `[block, this]`
+    /// against `decode_p95_target_us` (DESIGN.md §13).
     pub prefill_chunk_tokens: usize,
+    /// Run each scheduler step as one fused task drain (prefill chunk
+    /// rows and decode streams in a single `pool::run_with` pass) instead
+    /// of the legacy prefill-then-decode sub-phases.  Results are bitwise
+    /// identical either way (property-tested); `false` keeps the phased
+    /// path, retained as the equivalence reference.
+    pub fused_step: bool,
+    /// Self-tune the prefill budget with the AIMD controller
+    /// (`coordinator::autotune`); `false` pins the budget at
+    /// `prefill_chunk_tokens` (the legacy static knob).
+    pub autotune_prefill: bool,
+    /// Step-latency target (µs) the budget controller holds the fused
+    /// step's tail under.  Generous by default: 50ms keeps tiny test
+    /// models from ever shrinking their budget while still catching
+    /// genuinely oversized chunks on real workloads.
+    pub decode_p95_target_us: u64,
     /// Capacity of each per-request bounded token stream channel.  The
     /// scheduler delivers with a non-blocking `try_send`: a slow consumer
     /// stalls its own stream (tokens are retried next step and the tail is
@@ -197,6 +217,9 @@ impl Default for SessionConfig {
             max_running: 32,
             prefix_cache: true,
             prefill_chunk_tokens: 256,
+            fused_step: true,
+            autotune_prefill: true,
+            decode_p95_target_us: 50_000,
             stream_buffer: 32,
             aging_steps: 32,
             sampling: SamplingParams::default(),
@@ -214,6 +237,11 @@ impl SessionConfig {
             prefix_cache: c.bool_or("sessions.prefix_cache", d.prefix_cache)?,
             prefill_chunk_tokens: c
                 .usize_or("sessions.prefill_chunk_tokens", d.prefill_chunk_tokens)?,
+            fused_step: c.bool_or("sessions.fused_step", d.fused_step)?,
+            autotune_prefill: c.bool_or("sessions.autotune_prefill", d.autotune_prefill)?,
+            decode_p95_target_us: c
+                .usize_or("sessions.decode_p95_target_us", d.decode_p95_target_us as usize)?
+                as u64,
             stream_buffer: c.usize_or("sessions.stream_buffer", d.stream_buffer)?.max(1),
             aging_steps: c.usize_or("sessions.aging_steps", d.aging_steps)?,
             sampling: SamplingParams {
@@ -315,6 +343,23 @@ lr = 0.001
             256,
             "default prefill budget documented in DESIGN.md §10"
         );
+    }
+
+    #[test]
+    fn fused_step_and_autotune_knobs_parse_and_default_on() {
+        let d = SessionConfig::default();
+        assert!(d.fused_step, "fused single-drain steps are the default path");
+        assert!(d.autotune_prefill, "the budget controller is on by default");
+        assert_eq!(d.decode_p95_target_us, 50_000);
+        let c = Config::parse(
+            "[sessions]\nfused_step = false\nautotune_prefill = false\n\
+             decode_p95_target_us = 2000\n",
+        )
+        .unwrap();
+        let s = SessionConfig::from_config(&c).unwrap();
+        assert!(!s.fused_step);
+        assert!(!s.autotune_prefill);
+        assert_eq!(s.decode_p95_target_us, 2_000);
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! Self-tuning prefill chunk budget (AIMD against a decode-step latency
+//! target) — the controller behind the fused scheduler step (DESIGN.md
+//! §13).
+//!
+//! The static `sessions.prefill_chunk_tokens` knob is wrong for every
+//! workload but the one it was tuned on: too large and prefill chunks
+//! inflate the tail latency of the decode tokens they share a step with,
+//! too small and prompt throughput collapses.  [`AutotuneBudget`] turns
+//! the knob into an **initial value and hard cap**: each fused step that
+//! ran prefill work reports its wall duration, and once a window of
+//! observations is full the controller compares the window tail against
+//! `sessions.decode_p95_target_us` — over target halves the budget
+//! (multiplicative decrease), under target adds one block (additive
+//! increase), classic AIMD.  The budget never leaves
+//! `[block, prefill_chunk_tokens]`, so prefill always progresses and
+//! never exceeds the operator's configured ceiling.
+//!
+//! **Determinism**: budget changes alter only *scheduling* (how many
+//! prompt tokens each step feeds), never *results* — chunked prefill is
+//! bitwise identical to per-token prefill for any chunk split
+//! (property-tested), so an autotuned server emits exactly the tokens a
+//! static-budget server emits.
+//!
+//! **Clock injection**: all timing flows through the [`StepClock`] trait.
+//! Production uses [`MonotonicClock`] (a `std::time::Instant` origin);
+//! tests and benches use [`ManualClock`], which only advances when told
+//! to — controller behavior is reproducible down to the microsecond, and
+//! the bitwise-gated modules covered by `cargo xtask lint`'s
+//! `no-wallclock` rule stay free of wall-clock reads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Monotone microsecond time source for the scheduler's step timing —
+/// injected so the controller (and every test driving it) is
+/// deterministic.  `&mut self` keeps implementations trivially
+/// thread-free; the scheduler owns exactly one.
+pub trait StepClock: Send {
+    /// Microseconds since an arbitrary fixed origin; never decreases.
+    fn now_us(&mut self) -> u64;
+}
+
+/// The production [`StepClock`]: microseconds since construction, read
+/// from a monotonic [`Instant`].
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl StepClock for MonotonicClock {
+    fn now_us(&mut self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+}
+
+/// A [`StepClock`] that advances only when told to — the deterministic
+/// test/bench clock.  Clone-cheap handles ([`ManualClock::handle`]) let a
+/// test advance time while the scheduler owns the clock.
+#[derive(Default)]
+pub struct ManualClock {
+    now: Arc<AtomicU64>,
+}
+
+impl ManualClock {
+    /// A clock at time zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A handle sharing this clock's time: `fetch_add` on it advances
+    /// every reader.
+    pub fn handle(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.now)
+    }
+}
+
+impl StepClock for ManualClock {
+    fn now_us(&mut self) -> u64 {
+        self.now.load(Ordering::Relaxed)
+    }
+}
+
+/// Observations per adjustment window.  The window tail (its maximum) is
+/// the controller's latency signal — for windows this small the max *is*
+/// the p95 estimate (exact p95 would need >= 20 samples per window and
+/// would react a window too late under bursty load).
+const WINDOW: usize = 8;
+
+/// AIMD controller for the per-step prefill token budget (module docs
+/// for the control law; `Scheduler` wiring in DESIGN.md §13).
+pub struct AutotuneBudget {
+    /// `false` pins the budget at `cap` forever (the legacy static knob).
+    enabled: bool,
+    budget: usize,
+    /// Lower bound and additive-increase step: one block, so prefill
+    /// always progresses and the budget stays block-meaningful.
+    floor: usize,
+    /// Upper bound: the configured `prefill_chunk_tokens`.
+    cap: usize,
+    target_us: u64,
+    window: Vec<u64>,
+    clock: Box<dyn StepClock>,
+    /// Step-start stamp; `None` when no step is in flight.
+    t0: Option<u64>,
+    halvings: u64,
+    raises: u64,
+}
+
+impl AutotuneBudget {
+    /// Controller starting (and capped) at `cap` tokens, floored at
+    /// `floor` (one block), targeting `target_us` step latency.  Disabled
+    /// controllers never move off `cap`.
+    pub fn new(
+        cap: usize,
+        floor: usize,
+        target_us: u64,
+        enabled: bool,
+        clock: Box<dyn StepClock>,
+    ) -> Self {
+        let floor = floor.max(1);
+        let cap = cap.max(floor);
+        AutotuneBudget {
+            enabled,
+            budget: cap,
+            floor,
+            cap,
+            target_us,
+            window: Vec::with_capacity(WINDOW),
+            clock,
+            t0: None,
+            halvings: 0,
+            raises: 0,
+        }
+    }
+
+    /// The current per-step prefill token budget.
+    pub fn current(&self) -> usize {
+        self.budget
+    }
+
+    /// Stamp the start of a scheduler step.
+    pub fn begin_step(&mut self) {
+        self.t0 = Some(self.clock.now_us());
+    }
+
+    /// Close the step opened by [`AutotuneBudget::begin_step`] and return
+    /// its wall duration (µs).  The duration feeds the controller only
+    /// when the step actually ran prefill work (`prefilled`) — pure
+    /// decode steps say nothing about the chunk budget.
+    pub fn end_step(&mut self, prefilled: bool) -> u64 {
+        let Some(t0) = self.t0.take() else { return 0 };
+        let dt = self.clock.now_us().saturating_sub(t0);
+        if prefilled {
+            self.observe(dt);
+        }
+        dt
+    }
+
+    /// Feed one step-duration observation directly (the begin/end pair is
+    /// a convenience over this).  Every `WINDOW` observations the budget
+    /// adjusts: window max over target halves it (snapped down to a
+    /// `floor` multiple), otherwise it gains one `floor` step, clamped to
+    /// `[floor, cap]`.
+    pub fn observe(&mut self, us: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.window.push(us);
+        if self.window.len() < WINDOW {
+            return;
+        }
+        let tail = self.window.iter().copied().max().unwrap_or(0);
+        self.window.clear();
+        if tail > self.target_us {
+            self.budget = (self.budget / 2 / self.floor * self.floor).max(self.floor);
+            self.halvings += 1;
+        } else if self.budget < self.cap {
+            self.budget = (self.budget + self.floor).min(self.cap);
+            self.raises += 1;
+        }
+    }
+
+    /// Multiplicative decreases taken so far (introspection for tests
+    /// and bench convergence checks).
+    pub fn halvings(&self) -> u64 {
+        self.halvings
+    }
+
+    /// Additive increases taken so far.
+    pub fn raises(&self) -> u64 {
+        self.raises
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller(target_us: u64, enabled: bool) -> AutotuneBudget {
+        AutotuneBudget::new(256, 32, target_us, enabled, Box::new(ManualClock::new()))
+    }
+
+    #[test]
+    fn overload_halves_until_the_floor_and_never_below() {
+        let mut a = controller(1_000, true);
+        assert_eq!(a.current(), 256);
+        for round in 0..6 {
+            for _ in 0..WINDOW {
+                a.observe(5_000);
+            }
+            assert!(a.current() >= 32, "round {round} went below the floor");
+        }
+        // 256 -> 128 -> 64 -> 32, then pinned at the floor
+        assert_eq!(a.current(), 32);
+        assert_eq!(a.halvings(), 6);
+    }
+
+    #[test]
+    fn headroom_raises_one_block_per_window_up_to_the_cap() {
+        let mut a = controller(1_000_000, true);
+        for _ in 0..WINDOW {
+            a.observe(5_000); // over no threshold: 5ms << 1s target
+        }
+        assert_eq!(a.current(), 256, "already at the cap: no raise possible");
+        // knock it down once, then watch it climb back block by block
+        for _ in 0..WINDOW {
+            a.observe(2_000_000);
+        }
+        assert_eq!(a.current(), 128);
+        for step in 1..=4 {
+            for _ in 0..WINDOW {
+                a.observe(5_000);
+            }
+            assert_eq!(a.current(), 128 + 32 * step);
+        }
+        assert_eq!(a.current(), 256);
+        for _ in 0..WINDOW {
+            a.observe(5_000);
+        }
+        assert_eq!(a.current(), 256, "cap is a hard ceiling");
+    }
+
+    #[test]
+    fn one_bursty_window_tail_triggers_the_decrease() {
+        let mut a = controller(1_000, true);
+        for i in 0..WINDOW {
+            // seven quiet steps, one burst: the window tail (max) decides
+            a.observe(if i == 3 { 50_000 } else { 100 });
+        }
+        assert_eq!(a.current(), 128);
+    }
+
+    #[test]
+    fn disabled_controller_is_the_static_knob() {
+        let mut a = controller(1, false);
+        for _ in 0..10 * WINDOW {
+            a.observe(1_000_000);
+        }
+        assert_eq!(a.current(), 256);
+        assert_eq!(a.halvings(), 0);
+    }
+
+    #[test]
+    fn halving_snaps_to_a_block_multiple() {
+        // cap 96, floor 64: 96/2 = 48 snaps down past the floor -> 64
+        let mut a = AutotuneBudget::new(96, 64, 1_000, true, Box::new(ManualClock::new()));
+        for _ in 0..WINDOW {
+            a.observe(5_000);
+        }
+        assert_eq!(a.current(), 64);
+    }
+
+    #[test]
+    fn begin_end_measures_the_manual_clock_and_feeds_only_prefill_steps() {
+        let clock = ManualClock::new();
+        let hand = clock.handle();
+        let mut a = AutotuneBudget::new(256, 32, 1_000, true, Box::new(clock));
+        // a non-prefill step is timed but not observed
+        a.begin_step();
+        hand.fetch_add(9_000, Ordering::Relaxed);
+        assert_eq!(a.end_step(false), 9_000);
+        for _ in 0..WINDOW {
+            a.begin_step();
+            hand.fetch_add(9_000, Ordering::Relaxed);
+            assert_eq!(a.end_step(true), 9_000);
+        }
+        assert_eq!(a.current(), 128, "eight over-target prefill steps must halve");
+        // end without begin is a no-op zero, not a bogus huge sample
+        assert_eq!(a.end_step(true), 0);
+    }
+}

@@ -83,6 +83,11 @@ pub struct Metrics {
     pub request_latency: Histogram,
     /// Per-batch (or per-step) execution latency of the worker body.
     pub batch_exec: Histogram,
+    /// Wall latency of scheduler steps that advanced at least one decode
+    /// (fused drain or legacy sub-phases) — the tail this histogram
+    /// records during long prefills is exactly what the budget
+    /// controller holds under `sessions.decode_p95_target_us`.
+    pub decode_step_latency: Histogram,
     /// Requests accepted into the serving queue.
     pub requests: AtomicU64,
     /// Batches executed by the workers (fixed-round path).
@@ -123,6 +128,15 @@ pub struct Metrics {
     /// Waiting requests expired past their admission deadline (answered
     /// with a descriptive error, never silently dropped).
     pub deadline_expired: AtomicU64,
+    /// Prefill-budget grants beyond each session's first chunk of a step
+    /// — leftover budget (block-snap remainders, short finishing prompts)
+    /// re-offered within the same step instead of stranded.
+    pub budget_reoffers: AtomicU64,
+    /// Admissions whose radix prefix hit matched blocks published by a
+    /// session *still mid-prefill* — per-chunk publication turning a
+    /// would-be duplicate prefill into page sharing before the first
+    /// prefill even finishes.
+    pub midprefill_prefix_hits: AtomicU64,
     // --- session-serving gauges ---
     /// Page-pool capacity (constant once serving starts).
     pub pool_pages: AtomicU64,
@@ -141,6 +155,9 @@ pub struct Metrics {
     /// Prompt tokens still to prefill across the running set at the last
     /// step (the prefill backlog the decode steps are interleaving with).
     pub prefill_backlog_tokens: AtomicU64,
+    /// Live prefill token budget chosen by the AIMD controller at the
+    /// last step (equals `prefill_chunk_tokens` when autotune is off).
+    pub autotuned_chunk_tokens: AtomicU64,
 }
 
 impl Metrics {
@@ -224,7 +241,7 @@ impl Metrics {
         );
         if self.sessions.load(Ordering::Relaxed) > 0 {
             s.push_str(&format!(
-                " sessions={} preemptions={} prefix_hit_rate={:.2} prefix_hit_tokens={} gen_tokens={} steps={} prefill_chunks={} prefill_tokens={} streamed={} stream_stalls={} expired={} pages={}/{} cache_pages={} running={} waiting={} prefilling={} prefill_backlog={}",
+                " sessions={} preemptions={} prefix_hit_rate={:.2} prefix_hit_tokens={} gen_tokens={} steps={} prefill_chunks={} prefill_tokens={} streamed={} stream_stalls={} expired={} pages={}/{} cache_pages={} running={} waiting={} prefilling={} prefill_backlog={} chunk_budget={} reoffers={} midprefill_hits={} decode_step_p95={:.2}ms",
                 self.sessions.load(Ordering::Relaxed),
                 self.preemptions.load(Ordering::Relaxed),
                 self.prefix_hit_rate(),
@@ -243,6 +260,10 @@ impl Metrics {
                 self.waiting_sessions.load(Ordering::Relaxed),
                 self.prefilling_sessions.load(Ordering::Relaxed),
                 self.prefill_backlog_tokens.load(Ordering::Relaxed),
+                self.autotuned_chunk_tokens.load(Ordering::Relaxed),
+                self.budget_reoffers.load(Ordering::Relaxed),
+                self.midprefill_prefix_hits.load(Ordering::Relaxed),
+                self.decode_step_latency.percentile_us(0.95) as f64 / 1e3,
             ));
         }
         s
@@ -348,6 +369,22 @@ mod tests {
         assert!(s.contains("prefill_chunks=1"), "{s}");
         assert!(s.contains("prefill_tokens=48"), "{s}");
         assert!(s.contains("prefill_backlog=96"), "{s}");
+    }
+
+    #[test]
+    fn summary_surfaces_fused_step_counters() {
+        let m = Metrics::new();
+        m.sessions.fetch_add(1, Ordering::Relaxed);
+        m.budget_reoffers.fetch_add(3, Ordering::Relaxed);
+        m.midprefill_prefix_hits.fetch_add(2, Ordering::Relaxed);
+        m.autotuned_chunk_tokens.store(128, Ordering::Relaxed);
+        m.decode_step_latency.record(Duration::from_micros(900));
+        let s = m.summary();
+        assert!(s.contains("reoffers=3"), "{s}");
+        assert!(s.contains("midprefill_hits=2"), "{s}");
+        assert!(s.contains("chunk_budget=128"), "{s}");
+        // 900us lands in the 512..1024 bucket; the upper edge reports
+        assert!(s.contains("decode_step_p95=1.02ms"), "{s}");
     }
 
     #[test]

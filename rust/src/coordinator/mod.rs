@@ -5,6 +5,8 @@
 //!
 //! * [`metrics`] — latency histograms + throughput counters + the
 //!   session-serving gauges (free pages, cache occupancy, prefix hits).
+//! * [`autotune`] — the AIMD prefill-budget controller behind the fused
+//!   scheduler step, with its injectable [`StepClock`].
 //! * [`batcher`] — dynamic batching with deadline flush (fixed rounds).
 //! * [`scheduler`] — continuous batching for LM sessions: admission
 //!   against page watermarks, per-step join/leave, preemption with
@@ -25,6 +27,7 @@
 
 #![warn(missing_docs)]
 
+pub mod autotune;
 pub mod batcher;
 pub mod metrics;
 pub mod native;
@@ -33,6 +36,7 @@ pub mod scheduler;
 pub mod server;
 pub mod trainer;
 
+pub use autotune::{AutotuneBudget, ManualClock, MonotonicClock, StepClock};
 pub use batcher::{Batch, Batcher, Request, PRIORITY_NORMAL};
 pub use metrics::Metrics;
 pub use native::{LmSession, NativeLm, NativeMlm, NativeMlmConfig};

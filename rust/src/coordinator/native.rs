@@ -350,6 +350,34 @@ impl NativeMlm {
 type StreamTask<'a> =
     (usize, usize, &'a mut DecodeState, &'a mut [f32], &'a mut [f32], &'a [f32]);
 
+/// One prefill job of a fused scheduler step ([`NativeLm::fused_step`]):
+/// feed `tokens` — the chunk the scheduler planned this step — into
+/// `session`, projecting next-token logits when the chunk completes the
+/// prompt.
+pub struct FusedPrefill<'a> {
+    /// The mid-prefill session.  Must be disjoint from every decode
+    /// session of the same step (a prefilling session is not decodable —
+    /// the scheduler's phase split guarantees it, and Rust's borrow rules
+    /// enforce it at the call site).
+    pub session: &'a mut LmSession,
+    /// The chunk tokens to feed this step.
+    pub tokens: &'a [i32],
+    /// Project logits at the chunk's last position (the final chunk).
+    pub with_logits: bool,
+}
+
+/// One unit of the fused per-step drain: a whole `(session, head)`
+/// decode stream, or one `(job, head, chunk-row)` prefill attention.
+enum FusedTask<'a> {
+    /// `(session index, head, state, concat slot, q/k/v scratch, hidden)`
+    /// — the decode body ([`fused_decode_task`]).
+    Decode(usize, usize, &'a mut DecodeState, &'a mut [f32], &'a mut [f32], &'a [f32]),
+    /// `(state, q row, absolute position, concat slot)` — one prefill
+    /// row's attention ([`fused_prefill_attend`]; K/V already appended by
+    /// the preparation pass, states borrowed shared).
+    Attend(&'a DecodeState, &'a [f32], usize, &'a mut [f32]),
+}
+
 /// One live decode session of a [`NativeLm`]: the per-(layer, head)
 /// [`DecodeState`] KV caches (page-backed, possibly sharing pages with
 /// other sessions), the next-token logits of the last fed position, and
@@ -849,15 +877,7 @@ impl NativeLm {
                     .map(|(h, (st, pbuf))| (h, st, pbuf))
                     .collect();
                 pool::run(threads, tasks, |(h, st, pbuf): (usize, &mut DecodeState, &mut [f32])| {
-                    let (qb, kvb) = pbuf.split_at_mut(c * d_head);
-                    let (kb, vb) = kvb.split_at_mut(c * d_head);
-                    for r in 0..c {
-                        let hrow = &hidden_ref[r * dm..(r + 1) * dm];
-                        row_project_into(hrow, &lw.wq[h], &mut qb[r * d_head..(r + 1) * d_head]);
-                        row_project_into(hrow, &lw.wk[h], &mut kb[r * d_head..(r + 1) * d_head]);
-                        row_project_into(hrow, &lw.wv[h], &mut vb[r * d_head..(r + 1) * d_head]);
-                    }
-                    if st.try_append_rows(kb, vb).is_err() {
+                    if !fused_prefill_project_append(lw, h, st, pbuf, hidden_ref, c, dm, d_head) {
                         failed_ref.store(true, Ordering::Relaxed);
                     }
                 });
@@ -881,7 +901,7 @@ impl NativeLm {
                         let (r, h) = (p / heads, p % heads);
                         let q_off = h * c * 3 * d_head + r * d_head;
                         let q = &proj_ref[q_off..q_off + d_head];
-                        states[h].attend_pos_into(q, base_len + r, scratch, slot);
+                        fused_prefill_attend(&states[h], q, base_len + r, scratch, slot);
                     },
                 );
             }
@@ -1009,6 +1029,282 @@ impl NativeLm {
         results.into_iter().zip(toks).map(|(r, tok)| r.map(|()| tok)).collect()
     }
 
+    /// One **fused** scheduler step: the planned prefill chunks and the
+    /// continuous decode batch execute as *one* heterogeneous task list
+    /// drained by a single [`pool::run_with`] pass — no prefill→decode
+    /// barrier, so decode streams fill the worker-pool bubbles between
+    /// skewed prefill rows and vice versa.  Per layer:
+    ///
+    /// 1. **preparation pass** — one task per prefill `(job, head)`
+    ///    projects the chunk's q/k/v panels and bulk-appends K/V
+    ///    ([`fused_prefill_project_append`], the same body
+    ///    [`NativeLm::prefill_chunk`] runs; appends are order-dependent
+    ///    within a stream, so they cannot share the drain);
+    /// 2. **fused drain** — one `pool::run_with` over decode
+    ///    `(session, head)` tasks ([`fused_decode_task`], the same body
+    ///    [`NativeLm::step_sessions`] runs) *and* prefill
+    ///    `(job, head, chunk-row)` attention tasks
+    ///    ([`fused_prefill_attend`]) — valid in one pass because every
+    ///    chunk row's K/V is already appended and
+    ///    [`DecodeState::attend_pos_into`] takes its position explicitly;
+    /// 3. residual + layer norm per session / per chunk row, sequential.
+    ///
+    /// **Bitwise identity with the phased path** (property-tested): every
+    /// task writes to a disjoint per-(session, head) or per-(job, head,
+    /// row) output slot, each slot's float sequence is produced by the
+    /// *same shared body functions* the phased path calls, and the
+    /// sequential reductions run in the same deterministic order — the
+    /// work-stealing schedule reorders nothing observable, exactly the
+    /// argument that already holds within each legacy sub-phase.
+    ///
+    /// Decode results pair with `decodes` (the token committed, chosen
+    /// *before* the drain exactly as [`NativeLm::step_sessions`] does);
+    /// prefill results pair with `prefills`.  A failed session or job is
+    /// poisoned ([`PoolExhausted`]) without disturbing the others.
+    /// Sessions *finishing* their prefill this step get logits, not a
+    /// decode — the scheduler decodes them in a follow-up
+    /// [`NativeLm::step_sessions`] micro-batch, which batching guarantees
+    /// cannot change their streams.
+    pub fn fused_step(
+        &self,
+        prefills: &mut [FusedPrefill<'_>],
+        decodes: &mut [&mut LmSession],
+    ) -> (Vec<Result<(), PoolExhausted>>, Vec<Result<i32, PoolExhausted>>) {
+        let cfg = &self.core.cfg;
+        for job in prefills.iter() {
+            assert!(
+                !job.session.poisoned,
+                "session poisoned by pool exhaustion — discard and recompute"
+            );
+            assert!(
+                job.session.len + job.tokens.len() <= cfg.seq_len,
+                "prefill chunk overruns seq_len {} (session {} + chunk {})",
+                cfg.seq_len,
+                job.session.len,
+                job.tokens.len()
+            );
+        }
+        for sess in decodes.iter() {
+            assert!(
+                !sess.poisoned,
+                "session poisoned by pool exhaustion — discard and recompute"
+            );
+            assert!(
+                sess.len < cfg.seq_len,
+                "session at seq_len {} cannot advance further",
+                cfg.seq_len
+            );
+        }
+        let dm = cfg.d_model;
+        let heads = cfg.heads;
+        let d_head = self.d_head();
+        let threads = self.core.engine.threads();
+        // decode token selection + embed — identical to step_sessions
+        let toks: Vec<i32> = decodes.iter_mut().map(|s| s.choose_token()).collect();
+        for (sess, &tok) in decodes.iter_mut().zip(&toks) {
+            let t = (tok.max(0) as usize).min(cfg.vocab - 1);
+            sess.hidden.copy_from_slice(self.core.embed.row(t));
+        }
+        // per-job chunk transients — one allocation set per chunk, as in
+        // prefill_chunk (prefill is not the steady per-token loop)
+        let base_lens: Vec<usize> = prefills.iter().map(|j| j.session.len).collect();
+        let mut hiddens: Vec<Vec<f32>> = prefills
+            .iter()
+            .map(|j| {
+                let mut hid = vec![0.0f32; j.tokens.len() * dm];
+                for (hrow, &tok) in hid.chunks_exact_mut(dm).zip(j.tokens) {
+                    let t = (tok.max(0) as usize).min(cfg.vocab - 1);
+                    hrow.copy_from_slice(self.core.embed.row(t));
+                }
+                hid
+            })
+            .collect();
+        let mut cats: Vec<Vec<f32>> =
+            prefills.iter().map(|j| vec![0.0f32; j.tokens.len() * dm]).collect();
+        let mut projs: Vec<Vec<f32>> =
+            prefills.iter().map(|j| vec![0.0f32; heads * j.tokens.len() * 3 * d_head]).collect();
+        let pre_failed: Vec<AtomicBool> =
+            (0..prefills.len()).map(|_| AtomicBool::new(false)).collect();
+        let dec_failed: Vec<AtomicBool> =
+            (0..decodes.len()).map(|_| AtomicBool::new(false)).collect();
+        for (li, lw) in self.core.layers.iter().enumerate() {
+            // pass 1: prefill q/k/v projection + bulk append per (job, head)
+            {
+                let mut tasks: Vec<(usize, usize, &mut DecodeState, &mut [f32], &[f32], usize)> =
+                    Vec::new();
+                for (j, (job, (hid, pj))) in
+                    prefills.iter_mut().zip(hiddens.iter().zip(projs.iter_mut())).enumerate()
+                {
+                    if pre_failed[j].load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    let c = job.tokens.len();
+                    if c == 0 {
+                        continue;
+                    }
+                    let layer_states = &mut job.session.states[li * heads..(li + 1) * heads];
+                    for (h, (st, pbuf)) in
+                        layer_states.iter_mut().zip(pj.chunks_mut(c * 3 * d_head)).enumerate()
+                    {
+                        tasks.push((j, h, st, pbuf, &hid[..], c));
+                    }
+                }
+                let pre_failed_ref = &pre_failed;
+                pool::run(
+                    threads,
+                    tasks,
+                    |(j, h, st, pbuf, hid, c): (
+                        usize,
+                        usize,
+                        &mut DecodeState,
+                        &mut [f32],
+                        &[f32],
+                        usize,
+                    )| {
+                        if pre_failed_ref[j].load(Ordering::Relaxed) {
+                            return;
+                        }
+                        if !fused_prefill_project_append(lw, h, st, pbuf, hid, c, dm, d_head) {
+                            pre_failed_ref[j].store(true, Ordering::Relaxed);
+                        }
+                    },
+                );
+            }
+            // pass 2: the fused drain — decode streams and prefill rows in
+            // one task list, one scratch per worker
+            {
+                let mut tasks: Vec<FusedTask> = Vec::new();
+                for (si, sess) in decodes.iter_mut().enumerate() {
+                    if dec_failed[si].load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    let sess: &mut LmSession = &mut **sess;
+                    sess.cat.fill(0.0);
+                    let hidden: &[f32] = &sess.hidden;
+                    let layer_states = &mut sess.states[li * heads..(li + 1) * heads];
+                    for (h, ((st, slot), proj)) in layer_states
+                        .iter_mut()
+                        .zip(sess.cat.chunks_mut(d_head))
+                        .zip(sess.proj.chunks_mut(3 * d_head))
+                        .enumerate()
+                    {
+                        tasks.push(FusedTask::Decode(si, h, st, slot, proj, hidden));
+                    }
+                }
+                for (j, (job, (cat, pj))) in
+                    prefills.iter().zip(cats.iter_mut().zip(projs.iter())).enumerate()
+                {
+                    if pre_failed[j].load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    let c = job.tokens.len();
+                    if c == 0 {
+                        continue;
+                    }
+                    let states: &[DecodeState] = &job.session.states[li * heads..(li + 1) * heads];
+                    for (p, slot) in cat.chunks_mut(d_head).enumerate() {
+                        let (r, h) = (p / heads, p % heads);
+                        let q_off = h * c * 3 * d_head + r * d_head;
+                        tasks.push(FusedTask::Attend(
+                            &states[h],
+                            &pj[q_off..q_off + d_head],
+                            base_lens[j] + r,
+                            slot,
+                        ));
+                    }
+                }
+                let dec_failed_ref = &dec_failed;
+                pool::run_with(threads, tasks, DecodeScratch::default, |scratch, task| match task
+                {
+                    FusedTask::Decode(si, h, st, slot, proj, hidden) => {
+                        if dec_failed_ref[si].load(Ordering::Relaxed) {
+                            return;
+                        }
+                        if !fused_decode_task(lw, h, st, slot, proj, hidden, d_head) {
+                            dec_failed_ref[si].store(true, Ordering::Relaxed);
+                        }
+                    }
+                    FusedTask::Attend(st, q, pos, slot) => {
+                        fused_prefill_attend(st, q, pos, scratch, slot);
+                    }
+                });
+            }
+            // pass 3: residual + layer norm — per decode session, then per
+            // prefill chunk row (each session's arithmetic is independent
+            // and identical to its legacy sub-phase body)
+            for (si, sess) in decodes.iter_mut().enumerate() {
+                if dec_failed[si].load(Ordering::Relaxed) {
+                    continue;
+                }
+                for (c, &hv) in sess.cat.iter_mut().zip(sess.hidden.iter()) {
+                    *c += hv;
+                }
+                layer_norm_row_into(&sess.cat, 1e-5, &mut sess.hidden);
+            }
+            for (j, (cat, hid)) in cats.iter_mut().zip(hiddens.iter_mut()).enumerate() {
+                if pre_failed[j].load(Ordering::Relaxed) {
+                    continue;
+                }
+                for (crow, hrow) in cat.chunks_exact_mut(dm).zip(hid.chunks_exact_mut(dm)) {
+                    for (cv, &hv) in crow.iter_mut().zip(hrow.iter()) {
+                        *cv += hv;
+                    }
+                    layer_norm_row_into(crow, 1e-5, hrow);
+                }
+            }
+        }
+        // vocab projection: decode survivors plus finishing prefill jobs,
+        // one combined task list
+        {
+            let mut tasks: Vec<(&[f32], &mut Vec<f32>)> = Vec::new();
+            for (si, sess) in decodes.iter_mut().enumerate() {
+                if dec_failed[si].load(Ordering::Relaxed) {
+                    continue;
+                }
+                let sess: &mut LmSession = &mut **sess;
+                tasks.push((&sess.hidden, &mut sess.logits));
+            }
+            for (j, (job, hid)) in prefills.iter_mut().zip(hiddens.iter()).enumerate() {
+                let c = job.tokens.len();
+                if pre_failed[j].load(Ordering::Relaxed) || !job.with_logits || c == 0 {
+                    continue;
+                }
+                tasks.push((&hid[(c - 1) * dm..c * dm], &mut job.session.logits));
+            }
+            pool::run(threads, tasks, |(hidden, logits)| {
+                self.project_logits_into(hidden, logits);
+            });
+        }
+        let pre_out: Vec<Result<(), PoolExhausted>> = prefills
+            .iter_mut()
+            .zip(&pre_failed)
+            .map(|(job, f)| {
+                if f.load(Ordering::Relaxed) {
+                    job.session.poisoned = true; // torn mid-chunk: discard + recompute
+                    Err(PoolExhausted)
+                } else {
+                    job.session.len += job.tokens.len();
+                    Ok(())
+                }
+            })
+            .collect();
+        let dec_out: Vec<Result<i32, PoolExhausted>> = decodes
+            .iter_mut()
+            .zip(&dec_failed)
+            .zip(toks)
+            .map(|((sess, f), tok)| {
+                if f.load(Ordering::Relaxed) {
+                    sess.poisoned = true; // torn mid-layer: discard + recompute
+                    Err(PoolExhausted)
+                } else {
+                    sess.len += 1;
+                    Ok(tok)
+                }
+            })
+            .collect();
+        (pre_out, dec_out)
+    }
+
     /// The one per-token decode body (and the reference body the chunked
     /// prefill is bitwise-gated against): embed each session's committed
     /// token, run every layer as a flattened `(session, head)` task list
@@ -1067,17 +1363,9 @@ impl NativeLm {
                 if failed_ref[si].load(Ordering::Relaxed) {
                     return;
                 }
-                let (q, kv) = proj.split_at_mut(d_head);
-                let (k, v) = kv.split_at_mut(d_head);
-                row_project_into(hidden, &lw.wq[h], q);
-                row_project_into(hidden, &lw.wk[h], k);
-                row_project_into(hidden, &lw.wv[h], v);
-                if st.try_append(k, v).is_err() {
+                if !fused_decode_task(lw, h, st, slot, proj, hidden, d_head) {
                     failed_ref[si].store(true, Ordering::Relaxed);
-                    return;
                 }
-                // allocation-free steady path: attend straight into the slot
-                st.attend_last_into(q, slot);
             });
             // residual + layer norm per surviving session
             for (si, sess) in sessions.iter_mut().enumerate() {
@@ -1209,6 +1497,80 @@ impl NativeLm {
             .pop()
             .expect("one result per session")
     }
+}
+
+/// Hot-path body of one `(session, head)` decode-stream task: project
+/// q/k/v for the committed token, append K/V, attend the newest position
+/// straight into the session's concat slot.  Shared verbatim by the
+/// legacy batched step ([`NativeLm::step_sessions`]) and the fused drain
+/// ([`NativeLm::fused_step`]) — one body, so the two step shapes cannot
+/// drift apart bitwise.  Returns `false` on pool exhaustion (the caller
+/// marks the session torn).  Allocation-free (enforced by `cargo xtask
+/// lint` hot-path-alloc).
+fn fused_decode_task(
+    lw: &LayerWeights,
+    h: usize,
+    st: &mut DecodeState,
+    slot: &mut [f32],
+    proj: &mut [f32],
+    hidden: &[f32],
+    d_head: usize,
+) -> bool {
+    let (q, kv) = proj.split_at_mut(d_head);
+    let (k, v) = kv.split_at_mut(d_head);
+    row_project_into(hidden, &lw.wq[h], q);
+    row_project_into(hidden, &lw.wk[h], k);
+    row_project_into(hidden, &lw.wv[h], v);
+    if st.try_append(k, v).is_err() {
+        return false;
+    }
+    // allocation-free steady path: attend straight into the slot
+    st.attend_last_into(q, slot);
+    true
+}
+
+/// Hot-path body of one `(job, head)` prefill preparation task: project
+/// the whole chunk's q/k/v panels row by row (the same
+/// [`row_project_into`] calls as the per-token path) and bulk-append K/V.
+/// Shared verbatim by [`NativeLm::prefill_chunk`] and the fused step's
+/// preparation pass.  Returns `false` on pool exhaustion.
+/// Allocation-free (enforced by `cargo xtask lint` hot-path-alloc).
+fn fused_prefill_project_append(
+    lw: &LayerWeights,
+    h: usize,
+    st: &mut DecodeState,
+    pbuf: &mut [f32],
+    hidden: &[f32],
+    c: usize,
+    dm: usize,
+    d_head: usize,
+) -> bool {
+    let (qb, kvb) = pbuf.split_at_mut(c * d_head);
+    let (kb, vb) = kvb.split_at_mut(c * d_head);
+    for r in 0..c {
+        let hrow = &hidden[r * dm..(r + 1) * dm];
+        row_project_into(hrow, &lw.wq[h], &mut qb[r * d_head..(r + 1) * d_head]);
+        row_project_into(hrow, &lw.wk[h], &mut kb[r * d_head..(r + 1) * d_head]);
+        row_project_into(hrow, &lw.wv[h], &mut vb[r * d_head..(r + 1) * d_head]);
+    }
+    st.try_append_rows(kb, vb).is_ok()
+}
+
+/// Hot-path body of one `(job, head, chunk-row)` prefill attention task:
+/// row `pos` attends exactly the causal prefix it would have seen as the
+/// newest position ([`DecodeState::attend_pos_into`] takes an explicit
+/// position, which is what lets these tasks share one drain with decode
+/// tasks — every chunk row is already appended by the preparation pass).
+/// Shared verbatim by [`NativeLm::prefill_chunk`] and the fused drain.
+/// Allocation-free (enforced by `cargo xtask lint` hot-path-alloc).
+fn fused_prefill_attend(
+    st: &DecodeState,
+    q: &[f32],
+    pos: usize,
+    scratch: &mut DecodeScratch,
+    slot: &mut [f32],
+) {
+    st.attend_pos_into(q, pos, scratch, slot);
 }
 
 /// `out = row @ w` for a single row into a caller-owned buffer — the

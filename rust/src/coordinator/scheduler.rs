@@ -100,11 +100,13 @@ use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
+use std::time::Duration;
 
 pub use crate::config::SessionConfig;
+use crate::coordinator::autotune::{AutotuneBudget, MonotonicClock, StepClock};
 use crate::coordinator::batcher::Request;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::native::{LmSession, NativeLm};
+use crate::coordinator::native::{FusedPrefill, LmSession, NativeLm};
 use crate::coordinator::server::{Ingress, Responder, Response};
 use crate::engine::{PagePool, PoolExhausted, RadixCache};
 
@@ -179,8 +181,16 @@ pub(crate) struct Scheduler {
     admit_stamp: u64,
     seq_len: usize,
     block: usize,
-    /// At least one block per step so prefill always progresses.
-    chunk_budget: usize,
+    /// Self-tuning prefill token budget (AIMD against
+    /// `sessions.decode_p95_target_us`; `sessions.prefill_chunk_tokens`
+    /// is its initial value and hard cap, one block its floor — so
+    /// prefill always progresses).
+    autotune: AutotuneBudget,
+    /// Execute each step as one fused task drain
+    /// ([`NativeLm::fused_step`]) instead of the legacy
+    /// prefill-then-decode sub-phases (`sessions.fused_step`; results
+    /// are bitwise identical either way — property-tested).
+    fused: bool,
     /// Monotone step counter — the clock priority aging reads.  Step-based
     /// (not wall-clock) so QoS ordering is deterministic under test.
     steps: u64,
@@ -200,12 +210,31 @@ pub(crate) fn scheduler_loop(
 
 impl Scheduler {
     pub(crate) fn new(lm: Arc<NativeLm>, scfg: SessionConfig, metrics: Arc<Metrics>) -> Self {
+        Self::with_clock(lm, scfg, metrics, Box::new(MonotonicClock::default()))
+    }
+
+    /// [`Scheduler::new`] with an injected step clock — the hook tests
+    /// and benches use to drive the budget controller deterministically
+    /// ([`crate::coordinator::autotune::ManualClock`]).
+    pub(crate) fn with_clock(
+        lm: Arc<NativeLm>,
+        scfg: SessionConfig,
+        metrics: Arc<Metrics>,
+        clock: Box<dyn StepClock>,
+    ) -> Self {
         let pool = lm.new_page_pool(scfg.total_pages);
         metrics.pool_pages.store(scfg.total_pages as u64, Ordering::Relaxed);
         let cache = if scfg.prefix_cache { Some(lm.new_radix_cache()) } else { None };
         let seq_len = lm.config().seq_len;
         let block = lm.config().block;
-        let chunk_budget = scfg.prefill_chunk_tokens.max(block);
+        let autotune = AutotuneBudget::new(
+            scfg.prefill_chunk_tokens.max(block),
+            block,
+            scfg.decode_p95_target_us,
+            scfg.autotune_prefill,
+            clock,
+        );
+        let fused = scfg.fused_step;
         Scheduler {
             lm,
             scfg,
@@ -218,7 +247,8 @@ impl Scheduler {
             admit_stamp: 0,
             seq_len,
             block,
-            chunk_budget,
+            autotune,
+            fused,
             steps: 0,
         }
     }
@@ -266,8 +296,19 @@ impl Scheduler {
         }
 
         let plan = self.plan_and_reserve();
-        self.run_prefill_chunks(&plan);
-        self.decode_step();
+        self.autotune.begin_step();
+        let decoded = if self.fused {
+            self.fused_execute(&plan)
+        } else {
+            self.run_prefill_chunks(&plan);
+            self.decode_step()
+        };
+        let dt = self.autotune.end_step(!plan.is_empty());
+        if decoded {
+            // observe only steps that actually decoded: the p95 the
+            // controller regulates is decode latency under prefill load
+            self.metrics.decode_step_latency.record(Duration::from_micros(dt));
+        }
         self.stream_progress();
         self.publish_gauges();
         self.check_invariants();
@@ -492,7 +533,20 @@ impl Scheduler {
                     // cross-session sharing, so they stay out of the
                     // prefix-hit metrics
                     if p.generated.is_empty() {
-                        self.metrics.record_prefix_lookup(session.cached_tokens());
+                        let cached = session.cached_tokens();
+                        self.metrics.record_prefix_lookup(cached);
+                        // blocks published mid-prefill (per-chunk) by a
+                        // *still-prefilling* session with the same prompt:
+                        // the dedup the chunk-granular publication buys
+                        if cached > 0
+                            && self.running.iter().any(|r| {
+                                r.prefill.as_ref().is_some_and(|pf| {
+                                    pf.len() >= cached && pf[..cached] == prompt[..cached]
+                                })
+                            })
+                        {
+                            self.metrics.midprefill_prefix_hits.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                     // install the request's sampling policy; a readmitted
                     // stochastic session fast-forwards its draw counter to
@@ -565,33 +619,92 @@ impl Scheduler {
             .map(|(i, _)| i)
     }
 
-    /// Plan + reserve this step (evict, then preempt lowest-priority,
-    /// youngest — [`Scheduler::preempt_victim`]).  The
-    /// prefill plan is pure arithmetic, so it can be recomputed after
-    /// every preemption until the step's page demand fits: one
-    /// block-aligned chunk per prefilling session (oldest first) from
-    /// the shared token budget, alongside one decode append per
-    /// decodable session.
-    fn plan_and_reserve(&mut self) -> ChunkPlan {
+    /// Spend the step's autotuned token budget over the prefilling
+    /// sessions, oldest admission first, and keep re-offering the
+    /// leftover until it is gone or nobody can take more.
+    ///
+    /// One pass is not enough (§bugfix): [`NativeLm::prefill_take`]
+    /// snaps non-final chunks *down* to a block boundary, so a 44-token
+    /// budget against a long prompt hands out 32 and strands 12 — every
+    /// step, forever.  Re-offering lets the same session (or the next
+    /// one in admission order) extend its planned chunk into the
+    /// remainder, so the whole budget is spent whenever work exists.
+    /// Extended entries stay one chunk per session (`plan` entry takes
+    /// are merged), and every re-offer is counted into
+    /// `Metrics::budget_reoffers` by [`Scheduler::commit_plan`].
+    ///
+    /// Pure arithmetic over scheduler state — recomputable after every
+    /// eviction/preemption of the reserve loop.
+    fn plan_chunks(&self) -> (ChunkPlan, u64) {
+        let mut budget = self.autotune.current();
+        let mut plan: ChunkPlan = Vec::new();
+        let mut reoffers: u64 = 0;
+        let mut order: Vec<usize> =
+            (0..self.running.len()).filter(|&i| self.running[i].prefill.is_some()).collect();
+        order.sort_unstable_by_key(|&i| self.running[i].admitted_at);
+        let mut first_pass = true;
         loop {
-            let mut budget = self.chunk_budget;
-            let mut plan: ChunkPlan = Vec::new();
-            let mut order: Vec<usize> =
-                (0..self.running.len()).filter(|&i| self.running[i].prefill.is_some()).collect();
-            order.sort_unstable_by_key(|&i| self.running[i].admitted_at);
-            for i in order {
+            let mut progressed = false;
+            for &i in &order {
                 if budget == 0 {
                     break;
                 }
                 let r = &self.running[i];
                 let Some(pf) = r.prefill.as_ref() else { continue };
-                let take = self.lm.prefill_take(r.session.len(), pf.len(), budget);
+                let entry = plan.iter().position(|e| e.0 == i);
+                let done = r.session.len() + entry.map(|e| plan[e].1).unwrap_or(0);
+                if done >= pf.len() {
+                    continue;
+                }
+                let take = self.lm.prefill_take(done, pf.len(), budget);
                 if take == 0 {
                     continue;
                 }
                 budget -= take;
-                plan.push((i, take, r.session.len() + take == pf.len()));
+                progressed = true;
+                let done_after = done + take == pf.len();
+                match entry {
+                    Some(e) => {
+                        plan[e].1 += take;
+                        plan[e].2 = done_after;
+                        reoffers += 1;
+                    }
+                    None => {
+                        if !first_pass {
+                            reoffers += 1;
+                        }
+                        plan.push((i, take, done_after));
+                    }
+                }
             }
+            if !progressed || budget == 0 {
+                break;
+            }
+            first_pass = false;
+        }
+        (plan, reoffers)
+    }
+
+    /// Record a finally-reserved plan's re-offer count (the reserve loop
+    /// may replan several times; only the plan actually run counts).
+    fn commit_plan(&self, plan: ChunkPlan, reoffers: u64) -> ChunkPlan {
+        if reoffers > 0 {
+            self.metrics.budget_reoffers.fetch_add(reoffers, Ordering::Relaxed);
+        }
+        plan
+    }
+
+    /// Plan + reserve this step (evict, then preempt lowest-priority,
+    /// youngest — [`Scheduler::preempt_victim`]).  The
+    /// prefill plan ([`Scheduler::plan_chunks`]) is pure arithmetic, so
+    /// it can be recomputed after
+    /// every preemption until the step's page demand fits: one
+    /// chunk per prefilling session (oldest first) from
+    /// the shared token budget, alongside one decode append per
+    /// decodable session.
+    fn plan_and_reserve(&mut self) -> ChunkPlan {
+        loop {
+            let (plan, reoffers) = self.plan_chunks();
             let mut needed: usize = self
                 .running
                 .iter()
@@ -611,7 +724,7 @@ impl Scheduler {
                 }
             }
             if self.pool.free_pages() >= needed {
-                return plan;
+                return self.commit_plan(plan, reoffers);
             }
             let short = needed - self.pool.free_pages();
             if let Some(c) = self.cache.as_mut() {
@@ -623,10 +736,10 @@ impl Scheduler {
                 // a single session always fits its admission estimate; if
                 // this still trips, the chunk/step below surfaces
                 // PoolExhausted and the session is preempted whole
-                return plan;
+                return self.commit_plan(plan, reoffers);
             }
             let Some(vi) = self.preempt_victim() else {
-                return plan;
+                return self.commit_plan(plan, reoffers);
             };
             let victim = self.running.swap_remove(vi);
             self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
@@ -642,25 +755,38 @@ impl Scheduler {
         }
     }
 
+    /// Advertise running index `i`'s complete, immutable prompt blocks
+    /// to the radix cache — called after *every* successful prefill
+    /// chunk, not only the final one, so a concurrent session with the
+    /// same prompt shares the prefix pages physically while the first
+    /// is still mid-prefill (the insert is prefix-idempotent and
+    /// block-aligned, so repeated per-chunk publication just extends the
+    /// cached run).
+    fn publish_completed_blocks(&mut self, i: usize) {
+        let Some(c) = self.cache.as_mut() else { return };
+        let r = &self.running[i];
+        let Some(prompt) = r.prefill.as_ref() else { return };
+        let nb = r.session.len() / self.block;
+        if nb > 0 {
+            self.lm.publish_prompt_pages(c, &prompt[..nb * self.block], &r.session);
+        }
+    }
+
     /// Prefill: run the planned chunks through the engine.
     fn run_prefill_chunks(&mut self, plan: &ChunkPlan) {
         let mut torn: Vec<usize> = Vec::new();
         for &(i, take, done_after) in plan {
-            let Running { session, prefill, .. } = &mut self.running[i];
-            let Some(prompt) = prefill.as_ref() else { continue };
-            let from = session.len();
-            match self.lm.prefill_chunk(session, &prompt[from..from + take], done_after) {
-                Ok(()) => {
-                    self.metrics.record_prefill_chunk(take);
-                    if done_after {
-                        // advertise the complete prompt blocks so the next
-                        // session with this prompt shares them physically
-                        if let Some(c) = self.cache.as_mut() {
-                            self.lm.publish_prompt_pages(c, prompt, session);
-                        }
-                    }
-                }
-                Err(PoolExhausted) => torn.push(i),
+            let ok = {
+                let Running { session, prefill, .. } = &mut self.running[i];
+                let Some(prompt) = prefill.as_ref() else { continue };
+                let from = session.len();
+                self.lm.prefill_chunk(session, &prompt[from..from + take], done_after).is_ok()
+            };
+            if ok {
+                self.metrics.record_prefill_chunk(take);
+                self.publish_completed_blocks(i);
+            } else {
+                torn.push(i);
             }
         }
         for &(i, _, done_after) in plan {
@@ -700,12 +826,14 @@ impl Scheduler {
     }
 
     /// One continuous decode step: every decodable session, one token —
-    /// sessions whose prefill just completed join immediately.
-    fn decode_step(&mut self) {
+    /// sessions whose prefill just completed join immediately.  Returns
+    /// whether anything decoded (the autotune controller only observes
+    /// steps that did).
+    fn decode_step(&mut self) -> bool {
         let decodable: Vec<usize> =
             (0..self.running.len()).filter(|&i| self.running[i].decodable()).collect();
         if decodable.is_empty() {
-            return;
+            return false;
         }
         let results = {
             let mut refs: Vec<&mut LmSession> = self
@@ -747,9 +875,177 @@ impl Scheduler {
                 enqueued_step: self.steps,
             });
         }
+        true
+    }
+
+    /// The fused execution path: the step's planned prefill chunks and
+    /// its decode batch run as one heterogeneous task list
+    /// ([`NativeLm::fused_step`]) — no prefill→decode barrier.  All
+    /// bookkeeping (chunk metrics, per-chunk prefix publication, token
+    /// commits, torn/starved preemption, requeue order) mirrors
+    /// [`Scheduler::run_prefill_chunks`] + [`Scheduler::decode_step`]
+    /// exactly, and sessions finishing their prefill this step decode
+    /// through a follow-up [`NativeLm::step_sessions`] micro-batch
+    /// (batching cannot change their streams), so the fused and phased
+    /// paths are bitwise interchangeable (property-tested).  Returns
+    /// whether anything decoded, like [`Scheduler::decode_step`].
+    fn fused_execute(&mut self, plan: &ChunkPlan) -> bool {
+        let entry = |i: usize| plan.iter().find(|e| e.0 == i).copied();
+        let mut torn: Vec<usize> = Vec::new();
+        let mut starved: Vec<usize> = Vec::new();
+        let mut job_idx: Vec<usize> = Vec::new();
+        let mut dec_idx: Vec<usize> = Vec::new();
+        let (pre_out, dec_out) = {
+            let mut jobs: Vec<FusedPrefill<'_>> = Vec::new();
+            let mut dec_refs: Vec<&mut LmSession> = Vec::new();
+            for (i, r) in self.running.iter_mut().enumerate() {
+                if let Some((_, take, done_after)) = entry(i) {
+                    let Running { session, prefill, .. } = r;
+                    let Some(pf) = prefill.as_ref() else { continue };
+                    let from = session.len();
+                    jobs.push(FusedPrefill {
+                        session,
+                        tokens: &pf[from..from + take],
+                        with_logits: done_after,
+                    });
+                    job_idx.push(i);
+                } else if r.decodable() {
+                    dec_refs.push(&mut r.session);
+                    dec_idx.push(i);
+                }
+            }
+            self.lm.fused_step(&mut jobs, &mut dec_refs)
+        };
+        for (k, res) in pre_out.iter().enumerate() {
+            let i = job_idx[k];
+            match res {
+                Ok(()) => {
+                    let take = entry(i).map(|e| e.1).unwrap_or(0);
+                    self.metrics.record_prefill_chunk(take);
+                    self.publish_completed_blocks(i);
+                }
+                Err(PoolExhausted) => torn.push(i),
+            }
+        }
+        for &(i, _, done_after) in plan {
+            if done_after && !torn.contains(&i) {
+                self.running[i].prefill = None;
+            }
+        }
+        for (k, res) in dec_out.iter().enumerate() {
+            let i = dec_idx[k];
+            match res {
+                Ok(tok) => {
+                    self.running[i].generated.push(*tok);
+                    self.metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(PoolExhausted) => starved.push(i),
+            }
+        }
+        // sessions that finished prefill this step join the decode *this
+        // step* (as in the phased path) via a follow-up micro-batch —
+        // their logits only exist after the fused drain
+        let mut joiners: Vec<usize> = plan
+            .iter()
+            .filter(|&&(i, _, done_after)| {
+                done_after && !torn.contains(&i) && self.running[i].decodable()
+            })
+            .map(|e| e.0)
+            .collect();
+        joiners.sort_unstable();
+        if !joiners.is_empty() {
+            let results = {
+                let mut refs: Vec<&mut LmSession> = self
+                    .running
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| joiners.binary_search(i).is_ok())
+                    .map(|(_, r)| &mut r.session)
+                    .collect();
+                self.lm.step_sessions(&mut refs)
+            };
+            for (k, res) in results.iter().enumerate() {
+                let i = joiners[k];
+                match res {
+                    Ok(tok) => {
+                        self.running[i].generated.push(*tok);
+                        self.metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(PoolExhausted) => starved.push(i),
+                }
+            }
+        }
+        let decoded = !dec_idx.is_empty() || !joiners.is_empty();
+        if decoded {
+            self.metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+        }
+        // torn/starved preemption, replicating the phased path's waiting-
+        // queue order exactly: both sets were collected against the same
+        // pre-removal indices, so remove the union descending (stashing by
+        // category), then requeue torn first, then starved — each set
+        // pushed front in descending index order so the queue reads
+        // ascending, with the starved in front of the torn (the phased
+        // decode sub-phase runs after the prefill sub-phase).
+        starved.sort_unstable();
+        torn.sort_unstable();
+        let mut combined: Vec<(usize, bool)> = torn.iter().map(|&i| (i, true)).collect();
+        combined.extend(starved.iter().map(|&i| (i, false)));
+        combined.sort_unstable();
+        let mut removed_torn: Vec<Running> = Vec::new();
+        let mut removed_starved: Vec<Running> = Vec::new();
+        for &(i, is_torn) in combined.iter().rev() {
+            let r = self.running.remove(i);
+            if is_torn {
+                removed_torn.push(r);
+            } else {
+                removed_starved.push(r);
+            }
+        }
+        removed_torn.reverse(); // ascending original-index order
+        removed_starved.reverse();
+        let starved_pending = removed_starved.len();
+        for (k, r) in removed_torn.into_iter().enumerate().rev() {
+            // reclaimability as the phased path saw it at this torn
+            // session's removal: every other session (running, earlier
+            // torn, or not-yet-preempted starved) still held pages then
+            let reclaimable = !self.running.is_empty()
+                || k > 0
+                || starved_pending > 0
+                || self.cache.as_ref().map(|c| c.pages_held() > 0).unwrap_or(false);
+            if reclaimable {
+                self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+                self.waiting.push_front(Pending {
+                    req: r.req,
+                    resp: r.resp,
+                    generated: r.generated,
+                    admitted: true,
+                    streamed: r.streamed,
+                    enqueued_step: self.steps,
+                });
+            } else {
+                self.metrics.inc_rejected();
+                let _ = r
+                    .resp
+                    .send(Err("page pool exhausted with nothing reclaimable".to_string()));
+            }
+        }
+        for r in removed_starved.into_iter().rev() {
+            self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            self.waiting.push_front(Pending {
+                req: r.req,
+                resp: r.resp,
+                generated: r.generated,
+                admitted: true,
+                streamed: r.streamed,
+                enqueued_step: self.steps,
+            });
+        }
+        decoded
     }
 
     fn publish_gauges(&self) {
+        let live_budget = self.autotune.current() as u64;
+        self.metrics.autotuned_chunk_tokens.store(live_budget, Ordering::Relaxed);
         let prefilling = self.running.iter().filter(|r| r.prefill.is_some()).count() as u64;
         let backlog: u64 = self
             .running
@@ -985,6 +1281,12 @@ mod tests {
             attention: "mra2".to_string(),
             seed: 7,
         }
+    }
+
+    /// `small_cfg` with room for a 200-token prompt (the re-offer
+    /// regression needs a prompt much longer than one step's budget).
+    fn wide_cfg() -> NativeMlmConfig {
+        NativeMlmConfig { seq_len: 256, ..small_cfg() }
     }
 
     fn spawn_scheduler(
@@ -1659,6 +1961,254 @@ mod tests {
             handle.join().unwrap();
             if metrics.preemptions.load(Ordering::Relaxed) < 1 {
                 return Err("the 10-page pool must force at least one preemption".into());
+            }
+            Ok(())
+        });
+    }
+
+    // ---- fused step, budget re-offer, mid-prefill publication -------
+
+    /// §bugfix regression: `prefill_take` snaps non-final chunks down to
+    /// a block boundary, and the old single-pass planner stranded the
+    /// remainder — a 44-token budget against a long prompt handed out 32
+    /// tokens per step, forever.  The re-offer loop must spend the
+    /// leftover 12 in the same step, finishing the 200-token prompt in 5
+    /// prefill steps instead of 7 (observable as a lower total step
+    /// count) and counting each re-offer.
+    #[test]
+    fn leftover_budget_is_reoffered_within_the_same_step() {
+        let scfg = SessionConfig {
+            total_pages: 512,
+            free_watermark: 0,
+            max_running: 8,
+            prefix_cache: false,
+            prefill_chunk_tokens: 44, // 2 blocks + a 12-token remainder
+            autotune_prefill: false,
+            ..Default::default()
+        };
+        let lm = Arc::new(NativeLm::new(wide_cfg(), 2));
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(lm.clone(), scfg, metrics.clone());
+        let (tx, rx) = sync_channel::<Ingress>(8);
+        let long = prompt(0, 200);
+        let short = prompt(1, 8);
+        let ra = send_req(&tx, 0, long.clone(), 4);
+        let rb = send_req(&tx, 1, short.clone(), 4);
+        let mut steps = 0;
+        let a = loop {
+            assert!(sched.step(&rx), "work remains");
+            steps += 1;
+            assert!(steps < 40, "long request did not finish");
+            if let Ok(resp) = ra.try_recv() {
+                break resp.expect("long response");
+            }
+        };
+        let b = rb.recv().unwrap().expect("short response");
+        assert_eq!(a.predictions, lm.generate(&long, 4).unwrap(), "re-offer changed the output");
+        assert_eq!(b.predictions, lm.generate(&short, 4).unwrap());
+        // re-offered: 36/44/44/44/32-token prefill steps + 3 decode-only
+        // steps + the finisher = 8 steps; the stranded-remainder bug
+        // needs 7 prefill steps (32/step) and finishes at step 10
+        assert!(steps <= 9, "budget remainder was stranded: took {steps} steps");
+        assert!(
+            metrics.budget_reoffers.load(Ordering::Relaxed) >= 1,
+            "re-offers must be counted: {}",
+            metrics.summary()
+        );
+        assert_eq!(metrics.prefill_tokens.load(Ordering::Relaxed), 200 + 8);
+        assert_eq!(
+            metrics.autotuned_chunk_tokens.load(Ordering::Relaxed),
+            44,
+            "disabled controller must pin the gauge at the configured knob"
+        );
+        tx.send(Ingress::Shutdown).unwrap();
+        while sched.step(&rx) {}
+    }
+
+    /// Mid-prefill prefix publication: a second identical prompt
+    /// admitted while the first is *still prefilling* attaches the
+    /// blocks published chunk by chunk — counted by
+    /// `midprefill_prefix_hits` — and skips recomputing them, without
+    /// changing either output.
+    #[test]
+    fn identical_prompt_admitted_mid_prefill_shares_published_blocks() {
+        let scfg = SessionConfig {
+            total_pages: 512,
+            free_watermark: 0,
+            max_running: 8,
+            prefix_cache: true,
+            prefill_chunk_tokens: 16,
+            autotune_prefill: false,
+            ..Default::default()
+        };
+        let lm = Arc::new(NativeLm::new(small_cfg(), 2));
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(lm.clone(), scfg, metrics.clone());
+        let (tx, rx) = sync_channel::<Ingress>(8);
+        let shared = prompt(0, 48);
+        let r1 = send_req(&tx, 0, shared.clone(), 3);
+        // two chunked steps in: 32 tokens prefilled, 2 blocks published
+        assert!(sched.step(&rx));
+        assert!(sched.step(&rx));
+        assert!(metrics.prefill_tokens.load(Ordering::Relaxed) >= 32, "{}", metrics.summary());
+        // the twin arrives while the first session is mid-prefill
+        let r2 = send_req(&tx, 1, shared.clone(), 3);
+        assert!(sched.step(&rx));
+        assert_eq!(
+            metrics.midprefill_prefix_hits.load(Ordering::Relaxed),
+            1,
+            "{}",
+            metrics.summary()
+        );
+        let (mut a, mut b) = (None, None);
+        let mut steps = 0;
+        while a.is_none() || b.is_none() {
+            assert!(sched.step(&rx), "work remains");
+            steps += 1;
+            assert!(steps < 50, "requests did not finish");
+            if a.is_none() {
+                if let Ok(x) = r1.try_recv() {
+                    a = Some(x.expect("first response"));
+                }
+            }
+            if b.is_none() {
+                if let Ok(x) = r2.try_recv() {
+                    b = Some(x.expect("second response"));
+                }
+            }
+        }
+        let want = lm.generate(&shared, 3).unwrap();
+        assert_eq!(a.unwrap().predictions, want);
+        assert_eq!(b.unwrap().predictions, want, "mid-prefill sharing changed the output");
+        // the twin attached >= 2 published blocks instead of recomputing
+        assert!(
+            metrics.prefix_hit_tokens.load(Ordering::Relaxed) >= 32,
+            "{}",
+            metrics.summary()
+        );
+        assert!(
+            metrics.prefill_tokens.load(Ordering::Relaxed) < 96,
+            "the shared blocks must not be prefilled twice: {}",
+            metrics.summary()
+        );
+        tx.send(Ingress::Shutdown).unwrap();
+        while sched.step(&rx) {}
+    }
+
+    /// The tentpole equivalence: the fused single-drain step and the
+    /// legacy phased (prefill-then-decode) step must be bitwise
+    /// indistinguishable — same responses, same token/chunk/session
+    /// accounting, same preemption and replay behavior — across random
+    /// mixed workloads (prompt lengths, shared prompts, priorities,
+    /// greedy and stochastic sampling) under a pool tight enough to
+    /// force preemptions.
+    #[test]
+    fn fused_step_matches_the_phased_path_bitwise() {
+        use crate::proptest::for_all_seeds;
+        for_all_seeds(6, |_, rng| {
+            let prefix_cache = rng.below(2) == 0;
+            let chunk = [16, 24, 44, 256][rng.below(4)];
+            let n = 4 + rng.below(3);
+            let mut cases: Vec<(Vec<i32>, usize, SamplingParams, u8)> = Vec::new();
+            for i in 0..n {
+                let p = if i > 0 && rng.below(3) == 0 {
+                    cases[i - 1].0.clone() // shared prompts hit the cache
+                } else {
+                    prompt(i, 1 + rng.below(40))
+                };
+                let sampling = if rng.below(2) == 0 {
+                    SamplingParams::default()
+                } else {
+                    SamplingParams {
+                        temperature: 0.5 + rng.uniform(),
+                        top_k: [0usize, 4][rng.below(2)],
+                        top_p: 0.7 + 0.3 * rng.uniform(),
+                        seed: rng.next_u64(),
+                    }
+                };
+                let priority = [PRIORITY_NORMAL, 10, 200][rng.below(3)];
+                cases.push((p, 1 + rng.below(6), sampling, priority));
+            }
+            let run = |fused: bool| {
+                let scfg = SessionConfig {
+                    total_pages: 12,
+                    free_watermark: 0,
+                    max_running: 8,
+                    prefix_cache,
+                    prefill_chunk_tokens: chunk,
+                    fused_step: fused,
+                    autotune_prefill: false,
+                    ..Default::default()
+                };
+                let lm = Arc::new(NativeLm::new(small_cfg(), 2));
+                let metrics = Arc::new(Metrics::new());
+                let mut sched = Scheduler::new(lm, scfg, metrics.clone());
+                let (tx, rx) = sync_channel::<Ingress>(64);
+                let receivers: Vec<_> = cases
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (p, g, s, prio))| {
+                        send_req_cfg(
+                            &tx,
+                            Request {
+                                sampling: *s,
+                                priority: *prio,
+                                ..Request::new(i as u64, p.clone(), *g)
+                            },
+                        )
+                    })
+                    .collect();
+                let mut outs: Vec<Option<Result<Response, String>>> =
+                    (0..cases.len()).map(|_| None).collect();
+                let mut steps = 0;
+                while outs.iter().any(|o| o.is_none()) {
+                    assert!(sched.step(&rx), "work remains");
+                    steps += 1;
+                    assert!(steps < 3000, "workload did not drain");
+                    for (o, r) in outs.iter_mut().zip(&receivers) {
+                        if o.is_none() {
+                            if let Ok(resp) = r.try_recv() {
+                                *o = Some(resp);
+                            }
+                        }
+                    }
+                }
+                tx.send(Ingress::Shutdown).unwrap();
+                while sched.step(&rx) {}
+                let sig: Vec<Result<(u64, Vec<i32>), String>> = outs
+                    .into_iter()
+                    .map(|o| match o {
+                        Some(Ok(resp)) => Ok((resp.id, resp.predictions)),
+                        Some(Err(e)) => Err(e),
+                        None => Err("missing".into()),
+                    })
+                    .collect();
+                let counters = [
+                    metrics.generated_tokens.load(Ordering::Relaxed),
+                    metrics.prefill_tokens.load(Ordering::Relaxed),
+                    metrics.prefill_chunks.load(Ordering::Relaxed),
+                    metrics.sessions.load(Ordering::Relaxed),
+                    metrics.preemptions.load(Ordering::Relaxed),
+                    metrics.decode_steps.load(Ordering::Relaxed),
+                    metrics.rejected.load(Ordering::Relaxed),
+                    metrics.budget_reoffers.load(Ordering::Relaxed),
+                    metrics.midprefill_prefix_hits.load(Ordering::Relaxed),
+                    metrics.prefix_hit_tokens.load(Ordering::Relaxed),
+                ];
+                (sig, counters)
+            };
+            let (fused_sig, fused_counters) = run(true);
+            let (phased_sig, phased_counters) = run(false);
+            if fused_sig != phased_sig {
+                return Err(format!(
+                    "fused and phased outputs diverged:\n{fused_sig:?}\n{phased_sig:?}"
+                ));
+            }
+            if fused_counters != phased_counters {
+                return Err(format!(
+                    "fused and phased accounting diverged: {fused_counters:?} != \
+                     {phased_counters:?}"
+                ));
             }
             Ok(())
         });

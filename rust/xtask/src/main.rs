@@ -58,6 +58,10 @@ const HOT_PATH_MANIFEST: &[(&str, &[&str])] = &[
         &["softmax_accum_panel", "score_panel", "dot", "axpy", "scale", "pack_transpose"],
     ),
     ("src/engine/pool.rs", &["run_with"]),
+    (
+        "src/coordinator/native.rs",
+        &["fused_decode_task", "fused_prefill_project_append", "fused_prefill_attend"],
+    ),
 ];
 
 /// Coordinator request paths: a panic here drops client responders.
@@ -610,6 +614,24 @@ fn attend_row_paged(&self) {}
 ";
         let v = check_source("src/engine/decode.rs", fixture);
         assert_eq!(rules_of(&v), vec![("hot-path-alloc", 3)], "{v:?}");
+    }
+
+    #[test]
+    fn fused_step_bodies_are_manifest_covered() {
+        // the shared fused-step bodies are registered hot paths: a seeded
+        // allocation in one is flagged, and dropping one from the file
+        // (here: fused_prefill_attend) fails the manifest
+        let fixture = "\
+fn fused_decode_task(st: &mut DecodeState, slot: &mut [f32]) -> bool {
+    let tmp = slot.to_vec();
+    true
+}
+fn fused_prefill_project_append() -> bool { true }
+";
+        let v = check_source("src/coordinator/native.rs", fixture);
+        assert_eq!(rules_of(&v), vec![("hot-path-alloc", 1), ("hot-path-alloc", 2)], "{v:?}");
+        assert!(v[0].msg.contains("fused_prefill_attend"), "{}", v[0].msg);
+        assert!(v[1].msg.contains("fused_decode_task"), "{}", v[1].msg);
     }
 
     #[test]

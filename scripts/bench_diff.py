@@ -40,6 +40,9 @@ TRACKED = (
     "speedup_vs_fixed",
     "prefill_speedup_vs_per_token",
     "ttft_speedup_vs_finish",
+    "fused_serve_speedup_vs_phased",
+    "fused_decode_p95_gain_vs_phased",
+    "autotune_converged",
 )
 # fields that are metrics (never part of a row's identity key)
 METRIC_FIELDS = set(TRACKED) | {
@@ -52,6 +55,7 @@ METRIC_FIELDS = set(TRACKED) | {
     "ttft_finish_ms",
     "itl_p50_ms",
     "itl_p95_ms",
+    "settled_budget_tokens",
 }
 
 
