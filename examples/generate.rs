@@ -22,7 +22,7 @@ use std::io::Write;
 
 use anyhow::Result;
 use mra::cli::Args;
-use mra::config::{ServeConfig, SessionConfig};
+use mra::config::{ServeConfig, SessionConfig, TraceConfig};
 use mra::coordinator::{GenOptions, NativeLm, NativeMlmConfig, Server};
 use mra::data::{Corpus, CorpusConfig};
 use mra::engine::pool;
@@ -120,7 +120,12 @@ fn main() -> Result<()> {
         model: model.clone(),
         artifacts_dir: "artifacts".to_string(),
     };
-    let scfg = SessionConfig { total_pages: 4096, ..Default::default() };
+    let scfg = SessionConfig {
+        total_pages: 4096,
+        // record this request's timeline in the flight recorder
+        trace: TraceConfig { enabled: true, capacity: 1024 },
+        ..Default::default()
+    };
     let server = Server::start_native_lm_sessions(serve, mcfg, threads, scfg)?;
     print!("server :");
     let mut stream = server.generate_stream(prompt.clone(), GenOptions::new(max_new))?;
@@ -149,6 +154,18 @@ fn main() -> Result<()> {
         resp.predictions.len(),
         resp.latency.as_secs_f64() * 1e3
     );
+    // observability: the flight recorder saw both requests end to end, and
+    // the per-phase step timing accounts for where the step time went
+    let dump = server.dump_trace().expect("tracing was enabled");
+    let decodes = dump.lines().filter(|l| l.contains("\"ev\":\"Decode\"")).count();
+    let snap = server.metrics_snapshot();
+    let decode_attend =
+        snap.phases[mra::coordinator::StepPhase::DecodeAttend.index()].sum_us();
+    println!(
+        "trace  : {} events ({decodes} decodes); decode-attend phase spent {decode_attend} us",
+        dump.lines().count()
+    );
+    assert!(decodes > 0, "the trace must contain the decoded tokens");
     server.shutdown();
     println!("generate OK");
     Ok(())

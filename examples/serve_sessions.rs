@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use mra::cli::Args;
-use mra::config::{ServeConfig, SessionConfig};
+use mra::config::{ServeConfig, SessionConfig, TraceConfig};
 use mra::coordinator::{
     GenOptions, LmSession, NativeLm, NativeMlmConfig, Server, PRIORITY_NORMAL,
 };
@@ -107,6 +107,9 @@ fn main() -> Result<()> {
         // one block per step keeps the demo's interleaving visible in the
         // prefill_chunks / prefill_backlog metrics below
         prefill_chunk_tokens: block,
+        // flight recorder on: every Admit/PrefillChunk/Decode/Finish below
+        // lands in a 4096-event ring we dump as JSON lines at the end
+        trace: TraceConfig { enabled: true, capacity: 4096 },
         ..SessionConfig::default()
     };
     let server = Arc::new(Server::start_native_lm_sessions(serve, mcfg, threads, scfg)?);
@@ -171,6 +174,34 @@ fn main() -> Result<()> {
         "expiry error must be descriptive, got: {err}"
     );
     println!("deadline: zero-TTL request answered with a descriptive error");
+
+    // ---- part 3: observability surfaces -------------------------------
+    // per-phase step timing, scraped through the typed snapshot
+    let snap = server.metrics_snapshot();
+    println!(
+        "step phases (mean us): prefill_attend={:.0} decode_attend={:.0} logits={:.0}",
+        snap.phases[mra::coordinator::StepPhase::PrefillAttend.index()].mean_us(),
+        snap.phases[mra::coordinator::StepPhase::DecodeAttend.index()].mean_us(),
+        snap.phases[mra::coordinator::StepPhase::Logits.index()].mean_us(),
+    );
+    assert!(
+        snap.phases[mra::coordinator::StepPhase::DecodeAttend.index()].count() > 0,
+        "serving must have recorded decode-attend phase samples"
+    );
+    // Prometheus text exposition — the body a /metrics endpoint would serve
+    let prom = server.render_metrics();
+    assert!(prom.contains("mra_generated_tokens_total"), "exposition missing counters");
+    println!("prometheus exposition: {} bytes, {} series lines", prom.len(), prom.lines().count());
+    // flight-recorder dump: one JSON line per event, chronological
+    let dump = server.dump_trace().expect("tracing was enabled");
+    let admits = dump.lines().filter(|l| l.contains("\"ev\":\"Admit\"")).count();
+    let finishes = dump.lines().filter(|l| l.contains("\"ev\":\"Finish\"")).count();
+    println!(
+        "flight recorder: {} events ({admits} admits, {finishes} finishes)",
+        dump.lines().count()
+    );
+    assert!(admits > 0 && finishes > 0, "trace must show the served requests");
+
     if let Ok(s) = Arc::try_unwrap(server) {
         s.shutdown();
     }

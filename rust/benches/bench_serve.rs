@@ -27,6 +27,17 @@
 //! most 1/5 of finish-only first-token delivery — the entire point of the
 //! streaming API.
 //!
+//! Two observability gates close the file: a **flight-recorder leg**
+//! re-runs the continuous workload with the trace ring enabled and
+//! asserts tracing costs at most 3% tokens/s, and a **tight-pool leg**
+//! forces preemption and asserts the dumped timeline tells a coherent
+//! story for a preempted session (Admit -> PrefillChunk -> Preempt ->
+//! Readmit -> Finish) whose per-phase step timings sum — within one
+//! power-of-two histogram bucket — to the measured step latency.  The
+//! tight-pool dump is written as a JSON-lines artifact (default
+//! `target/bench_serve_trace.jsonl`, override with `MRA_TRACE_OUT`) for
+//! `scripts/trace_summarize.py`.
+//!
 //! ```bash
 //! cargo bench --bench bench_serve                    # 32 requests
 //! MRA_BENCH_SMALL=1 cargo bench --bench bench_serve  # 12 requests (CI)
@@ -38,7 +49,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use mra::bench::{BenchJson, Table};
-use mra::config::{ServeConfig, SessionConfig};
+use mra::config::{ServeConfig, SessionConfig, TraceConfig};
 use mra::coordinator::{GenOptions, NativeLm, NativeMlmConfig, Server};
 use mra::engine::pool;
 use mra::tensor::Rng;
@@ -78,6 +89,22 @@ fn pctl_ms(xs: &[f64], p: f64) -> f64 {
     sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len());
     sorted[rank - 1]
+}
+
+/// Extract a `"key":<int>` field from a JSON-lines trace event.
+fn trace_u64(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Extract the event name (`"ev":"<name>"`) from a JSON-lines trace event.
+fn trace_ev(line: &str) -> Option<&str> {
+    let at = line.find("\"ev\":\"")? + 6;
+    let rest = &line[at..];
+    rest.find('"').map(|end| &rest[..end])
 }
 
 /// Fire the whole workload from `clients` concurrent client threads;
@@ -185,7 +212,7 @@ fn main() {
         ..SessionConfig::default()
     };
     let continuous = Arc::new(
-        Server::start_native_lm_sessions(serve_cfg, mcfg, threads, scfg.clone())
+        Server::start_native_lm_sessions(serve_cfg.clone(), mcfg.clone(), threads, scfg.clone())
             .expect("session server"),
     );
     // correctness gate 2b: bitwise identical to the direct path
@@ -271,6 +298,125 @@ fn main() {
     let fixed_tps = fixed_tokens as f64 / fixed_wall.max(1e-9);
     let cont_tps = cont_tokens as f64 / cont_wall.max(1e-9);
     let speedup = cont_tps / fixed_tps.max(1e-9);
+
+    // --- flight-recorder overhead leg ------------------------------------
+    // The same workload and session config with the trace ring enabled:
+    // recording must be cheap enough to leave on in production (<= 3%
+    // tokens/s).  Tiny-model wall clocks are noisy, so a failing first
+    // comparison re-times both legs once and keeps each leg's best.
+    let run_leg = |traced: bool| -> f64 {
+        let mut leg_cfg = scfg.clone();
+        leg_cfg.trace = TraceConfig { enabled: traced, capacity: 65_536 };
+        let server = Arc::new(
+            Server::start_native_lm_sessions(serve_cfg.clone(), mcfg.clone(), threads, leg_cfg)
+                .expect("traced session server"),
+        );
+        let (wall, tokens) = run_workload(&server, &cases, clients);
+        if let Ok(s) = Arc::try_unwrap(server) {
+            s.shutdown();
+        }
+        tokens as f64 / wall.max(1e-9)
+    };
+    let mut traced_tps = run_leg(true);
+    let mut base_tps = cont_tps;
+    if traced_tps < 0.97 * base_tps {
+        traced_tps = traced_tps.max(run_leg(true));
+        base_tps = base_tps.max(run_leg(false));
+    }
+    let trace_overhead_pct = ((1.0 - traced_tps / base_tps.max(1e-9)) * 100.0).max(0.0);
+
+    // --- preemption-timeline gate ----------------------------------------
+    // A pool far below the concurrent working set: admission lands while
+    // earlier sessions are still mid-chunked-prefill (pages allocate
+    // lazily), so step reservation eventually fails and the scheduler
+    // preempts + readmits.  The flight recorder must tell that session's
+    // story end to end.
+    let tight_cfg = SessionConfig {
+        total_pages: 64,
+        free_watermark: 0,
+        max_running: 64,
+        prefix_cache: true,
+        prefill_chunk_tokens: 32,
+        trace: TraceConfig { enabled: true, capacity: 65_536 },
+        ..SessionConfig::default()
+    };
+    let tight = Arc::new(
+        Server::start_native_lm_sessions(serve_cfg.clone(), mcfg.clone(), threads, tight_cfg)
+            .expect("tight-pool session server"),
+    );
+    let tight_cases = build_workload(8);
+    let n_tight = tight_cases.len();
+    let _ = run_workload(&tight, &tight_cases, n_tight);
+    let dump = tight.dump_trace().expect("tracing enabled on the tight-pool server");
+    if let Ok(s) = Arc::try_unwrap(tight) {
+        s.shutdown();
+    }
+    // persist the dump for scripts/trace_summarize.py (CI artifact)
+    let trace_path = std::env::var("MRA_TRACE_OUT")
+        .unwrap_or_else(|_| "target/bench_serve_trace.jsonl".to_string());
+    match std::fs::write(&trace_path, &dump) {
+        Ok(()) => println!("trace artifact: {} lines -> {trace_path}", dump.lines().count()),
+        Err(e) => println!("trace artifact: skipping write to {trace_path}: {e}"),
+    }
+
+    // a session that was preempted, readmitted, and still finished
+    let mut story = None;
+    for line in dump.lines().filter(|l| trace_ev(l) == Some("Preempt")) {
+        let Some(id) = trace_u64(line, "id") else { continue };
+        let has = |ev: &str| {
+            dump.lines().any(|l| trace_ev(l) == Some(ev) && trace_u64(l, "id") == Some(id))
+        };
+        if has("Readmit") && has("Finish") {
+            story = Some(id);
+            break;
+        }
+    }
+    let sid = story.expect(
+        "acceptance gate: the tight-pool workload must preempt and readmit at least \
+         one session (no Preempt+Readmit+Finish triple in the trace)",
+    );
+    let evs: Vec<&str> = dump
+        .lines()
+        .filter(|l| trace_u64(l, "id") == Some(sid))
+        .filter_map(trace_ev)
+        .collect();
+    assert_eq!(evs.first(), Some(&"Admit"), "timeline must open with Admit: {evs:?}");
+    let p_pre = evs.iter().position(|e| *e == "Preempt").expect("Preempt event");
+    assert!(
+        evs[..p_pre].contains(&"PrefillChunk"),
+        "a PrefillChunk must precede the preemption: {evs:?}"
+    );
+    let p_re = evs.iter().position(|e| *e == "Readmit").expect("Readmit event");
+    assert!(p_re > p_pre, "Readmit must follow Preempt: {evs:?}");
+    let p_fin = evs.iter().rposition(|e| *e == "Finish").expect("Finish event");
+    assert!(p_fin > p_re, "Finish must follow Readmit: {evs:?}");
+
+    // per-phase spans must account for the measured step latency to within
+    // one power-of-two histogram bucket (glue around the native spans is
+    // unattributed; every span rounds to whole microseconds)
+    let mut attributed_steps = 0usize;
+    for line in dump.lines().filter(|l| trace_ev(l) == Some("StepEnd")) {
+        let total = trace_u64(line, "total_us").unwrap_or(0);
+        if total < 256 {
+            continue; // sub-bucket totals drown in rounding noise
+        }
+        let a = line.find("\"phases\":[").expect("StepEnd carries phases") + 10;
+        let b = line[a..].find(']').expect("phases array closes") + a;
+        let sum: u64 =
+            line[a..b].split(',').map(|v| v.parse::<u64>().expect("phase span")).sum();
+        assert!(
+            sum <= total + 8 && (sum + 8) * 2 >= total,
+            "acceptance gate: phase spans must sum to the step latency within one \
+             bucket ({sum} us attributed vs {total} us measured: {line})"
+        );
+        attributed_steps += 1;
+    }
+    assert!(attributed_steps > 0, "trace must contain attributable steps (>= 256 us)");
+    println!(
+        "trace timeline: session {sid} shows Admit -> PrefillChunk -> Preempt -> \
+         Readmit -> Finish; {attributed_steps} steps attribute their latency to phases"
+    );
+
     let mut table =
         Table::new(&["impl", "requests", "wall ms", "gen tokens", "tokens/s", "speedup"]);
     table.row(&[
@@ -289,7 +435,16 @@ fn main() {
         format!("{cont_tps:.1}"),
         format!("{speedup:.2}x"),
     ]);
+    table.row(&[
+        "cont-traced".to_string(),
+        format!("{requests}"),
+        "-".to_string(),
+        "-".to_string(),
+        format!("{traced_tps:.1}"),
+        format!("{:.2}x", traced_tps / fixed_tps.max(1e-9)),
+    ]);
     table.print();
+    println!("flight recorder overhead: {trace_overhead_pct:.2}% tokens/s");
 
     let mut lat = Table::new(&["delivery", "ttft p50 ms", "itl p50 ms", "itl p95 ms"]);
     lat.row(&[
@@ -328,6 +483,12 @@ fn main() {
         ("itl_p95_ms", format!("{itl_p95:.3}")),
         ("ttft_speedup_vs_finish", format!("{ttft_speedup:.3}")),
     ]);
+    json.row(&[
+        ("impl", BenchJson::str_field("continuous-traced")),
+        ("requests", format!("{requests}")),
+        ("tokens_per_sec", format!("{traced_tps:.1}")),
+        ("trace_overhead_pct", format!("{trace_overhead_pct:.2}")),
+    ]);
     json.write_if_requested();
 
     assert_eq!(fixed_tokens, cont_tokens, "both paths must serve the same workload");
@@ -341,9 +502,15 @@ fn main() {
         "acceptance gate: streaming TTFT must be at most 1/5 of finish-only \
          first-token delivery ({ttft_stream_p50:.2} ms vs {ttft_finish_p50:.2} ms)"
     );
+    assert!(
+        traced_tps >= 0.97 * base_tps,
+        "acceptance gate: flight-recorder tracing must cost at most 3% tokens/s \
+         ({traced_tps:.1} traced vs {base_tps:.1} untraced, {trace_overhead_pct:.1}% \
+         overhead)"
+    );
     println!(
         "\nbench_serve OK (bitwise serving gates, bounded pool, prefix hits {hit_tokens} \
          tokens, continuous {speedup:.2}x fixed, streaming TTFT {ttft_speedup:.1}x \
-         earlier than finish-only)"
+         earlier than finish-only, tracing overhead {trace_overhead_pct:.1}%)"
     );
 }

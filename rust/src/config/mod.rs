@@ -207,6 +207,8 @@ pub struct SessionConfig {
     /// Default token-selection policy for requests that do not carry
     /// their own [`SamplingParams`] (greedy unless overridden).
     pub sampling: SamplingParams,
+    /// Flight-recorder tracing knobs (`[trace]` section).
+    pub trace: TraceConfig,
 }
 
 impl Default for SessionConfig {
@@ -223,7 +225,39 @@ impl Default for SessionConfig {
             stream_buffer: 32,
             aging_steps: 32,
             sampling: SamplingParams::default(),
+            trace: TraceConfig::default(),
         }
+    }
+}
+
+/// Flight-recorder configuration (`[trace]` section): the scheduler's
+/// event tracing is **off by default** — when disabled the record sites
+/// compile down to a `None` check and the serving hot path stays
+/// allocation-free and observation-free (gated in
+/// `tests/alloc_gate.rs` and `benches/bench_serve.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Attach a flight recorder to the session scheduler.
+    pub enabled: bool,
+    /// Ring capacity in events; once full the oldest events are
+    /// overwritten (the recorder keeps the *latest* `capacity` events).
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: false, capacity: 4096 }
+    }
+}
+
+impl TraceConfig {
+    /// Read the `[trace]` section (`trace.enabled`, `trace.capacity`).
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let d = TraceConfig::default();
+        Ok(TraceConfig {
+            enabled: c.bool_or("trace.enabled", d.enabled)?,
+            capacity: c.usize_or("trace.capacity", d.capacity)?.max(1),
+        })
     }
 }
 
@@ -251,6 +285,7 @@ impl SessionConfig {
                 top_p: c.f64_or("sessions.top_p", d.sampling.top_p as f64)? as f32,
                 seed: c.usize_or("sessions.seed", d.sampling.seed as usize)? as u64,
             },
+            trace: TraceConfig::from_config(c)?,
         })
     }
 }
@@ -388,6 +423,26 @@ lr = 0.001
         assert_eq!(s.sampling.seed, 7);
         assert_eq!(s.stream_buffer, 4);
         assert_eq!(s.aging_steps, 16);
+    }
+
+    #[test]
+    fn trace_config_defaults_off_and_parses_overrides() {
+        let d = TraceConfig::default();
+        assert!(!d.enabled, "tracing must be opt-in: the hot path stays unobserved");
+        assert_eq!(d.capacity, 4096);
+        let s = SessionConfig::default();
+        assert_eq!(s.trace, d, "session default embeds the trace default");
+        let c = Config::parse("[trace]\nenabled = true\ncapacity = 128\n").unwrap();
+        let t = TraceConfig::from_config(&c).unwrap();
+        assert!(t.enabled);
+        assert_eq!(t.capacity, 128);
+        // SessionConfig picks up the same section
+        let s = SessionConfig::from_config(&c).unwrap();
+        assert!(s.trace.enabled);
+        assert_eq!(s.trace.capacity, 128);
+        // a zero-capacity ring clamps to one slot instead of panicking
+        let c = Config::parse("[trace]\ncapacity = 0\n").unwrap();
+        assert_eq!(TraceConfig::from_config(&c).unwrap().capacity, 1);
     }
 
     #[test]

@@ -86,6 +86,19 @@ impl StepClock for ManualClock {
     }
 }
 
+/// A [`StepClock`] pinned at zero — injected by the *untimed* wrappers of
+/// the timed native step bodies (`NativeLm::fused_step` and friends), so
+/// the shared body always has a clock without the untimed callers paying
+/// for (or even owning) one.  All spans measured against it are zero.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrozenClock;
+
+impl StepClock for FrozenClock {
+    fn now_us(&mut self) -> u64 {
+        0
+    }
+}
+
 /// Observations per adjustment window.  The window tail (its maximum) is
 /// the controller's latency signal — for windows this small the max *is*
 /// the p95 estimate (exact p95 would need >= 20 samples per window and
@@ -142,6 +155,19 @@ impl AutotuneBudget {
     /// The current per-step prefill token budget.
     pub fn current(&self) -> usize {
         self.budget
+    }
+
+    /// Read the injected clock — the scheduler's only time source, shared
+    /// by the flight recorder's event stamps and the per-phase step
+    /// timing so every observability surface agrees on "now".
+    pub fn now_us(&mut self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Borrow the injected clock (to thread through the timed native step
+    /// bodies without a second clock instance).
+    pub fn clock_mut(&mut self) -> &mut dyn StepClock {
+        &mut *self.clock
     }
 
     /// Stamp the start of a scheduler step.
@@ -293,5 +319,19 @@ mod tests {
         assert_eq!(a.current(), 128, "eight over-target prefill steps must halve");
         // end without begin is a no-op zero, not a bogus huge sample
         assert_eq!(a.end_step(true), 0);
+    }
+
+    #[test]
+    fn now_us_reads_the_injected_clock_and_frozen_stays_zero() {
+        let clock = ManualClock::new();
+        let hand = clock.handle();
+        let mut a = AutotuneBudget::new(256, 32, 1_000, true, Box::new(clock));
+        assert_eq!(a.now_us(), 0);
+        hand.fetch_add(123, Ordering::Relaxed);
+        assert_eq!(a.now_us(), 123);
+        assert_eq!(a.clock_mut().now_us(), 123);
+        let mut frozen = FrozenClock;
+        assert_eq!(frozen.now_us(), 0);
+        assert_eq!(frozen.now_us(), 0);
     }
 }

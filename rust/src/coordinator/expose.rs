@@ -1,0 +1,436 @@
+//! Metrics exposition: the Prometheus text format renderer over
+//! [`Metrics`] and the typed [`MetricsSnapshot`] the server hands to
+//! programmatic scrapers (DESIGN.md §14).
+//!
+//! Everything here is **pull-side and read-only**: rendering walks the
+//! relaxed atomic counters and histogram bucket arrays the serving hot
+//! path already maintains, so a scrape costs the scraper — never the
+//! scheduler.  Histograms render in classic Prometheus cumulative-bucket
+//! form (`_bucket{le="..."}` + `+Inf` + `_sum`/`_count`), with the `le`
+//! edges taken from the power-of-two bucket layout
+//! ([`Histogram::bucket_upper_edge_us`]).  Per-phase step timing renders
+//! as one histogram family labeled by [`StepPhase::name`]; per-worker
+//! busy/steal counters come from [`crate::engine::pool::worker_stats`]
+//! and skip never-used worker slots to keep the page small.
+
+use std::fmt::Write as _;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::metrics::{
+    Histogram, HistogramSnapshot, Metrics, StepPhase, HIST_BUCKETS,
+};
+use crate::engine::pool::worker_stats;
+
+fn counter(out: &mut String, name: &str, help: &str, v: &AtomicU64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {}", v.load(Ordering::Relaxed));
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: &AtomicU64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {}", v.load(Ordering::Relaxed));
+}
+
+/// One histogram series in cumulative-bucket form.  `labels` is either
+/// empty or a `key="value",` fragment spliced before `le`.
+fn histogram_series(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    let snap = h.snapshot();
+    let mut cum = 0u64;
+    for (i, &b) in snap.bucket_counts().iter().enumerate() {
+        cum += b;
+        if b == 0 && i + 1 < HIST_BUCKETS {
+            continue; // empty interior buckets add bytes, not information
+        }
+        let le = Histogram::bucket_upper_edge_us(i);
+        let _ = writeln!(out, "{name}_bucket{{{labels}le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels}le=\"+Inf\"}} {}", snap.count());
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name}_sum {}", snap.sum_us());
+        let _ = writeln!(out, "{name}_count {}", snap.count());
+    } else {
+        let trimmed = labels.trim_end_matches(',');
+        let _ = writeln!(out, "{name}_sum{{{trimmed}}} {}", snap.sum_us());
+        let _ = writeln!(out, "{name}_count{{{trimmed}}} {}", snap.count());
+    }
+}
+
+fn histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    histogram_series(out, name, "", h);
+}
+
+impl Metrics {
+    /// Render every counter, gauge and histogram in the Prometheus text
+    /// exposition format (version 0.0.4 — the `text/plain` scrape body).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        // --- request/batch counters ---
+        counter(&mut out, "mra_requests_total", "Requests accepted at ingress.", &self.requests);
+        counter(&mut out, "mra_batches_total", "Fixed-round batches executed.", &self.batches);
+        counter(
+            &mut out,
+            "mra_rejected_total",
+            "Requests refused at ingress or expired past deadline.",
+            &self.rejected,
+        );
+        counter(
+            &mut out,
+            "mra_padded_slots_total",
+            "Padding slots added to fill routed batch buckets.",
+            &self.padded_slots,
+        );
+        // --- session-serving counters ---
+        counter(
+            &mut out,
+            "mra_sessions_total",
+            "Sessions admitted by the scheduler.",
+            &self.sessions,
+        );
+        counter(
+            &mut out,
+            "mra_preemptions_total",
+            "Sessions preempted under memory pressure.",
+            &self.preemptions,
+        );
+        counter(
+            &mut out,
+            "mra_prefix_lookups_total",
+            "Radix prefix-cache lookups at admission.",
+            &self.prefix_lookups,
+        );
+        counter(
+            &mut out,
+            "mra_prefix_hits_total",
+            "Lookups that reused at least one cached block.",
+            &self.prefix_hits,
+        );
+        counter(
+            &mut out,
+            "mra_prefix_hit_tokens_total",
+            "Prompt tokens served from shared cache pages.",
+            &self.prefix_hit_tokens,
+        );
+        counter(
+            &mut out,
+            "mra_generated_tokens_total",
+            "Tokens emitted by the continuous decode loop.",
+            &self.generated_tokens,
+        );
+        counter(
+            &mut out,
+            "mra_decode_steps_total",
+            "Continuous-batching decode steps executed.",
+            &self.decode_steps,
+        );
+        counter(
+            &mut out,
+            "mra_prefill_chunks_total",
+            "Prefill chunks run through the chunked path.",
+            &self.prefill_chunks,
+        );
+        counter(
+            &mut out,
+            "mra_prefill_tokens_total",
+            "Prompt tokens prefilled through chunks.",
+            &self.prefill_tokens,
+        );
+        counter(
+            &mut out,
+            "mra_streamed_tokens_total",
+            "Tokens delivered on per-request stream channels.",
+            &self.streamed_tokens,
+        );
+        counter(
+            &mut out,
+            "mra_stream_stalls_total",
+            "Non-blocking stream sends refused by a full channel.",
+            &self.stream_stalls,
+        );
+        counter(
+            &mut out,
+            "mra_deadline_expired_total",
+            "Waiting requests expired past their admission deadline.",
+            &self.deadline_expired,
+        );
+        counter(
+            &mut out,
+            "mra_budget_reoffers_total",
+            "Prefill-budget grants beyond a session's first chunk of a step.",
+            &self.budget_reoffers,
+        );
+        counter(
+            &mut out,
+            "mra_midprefill_prefix_hits_total",
+            "Admissions whose prefix hit matched blocks still mid-prefill.",
+            &self.midprefill_prefix_hits,
+        );
+        // --- session-serving gauges ---
+        gauge(&mut out, "mra_pool_pages", "Page-pool capacity.", &self.pool_pages);
+        gauge(&mut out, "mra_free_pages", "Free pages at the last step.", &self.free_pages);
+        gauge(
+            &mut out,
+            "mra_cache_pages",
+            "Pages held by the radix prefix cache at the last step.",
+            &self.cache_pages,
+        );
+        gauge(
+            &mut out,
+            "mra_running_sessions",
+            "Sessions in the running batch at the last step.",
+            &self.running_sessions,
+        );
+        gauge(
+            &mut out,
+            "mra_waiting_sessions",
+            "Sessions waiting for admission at the last step.",
+            &self.waiting_sessions,
+        );
+        gauge(
+            &mut out,
+            "mra_prefilling_sessions",
+            "Admitted sessions still mid-prefill at the last step.",
+            &self.prefilling_sessions,
+        );
+        gauge(
+            &mut out,
+            "mra_prefill_backlog_tokens",
+            "Prompt tokens still to prefill across the running set.",
+            &self.prefill_backlog_tokens,
+        );
+        gauge(
+            &mut out,
+            "mra_autotuned_chunk_tokens",
+            "Live prefill token budget chosen by the AIMD controller.",
+            &self.autotuned_chunk_tokens,
+        );
+        // --- latency histograms ---
+        histogram(
+            &mut out,
+            "mra_request_latency_us",
+            "End-to-end request latency (submit to response), microseconds.",
+            &self.request_latency,
+        );
+        histogram(
+            &mut out,
+            "mra_batch_exec_us",
+            "Per-batch worker execution latency, microseconds.",
+            &self.batch_exec,
+        );
+        histogram(
+            &mut out,
+            "mra_decode_step_latency_us",
+            "Wall latency of scheduler steps that decoded, microseconds.",
+            &self.decode_step_latency,
+        );
+        // --- per-phase step timing: one family, labeled by phase ---
+        let name = "mra_step_phase_us";
+        let _ = writeln!(
+            out,
+            "# HELP {name} Per-step time attributed to each scheduler phase, microseconds."
+        );
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        for phase in StepPhase::ALL {
+            let labels = format!("phase=\"{}\",", phase.name());
+            histogram_series(&mut out, name, &labels, self.phase(phase));
+        }
+        // --- per-worker pool counters (engine-wide, process-global) ---
+        let stats = worker_stats();
+        let _ = writeln!(out, "# HELP mra_pool_worker_tasks_total Tasks run per pool worker slot.");
+        let _ = writeln!(out, "# TYPE mra_pool_worker_tasks_total counter");
+        for (w, (busy, _)) in stats.iter().enumerate() {
+            if *busy > 0 {
+                let _ = writeln!(out, "mra_pool_worker_tasks_total{{worker=\"{w}\"}} {busy}");
+            }
+        }
+        let _ = writeln!(
+            out,
+            "# HELP mra_pool_worker_steals_total Tasks claimed off another worker's share."
+        );
+        let _ = writeln!(out, "# TYPE mra_pool_worker_steals_total counter");
+        for (w, (busy, steals)) in stats.iter().enumerate() {
+            if *busy > 0 {
+                let _ = writeln!(out, "mra_pool_worker_steals_total{{worker=\"{w}\"}} {steals}");
+            }
+        }
+        out
+    }
+
+    /// A typed point-in-time copy of the serving metrics — the
+    /// programmatic twin of [`Metrics::render_prometheus`], used by
+    /// benches and tests that want numbers, not text.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            generated_tokens: self.generated_tokens.load(Ordering::Relaxed),
+            prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            prefill_chunks: self.prefill_chunks.load(Ordering::Relaxed),
+            sessions: self.sessions.load(Ordering::Relaxed),
+            preemptions: self.preemptions.load(Ordering::Relaxed),
+            decode_steps: self.decode_steps.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            budget_reoffers: self.budget_reoffers.load(Ordering::Relaxed),
+            midprefill_prefix_hits: self.midprefill_prefix_hits.load(Ordering::Relaxed),
+            prefix_hit_tokens: self.prefix_hit_tokens.load(Ordering::Relaxed),
+            decode_step_latency: self.decode_step_latency.snapshot(),
+            phases: [
+                self.phase(StepPhase::Ingress).snapshot(),
+                self.phase(StepPhase::Admission).snapshot(),
+                self.phase(StepPhase::Reserve).snapshot(),
+                self.phase(StepPhase::PrefillAttend).snapshot(),
+                self.phase(StepPhase::DecodeAttend).snapshot(),
+                self.phase(StepPhase::Logits).snapshot(),
+                self.phase(StepPhase::StreamEgress).snapshot(),
+            ],
+        }
+    }
+}
+
+/// Point-in-time copy of the scheduler-relevant [`Metrics`]: the ten
+/// behavior-defining counters (the exact set the fused/phased and
+/// trace-on/off equivalence proptests compare) plus the decode-step and
+/// per-phase latency snapshots.  `Copy`, so holding one never borrows
+/// the live metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Tokens emitted by the continuous decode loop.
+    pub generated_tokens: u64,
+    /// Prompt tokens prefilled through chunks.
+    pub prefill_tokens: u64,
+    /// Prefill chunks executed.
+    pub prefill_chunks: u64,
+    /// Sessions admitted.
+    pub sessions: u64,
+    /// Sessions preempted.
+    pub preemptions: u64,
+    /// Decode steps executed.
+    pub decode_steps: u64,
+    /// Requests refused or deadline-expired.
+    pub rejected: u64,
+    /// Same-step prefill budget re-offers.
+    pub budget_reoffers: u64,
+    /// Mid-prefill prefix-cache attachments.
+    pub midprefill_prefix_hits: u64,
+    /// Prompt tokens served from shared cache pages.
+    pub prefix_hit_tokens: u64,
+    /// Decode-step wall latency at the snapshot.
+    pub decode_step_latency: HistogramSnapshot,
+    /// Per-phase step timing at the snapshot, in [`StepPhase::ALL`] order.
+    pub phases: [HistogramSnapshot; 7],
+}
+
+impl MetricsSnapshot {
+    /// The ten behavior-defining counters in their canonical order —
+    /// two runs of the same workload must produce equal signatures
+    /// regardless of tracing, fusion or timing.
+    pub fn counter_signature(&self) -> [u64; 10] {
+        [
+            self.generated_tokens,
+            self.prefill_tokens,
+            self.prefill_chunks,
+            self.sessions,
+            self.preemptions,
+            self.decode_steps,
+            self.rejected,
+            self.budget_reoffers,
+            self.midprefill_prefix_hits,
+            self.prefix_hit_tokens,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn exposition_contains_counters_gauges_and_histograms() {
+        let m = Metrics::new();
+        m.inc_requests();
+        m.sessions.fetch_add(3, Ordering::Relaxed);
+        m.pool_pages.store(256, Ordering::Relaxed);
+        m.request_latency.record(Duration::from_micros(900));
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE mra_requests_total counter"), "{text}");
+        assert!(text.contains("mra_requests_total 1"), "{text}");
+        assert!(text.contains("mra_sessions_total 3"), "{text}");
+        assert!(text.contains("# TYPE mra_pool_pages gauge"), "{text}");
+        assert!(text.contains("mra_pool_pages 256"), "{text}");
+        // 900us -> bucket [512, 1024): cumulative le="1024" and +Inf both 1
+        assert!(text.contains("mra_request_latency_us_bucket{le=\"1024\"} 1"), "{text}");
+        assert!(text.contains("mra_request_latency_us_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("mra_request_latency_us_sum 900"), "{text}");
+        assert!(text.contains("mra_request_latency_us_count 1"), "{text}");
+    }
+
+    #[test]
+    fn histogram_buckets_render_cumulative() {
+        let m = Metrics::new();
+        m.decode_step_latency.record(Duration::from_micros(3)); // bucket [2,4)
+        m.decode_step_latency.record(Duration::from_micros(3));
+        m.decode_step_latency.record(Duration::from_micros(100)); // bucket [64,128)
+        let text = m.render_prometheus();
+        assert!(text.contains("mra_decode_step_latency_us_bucket{le=\"4\"} 2"), "{text}");
+        // cumulative: the [64,128) bucket line includes the two earlier samples
+        assert!(text.contains("mra_decode_step_latency_us_bucket{le=\"128\"} 3"), "{text}");
+        assert!(text.contains("mra_decode_step_latency_us_bucket{le=\"+Inf\"} 3"), "{text}");
+    }
+
+    #[test]
+    fn phase_family_renders_one_series_per_phase() {
+        let m = Metrics::new();
+        m.phase(StepPhase::DecodeAttend).record(Duration::from_micros(40));
+        let text = m.render_prometheus();
+        for phase in StepPhase::ALL {
+            let series =
+                format!("mra_step_phase_us_bucket{{phase=\"{}\",le=\"+Inf\"}}", phase.name());
+            assert!(text.contains(&series), "missing {series} in\n{text}");
+        }
+        assert!(
+            text.contains("mra_step_phase_us_count{phase=\"decode_attend\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("mra_step_phase_us_sum{phase=\"decode_attend\"} 40"), "{text}");
+        // exactly one HELP/TYPE header for the whole family
+        assert_eq!(text.matches("# TYPE mra_step_phase_us histogram").count(), 1);
+    }
+
+    #[test]
+    fn worker_series_appear_after_pool_work() {
+        // drain a pool so at least worker slot 0 has a nonzero counter
+        crate::engine::pool::run(1, (0..4usize).collect(), |_| {});
+        let m = Metrics::new();
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE mra_pool_worker_tasks_total counter"), "{text}");
+        assert!(text.contains("mra_pool_worker_tasks_total{worker=\"0\"}"), "{text}");
+    }
+
+    #[test]
+    fn snapshot_signature_matches_the_live_counters() {
+        let m = Metrics::new();
+        m.generated_tokens.fetch_add(7, Ordering::Relaxed);
+        m.prefill_tokens.fetch_add(64, Ordering::Relaxed);
+        m.prefill_chunks.fetch_add(4, Ordering::Relaxed);
+        m.sessions.fetch_add(2, Ordering::Relaxed);
+        m.preemptions.fetch_add(1, Ordering::Relaxed);
+        m.decode_steps.fetch_add(7, Ordering::Relaxed);
+        m.rejected.fetch_add(1, Ordering::Relaxed);
+        m.budget_reoffers.fetch_add(3, Ordering::Relaxed);
+        m.midprefill_prefix_hits.fetch_add(1, Ordering::Relaxed);
+        m.prefix_hit_tokens.fetch_add(16, Ordering::Relaxed);
+        m.decode_step_latency.record(Duration::from_micros(500));
+        m.phase(StepPhase::Logits).record(Duration::from_micros(20));
+        let snap = m.snapshot();
+        assert_eq!(snap.counter_signature(), [7, 64, 4, 2, 1, 7, 1, 3, 1, 16]);
+        assert_eq!(snap.decode_step_latency.count(), 1);
+        assert_eq!(snap.phases[StepPhase::Logits.index()].count(), 1);
+        assert_eq!(snap.phases[StepPhase::Ingress.index()].count(), 0);
+        // snapshots are value types: a later mutation leaves them alone
+        m.generated_tokens.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(snap.generated_tokens, 7);
+    }
+}

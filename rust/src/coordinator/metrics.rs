@@ -6,6 +6,53 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+/// Number of doubling buckets in a [`Histogram`] (1us to ~17min).
+pub const HIST_BUCKETS: usize = 31;
+
+/// Interpolated percentile over power-of-two µs bucket counts: find the
+/// bucket holding the `ceil(total * p)`-th sample, then place the result
+/// linearly inside `[2^i, 2^(i+1))` by the sample's rank among the
+/// bucket's occupants (each sample owns the midpoint of its 1/b span).
+/// A single 1µs sample therefore reports 1µs, not the 2µs upper edge —
+/// the bias [`percentile_upper_edge`] keeps for comparison.
+fn percentile_interp(buckets: &[u64], total: u64, p: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let target = ((total as f64) * p).ceil() as u64;
+    let mut seen = 0u64;
+    for (i, &b) in buckets.iter().enumerate() {
+        if seen + b >= target {
+            let lo = 1u64 << i;
+            let hi = 1u64 << (i + 1);
+            let rank = target.saturating_sub(seen) as f64;
+            let frac =
+                if b == 0 { 0.0 } else { ((rank - 0.5) / b as f64).clamp(0.0, 1.0) };
+            return (lo as f64 + frac * (hi - lo) as f64).floor() as u64;
+        }
+        seen += b;
+    }
+    1u64 << buckets.len()
+}
+
+/// The historical percentile estimate: the *upper edge* of the containing
+/// bucket.  Biased high by up to 2x (a bucket-0 sample of 1µs reports
+/// 2µs); kept verbatim so the interpolated fix stays comparable.
+fn percentile_upper_edge(buckets: &[u64], total: u64, p: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let target = ((total as f64) * p).ceil() as u64;
+    let mut seen = 0u64;
+    for (i, &b) in buckets.iter().enumerate() {
+        seen += b;
+        if seen >= target {
+            return 1u64 << (i + 1);
+        }
+    }
+    1u64 << buckets.len()
+}
+
 /// Log-spaced latency histogram from 1us to ~17min (31 doubling buckets).
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
@@ -23,7 +70,7 @@ impl Histogram {
     /// An empty histogram (power-of-two microsecond buckets).
     pub fn new() -> Self {
         Histogram {
-            buckets: (0..31).map(|_| AtomicU64::new(0)).collect(),
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum_us: AtomicU64::new(0),
         }
@@ -43,6 +90,11 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Sum of recorded durations in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
     /// Mean recorded latency in microseconds (`0.0` when empty).
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
@@ -52,21 +104,163 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
     }
 
-    /// Approximate percentile (upper edge of the containing bucket, us).
+    fn load_buckets(&self) -> [u64; HIST_BUCKETS] {
+        let mut out = [0u64; HIST_BUCKETS];
+        for (o, b) in out.iter_mut().zip(&self.buckets) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Approximate percentile in µs, interpolated linearly within the
+    /// containing power-of-two bucket (see [`Histogram::snapshot`] for
+    /// windowed percentiles).
     pub fn percentile_us(&self, p: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
-            return 0;
+        percentile_interp(&self.load_buckets(), self.count(), p)
+    }
+
+    /// The pre-interpolation percentile (upper edge of the containing
+    /// bucket) — biased high by up to 2x, kept for comparison against
+    /// [`Histogram::percentile_us`].
+    pub fn percentile_us_upper_edge(&self, p: f64) -> u64 {
+        percentile_upper_edge(&self.load_buckets(), self.count(), p)
+    }
+
+    /// Upper edge (exclusive, µs) of bucket `i` — the `le` label the
+    /// Prometheus exposition uses.
+    pub fn bucket_upper_edge_us(i: usize) -> u64 {
+        1u64 << (i + 1)
+    }
+
+    /// A point-in-time copy of the histogram.  Pair two snapshots with
+    /// [`HistogramSnapshot::delta_since`] to window percentiles over the
+    /// last N steps instead of the process lifetime.  Loads are relaxed
+    /// and per-field, so a snapshot taken concurrently with `record` may
+    /// be off by the in-flight sample — deltas remain non-negative.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.load_buckets(),
+            count: self.count(),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
         }
-        let target = ((total as f64) * p).ceil() as u64;
-        let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
+    }
+}
+
+/// Immutable copy of a [`Histogram`], with the same percentile/mean
+/// queries plus windowed deltas — the snapshot/delta form of a
+/// `reset_window()` (no observer can clear another's window).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_us: u64,
+}
+
+impl HistogramSnapshot {
+    /// Samples in this snapshot (or window).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of recorded µs in this snapshot (or window).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Mean µs (`0.0` when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
         }
-        1u64 << self.buckets.len()
+        self.sum_us as f64 / self.count as f64
+    }
+
+    /// Interpolated percentile in µs (see [`Histogram::percentile_us`]).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        percentile_interp(&self.buckets, self.count, p)
+    }
+
+    /// Upper-edge percentile in µs (the historical biased estimate).
+    pub fn percentile_us_upper_edge(&self, p: f64) -> u64 {
+        percentile_upper_edge(&self.buckets, self.count, p)
+    }
+
+    /// Per-bucket sample counts (index `i` spans `[2^i, 2^(i+1))` µs).
+    pub fn bucket_counts(&self) -> &[u64; HIST_BUCKETS] {
+        &self.buckets
+    }
+
+    /// The window recorded since `prev`: per-bucket, count and sum
+    /// differences (saturating, so a mismatched pair cannot underflow).
+    /// `prev` plus the returned delta sums back to `self` field-by-field
+    /// (unit-tested).
+    pub fn delta_since(&self, prev: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (o, (a, b)) in buckets.iter_mut().zip(self.buckets.iter().zip(&prev.buckets)) {
+            *o = a.saturating_sub(*b);
+        }
+        HistogramSnapshot {
+            buckets,
+            count: self.count.saturating_sub(prev.count),
+            sum_us: self.sum_us.saturating_sub(prev.sum_us),
+        }
+    }
+}
+
+/// The phases one scheduler step's elapsed time is attributed to
+/// (DESIGN.md §14 states the attribution rules).  Indexes the per-phase
+/// histograms ([`Metrics::phase`]) and the `StepEnd` trace event's
+/// `phases` array, in declaration order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPhase {
+    /// Draining newly arrived requests from the ingress queue (the idle
+    /// blocking wait for a *first* request is excluded — it is not work).
+    Ingress,
+    /// Waiter shedding, deadline expiry, admission and finish delivery.
+    Admission,
+    /// Chunk planning + page reservation, including cache eviction and
+    /// preemption triggered by the reservation.
+    Reserve,
+    /// Prefill work: q/k/v projection + bulk append and chunk-row
+    /// attention (the phased path's final-chunk logits included).
+    PrefillAttend,
+    /// Decode work: token selection, embed, per-stream attention,
+    /// residual + layer norm.
+    DecodeAttend,
+    /// Tied-head vocab projection (logits) of the fused/batched step.
+    Logits,
+    /// Token stream delivery and gauge publication.
+    StreamEgress,
+}
+
+impl StepPhase {
+    /// Every phase, in histogram/trace-array order.
+    pub const ALL: [StepPhase; 7] = [
+        StepPhase::Ingress,
+        StepPhase::Admission,
+        StepPhase::Reserve,
+        StepPhase::PrefillAttend,
+        StepPhase::DecodeAttend,
+        StepPhase::Logits,
+        StepPhase::StreamEgress,
+    ];
+
+    /// Stable snake_case name (Prometheus label / summarizer column).
+    pub fn name(self) -> &'static str {
+        match self {
+            StepPhase::Ingress => "ingress",
+            StepPhase::Admission => "admission",
+            StepPhase::Reserve => "reserve",
+            StepPhase::PrefillAttend => "prefill_attend",
+            StepPhase::DecodeAttend => "decode_attend",
+            StepPhase::Logits => "logits",
+            StepPhase::StreamEgress => "stream_egress",
+        }
+    }
+
+    /// Position in [`StepPhase::ALL`] (and the `StepEnd` phases array).
+    pub fn index(self) -> usize {
+        self as usize
     }
 }
 
@@ -158,6 +352,22 @@ pub struct Metrics {
     /// Live prefill token budget chosen by the AIMD controller at the
     /// last step (equals `prefill_chunk_tokens` when autotune is off).
     pub autotuned_chunk_tokens: AtomicU64,
+    // --- per-phase step timing (one histogram per StepPhase) ---
+    /// Per-step µs draining the ingress queue ([`StepPhase::Ingress`]).
+    pub phase_ingress: Histogram,
+    /// Per-step µs in shed/expire/admit/finish ([`StepPhase::Admission`]).
+    pub phase_admission: Histogram,
+    /// Per-step µs planning + reserving pages ([`StepPhase::Reserve`]).
+    pub phase_reserve: Histogram,
+    /// Per-step µs in prefill work ([`StepPhase::PrefillAttend`]).
+    pub phase_prefill_attend: Histogram,
+    /// Per-step µs in decode work ([`StepPhase::DecodeAttend`]).
+    pub phase_decode_attend: Histogram,
+    /// Per-step µs projecting logits ([`StepPhase::Logits`]).
+    pub phase_logits: Histogram,
+    /// Per-step µs streaming tokens + publishing gauges
+    /// ([`StepPhase::StreamEgress`]).
+    pub phase_stream_egress: Histogram,
 }
 
 impl Metrics {
@@ -205,6 +415,19 @@ impl Metrics {
     pub fn record_prefill_chunk(&self, tokens: usize) {
         self.prefill_chunks.fetch_add(1, Ordering::Relaxed);
         self.prefill_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    /// The per-phase step-timing histogram for `phase`.
+    pub fn phase(&self, phase: StepPhase) -> &Histogram {
+        match phase {
+            StepPhase::Ingress => &self.phase_ingress,
+            StepPhase::Admission => &self.phase_admission,
+            StepPhase::Reserve => &self.phase_reserve,
+            StepPhase::PrefillAttend => &self.phase_prefill_attend,
+            StepPhase::DecodeAttend => &self.phase_decode_attend,
+            StepPhase::Logits => &self.phase_logits,
+            StepPhase::StreamEgress => &self.phase_stream_egress,
+        }
     }
 
     /// Publish the per-step scheduler gauges.
@@ -383,8 +606,9 @@ mod tests {
         assert!(s.contains("reoffers=3"), "{s}");
         assert!(s.contains("midprefill_hits=2"), "{s}");
         assert!(s.contains("chunk_budget=128"), "{s}");
-        // 900us lands in the 512..1024 bucket; the upper edge reports
-        assert!(s.contains("decode_step_p95=1.02ms"), "{s}");
+        // 900us lands in the 512..1024 bucket; a lone sample interpolates
+        // to the bucket midpoint, 768us
+        assert!(s.contains("decode_step_p95=0.77ms"), "{s}");
     }
 
     #[test]
@@ -398,6 +622,101 @@ mod tests {
         assert!(s.contains("streamed=9"), "{s}");
         assert!(s.contains("stream_stalls=2"), "{s}");
         assert!(s.contains("expired=1"), "{s}");
+    }
+
+    /// Regression for the upper-bucket-edge bias fix, at both edges of
+    /// the bucket range: the interpolated estimate stays inside the
+    /// containing bucket while the legacy estimate reports its upper
+    /// edge (up to 2x high).
+    #[test]
+    fn interpolated_percentile_fixes_the_upper_edge_bias() {
+        // low edge: one 1us sample (bucket 0 = [1, 2))
+        let h = Histogram::new();
+        h.record(Duration::from_micros(1));
+        assert_eq!(h.percentile_us(1.0), 1, "1us must report 1us, not the 2us edge");
+        assert_eq!(h.percentile_us_upper_edge(1.0), 2, "legacy bias kept for comparison");
+        // interior: one 900us sample (bucket [512, 1024)) interpolates to
+        // the bucket midpoint instead of the upper edge
+        let h = Histogram::new();
+        h.record(Duration::from_micros(900));
+        assert_eq!(h.percentile_us(0.95), 768);
+        assert_eq!(h.percentile_us_upper_edge(0.95), 1024);
+        // high edge: a ~17min sample clamps into the top bucket and both
+        // estimates stay finite and ordered
+        let h = Histogram::new();
+        h.record(Duration::from_secs(1_000));
+        let interp = h.percentile_us(1.0);
+        let edge = h.percentile_us_upper_edge(1.0);
+        assert!(interp <= edge, "{interp} vs {edge}");
+        assert!(interp >= 1u64 << 29, "top-bucket sample must stay in the top bucket");
+        // many samples in one bucket: ranks spread across the span, so
+        // different percentiles separate inside the bucket
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(Duration::from_micros(600));
+        }
+        let p10 = h.percentile_us(0.10);
+        let p90 = h.percentile_us(0.90);
+        assert!((512..1024).contains(&p10), "{p10}");
+        assert!((512..1024).contains(&p90), "{p90}");
+        assert!(p10 < p90, "ranks must spread inside the bucket: {p10} vs {p90}");
+        assert_eq!(h.percentile_us_upper_edge(0.10), h.percentile_us_upper_edge(0.90));
+    }
+
+    /// The snapshot/delta window API: `prev + delta == now` for every
+    /// field, and windowed percentiles reflect only the window.
+    #[test]
+    fn snapshot_deltas_sum_to_cumulative_totals() {
+        let h = Histogram::new();
+        for _ in 0..10 {
+            h.record(Duration::from_micros(100));
+        }
+        let snap1 = h.snapshot();
+        assert_eq!(snap1.count(), 10);
+        for _ in 0..30 {
+            h.record(Duration::from_micros(5_000));
+        }
+        let snap2 = h.snapshot();
+        let delta = snap2.delta_since(&snap1);
+        // deltas sum back to the cumulative totals, field by field
+        assert_eq!(snap1.count() + delta.count(), snap2.count());
+        assert_eq!(snap1.sum_us() + delta.sum_us(), snap2.sum_us());
+        for (i, (a, d)) in
+            snap1.bucket_counts().iter().zip(delta.bucket_counts()).enumerate()
+        {
+            assert_eq!(a + d, snap2.bucket_counts()[i], "bucket {i}");
+        }
+        // the window holds only the 5ms samples; the cumulative histogram
+        // still sees the old 100us population at low percentiles
+        assert_eq!(delta.count(), 30);
+        assert!(delta.percentile_us(0.01) >= 4096, "{}", delta.percentile_us(0.01));
+        assert!(snap2.percentile_us(0.01) < 256, "{}", snap2.percentile_us(0.01));
+        assert!((delta.mean_us() - 5_000.0).abs() < 600.0, "{}", delta.mean_us());
+        // a reversed pair saturates instead of underflowing
+        let rev = snap1.delta_since(&snap2);
+        assert_eq!(rev.count(), 0);
+        assert_eq!(rev.sum_us(), 0);
+    }
+
+    /// Per-phase histograms are distinct and addressable through the
+    /// `StepPhase` index used by traces and the summarizer.
+    #[test]
+    fn phase_histograms_are_distinct_and_named() {
+        let m = Metrics::new();
+        let mut names = std::collections::HashSet::new();
+        for (i, p) in StepPhase::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i, "ALL order must match the discriminants");
+            assert!(names.insert(p.name()), "duplicate phase name {}", p.name());
+        }
+        m.phase(StepPhase::DecodeAttend).record(Duration::from_micros(50));
+        m.phase(StepPhase::DecodeAttend).record(Duration::from_micros(70));
+        m.phase(StepPhase::Logits).record(Duration::from_micros(30));
+        assert_eq!(m.phase(StepPhase::DecodeAttend).count(), 2);
+        assert_eq!(m.phase(StepPhase::Logits).count(), 1);
+        for p in [StepPhase::Ingress, StepPhase::Admission, StepPhase::Reserve] {
+            assert_eq!(m.phase(p).count(), 0, "{}", p.name());
+        }
+        assert_eq!(m.phase(StepPhase::DecodeAttend).sum_us(), 120);
     }
 
     #[test]

@@ -4,7 +4,13 @@
 //! are absent).
 //!
 //! * [`metrics`] — latency histograms + throughput counters + the
-//!   session-serving gauges (free pages, cache occupancy, prefix hits).
+//!   session-serving gauges (free pages, cache occupancy, prefix hits),
+//!   including the per-phase step-timing histograms.
+//! * [`expose`] — Prometheus text exposition over [`Metrics`] and the
+//!   typed [`MetricsSnapshot`] for programmatic scrapers.
+//! * [`trace`] — the flight recorder: a fixed-capacity ring of typed
+//!   scheduler events ([`TraceEvent`]) stamped with step index and the
+//!   injected clock, dumpable as JSON lines.
 //! * [`autotune`] — the AIMD prefill-budget controller behind the fused
 //!   scheduler step, with its injectable [`StepClock`].
 //! * [`batcher`] — dynamic batching with deadline flush (fixed rounds).
@@ -29,17 +35,21 @@
 
 pub mod autotune;
 pub mod batcher;
+pub mod expose;
 pub mod metrics;
 pub mod native;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod trace;
 pub mod trainer;
 
-pub use autotune::{AutotuneBudget, ManualClock, MonotonicClock, StepClock};
+pub use autotune::{AutotuneBudget, FrozenClock, ManualClock, MonotonicClock, StepClock};
 pub use batcher::{Batch, Batcher, Request, PRIORITY_NORMAL};
-pub use metrics::Metrics;
-pub use native::{LmSession, NativeLm, NativeMlm, NativeMlmConfig};
+pub use expose::MetricsSnapshot;
+pub use metrics::{Histogram, HistogramSnapshot, Metrics, StepPhase};
+pub use native::{LmSession, NativeLm, NativeMlm, NativeMlmConfig, StepPhases};
+pub use trace::{FlightRecorder, NullSink, PreemptReason, TraceEvent, TraceRecord, TraceSink};
 pub use router::Router;
 pub use scheduler::SessionConfig;
 pub use server::{GenOptions, Response, Server, TokenStream};

@@ -24,6 +24,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use anyhow::{bail, Result};
 
 use crate::config::SamplingParams;
+use crate::coordinator::autotune::{FrozenClock, StepClock};
 use crate::data::corpus::MlmBatch;
 use crate::engine::{
     kernel_by_name, pool, BatchedTensor, DecodeScratch, DecodeState, DrawState, Engine, PagePool,
@@ -31,6 +32,32 @@ use crate::engine::{
 };
 use crate::mra::Variant;
 use crate::tensor::{kernel, mat::dot, ops, Mat, Rng};
+
+/// Per-phase elapsed time (µs) attributed by the timed native step bodies
+/// ([`NativeLm::fused_step_timed`] and friends).  The scheduler folds
+/// these into its per-phase latency histograms; the untimed wrappers run
+/// against [`FrozenClock`] and leave every span zero.
+///
+/// Attribution rules (DESIGN.md §14): decode token selection, embedding,
+/// the decode share of the fused drain and the decode residual pass count
+/// as `decode_attend_us`; prefill transient setup, projection/append, the
+/// prefill share of the fused drain and the prefill residual pass count
+/// as `prefill_attend_us`; the fused drain itself is split
+/// *proportionally by task count* between the two (the drain is one
+/// heterogeneous work-stealing pass — per-task stamps would put a clock
+/// read in the allocation-free hot loop); the final vocab projection
+/// counts as `logits_us`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepPhases {
+    /// Time attributed to prefill attention work (chunk transients,
+    /// projection + append, drain share, residual + layer norm).
+    pub prefill_attend_us: u64,
+    /// Time attributed to decode attention work (token choice, embedding,
+    /// drain share, residual + layer norm).
+    pub decode_attend_us: u64,
+    /// Time spent projecting final hidden states onto the vocabulary.
+    pub logits_us: u64,
+}
 
 /// Shape/knob description of the native models, parseable from the model
 /// tags used by the artifact grid (`mlm_mra2_n128_d128_l2_h2_v512`;
@@ -1024,8 +1051,24 @@ impl NativeLm {
         &self,
         sessions: &mut [&mut LmSession],
     ) -> Vec<Result<i32, PoolExhausted>> {
+        self.step_sessions_timed(sessions, &mut FrozenClock, &mut StepPhases::default())
+    }
+
+    /// [`NativeLm::step_sessions`] with phase attribution: token choice,
+    /// embedding and all per-layer attention time fold into
+    /// [`StepPhases::decode_attend_us`]; the vocab projection into
+    /// [`StepPhases::logits_us`].  Spans are read from the injected
+    /// `clock` and *added* onto `phases`, so one step's calls accumulate.
+    pub fn step_sessions_timed(
+        &self,
+        sessions: &mut [&mut LmSession],
+        clock: &mut dyn StepClock,
+        phases: &mut StepPhases,
+    ) -> Vec<Result<i32, PoolExhausted>> {
+        let t0 = clock.now_us();
         let toks: Vec<i32> = sessions.iter_mut().map(|s| s.choose_token()).collect();
-        let results = self.advance_batch(sessions, &toks, true);
+        phases.decode_attend_us += clock.now_us().saturating_sub(t0);
+        let results = self.advance_batch_timed(sessions, &toks, true, clock, phases);
         results.into_iter().zip(toks).map(|(r, tok)| r.map(|()| tok)).collect()
     }
 
@@ -1070,6 +1113,22 @@ impl NativeLm {
         prefills: &mut [FusedPrefill<'_>],
         decodes: &mut [&mut LmSession],
     ) -> (Vec<Result<(), PoolExhausted>>, Vec<Result<i32, PoolExhausted>>) {
+        self.fused_step_timed(prefills, decodes, &mut FrozenClock, &mut StepPhases::default())
+    }
+
+    /// [`NativeLm::fused_step`] with phase attribution: stamps `clock`
+    /// around each internal pass and folds the elapsed spans into
+    /// `phases` (attribution rules on [`StepPhases`]).  The untimed
+    /// wrapper injects [`FrozenClock`], so callers that do not time pay
+    /// only a handful of trivially-inlined zero reads — results are
+    /// bitwise identical either way (timing never touches the data path).
+    pub fn fused_step_timed(
+        &self,
+        prefills: &mut [FusedPrefill<'_>],
+        decodes: &mut [&mut LmSession],
+        clock: &mut dyn StepClock,
+        phases: &mut StepPhases,
+    ) -> (Vec<Result<(), PoolExhausted>>, Vec<Result<i32, PoolExhausted>>) {
         let cfg = &self.core.cfg;
         for job in prefills.iter() {
             assert!(
@@ -1099,12 +1158,16 @@ impl NativeLm {
         let heads = cfg.heads;
         let d_head = self.d_head();
         let threads = self.core.engine.threads();
+        let mut t_prev = clock.now_us();
         // decode token selection + embed — identical to step_sessions
         let toks: Vec<i32> = decodes.iter_mut().map(|s| s.choose_token()).collect();
         for (sess, &tok) in decodes.iter_mut().zip(&toks) {
             let t = (tok.max(0) as usize).min(cfg.vocab - 1);
             sess.hidden.copy_from_slice(self.core.embed.row(t));
         }
+        let t_now = clock.now_us();
+        phases.decode_attend_us += t_now.saturating_sub(t_prev);
+        t_prev = t_now;
         // per-job chunk transients — one allocation set per chunk, as in
         // prefill_chunk (prefill is not the steady per-token loop)
         let base_lens: Vec<usize> = prefills.iter().map(|j| j.session.len).collect();
@@ -1127,6 +1190,9 @@ impl NativeLm {
             (0..prefills.len()).map(|_| AtomicBool::new(false)).collect();
         let dec_failed: Vec<AtomicBool> =
             (0..decodes.len()).map(|_| AtomicBool::new(false)).collect();
+        let t_now = clock.now_us();
+        phases.prefill_attend_us += t_now.saturating_sub(t_prev);
+        t_prev = t_now;
         for (li, lw) in self.core.layers.iter().enumerate() {
             // pass 1: prefill q/k/v projection + bulk append per (job, head)
             {
@@ -1170,6 +1236,9 @@ impl NativeLm {
                     },
                 );
             }
+            let t_now = clock.now_us();
+            phases.prefill_attend_us += t_now.saturating_sub(t_prev);
+            t_prev = t_now;
             // pass 2: the fused drain — decode streams and prefill rows in
             // one task list, one scratch per worker
             {
@@ -1191,6 +1260,7 @@ impl NativeLm {
                         tasks.push(FusedTask::Decode(si, h, st, slot, proj, hidden));
                     }
                 }
+                let n_decode = tasks.len();
                 for (j, (job, (cat, pj))) in
                     prefills.iter().zip(cats.iter_mut().zip(projs.iter())).enumerate()
                 {
@@ -1214,6 +1284,7 @@ impl NativeLm {
                     }
                 }
                 let dec_failed_ref = &dec_failed;
+                let n_attend = tasks.len() - n_decode;
                 pool::run_with(threads, tasks, DecodeScratch::default, |scratch, task| match task
                 {
                     FusedTask::Decode(si, h, st, slot, proj, hidden) => {
@@ -1228,6 +1299,16 @@ impl NativeLm {
                         fused_prefill_attend(st, q, pos, scratch, slot);
                     }
                 });
+                // the drain is one heterogeneous pass: split its wall time
+                // between the phases proportionally by task count
+                let t_now = clock.now_us();
+                let dt = t_now.saturating_sub(t_prev);
+                t_prev = t_now;
+                let total = (n_decode + n_attend) as u64;
+                let pre_share =
+                    if total == 0 { 0 } else { dt * n_attend as u64 / total };
+                phases.prefill_attend_us += pre_share;
+                phases.decode_attend_us += dt - pre_share;
             }
             // pass 3: residual + layer norm — per decode session, then per
             // prefill chunk row (each session's arithmetic is independent
@@ -1241,6 +1322,9 @@ impl NativeLm {
                 }
                 layer_norm_row_into(&sess.cat, 1e-5, &mut sess.hidden);
             }
+            let t_now = clock.now_us();
+            phases.decode_attend_us += t_now.saturating_sub(t_prev);
+            t_prev = t_now;
             for (j, (cat, hid)) in cats.iter_mut().zip(hiddens.iter_mut()).enumerate() {
                 if pre_failed[j].load(Ordering::Relaxed) {
                     continue;
@@ -1252,6 +1336,9 @@ impl NativeLm {
                     layer_norm_row_into(crow, 1e-5, hrow);
                 }
             }
+            let t_now = clock.now_us();
+            phases.prefill_attend_us += t_now.saturating_sub(t_prev);
+            t_prev = t_now;
         }
         // vocab projection: decode survivors plus finishing prefill jobs,
         // one combined task list
@@ -1275,6 +1362,7 @@ impl NativeLm {
                 self.project_logits_into(hidden, logits);
             });
         }
+        phases.logits_us += clock.now_us().saturating_sub(t_prev);
         let pre_out: Vec<Result<(), PoolExhausted>> = prefills
             .iter_mut()
             .zip(&pre_failed)
@@ -1318,6 +1406,22 @@ impl NativeLm {
         toks: &[i32],
         with_logits: bool,
     ) -> Vec<Result<(), PoolExhausted>> {
+        let mut phases = StepPhases::default();
+        self.advance_batch_timed(sessions, toks, with_logits, &mut FrozenClock, &mut phases)
+    }
+
+    /// [`NativeLm::advance_batch`] with phase attribution: the embed and
+    /// per-layer attention work folds into
+    /// [`StepPhases::decode_attend_us`], the vocab projection into
+    /// [`StepPhases::logits_us`].
+    fn advance_batch_timed(
+        &self,
+        sessions: &mut [&mut LmSession],
+        toks: &[i32],
+        with_logits: bool,
+        clock: &mut dyn StepClock,
+        phases: &mut StepPhases,
+    ) -> Vec<Result<(), PoolExhausted>> {
         debug_assert_eq!(sessions.len(), toks.len());
         let cfg = &self.core.cfg;
         for sess in sessions.iter() {
@@ -1332,6 +1436,7 @@ impl NativeLm {
         let d_head = self.d_head();
         let threads = self.core.engine.threads();
         let failed: Vec<AtomicBool> = (0..sessions.len()).map(|_| AtomicBool::new(false)).collect();
+        let mut t_prev = clock.now_us();
         // embed every session's committed token
         for (sess, &tok) in sessions.iter_mut().zip(toks) {
             let t = (tok.max(0) as usize).min(cfg.vocab - 1);
@@ -1378,6 +1483,9 @@ impl NativeLm {
                 layer_norm_row_into(&sess.cat, 1e-5, &mut sess.hidden);
             }
         }
+        let t_now = clock.now_us();
+        phases.decode_attend_us += t_now.saturating_sub(t_prev);
+        t_prev = t_now;
         // vocab projection, one task per surviving session (the largest
         // matmul of the step; prefill defers it to the last position)
         if with_logits {
@@ -1393,6 +1501,7 @@ impl NativeLm {
                 self.project_logits_into(hidden, logits);
             });
         }
+        phases.logits_us += clock.now_us().saturating_sub(t_prev);
         let mut out = Vec::with_capacity(sessions.len());
         for (sess, f) in sessions.iter_mut().zip(&failed) {
             if f.load(Ordering::Relaxed) {

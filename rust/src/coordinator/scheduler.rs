@@ -105,9 +105,10 @@ use std::time::Duration;
 pub use crate::config::SessionConfig;
 use crate::coordinator::autotune::{AutotuneBudget, MonotonicClock, StepClock};
 use crate::coordinator::batcher::Request;
-use crate::coordinator::metrics::Metrics;
-use crate::coordinator::native::{FusedPrefill, LmSession, NativeLm};
+use crate::coordinator::metrics::{Metrics, StepPhase};
+use crate::coordinator::native::{FusedPrefill, LmSession, NativeLm, StepPhases};
 use crate::coordinator::server::{Ingress, Responder, Response};
+use crate::coordinator::trace::{FlightRecorder, PreemptReason, TraceEvent};
 use crate::engine::{PagePool, PoolExhausted, RadixCache};
 
 /// A request waiting for admission (fresh, or preempted with its partial
@@ -162,8 +163,10 @@ impl Running {
 }
 
 /// One block-aligned prefill chunk the step is about to run:
-/// `(running index, tokens to take, prefill completes after)`.
-type ChunkPlan = Vec<(usize, usize, bool)>;
+/// `(running index, tokens to take, prefill completes after, grew from
+/// re-offered budget)` — the last flag flows into the
+/// [`TraceEvent::PrefillChunk`] record.
+type ChunkPlan = Vec<(usize, usize, bool, bool)>;
 
 /// The continuous-batching scheduler state: the page pool, the radix
 /// prefix cache and the session queues, advanced one step at a time by
@@ -194,6 +197,10 @@ pub(crate) struct Scheduler {
     /// Monotone step counter — the clock priority aging reads.  Step-based
     /// (not wall-clock) so QoS ordering is deterministic under test.
     steps: u64,
+    /// The flight recorder, when `[trace] enabled` — `None` is the
+    /// zero-cost disabled form (every record site is one `Option` branch;
+    /// tracing on vs off is behavior-invariant, property-tested).
+    trace: Option<Arc<FlightRecorder>>,
 }
 
 /// The scheduler thread body: drains `ingress` until shutdown *and* all
@@ -203,8 +210,10 @@ pub(crate) fn scheduler_loop(
     lm: Arc<NativeLm>,
     scfg: SessionConfig,
     metrics: Arc<Metrics>,
+    trace: Option<Arc<FlightRecorder>>,
 ) {
-    let mut sched = Scheduler::new(lm, scfg, metrics);
+    let mut sched =
+        Scheduler::with_trace(lm, scfg, metrics, Box::new(MonotonicClock::default()), trace);
     while sched.step(&ingress) {}
 }
 
@@ -221,6 +230,20 @@ impl Scheduler {
         scfg: SessionConfig,
         metrics: Arc<Metrics>,
         clock: Box<dyn StepClock>,
+    ) -> Self {
+        Self::with_trace(lm, scfg, metrics, clock, None)
+    }
+
+    /// [`Scheduler::with_clock`] plus an optional flight recorder — the
+    /// full-injection constructor [`scheduler_loop`] uses.  The same
+    /// injected clock stamps both the autotune controller and every
+    /// trace record, so all observability surfaces agree on "now".
+    pub(crate) fn with_trace(
+        lm: Arc<NativeLm>,
+        scfg: SessionConfig,
+        metrics: Arc<Metrics>,
+        clock: Box<dyn StepClock>,
+        trace: Option<Arc<FlightRecorder>>,
     ) -> Self {
         let pool = lm.new_page_pool(scfg.total_pages);
         metrics.pool_pages.store(scfg.total_pages as u64, Ordering::Relaxed);
@@ -250,6 +273,17 @@ impl Scheduler {
             autotune,
             fused,
             steps: 0,
+            trace,
+        }
+    }
+
+    /// Append one event to the flight recorder, if tracing is on — the
+    /// single indirection every record site shares.  A free function over
+    /// the field (not `&self`) so retain/loop bodies can capture
+    /// `&self.trace` disjointly from their other field borrows.
+    fn trace_ev(trace: &Option<Arc<FlightRecorder>>, step: u64, at_us: u64, ev: TraceEvent) {
+        if let Some(t) = trace.as_ref() {
+            t.record(step, at_us, ev);
         }
     }
 
@@ -270,6 +304,9 @@ impl Scheduler {
                 }
             }
         }
+        // phase attribution starts here: the idle recv above is excluded
+        // (time spent with no work is not a step phase)
+        let t0 = self.autotune.now_us();
         loop {
             match ingress.try_recv() {
                 Ok(Ingress::Req(req, resp)) => self.enqueue(req, resp),
@@ -281,12 +318,14 @@ impl Scheduler {
                 }
             }
         }
+        let t1 = self.autotune.now_us();
 
         self.steps = self.steps.wrapping_add(1);
         self.shed_unadmitted_waiters();
         self.expire_deadlines();
         self.admit();
         self.finish_ready();
+        let t2 = self.autotune.now_us();
 
         if self.running.is_empty() {
             self.stream_progress();
@@ -296,12 +335,15 @@ impl Scheduler {
         }
 
         let plan = self.plan_and_reserve();
+        let t3 = self.autotune.now_us();
+        let budget_before = self.autotune.current();
         self.autotune.begin_step();
+        let mut native = StepPhases::default();
         let decoded = if self.fused {
-            self.fused_execute(&plan)
+            self.fused_execute(&plan, &mut native)
         } else {
-            self.run_prefill_chunks(&plan);
-            self.decode_step()
+            self.run_prefill_chunks(&plan, &mut native);
+            self.decode_step(&mut native)
         };
         let dt = self.autotune.end_step(!plan.is_empty());
         if decoded {
@@ -309,8 +351,58 @@ impl Scheduler {
             // controller regulates is decode latency under prefill load
             self.metrics.decode_step_latency.record(Duration::from_micros(dt));
         }
+        let budget_after = self.autotune.current();
+        if budget_after != budget_before {
+            let at = self.autotune.now_us();
+            Self::trace_ev(
+                &self.trace,
+                self.steps,
+                at,
+                TraceEvent::AutotuneResize {
+                    old: budget_before as u32,
+                    new: budget_after as u32,
+                },
+            );
+        }
+        let t4 = self.autotune.now_us();
         self.stream_progress();
         self.publish_gauges();
+        let t5 = self.autotune.now_us();
+        // fold the step's phase spans into the per-phase histograms and
+        // close the step with its StepEnd trace marker.  The native
+        // attend/logits spans subdivide t3..t4; glue around them (task
+        // assembly, metric pushes, preemption bookkeeping) is deliberately
+        // unattributed, so the phase sum tracks the step total to within
+        // one histogram bucket (gated in benches/bench_serve.rs).
+        let spans: [u64; 7] = [
+            t1.saturating_sub(t0),
+            t2.saturating_sub(t1),
+            t3.saturating_sub(t2),
+            native.prefill_attend_us,
+            native.decode_attend_us,
+            native.logits_us,
+            t5.saturating_sub(t4),
+        ];
+        for (phase, &us) in StepPhase::ALL.iter().zip(&spans) {
+            self.metrics.phase(*phase).record(Duration::from_micros(us));
+        }
+        Self::trace_ev(
+            &self.trace,
+            self.steps,
+            t5,
+            TraceEvent::StepEnd {
+                phases: [
+                    spans[0] as u32,
+                    spans[1] as u32,
+                    spans[2] as u32,
+                    spans[3] as u32,
+                    spans[4] as u32,
+                    spans[5] as u32,
+                    spans[6] as u32,
+                ],
+                total_us: t5.saturating_sub(t0) as u32,
+            },
+        );
         self.check_invariants();
         true
     }
@@ -357,7 +449,10 @@ impl Scheduler {
     /// answer.  Preempted (once-admitted) requests are exempt: accepted
     /// means served.
     fn expire_deadlines(&mut self) {
+        let at = self.autotune.now_us();
+        let step = self.steps;
         let metrics = &self.metrics;
+        let trace = &self.trace;
         self.waiting.retain(|p| {
             if p.admitted {
                 return true;
@@ -369,6 +464,7 @@ impl Scheduler {
             }
             metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
             metrics.inc_rejected();
+            Self::trace_ev(trace, step, at, TraceEvent::Expire { id: p.req.id });
             let _ = p.resp.send(Err(format!(
                 "request {} missed its {ttl:?} admission deadline after waiting \
                  {waited:?} — raise the deadline, lower the load, or raise \
@@ -402,8 +498,13 @@ impl Scheduler {
     /// (the cursor holds, nothing is dropped).  Disconnected receiver:
     /// forget the channel — the requester kept the `Response` path, which
     /// always carries the full sequence.
+    #[allow(clippy::too_many_arguments)]
     fn stream_tokens(
         metrics: &Metrics,
+        trace: &Option<Arc<FlightRecorder>>,
+        step: u64,
+        at_us: u64,
+        id: u64,
         stream: &mut Option<SyncSender<i32>>,
         generated: &[i32],
         streamed: &mut usize,
@@ -419,6 +520,7 @@ impl Scheduler {
                 }
                 Err(TrySendError::Full(_)) => {
                     metrics.stream_stalls.fetch_add(1, Ordering::Relaxed);
+                    Self::trace_ev(trace, step, at_us, TraceEvent::StreamStall { id });
                     return;
                 }
                 Err(TrySendError::Disconnected(_)) => {
@@ -434,12 +536,33 @@ impl Scheduler {
     /// already-generated tokens keep streaming while it waits for
     /// readmission; the cursor guarantees its replay never re-sends one).
     fn stream_progress(&mut self) {
+        let at = self.autotune.now_us();
+        let step = self.steps;
+        let (metrics, trace) = (&self.metrics, &self.trace);
         for r in &mut self.running {
-            Self::stream_tokens(&self.metrics, &mut r.req.stream, &r.generated, &mut r.streamed);
+            Self::stream_tokens(
+                metrics,
+                trace,
+                step,
+                at,
+                r.req.id,
+                &mut r.req.stream,
+                &r.generated,
+                &mut r.streamed,
+            );
         }
         for p in &mut self.waiting {
             if p.admitted {
-                Self::stream_tokens(&self.metrics, &mut p.req.stream, &p.generated, &mut p.streamed);
+                Self::stream_tokens(
+                    metrics,
+                    trace,
+                    step,
+                    at,
+                    p.req.id,
+                    &mut p.req.stream,
+                    &p.generated,
+                    &mut p.streamed,
+                );
             }
         }
     }
@@ -528,12 +651,45 @@ impl Scheduler {
             match self.lm.begin_session(&prompt, &self.pool, self.cache.as_mut()) {
                 Ok(mut session) => {
                     self.metrics.sessions.fetch_add(1, Ordering::Relaxed);
+                    let at = self.autotune.now_us();
+                    if p.admitted {
+                        Self::trace_ev(
+                            &self.trace,
+                            self.steps,
+                            at,
+                            TraceEvent::Readmit {
+                                id: p.req.id,
+                                replay_tokens: p.generated.len() as u32,
+                            },
+                        );
+                    } else {
+                        Self::trace_ev(
+                            &self.trace,
+                            self.steps,
+                            at,
+                            TraceEvent::Admit {
+                                id: p.req.id,
+                                prompt_tokens: p.req.tokens.len() as u32,
+                            },
+                        );
+                    }
                     // readmissions of preempted sessions mostly re-find
                     // their *own* blocks — real recompute savings, but not
                     // cross-session sharing, so they stay out of the
                     // prefix-hit metrics
                     if p.generated.is_empty() {
                         let cached = session.cached_tokens();
+                        if cached > 0 {
+                            Self::trace_ev(
+                                &self.trace,
+                                self.steps,
+                                at,
+                                TraceEvent::RadixHit {
+                                    id: p.req.id,
+                                    cached_tokens: cached as u32,
+                                },
+                            );
+                        }
                         self.metrics.record_prefix_lookup(cached);
                         // blocks published mid-prefill (per-chunk) by a
                         // *still-prefilling* session with the same prompt:
@@ -591,10 +747,26 @@ impl Scheduler {
                 let mut r = self.running.remove(i);
                 r.generated.push(r.session.choose_token());
                 self.metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                let at = self.autotune.now_us();
+                Self::trace_ev(
+                    &self.trace,
+                    self.steps,
+                    at,
+                    TraceEvent::Finish { id: r.req.id, generated: r.generated.len() as u32 },
+                );
                 // best-effort final flush; the sender drops with `r`, so a
                 // streaming consumer sees end-of-stream and recovers any
                 // unflushed tail from the Response's full sequence
-                Self::stream_tokens(&self.metrics, &mut r.req.stream, &r.generated, &mut r.streamed);
+                Self::stream_tokens(
+                    &self.metrics,
+                    &self.trace,
+                    self.steps,
+                    at,
+                    r.req.id,
+                    &mut r.req.stream,
+                    &r.generated,
+                    &mut r.streamed,
+                );
                 let latency = r.req.arrived.elapsed();
                 self.metrics.request_latency.record(latency);
                 let _ = r.resp.send(Ok(Response {
@@ -667,13 +839,14 @@ impl Scheduler {
                     Some(e) => {
                         plan[e].1 += take;
                         plan[e].2 = done_after;
+                        plan[e].3 = true;
                         reoffers += 1;
                     }
                     None => {
                         if !first_pass {
                             reoffers += 1;
                         }
-                        plan.push((i, take, done_after));
+                        plan.push((i, take, done_after, !first_pass));
                     }
                 }
             }
@@ -711,7 +884,7 @@ impl Scheduler {
                 .filter(|r| r.decodable())
                 .map(|r| r.session.pages_needed_next_step())
                 .sum();
-            for &(i, take, done_after) in &plan {
+            for &(i, take, done_after, _) in &plan {
                 let r = &self.running[i];
                 needed += r.session.pages_needed_for_chunk(take);
                 // a session finishing its prefill this step decodes this
@@ -743,6 +916,13 @@ impl Scheduler {
             };
             let victim = self.running.swap_remove(vi);
             self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            let at = self.autotune.now_us();
+            Self::trace_ev(
+                &self.trace,
+                self.steps,
+                at,
+                TraceEvent::Preempt { id: victim.req.id, reason: PreemptReason::Pages },
+            );
             self.waiting.push_front(Pending {
                 req: victim.req,
                 resp: victim.resp,
@@ -772,24 +952,38 @@ impl Scheduler {
         }
     }
 
-    /// Prefill: run the planned chunks through the engine.
-    fn run_prefill_chunks(&mut self, plan: &ChunkPlan) {
+    /// Prefill: run the planned chunks through the engine, folding each
+    /// chunk's wall time into [`StepPhases::prefill_attend_us`].
+    fn run_prefill_chunks(&mut self, plan: &ChunkPlan, phases: &mut StepPhases) {
         let mut torn: Vec<usize> = Vec::new();
-        for &(i, take, done_after) in plan {
+        for &(i, take, done_after, reoffered) in plan {
+            let tc0 = self.autotune.now_us();
             let ok = {
                 let Running { session, prefill, .. } = &mut self.running[i];
                 let Some(prompt) = prefill.as_ref() else { continue };
                 let from = session.len();
                 self.lm.prefill_chunk(session, &prompt[from..from + take], done_after).is_ok()
             };
+            let tc1 = self.autotune.now_us();
+            phases.prefill_attend_us += tc1.saturating_sub(tc0);
             if ok {
                 self.metrics.record_prefill_chunk(take);
+                Self::trace_ev(
+                    &self.trace,
+                    self.steps,
+                    tc1,
+                    TraceEvent::PrefillChunk {
+                        id: self.running[i].req.id,
+                        tokens: take as u32,
+                        reoffered,
+                    },
+                );
                 self.publish_completed_blocks(i);
             } else {
                 torn.push(i);
             }
         }
-        for &(i, _, done_after) in plan {
+        for &(i, _, done_after, _) in plan {
             if done_after && !torn.contains(&i) {
                 self.running[i].prefill = None;
             }
@@ -808,6 +1002,13 @@ impl Scheduler {
                 || self.cache.as_ref().map(|c| c.pages_held() > 0).unwrap_or(false);
             if reclaimable {
                 self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+                let at = self.autotune.now_us();
+                Self::trace_ev(
+                    &self.trace,
+                    self.steps,
+                    at,
+                    TraceEvent::Preempt { id: r.req.id, reason: PreemptReason::TornPrefill },
+                );
                 self.waiting.push_front(Pending {
                     req: r.req,
                     resp: r.resp,
@@ -829,7 +1030,7 @@ impl Scheduler {
     /// sessions whose prefill just completed join immediately.  Returns
     /// whether anything decoded (the autotune controller only observes
     /// steps that did).
-    fn decode_step(&mut self) -> bool {
+    fn decode_step(&mut self, phases: &mut StepPhases) -> bool {
         let decodable: Vec<usize> =
             (0..self.running.len()).filter(|&i| self.running[i].decodable()).collect();
         if decodable.is_empty() {
@@ -842,7 +1043,7 @@ impl Scheduler {
                 .filter(|r| r.decodable())
                 .map(|r| &mut r.session)
                 .collect();
-            self.lm.step_sessions(&mut refs)
+            self.lm.step_sessions_timed(&mut refs, self.autotune.clock_mut(), phases)
         };
         self.metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
 
@@ -850,6 +1051,7 @@ impl Scheduler {
         // stepped session had >= 2 tokens to go, so none finishes here —
         // sessions reaching their last token leave through the pre-step
         // finisher path next iteration, straight from logits)
+        let at = self.autotune.now_us();
         let mut starved: Vec<usize> = Vec::new();
         for (k, res) in results.iter().enumerate() {
             let i = decodable[k];
@@ -857,6 +1059,12 @@ impl Scheduler {
                 Ok(tok) => {
                     self.running[i].generated.push(*tok);
                     self.metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                    Self::trace_ev(
+                        &self.trace,
+                        self.steps,
+                        at,
+                        TraceEvent::Decode { id: self.running[i].req.id, token: *tok },
+                    );
                 }
                 Err(PoolExhausted) => starved.push(i),
             }
@@ -866,6 +1074,12 @@ impl Scheduler {
             // replay prompt + generated on readmission (deterministic)
             let r = self.running.remove(i);
             self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            Self::trace_ev(
+                &self.trace,
+                self.steps,
+                at,
+                TraceEvent::Preempt { id: r.req.id, reason: PreemptReason::StarvedDecode },
+            );
             self.waiting.push_front(Pending {
                 req: r.req,
                 resp: r.resp,
@@ -889,7 +1103,7 @@ impl Scheduler {
     /// (batching cannot change their streams), so the fused and phased
     /// paths are bitwise interchangeable (property-tested).  Returns
     /// whether anything decoded, like [`Scheduler::decode_step`].
-    fn fused_execute(&mut self, plan: &ChunkPlan) -> bool {
+    fn fused_execute(&mut self, plan: &ChunkPlan, phases: &mut StepPhases) -> bool {
         let entry = |i: usize| plan.iter().find(|e| e.0 == i).copied();
         let mut torn: Vec<usize> = Vec::new();
         let mut starved: Vec<usize> = Vec::new();
@@ -899,7 +1113,7 @@ impl Scheduler {
             let mut jobs: Vec<FusedPrefill<'_>> = Vec::new();
             let mut dec_refs: Vec<&mut LmSession> = Vec::new();
             for (i, r) in self.running.iter_mut().enumerate() {
-                if let Some((_, take, done_after)) = entry(i) {
+                if let Some((_, take, done_after, _)) = entry(i) {
                     let Running { session, prefill, .. } = r;
                     let Some(pf) = prefill.as_ref() else { continue };
                     let from = session.len();
@@ -914,20 +1128,32 @@ impl Scheduler {
                     dec_idx.push(i);
                 }
             }
-            self.lm.fused_step(&mut jobs, &mut dec_refs)
+            self.lm.fused_step_timed(&mut jobs, &mut dec_refs, self.autotune.clock_mut(), phases)
         };
+        let at = self.autotune.now_us();
         for (k, res) in pre_out.iter().enumerate() {
             let i = job_idx[k];
             match res {
                 Ok(()) => {
-                    let take = entry(i).map(|e| e.1).unwrap_or(0);
+                    let (take, reoffered) =
+                        entry(i).map(|e| (e.1, e.3)).unwrap_or((0, false));
                     self.metrics.record_prefill_chunk(take);
+                    Self::trace_ev(
+                        &self.trace,
+                        self.steps,
+                        at,
+                        TraceEvent::PrefillChunk {
+                            id: self.running[i].req.id,
+                            tokens: take as u32,
+                            reoffered,
+                        },
+                    );
                     self.publish_completed_blocks(i);
                 }
                 Err(PoolExhausted) => torn.push(i),
             }
         }
-        for &(i, _, done_after) in plan {
+        for &(i, _, done_after, _) in plan {
             if done_after && !torn.contains(&i) {
                 self.running[i].prefill = None;
             }
@@ -938,6 +1164,12 @@ impl Scheduler {
                 Ok(tok) => {
                     self.running[i].generated.push(*tok);
                     self.metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                    Self::trace_ev(
+                        &self.trace,
+                        self.steps,
+                        at,
+                        TraceEvent::Decode { id: self.running[i].req.id, token: *tok },
+                    );
                 }
                 Err(PoolExhausted) => starved.push(i),
             }
@@ -947,7 +1179,7 @@ impl Scheduler {
         // their logits only exist after the fused drain
         let mut joiners: Vec<usize> = plan
             .iter()
-            .filter(|&&(i, _, done_after)| {
+            .filter(|&&(i, _, done_after, _)| {
                 done_after && !torn.contains(&i) && self.running[i].decodable()
             })
             .map(|e| e.0)
@@ -962,14 +1194,21 @@ impl Scheduler {
                     .filter(|(i, _)| joiners.binary_search(i).is_ok())
                     .map(|(_, r)| &mut r.session)
                     .collect();
-                self.lm.step_sessions(&mut refs)
+                self.lm.step_sessions_timed(&mut refs, self.autotune.clock_mut(), phases)
             };
+            let at = self.autotune.now_us();
             for (k, res) in results.iter().enumerate() {
                 let i = joiners[k];
                 match res {
                     Ok(tok) => {
                         self.running[i].generated.push(*tok);
                         self.metrics.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                        Self::trace_ev(
+                            &self.trace,
+                            self.steps,
+                            at,
+                            TraceEvent::Decode { id: self.running[i].req.id, token: *tok },
+                        );
                     }
                     Err(PoolExhausted) => starved.push(i),
                 }
@@ -1004,6 +1243,7 @@ impl Scheduler {
         removed_torn.reverse(); // ascending original-index order
         removed_starved.reverse();
         let starved_pending = removed_starved.len();
+        let at = self.autotune.now_us();
         for (k, r) in removed_torn.into_iter().enumerate().rev() {
             // reclaimability as the phased path saw it at this torn
             // session's removal: every other session (running, earlier
@@ -1014,6 +1254,12 @@ impl Scheduler {
                 || self.cache.as_ref().map(|c| c.pages_held() > 0).unwrap_or(false);
             if reclaimable {
                 self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+                Self::trace_ev(
+                    &self.trace,
+                    self.steps,
+                    at,
+                    TraceEvent::Preempt { id: r.req.id, reason: PreemptReason::TornPrefill },
+                );
                 self.waiting.push_front(Pending {
                     req: r.req,
                     resp: r.resp,
@@ -1031,6 +1277,12 @@ impl Scheduler {
         }
         for r in removed_starved.into_iter().rev() {
             self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            Self::trace_ev(
+                &self.trace,
+                self.steps,
+                at,
+                TraceEvent::Preempt { id: r.req.id, reason: PreemptReason::StarvedDecode },
+            );
             self.waiting.push_front(Pending {
                 req: r.req,
                 resp: r.resp,
@@ -1296,7 +1548,7 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = sync_channel::<Ingress>(64);
         let (lm2, m2) = (lm.clone(), metrics.clone());
-        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2));
+        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2, None));
         (tx, lm, metrics, handle)
     }
 
@@ -1430,7 +1682,7 @@ mod tests {
             .map(|(i, (p, g))| send_req(&tx, i as u64, p.clone(), *g))
             .collect();
         let (lm2, m2) = (lm.clone(), metrics.clone());
-        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2));
+        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2, None));
         for ((p, g), rxr) in cases.iter().zip(receivers) {
             let resp = rxr.recv().unwrap().expect("response under memory pressure");
             assert_eq!(
@@ -1475,7 +1727,7 @@ mod tests {
         let ra = send_req(&tx, 0, short.clone(), 12);
         let rb = send_req(&tx, 1, long.clone(), 3);
         let (lm2, m2) = (lm.clone(), metrics.clone());
-        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2));
+        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2, None));
         let a = ra.recv().unwrap().expect("short response");
         let b = rb.recv().unwrap().expect("long response");
         assert_eq!(a.predictions, lm.generate(&short, 12).unwrap(), "interleaving changed output");
@@ -1511,7 +1763,7 @@ mod tests {
         let r2 = send_req(&tx, 8, prompt(1, 8), 4);
         tx.send(Ingress::Shutdown).unwrap();
         let (lm2, m2) = (lm.clone(), metrics.clone());
-        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2));
+        let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2, None));
         let e1 = r1.recv().expect("responder must not be dropped").unwrap_err();
         let e2 = r2.recv().expect("responder must not be dropped").unwrap_err();
         assert!(e1.contains("shutting down") && e1.contains('7'), "{e1}");
@@ -1935,7 +2187,7 @@ mod tests {
                 cases.push((p, sampling));
             }
             let (lm2, m2) = (lm.clone(), metrics.clone());
-            let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2));
+            let handle = std::thread::spawn(move || scheduler_loop(rx, lm2, scfg, m2, None));
             for (((p, sampling), rxr), consumer) in
                 cases.iter().zip(receivers).zip(consumers)
             {
@@ -2209,6 +2461,124 @@ mod tests {
                     "fused and phased accounting diverged: {fused_counters:?} != \
                      {phased_counters:?}"
                 ));
+            }
+            Ok(())
+        });
+    }
+
+    /// Observability must be free of observer effects: the same random
+    /// workload driven with the flight recorder attached and detached
+    /// must produce identical responses and identical counter accounting
+    /// — the recorder only *watches* the step, it never participates.
+    /// Covers both the fused and the phased execution paths under a pool
+    /// tight enough to force preemptions (so the Preempt/Readmit record
+    /// sites run too).
+    #[test]
+    fn tracing_on_and_off_are_behaviorally_identical() {
+        use crate::proptest::for_all_seeds;
+        for_all_seeds(6, |_, rng| {
+            let fused = rng.below(2) == 0;
+            let chunk = [16, 44, 256][rng.below(3)];
+            let n = 3 + rng.below(3);
+            let mut cases: Vec<(Vec<i32>, usize, u8)> = Vec::new();
+            for i in 0..n {
+                let p = if i > 0 && rng.below(3) == 0 {
+                    cases[i - 1].0.clone() // shared prompts hit the cache
+                } else {
+                    prompt(i, 1 + rng.below(40))
+                };
+                let priority = [PRIORITY_NORMAL, 10, 200][rng.below(3)];
+                cases.push((p, 1 + rng.below(6), priority));
+            }
+            let run = |trace: Option<Arc<FlightRecorder>>| {
+                let scfg = SessionConfig {
+                    total_pages: 12,
+                    free_watermark: 0,
+                    max_running: 8,
+                    prefix_cache: true,
+                    prefill_chunk_tokens: chunk,
+                    fused_step: fused,
+                    autotune_prefill: false,
+                    ..Default::default()
+                };
+                let lm = Arc::new(NativeLm::new(small_cfg(), 2));
+                let metrics = Arc::new(Metrics::new());
+                let mut sched = Scheduler::with_trace(
+                    lm,
+                    scfg,
+                    metrics.clone(),
+                    Box::new(MonotonicClock::default()),
+                    trace,
+                );
+                let (tx, rx) = sync_channel::<Ingress>(64);
+                let receivers: Vec<_> = cases
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (p, g, prio))| {
+                        send_req_cfg(
+                            &tx,
+                            Request {
+                                priority: *prio,
+                                ..Request::new(i as u64, p.clone(), *g)
+                            },
+                        )
+                    })
+                    .collect();
+                let mut outs: Vec<Option<Result<Response, String>>> =
+                    (0..cases.len()).map(|_| None).collect();
+                let mut steps = 0;
+                while outs.iter().any(|o| o.is_none()) {
+                    assert!(sched.step(&rx), "work remains");
+                    steps += 1;
+                    assert!(steps < 3000, "workload did not drain");
+                    for (o, r) in outs.iter_mut().zip(&receivers) {
+                        if o.is_none() {
+                            if let Ok(resp) = r.try_recv() {
+                                *o = Some(resp);
+                            }
+                        }
+                    }
+                }
+                tx.send(Ingress::Shutdown).unwrap();
+                while sched.step(&rx) {}
+                let sig: Vec<Result<(u64, Vec<i32>), String>> = outs
+                    .into_iter()
+                    .map(|o| match o {
+                        Some(Ok(resp)) => Ok((resp.id, resp.predictions)),
+                        Some(Err(e)) => Err(e),
+                        None => Err("missing".into()),
+                    })
+                    .collect();
+                let counters = [
+                    metrics.generated_tokens.load(Ordering::Relaxed),
+                    metrics.prefill_tokens.load(Ordering::Relaxed),
+                    metrics.prefill_chunks.load(Ordering::Relaxed),
+                    metrics.sessions.load(Ordering::Relaxed),
+                    metrics.preemptions.load(Ordering::Relaxed),
+                    metrics.decode_steps.load(Ordering::Relaxed),
+                    metrics.rejected.load(Ordering::Relaxed),
+                    metrics.budget_reoffers.load(Ordering::Relaxed),
+                    metrics.midprefill_prefix_hits.load(Ordering::Relaxed),
+                    metrics.prefix_hit_tokens.load(Ordering::Relaxed),
+                ];
+                (sig, counters)
+            };
+            let recorder = Arc::new(FlightRecorder::new(1024));
+            let (traced_sig, traced_counters) = run(Some(recorder.clone()));
+            let (plain_sig, plain_counters) = run(None);
+            if traced_sig != plain_sig {
+                return Err(format!(
+                    "tracing changed the outputs:\n{traced_sig:?}\n{plain_sig:?}"
+                ));
+            }
+            if traced_counters != plain_counters {
+                return Err(format!(
+                    "tracing changed the accounting: {traced_counters:?} != \
+                     {plain_counters:?}"
+                ));
+            }
+            if recorder.is_empty() {
+                return Err("the traced run recorded no events".into());
             }
             Ok(())
         });

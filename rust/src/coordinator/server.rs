@@ -46,9 +46,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{SamplingParams, ServeConfig};
 use crate::coordinator::batcher::{Batch, Batcher, Request, PRIORITY_NORMAL};
+use crate::coordinator::expose::MetricsSnapshot;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::native::{NativeLm, NativeMlm, NativeMlmConfig};
 use crate::coordinator::router::Router;
+use crate::coordinator::trace::FlightRecorder;
 use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
 
 /// Per-request response: argmax token predictions for the request's
@@ -214,6 +216,9 @@ pub struct Server {
     stream_buffer: usize,
     /// Policy for requests without a [`GenOptions::sampling`] override.
     default_sampling: SamplingParams,
+    /// The flight recorder shared with the scheduler thread — present
+    /// only on session servers started with `[trace] enabled = true`.
+    trace: Option<Arc<FlightRecorder>>,
 }
 
 impl Server {
@@ -304,13 +309,19 @@ impl Server {
         let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(cfg.queue_depth);
         let stream_buffer = session_cfg.stream_buffer;
         let default_sampling = session_cfg.sampling;
+        let trace = session_cfg
+            .trace
+            .enabled
+            .then(|| Arc::new(FlightRecorder::new(session_cfg.trace.capacity)));
         let sched_metrics = metrics.clone();
+        let sched_trace = trace.clone();
         let threads = vec![std::thread::spawn(move || {
             crate::coordinator::scheduler::scheduler_loop(
                 ingress_rx,
                 model,
                 session_cfg,
                 sched_metrics,
+                sched_trace,
             );
         })];
         Ok(Server {
@@ -320,6 +331,7 @@ impl Server {
             threads,
             stream_buffer,
             default_sampling,
+            trace,
         })
     }
 
@@ -359,7 +371,36 @@ impl Server {
             threads,
             stream_buffer: 32,
             default_sampling: SamplingParams::default(),
+            trace: None,
         })
+    }
+
+    /// A typed point-in-time copy of the serving metrics (counters +
+    /// decode/phase latency snapshots) — see
+    /// [`MetricsSnapshot::counter_signature`].
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// The Prometheus text exposition of the live metrics (the body a
+    /// `/metrics` scrape endpoint would serve).
+    pub fn render_metrics(&self) -> String {
+        self.metrics.render_prometheus()
+    }
+
+    /// Dump the flight recorder as JSON lines (chronological), or `None`
+    /// when tracing is disabled or this server has no scheduler.  Safe to
+    /// call while serving: the dump locks the ring only long enough to
+    /// copy it.
+    pub fn dump_trace(&self) -> Option<String> {
+        self.trace.as_ref().map(|t| t.dump_jsonl())
+    }
+
+    /// The flight recorder itself, when tracing is enabled — for callers
+    /// that want typed [`crate::coordinator::trace::TraceRecord`]s rather
+    /// than the JSONL dump.
+    pub fn trace_recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.trace.as_ref()
     }
 
     /// Submit a request; blocks until the response arrives.

@@ -1,0 +1,409 @@
+//! Flight recorder: a lock-light, fixed-capacity ring buffer of typed
+//! scheduler/session events (DESIGN.md §14).
+//!
+//! Every consequential scheduler decision — admission, prefill chunking,
+//! decode commits, preemption, readmission, radix hits, budget resizes,
+//! stream stalls, deadline expiry, completion — is recorded as one
+//! [`TraceEvent`] stamped with the scheduler step index and the injected
+//! [`StepClock`](crate::coordinator::autotune::StepClock) time (never a
+//! wall clock read in core code, so the `no-wallclock` lint surface stays
+//! clean and `ManualClock` tests can drive fully deterministic traces).
+//!
+//! Recording is **allocation-free** per event: the ring is preallocated
+//! at construction, events are `Copy` (no strings, no boxing), and a
+//! record is one uncontended mutex lock + a slot overwrite.  When the ring
+//! is full the oldest record is overwritten ([`FlightRecorder::dropped`]
+//! counts the overwrites) — a flight recorder keeps the *recent* past, the
+//! regime where "why was this token late?" questions get asked.
+//!
+//! Dump the ring as JSON-lines ([`FlightRecorder::dump_jsonl`]) and
+//! reconstruct any request's full timeline offline
+//! (`scripts/trace_summarize.py`): admit → prefill chunks → first token →
+//! preemptions → finish.
+
+use std::sync::Mutex;
+
+/// Why the scheduler preempted a running session (DESIGN.md §11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptReason {
+    /// The next step's page reservation could not be satisfied even after
+    /// cache eviction — the lowest-priority victim released its pages.
+    Pages,
+    /// A prefill chunk tore mid-layer on pool exhaustion; the session was
+    /// poisoned and requeued for recompute.
+    TornPrefill,
+    /// A decode step could not get a page for this session; the session
+    /// was poisoned and requeued for recompute.
+    StarvedDecode,
+}
+
+impl PreemptReason {
+    /// Stable lowercase name used in the JSON-lines dump.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PreemptReason::Pages => "pages",
+            PreemptReason::TornPrefill => "torn-prefill",
+            PreemptReason::StarvedDecode => "starved-decode",
+        }
+    }
+}
+
+/// One typed scheduler/session event.  All variants are `Copy` — no heap
+/// allocation ever rides a record call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A waiting request was admitted and began its prefill.
+    Admit {
+        /// Server-assigned request id.
+        id: u64,
+        /// Prompt length at admission.
+        prompt_tokens: u32,
+    },
+    /// A previously preempted request re-entered the running set
+    /// (recompute-on-readmit replays its generated suffix).
+    Readmit {
+        /// Server-assigned request id.
+        id: u64,
+        /// Generated tokens replayed into the rebuilt session.
+        replay_tokens: u32,
+    },
+    /// One planned prefill chunk completed.
+    PrefillChunk {
+        /// Server-assigned request id.
+        id: u64,
+        /// Prompt tokens fed by this chunk.
+        tokens: u32,
+        /// True when the chunk grew from budget re-offered by sessions
+        /// that could not use their fair share this step.
+        reoffered: bool,
+    },
+    /// One decode step committed a token for this session.
+    Decode {
+        /// Server-assigned request id.
+        id: u64,
+        /// The committed token id.
+        token: i32,
+    },
+    /// A running session was preempted (pages released, request requeued).
+    Preempt {
+        /// Server-assigned request id (the victim).
+        id: u64,
+        /// What forced the preemption.
+        reason: PreemptReason,
+    },
+    /// Admission found a radix-cached prompt prefix and shared its pages.
+    RadixHit {
+        /// Server-assigned request id.
+        id: u64,
+        /// Prompt tokens served from shared pages instead of recomputed.
+        cached_tokens: u32,
+    },
+    /// The AIMD prefill-budget controller resized the live chunk budget.
+    AutotuneResize {
+        /// Budget (tokens/step) before the resize.
+        old: u32,
+        /// Budget (tokens/step) after the resize.
+        new: u32,
+    },
+    /// A token could not be streamed this step (bounded per-request
+    /// buffer full); it is retried next step, the scheduler never blocks.
+    StreamStall {
+        /// Server-assigned request id.
+        id: u64,
+    },
+    /// A waiting request missed its admission deadline and was rejected.
+    Expire {
+        /// Server-assigned request id.
+        id: u64,
+    },
+    /// A request finished and its response was sent.
+    Finish {
+        /// Server-assigned request id.
+        id: u64,
+        /// Total generated tokens in the response.
+        generated: u32,
+    },
+    /// End-of-step marker carrying the per-phase time attribution of one
+    /// full scheduler step (µs, [`crate::coordinator::metrics::StepPhase`]
+    /// order: ingress, admission, reserve, prefill-attend, decode-attend,
+    /// logits, stream-egress).
+    StepEnd {
+        /// Per-phase elapsed µs in `StepPhase::ALL` order.
+        phases: [u32; 7],
+        /// Total step elapsed µs (phases plus scheduler glue, so the
+        /// phase sum is within one histogram bucket of this — gated in
+        /// `benches/bench_serve.rs`).
+        total_us: u32,
+    },
+}
+
+/// One recorded ring slot: the event plus its step index and clock stamp.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Scheduler step counter when the event was recorded.
+    pub step: u64,
+    /// Injected-clock microseconds when the event was recorded.
+    pub at_us: u64,
+    /// The event itself.
+    pub event: TraceEvent,
+}
+
+impl TraceRecord {
+    /// Render this record as one JSON line (no trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        let head = format!("{{\"step\":{},\"us\":{}", self.step, self.at_us);
+        let body = match self.event {
+            TraceEvent::Admit { id, prompt_tokens } => {
+                format!(",\"ev\":\"Admit\",\"id\":{id},\"prompt_tokens\":{prompt_tokens}")
+            }
+            TraceEvent::Readmit { id, replay_tokens } => {
+                format!(",\"ev\":\"Readmit\",\"id\":{id},\"replay_tokens\":{replay_tokens}")
+            }
+            TraceEvent::PrefillChunk { id, tokens, reoffered } => format!(
+                ",\"ev\":\"PrefillChunk\",\"id\":{id},\"tokens\":{tokens},\"reoffered\":{reoffered}"
+            ),
+            TraceEvent::Decode { id, token } => {
+                format!(",\"ev\":\"Decode\",\"id\":{id},\"token\":{token}")
+            }
+            TraceEvent::Preempt { id, reason } => {
+                format!(",\"ev\":\"Preempt\",\"id\":{id},\"reason\":\"{}\"", reason.as_str())
+            }
+            TraceEvent::RadixHit { id, cached_tokens } => {
+                format!(",\"ev\":\"RadixHit\",\"id\":{id},\"cached_tokens\":{cached_tokens}")
+            }
+            TraceEvent::AutotuneResize { old, new } => {
+                format!(",\"ev\":\"AutotuneResize\",\"old\":{old},\"new\":{new}")
+            }
+            TraceEvent::StreamStall { id } => format!(",\"ev\":\"StreamStall\",\"id\":{id}"),
+            TraceEvent::Expire { id } => format!(",\"ev\":\"Expire\",\"id\":{id}"),
+            TraceEvent::Finish { id, generated } => {
+                format!(",\"ev\":\"Finish\",\"id\":{id},\"generated\":{generated}")
+            }
+            TraceEvent::StepEnd { phases, total_us } => {
+                let mut p = String::new();
+                for (i, v) in phases.iter().enumerate() {
+                    if i > 0 {
+                        p.push(',');
+                    }
+                    p.push_str(&v.to_string());
+                }
+                format!(",\"ev\":\"StepEnd\",\"phases\":[{p}],\"total_us\":{total_us}")
+            }
+        };
+        format!("{head}{body}}}")
+    }
+}
+
+/// Event sink abstraction: the scheduler records through this, so a
+/// disabled trace costs one branch (`enabled() == false` — in practice
+/// the scheduler holds `Option<Arc<FlightRecorder>>` and a `None` is the
+/// zero-cost disabled form).
+pub trait TraceSink: Send + Sync {
+    /// Record one event stamped with the step index and clock time.
+    fn record(&self, step: u64, at_us: u64, event: TraceEvent);
+    /// Whether records are kept at all (lets callers skip event assembly).
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// A sink that drops everything — the explicit disabled form for tests
+/// and generic callers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn record(&self, _step: u64, _at_us: u64, _event: TraceEvent) {}
+
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// Ring state behind the recorder's mutex: preallocated slots, a write
+/// head, the live length and the overwrite count.
+struct Ring {
+    slots: Vec<TraceRecord>,
+    /// Next write index.
+    head: usize,
+    /// Live records (`<= slots.len()`).
+    len: usize,
+    /// Records overwritten after the ring filled.
+    dropped: u64,
+}
+
+/// The flight recorder: a fixed-capacity overwrite-oldest ring of
+/// [`TraceRecord`]s (see the module docs for semantics).
+///
+/// Sharing: the scheduler thread records, any thread may snapshot/dump —
+/// a single uncontended `Mutex` is cheaper here than per-slot atomics
+/// (one writer, rare readers), and `record` stays allocation-free
+/// (enforced by `cargo xtask lint` hot-path-alloc).
+pub struct FlightRecorder {
+    inner: Mutex<Ring>,
+}
+
+impl FlightRecorder {
+    /// A recorder with `capacity` preallocated slots (clamped to >= 1).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        let mut slots = Vec::with_capacity(cap);
+        slots.resize(cap, TraceRecord { step: 0, at_us: 0, event: TraceEvent::Expire { id: 0 } });
+        FlightRecorder { inner: Mutex::new(Ring { slots, head: 0, len: 0, dropped: 0 }) }
+    }
+
+    /// Ring capacity in records.
+    pub fn capacity(&self) -> usize {
+        self.lock().slots.len()
+    }
+
+    /// Live records currently held.
+    pub fn len(&self) -> usize {
+        self.lock().len
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Ring> {
+        // the ring holds plain data; a poisoned lock cannot leave it in a
+        // state worse than a torn-off trace, so recover the guard
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Record one event.  Allocation-free: one uncontended lock, one slot
+    /// overwrite (the oldest record when the ring is full).
+    pub fn record(&self, step: u64, at_us: u64, event: TraceEvent) {
+        let mut ring = self.lock();
+        let cap = ring.slots.len();
+        let head = ring.head;
+        ring.slots[head] = TraceRecord { step, at_us, event };
+        ring.head = (head + 1) % cap;
+        if ring.len < cap {
+            ring.len += 1;
+        } else {
+            ring.dropped += 1;
+        }
+    }
+
+    /// Snapshot the live records in chronological (oldest-first) order.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        let ring = self.lock();
+        let cap = ring.slots.len();
+        let start = (ring.head + cap - ring.len) % cap;
+        (0..ring.len).map(|k| ring.slots[(start + k) % cap]).collect()
+    }
+
+    /// Dump the live records as JSON-lines (chronological, one event per
+    /// line, trailing newline) — the offline-analysis format
+    /// `scripts/trace_summarize.py` consumes.
+    pub fn dump_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in self.records() {
+            out.push_str(&r.to_jsonl());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl TraceSink for FlightRecorder {
+    fn record(&self, step: u64, at_us: u64, event: TraceEvent) {
+        FlightRecorder::record(self, step, at_us, event);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let rec = FlightRecorder::new(4);
+        assert_eq!(rec.capacity(), 4);
+        assert!(rec.is_empty());
+        for i in 0..6u64 {
+            rec.record(i, i * 10, TraceEvent::Decode { id: i, token: i as i32 });
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 2);
+        let recs = rec.records();
+        let steps: Vec<u64> = recs.iter().map(|r| r.step).collect();
+        assert_eq!(steps, vec![2, 3, 4, 5], "oldest two overwritten, order chronological");
+        assert_eq!(recs[0].at_us, 20);
+    }
+
+    #[test]
+    fn capacity_is_clamped_to_one() {
+        let rec = FlightRecorder::new(0);
+        assert_eq!(rec.capacity(), 1);
+        rec.record(1, 1, TraceEvent::Expire { id: 7 });
+        rec.record(2, 2, TraceEvent::Expire { id: 8 });
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec.dropped(), 1);
+        assert_eq!(rec.records()[0].step, 2);
+    }
+
+    #[test]
+    fn jsonl_covers_every_event_shape() {
+        let rec = FlightRecorder::new(16);
+        let events = [
+            TraceEvent::Admit { id: 1, prompt_tokens: 40 },
+            TraceEvent::Readmit { id: 1, replay_tokens: 3 },
+            TraceEvent::PrefillChunk { id: 1, tokens: 32, reoffered: true },
+            TraceEvent::Decode { id: 1, token: 9 },
+            TraceEvent::Preempt { id: 1, reason: PreemptReason::Pages },
+            TraceEvent::RadixHit { id: 2, cached_tokens: 32 },
+            TraceEvent::AutotuneResize { old: 256, new: 128 },
+            TraceEvent::StreamStall { id: 3 },
+            TraceEvent::Expire { id: 4 },
+            TraceEvent::Finish { id: 1, generated: 12 },
+            TraceEvent::StepEnd { phases: [1, 2, 3, 4, 5, 6, 7], total_us: 30 },
+        ];
+        for (i, ev) in events.iter().enumerate() {
+            rec.record(i as u64, i as u64, *ev);
+        }
+        let dump = rec.dump_jsonl();
+        assert_eq!(dump.lines().count(), events.len());
+        for needle in [
+            "\"ev\":\"Admit\",\"id\":1,\"prompt_tokens\":40",
+            "\"ev\":\"Readmit\",\"id\":1,\"replay_tokens\":3",
+            "\"ev\":\"PrefillChunk\",\"id\":1,\"tokens\":32,\"reoffered\":true",
+            "\"ev\":\"Decode\",\"id\":1,\"token\":9",
+            "\"ev\":\"Preempt\",\"id\":1,\"reason\":\"pages\"",
+            "\"ev\":\"RadixHit\",\"id\":2,\"cached_tokens\":32",
+            "\"ev\":\"AutotuneResize\",\"old\":256,\"new\":128",
+            "\"ev\":\"StreamStall\",\"id\":3",
+            "\"ev\":\"Expire\",\"id\":4",
+            "\"ev\":\"Finish\",\"id\":1,\"generated\":12",
+            "\"ev\":\"StepEnd\",\"phases\":[1,2,3,4,5,6,7],\"total_us\":30",
+        ] {
+            assert!(dump.contains(needle), "missing {needle} in {dump}");
+        }
+        // every line is minimally well-formed JSON (balanced braces, no
+        // trailing comma) — the real parser check lives in
+        // scripts/trace_summarize.py's CI run
+        for line in dump.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+            assert!(!line.contains(",}"), "{line}");
+        }
+    }
+
+    #[test]
+    fn null_sink_reports_disabled() {
+        let sink = NullSink;
+        assert!(!sink.enabled());
+        sink.record(1, 2, TraceEvent::Expire { id: 0 });
+        let rec = FlightRecorder::new(4);
+        assert!(TraceSink::enabled(&rec));
+        TraceSink::record(&rec, 1, 2, TraceEvent::Expire { id: 0 });
+        assert_eq!(rec.len(), 1);
+    }
+}

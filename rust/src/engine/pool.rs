@@ -19,12 +19,40 @@
 //! that is locked exactly once, by the worker that claimed its index —
 //! uncontended by construction.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Default worker count: the machine's available parallelism.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Worker indices with dedicated busy/steal counters; higher indices fold
+/// into the last slot (machines that wide are out of scope here).
+pub const TRACKED_WORKERS: usize = 64;
+
+// process-global per-worker drain counters: pools are ephemeral
+// (one scoped drain per call), so cumulative statics are the only
+// aggregation point that survives across drains.  Relaxed counters —
+// observability, not synchronization.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_COUNTER: AtomicU64 = AtomicU64::new(0);
+static WORKER_BUSY: [AtomicU64; TRACKED_WORKERS] = [ZERO_COUNTER; TRACKED_WORKERS];
+static WORKER_STEALS: [AtomicU64; TRACKED_WORKERS] = [ZERO_COUNTER; TRACKED_WORKERS];
+
+/// Cumulative `(tasks_run, tasks_stolen)` per worker index, across every
+/// drain since process start.  A task counts as **stolen** when the
+/// claiming worker is not the task's home worker under an even block
+/// split (`home = index * workers / items`) — i.e. the cursor let an idle
+/// worker pull load a uniform split would have given to someone else.
+/// Entries beyond the widest drain so far stay `(0, 0)`.  Monotone:
+/// consumers (metrics exposition) diff snapshots, they never reset.
+pub fn worker_stats() -> Vec<(u64, u64)> {
+    WORKER_BUSY
+        .iter()
+        .zip(WORKER_STEALS.iter())
+        .map(|(b, s)| (b.load(Ordering::Relaxed), s.load(Ordering::Relaxed)))
+        .collect()
 }
 
 /// Run `f` over every item using up to `threads` scoped workers.
@@ -47,10 +75,13 @@ pub fn run_with<T: Send, S>(
 ) {
     let workers = threads.max(1).min(items.len().max(1));
     if workers <= 1 {
+        let n = items.len() as u64;
         let mut state = init();
         for item in items {
             f(&mut state, item);
         }
+        // the inline path is all "worker 0", nothing can be stolen
+        WORKER_BUSY[0].fetch_add(n, Ordering::Relaxed);
         return;
     }
     // one setup allocation per drain, before any worker claims a task —
@@ -60,8 +91,11 @@ pub fn run_with<T: Send, S>(
     let cursor = AtomicUsize::new(0);
     let (slots, cursor, init, f) = (&slots, &cursor, &init, &f);
     std::thread::scope(|s| {
-        for _ in 0..workers {
+        for w in 0..workers {
             s.spawn(move || {
+                let slot = w.min(TRACKED_WORKERS - 1);
+                let mut busy = 0u64;
+                let mut steals = 0u64;
                 let mut state = init();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -77,9 +111,20 @@ pub fn run_with<T: Send, S>(
                         .unwrap_or_else(std::sync::PoisonError::into_inner)
                         .take();
                     if let Some(item) = item {
+                        busy += 1;
+                        // "stolen" relative to an even block split of the
+                        // task list — the load-balance signal metrics
+                        // exposition surfaces per worker
+                        if i * workers / slots.len() != w {
+                            steals += 1;
+                        }
                         f(&mut state, item);
                     }
                 }
+                // fold into the process-wide counters once per drain, not
+                // per task — two relaxed adds per worker per drain
+                WORKER_BUSY[slot].fetch_add(busy, Ordering::Relaxed);
+                WORKER_STEALS[slot].fetch_add(steals, Ordering::Relaxed);
             });
         }
     });
@@ -174,5 +219,25 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_stats_accumulate_busy_counts_across_drains() {
+        // counters are process-global and other tests drain pools in
+        // parallel, so assert on deltas and with >= not ==
+        let before: u64 = worker_stats().iter().map(|(b, _)| b).sum();
+        run(1, (0..17usize).collect(), |_| {});
+        run(4, (0..23usize).collect(), |_| {});
+        let after: u64 = worker_stats().iter().map(|(b, _)| b).sum();
+        assert!(
+            after - before >= 40,
+            "expected at least 40 new busy counts, got {}",
+            after - before
+        );
+        let stats = worker_stats();
+        assert_eq!(stats.len(), TRACKED_WORKERS);
+        for (busy, steals) in &stats {
+            assert!(steals <= busy, "a worker cannot steal more tasks than it ran");
+        }
     }
 }

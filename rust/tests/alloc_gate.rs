@@ -26,6 +26,13 @@
 //!    net-zero; a third run has the *exact* same allocation profile as
 //!    the second (replay determinism).  Per-chunk counts are not asserted
 //!    equal — later chunks legitimately touch more cached blocks.
+//! 4. **Trace level — recording is literally zero.**  The flight
+//!    recorder's ring is preallocated at construction; recording any
+//!    event — including past the wrap point, where the oldest slot is
+//!    overwritten — performs no allocator calls at all.  (The *disabled*
+//!    path is cheaper still: the scheduler holds `None` and never
+//!    assembles an event — claims 2 and 3 above run with tracing off and
+//!    gate that default.)
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -323,4 +330,38 @@ fn chunked_prefill_steady_state_reuses_every_buffer() {
     );
     assert_eq!(pool.pages_in_use(), 0);
     assert_eq!(pool.buffers_created(), buffers);
+}
+
+// ---------------------------------------------------------------------------
+// 4. trace level: recording an event is literally allocation-free
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flight_recorder_records_without_allocating() {
+    use mra::coordinator::{FlightRecorder, PreemptReason, TraceEvent};
+
+    // construction allocates the ring once, up front
+    let rec = FlightRecorder::new(256);
+    let base = snap();
+    // 4x capacity: exercises both the fill and the wrap/overwrite path
+    for i in 0..1024u64 {
+        let ev = match i % 7 {
+            0 => TraceEvent::Admit { id: i, prompt_tokens: 17 },
+            1 => TraceEvent::PrefillChunk { id: i, tokens: 32, reoffered: i % 2 == 0 },
+            2 => TraceEvent::Decode { id: i, token: (i % 64) as i32 },
+            3 => TraceEvent::Preempt { id: i, reason: PreemptReason::Pages },
+            4 => TraceEvent::Readmit { id: i, replay_tokens: 9 },
+            5 => TraceEvent::StepEnd { phases: [1, 2, 3, 4, 5, 6, 7], total_us: 28 },
+            _ => TraceEvent::Finish { id: i, generated: 24 },
+        };
+        rec.record(i, i * 3, ev);
+    }
+    let d = snap().since(base);
+    assert_eq!(
+        d,
+        Snap::default(),
+        "FlightRecorder::record touched the allocator: {d:?}"
+    );
+    assert_eq!(rec.len(), 256, "ring holds exactly its capacity");
+    assert_eq!(rec.dropped(), 1024 - 256, "overwritten records are tallied");
 }

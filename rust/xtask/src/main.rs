@@ -62,6 +62,9 @@ const HOT_PATH_MANIFEST: &[(&str, &[&str])] = &[
         "src/coordinator/native.rs",
         &["fused_decode_task", "fused_prefill_project_append", "fused_prefill_attend"],
     ),
+    // every `fn record` body (inherent + TraceSink impls): the flight
+    // recorder's per-event cost claim is "one lock, one slot overwrite"
+    ("src/coordinator/trace.rs", &["record"]),
 ];
 
 /// Coordinator request paths: a panic here drops client responders.
@@ -632,6 +635,27 @@ fn fused_prefill_project_append() -> bool { true }
         assert_eq!(rules_of(&v), vec![("hot-path-alloc", 1), ("hot-path-alloc", 2)], "{v:?}");
         assert!(v[0].msg.contains("fused_prefill_attend"), "{}", v[0].msg);
         assert!(v[1].msg.contains("fused_decode_task"), "{}", v[1].msg);
+    }
+
+    #[test]
+    fn trace_record_bodies_are_manifest_covered() {
+        // every `fn record` body in trace.rs is a registered hot path —
+        // recording must stay allocation-free (the ring is preallocated
+        // at construction); a seeded allocation is flagged on its line
+        let fixture = "\
+impl FlightRecorder {
+    pub fn record(&self, step: u64, at_us: u64, event: TraceEvent) {
+        let label = format!(\"{step}\");
+    }
+}
+";
+        let v = check_source("src/coordinator/trace.rs", fixture);
+        assert_eq!(rules_of(&v), vec![("hot-path-alloc", 3)], "{v:?}");
+        assert!(v[0].msg.contains("record"), "{}", v[0].msg);
+        // a trace.rs without any `record` fn fails the manifest
+        let v = check_source("src/coordinator/trace.rs", "fn dump_jsonl() {}\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("`record` not found"), "{}", v[0].msg);
     }
 
     #[test]

@@ -12,9 +12,11 @@ Both files use the repo's BenchJson schema:
 
 Rows are keyed by their identity fields (everything that is not a known
 metric — e.g. impl/kernel, n, b, threads).  For every key present in both
-files, each tracked higher-is-better metric present in *both* rows is
-compared; the gate fails (exit 1) when
-    current < baseline * (1 - max_regression).
+files, each tracked metric present in *both* rows is compared; the gate
+fails (exit 1) when
+    current < baseline * (1 - max_regression)   # higher-is-better metrics
+    current > baseline * (1 + max_regression)   # lower-is-better metrics
+                                                # (overheads, TRACKED_LOWER)
 
 The committed baseline may carry only machine-portable metrics (e.g.
 `speedup_vs_scalar`) — absolute tokens/sec are only compared when the
@@ -44,8 +46,11 @@ TRACKED = (
     "fused_decode_p95_gain_vs_phased",
     "autotune_converged",
 )
+# lower-is-better metrics (overheads): the gate fails when current
+# exceeds baseline * (1 + max_regression)
+TRACKED_LOWER = ("trace_overhead_pct",)
 # fields that are metrics (never part of a row's identity key)
-METRIC_FIELDS = set(TRACKED) | {
+METRIC_FIELDS = set(TRACKED) | set(TRACKED_LOWER) | {
     "mean_ms",
     "p50_ms",
     "p95_ms",
@@ -85,15 +90,23 @@ def list_metrics(baseline):
     print("tracked (regression-gated, higher is better):")
     for f in TRACKED:
         print(f"  {f}")
+    print("tracked (regression-gated, lower is better):")
+    for f in TRACKED_LOWER:
+        print(f"  {f}")
     print("informational (recognized as metrics, never gated):")
-    for f in sorted(METRIC_FIELDS - set(TRACKED)):
+    for f in sorted(METRIC_FIELDS - set(TRACKED) - set(TRACKED_LOWER)):
         print(f"  {f}")
     if baseline is not None:
         _, rows = load_rows(baseline)
         present = sorted({f for row in rows.values() for f in row if f in METRIC_FIELDS})
         print(f"metrics present in {baseline}:")
         for f in present:
-            gated = "tracked" if f in TRACKED else "informational"
+            if f in TRACKED:
+                gated = "tracked, higher is better"
+            elif f in TRACKED_LOWER:
+                gated = "tracked, lower is better"
+            else:
+                gated = "informational"
             print(f"  {f} ({gated})")
 
 
@@ -117,7 +130,7 @@ def main():
     )
     ap.add_argument(
         "--fields",
-        default=",".join(TRACKED),
+        default=",".join(TRACKED + TRACKED_LOWER),
         help="comma-separated metric fields to compare (default: %(default)s)",
     )
     ap.add_argument(
@@ -174,15 +187,26 @@ def main():
             except (TypeError, ValueError):
                 sys.exit(f"bench_diff: non-numeric {f} in row {fmt_key(key)}")
             compared += 1
-            floor = b * (1.0 - args.max_regression)
-            status = "ok"
-            if b > 0 and c < floor:
-                status = "REGRESSION"
-                regressions.append((key, f, b, c))
-            print(
-                f"  {fmt_key(key)}  {f}: baseline {b:.3f} -> current {c:.3f} "
-                f"(floor {floor:.3f}) {status}"
-            )
+            if f in TRACKED_LOWER:
+                ceiling = b * (1.0 + args.max_regression)
+                status = "ok"
+                if b > 0 and c > ceiling:
+                    status = "REGRESSION"
+                    regressions.append((key, f, b, c))
+                print(
+                    f"  {fmt_key(key)}  {f}: baseline {b:.3f} -> current {c:.3f} "
+                    f"(ceiling {ceiling:.3f}) {status}"
+                )
+            else:
+                floor = b * (1.0 - args.max_regression)
+                status = "ok"
+                if b > 0 and c < floor:
+                    status = "REGRESSION"
+                    regressions.append((key, f, b, c))
+                print(
+                    f"  {fmt_key(key)}  {f}: baseline {b:.3f} -> current {c:.3f} "
+                    f"(floor {floor:.3f}) {status}"
+                )
 
     if compared == 0:
         # distinguish "the requested metric is not in the baseline at all"

@@ -1,0 +1,208 @@
+#!/usr/bin/env python3
+"""Summarize a flight-recorder JSON-lines dump (DESIGN.md §14).
+
+Usage:
+    trace_summarize.py TRACE.jsonl [--request ID] [--max-requests N]
+
+The input is what `FlightRecorder::dump_jsonl` / `Server::dump_trace`
+emit (and what `cargo bench --bench bench_serve` writes to
+`target/bench_serve_trace.jsonl`): one event per line, chronological,
+each carrying `step`, `us` (injected-clock microseconds) and `ev`.
+
+Output, stdlib-only:
+
+* header — event counts per kind, step span, and the autotune budget
+  trajectory when the trace saw resizes;
+* per-phase step timing — each `StepEnd` carries the seven phase spans
+  (ingress, admission, reserve, prefill-attend, decode-attend, logits,
+  stream-egress); the table totals them, shows each phase's share of the
+  attributed time, and reports what fraction of the measured step time
+  the phases account for (the rest is scheduler glue);
+* per-request timelines — admission, radix hits, prefill chunks,
+  preemptions + readmissions, decode/stall counts, finish latency; one
+  line per request, or the full event-by-event timeline with
+  `--request ID`.
+
+Every line must parse and carry the schema fields — a malformed dump
+exits nonzero, which is exactly what CI's bench-smoke run of this script
+is for (the Rust side only asserts the lines it greps for).
+
+Exit codes: 0 ok, nonzero unreadable/malformed trace.
+"""
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+# StepPhase::ALL order (rust/src/coordinator/metrics.rs)
+PHASES = (
+    "ingress",
+    "admission",
+    "reserve",
+    "prefill_attend",
+    "decode_attend",
+    "logits",
+    "stream_egress",
+)
+
+
+def load(path):
+    events = []
+    try:
+        with open(path, encoding="utf-8") as f:
+            for ln, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    ev = json.loads(line)
+                except json.JSONDecodeError as e:
+                    sys.exit(f"trace_summarize: {path}:{ln}: invalid JSON: {e}")
+                for req in ("step", "us", "ev"):
+                    if req not in ev:
+                        sys.exit(f"trace_summarize: {path}:{ln}: missing {req!r} field")
+                events.append(ev)
+    except OSError as e:
+        sys.exit(f"trace_summarize: cannot read {path}: {e}")
+    if not events:
+        sys.exit(f"trace_summarize: {path} holds no events")
+    return events
+
+
+def phase_table(events):
+    ends = [e for e in events if e["ev"] == "StepEnd"]
+    if not ends:
+        print("no StepEnd events (per-phase timing unavailable)")
+        return
+    sums = [0] * len(PHASES)
+    total = 0
+    for e in ends:
+        ph = e.get("phases")
+        if not isinstance(ph, list) or len(ph) != len(PHASES):
+            sys.exit("trace_summarize: StepEnd with malformed phases array")
+        for i, v in enumerate(ph):
+            sums[i] += v
+        total += e.get("total_us", 0)
+    attributed = sum(sums)
+    print(
+        f"per-phase step timing over {len(ends)} steps ({total} us measured, "
+        f"{attributed} us attributed = {100.0 * attributed / max(total, 1):.1f}%):"
+    )
+    width = max(len(p) for p in PHASES)
+    for name, s in zip(PHASES, sums):
+        share = 100.0 * s / max(attributed, 1)
+        mean = s / len(ends)
+        print(f"  {name:<{width}}  {s:>10} us  {share:5.1f}%  mean {mean:8.1f} us/step")
+
+
+def request_events(events):
+    """Events grouped per request id (StepEnd and AutotuneResize carry
+    no id and stay global)."""
+    by_id = defaultdict(list)
+    for e in events:
+        if "id" in e:
+            by_id[e["id"]].append(e)
+    return by_id
+
+
+def one_line(rid, evs):
+    kinds = [e["ev"] for e in evs]
+    admit = next((e for e in evs if e["ev"] == "Admit"), None)
+    finish = next((e for e in evs if e["ev"] == "Finish"), None)
+    chunks = [e for e in evs if e["ev"] == "PrefillChunk"]
+    preempts = [e for e in evs if e["ev"] == "Preempt"]
+    decodes = kinds.count("Decode")
+    readmits = kinds.count("Readmit")
+    stalls = kinds.count("StreamStall")
+    hits = sum(e.get("cached_tokens", 0) for e in evs if e["ev"] == "RadixHit")
+    parts = []
+    if admit:
+        parts.append(f"admit@{admit['step']} ({admit.get('prompt_tokens', '?')} prompt tokens)")
+    else:
+        parts.append("admit outside window")  # ring overwrote the oldest past
+    if hits:
+        parts.append(f"radix hit {hits} tokens")
+    if chunks:
+        fed = sum(c.get("tokens", 0) for c in chunks)
+        parts.append(f"{len(chunks)} prefill chunks ({fed} tokens)")
+    if preempts:
+        reasons = ",".join(sorted({p.get("reason", "?") for p in preempts}))
+        parts.append(f"{len(preempts)} preempt ({reasons}), {readmits} readmit")
+    if decodes:
+        parts.append(f"{decodes} decodes")
+    if stalls:
+        parts.append(f"{stalls} stream stalls")
+    if "Expire" in kinds:
+        parts.append("EXPIRED")
+    if finish:
+        tail = f"finish@{finish['step']} ({finish.get('generated', '?')} tokens"
+        if admit:
+            tail += f", {finish['us'] - admit['us']} us after admit"
+        parts.append(tail + ")")
+    elif "Expire" not in kinds:
+        parts.append("no finish in window")
+    print(f"  request {rid}: " + "; ".join(parts))
+
+
+def full_timeline(rid, evs):
+    print(f"timeline for request {rid} ({len(evs)} events):")
+    for e in evs:
+        extras = {k: v for k, v in e.items() if k not in ("step", "us", "ev", "id")}
+        tail = ("  " + " ".join(f"{k}={v}" for k, v in extras.items())) if extras else ""
+        print(f"  step {e['step']:>6}  {e['us']:>10} us  {e['ev']}{tail}")
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("trace", help="JSON-lines dump (FlightRecorder::dump_jsonl)")
+    ap.add_argument(
+        "--request",
+        type=int,
+        default=None,
+        help="print the full event-by-event timeline of one request id",
+    )
+    ap.add_argument(
+        "--max-requests",
+        type=int,
+        default=32,
+        help="request summary lines to print (default %(default)s)",
+    )
+    args = ap.parse_args()
+
+    events = load(args.trace)
+    steps = [e["step"] for e in events]
+    kinds = defaultdict(int)
+    for e in events:
+        kinds[e["ev"]] += 1
+    print(f"{args.trace}: {len(events)} events over steps {min(steps)}..{max(steps)}")
+    print("  " + "  ".join(f"{k}={v}" for k, v in sorted(kinds.items())))
+    resizes = [e for e in events if e["ev"] == "AutotuneResize"]
+    if resizes:
+        traj = [str(resizes[0].get("old", "?"))] + [str(r.get("new", "?")) for r in resizes]
+        print(f"  autotune budget: {' -> '.join(traj)} tokens/step")
+    print()
+    phase_table(events)
+
+    by_id = request_events(events)
+    if args.request is not None:
+        evs = by_id.get(args.request)
+        if evs is None:
+            known = ", ".join(str(r) for r in sorted(by_id)[:16])
+            sys.exit(f"trace_summarize: request {args.request} not in trace (ids: {known})")
+        print()
+        full_timeline(args.request, evs)
+        return
+    ordered = sorted(by_id.items(), key=lambda kv: (kv[1][0]["step"], kv[0]))
+    shown = ordered[: args.max_requests]
+    print(f"\nrequests ({len(ordered)} in trace, showing {len(shown)}):")
+    for rid, evs in shown:
+        one_line(rid, evs)
+    if len(ordered) > len(shown):
+        print(f"  ... {len(ordered) - len(shown)} more (raise --max-requests)")
+
+
+if __name__ == "__main__":
+    main()
