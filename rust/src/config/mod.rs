@@ -207,6 +207,19 @@ pub struct SessionConfig {
     /// Default token-selection policy for requests that do not carry
     /// their own [`SamplingParams`] (greedy unless overridden).
     pub sampling: SamplingParams,
+    /// KV-page storage format the scheduler *demotes cold pages to*
+    /// under memory pressure: `"f32"` (the default — pages are never
+    /// compressed and every serving path stays the bitwise reference),
+    /// `"bf16"` or `"int8"`.  Pages are always *created* f32; this knob
+    /// only selects what pressure-driven demotion compresses them to
+    /// (DESIGN.md §15).  Compressed attention is approximate within the
+    /// format's documented error budget.
+    pub page_format: String,
+    /// Reclaim pages by demoting cold (non-tail, unshared) pages of
+    /// decode-phase sessions to `page_format` *before* preempting the
+    /// youngest session — preemption (full recompute on readmit) becomes
+    /// the last resort.  No effect while `page_format = "f32"`.
+    pub demote_before_preempt: bool,
     /// Flight-recorder tracing knobs (`[trace]` section).
     pub trace: TraceConfig,
 }
@@ -225,6 +238,8 @@ impl Default for SessionConfig {
             stream_buffer: 32,
             aging_steps: 32,
             sampling: SamplingParams::default(),
+            page_format: "f32".to_string(),
+            demote_before_preempt: true,
             trace: TraceConfig::default(),
         }
     }
@@ -262,8 +277,29 @@ impl TraceConfig {
 }
 
 impl SessionConfig {
+    /// The compressed format pressure-driven demotion targets, parsed
+    /// from `page_format` — `None` when the knob is `"f32"` (nothing to
+    /// compress to) or `demote_before_preempt` is off.  Callers that
+    /// reach this through [`SessionConfig::from_config`] always hold a
+    /// validated format name; a hand-built config with an unknown name
+    /// degrades to `None` (no demotion) rather than panicking.
+    pub fn demote_target(&self) -> Option<crate::engine::PageFormat> {
+        use crate::engine::PageFormat;
+        if !self.demote_before_preempt {
+            return None;
+        }
+        PageFormat::parse(&self.page_format).filter(|f| *f != PageFormat::F32)
+    }
+
     pub fn from_config(c: &Config) -> Result<Self> {
         let d = SessionConfig::default();
+        let page_format = c.str_or("sessions.page_format", &d.page_format);
+        if crate::engine::PageFormat::parse(&page_format).is_none() {
+            bail!(
+                "sessions.page_format: expected one of \"f32\", \"bf16\", \"int8\", \
+                 got {page_format:?}"
+            );
+        }
         Ok(SessionConfig {
             total_pages: c.usize_or("sessions.total_pages", d.total_pages)?,
             free_watermark: c.usize_or("sessions.free_watermark", d.free_watermark)?,
@@ -285,6 +321,9 @@ impl SessionConfig {
                 top_p: c.f64_or("sessions.top_p", d.sampling.top_p as f64)? as f32,
                 seed: c.usize_or("sessions.seed", d.sampling.seed as usize)? as u64,
             },
+            page_format,
+            demote_before_preempt: c
+                .bool_or("sessions.demote_before_preempt", d.demote_before_preempt)?,
             trace: TraceConfig::from_config(c)?,
         })
     }
@@ -443,6 +482,39 @@ lr = 0.001
         // a zero-capacity ring clamps to one slot instead of panicking
         let c = Config::parse("[trace]\ncapacity = 0\n").unwrap();
         assert_eq!(TraceConfig::from_config(&c).unwrap().capacity, 1);
+    }
+
+    #[test]
+    fn page_format_knobs_default_to_uncompressed_and_parse() {
+        use crate::engine::PageFormat;
+        let d = SessionConfig::default();
+        assert_eq!(d.page_format, "f32", "serving must default to the bitwise f32 path");
+        assert!(d.demote_before_preempt, "demotion-before-preemption is the default policy");
+        assert_eq!(d.demote_target(), None, "f32 gives demotion nothing to compress to");
+        let c = Config::parse("[sessions]\npage_format = \"bf16\"\n").unwrap();
+        let s = SessionConfig::from_config(&c).unwrap();
+        assert_eq!(s.page_format, "bf16");
+        assert_eq!(s.demote_target(), Some(PageFormat::Bf16));
+        let c = Config::parse(
+            "[sessions]\npage_format = \"int8\"\ndemote_before_preempt = false\n",
+        )
+        .unwrap();
+        let s = SessionConfig::from_config(&c).unwrap();
+        assert_eq!(s.page_format, "int8");
+        assert!(!s.demote_before_preempt);
+        assert_eq!(s.demote_target(), None, "disabled demotion masks the format");
+        // unquoted values parse identically (the TOML subset strips quotes)
+        let c = Config::parse("[sessions]\npage_format = bf16\n").unwrap();
+        assert_eq!(SessionConfig::from_config(&c).unwrap().page_format, "bf16");
+    }
+
+    #[test]
+    fn unknown_page_format_is_rejected_with_the_valid_set() {
+        let c = Config::parse("[sessions]\npage_format = \"fp8\"\n").unwrap();
+        let err = format!("{:#}", SessionConfig::from_config(&c).unwrap_err());
+        assert!(err.contains("page_format"), "{err}");
+        assert!(err.contains("bf16") && err.contains("int8"), "{err}");
+        assert!(err.contains("fp8"), "the bad value must be echoed back: {err}");
     }
 
     #[test]

@@ -169,6 +169,12 @@ impl Metrics {
             "Admissions whose prefix hit matched blocks still mid-prefill.",
             &self.midprefill_prefix_hits,
         );
+        counter(
+            &mut out,
+            "mra_demotions_total",
+            "KV pages demoted to the compressed format under memory pressure.",
+            &self.demotions,
+        );
         // --- session-serving gauges ---
         gauge(&mut out, "mra_pool_pages", "Page-pool capacity.", &self.pool_pages);
         gauge(&mut out, "mra_free_pages", "Free pages at the last step.", &self.free_pages);
@@ -207,6 +213,24 @@ impl Metrics {
             "mra_autotuned_chunk_tokens",
             "Live prefill token budget chosen by the AIMD controller.",
             &self.autotuned_chunk_tokens,
+        );
+        gauge(
+            &mut out,
+            "mra_compressed_pages",
+            "Live KV pages currently held in a compressed format.",
+            &self.compressed_pages,
+        );
+        gauge(
+            &mut out,
+            "mra_pool_bytes_in_use",
+            "Bytes of KV pool backing live pages, all formats.",
+            &self.pool_bytes_in_use,
+        );
+        gauge(
+            &mut out,
+            "mra_peak_decoding_sessions",
+            "High-water mark of sessions decoding concurrently.",
+            &self.peak_decoding_sessions,
         );
         // --- latency histograms ---
         histogram(
@@ -353,6 +377,10 @@ mod tests {
         m.inc_requests();
         m.sessions.fetch_add(3, Ordering::Relaxed);
         m.pool_pages.store(256, Ordering::Relaxed);
+        m.demotions.fetch_add(6, Ordering::Relaxed);
+        m.compressed_pages.store(4, Ordering::Relaxed);
+        m.pool_bytes_in_use.store(81920, Ordering::Relaxed);
+        m.peak_decoding_sessions.fetch_max(3, Ordering::Relaxed);
         m.request_latency.record(Duration::from_micros(900));
         let text = m.render_prometheus();
         assert!(text.contains("# TYPE mra_requests_total counter"), "{text}");
@@ -360,6 +388,11 @@ mod tests {
         assert!(text.contains("mra_sessions_total 3"), "{text}");
         assert!(text.contains("# TYPE mra_pool_pages gauge"), "{text}");
         assert!(text.contains("mra_pool_pages 256"), "{text}");
+        assert!(text.contains("# TYPE mra_demotions_total counter"), "{text}");
+        assert!(text.contains("mra_demotions_total 6"), "{text}");
+        assert!(text.contains("mra_compressed_pages 4"), "{text}");
+        assert!(text.contains("mra_pool_bytes_in_use 81920"), "{text}");
+        assert!(text.contains("mra_peak_decoding_sessions 3"), "{text}");
         // 900us -> bucket [512, 1024): cumulative le="1024" and +Inf both 1
         assert!(text.contains("mra_request_latency_us_bucket{le=\"1024\"} 1"), "{text}");
         assert!(text.contains("mra_request_latency_us_bucket{le=\"+Inf\"} 1"), "{text}");

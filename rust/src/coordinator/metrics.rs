@@ -331,6 +331,10 @@ pub struct Metrics {
     /// would-be duplicate prefill into page sharing before the first
     /// prefill even finishes.
     pub midprefill_prefix_hits: AtomicU64,
+    /// KV pages demoted to the configured compressed format under memory
+    /// pressure (each page counted once per demotion) — the reclaim step
+    /// tried after cache eviction and before preemption.
+    pub demotions: AtomicU64,
     // --- session-serving gauges ---
     /// Page-pool capacity (constant once serving starts).
     pub pool_pages: AtomicU64,
@@ -352,6 +356,17 @@ pub struct Metrics {
     /// Live prefill token budget chosen by the AIMD controller at the
     /// last step (equals `prefill_chunk_tokens` when autotune is off).
     pub autotuned_chunk_tokens: AtomicU64,
+    /// Live pages held in a compressed (bf16/int8) format at the last
+    /// step — 0 whenever `sessions.page_format = "f32"`.
+    pub compressed_pages: AtomicU64,
+    /// Resident KV bytes across every live page at the last step; with
+    /// compressed pages this runs below `pool_pages * page_bytes` — the
+    /// headroom demotion bought.
+    pub pool_bytes_in_use: AtomicU64,
+    /// High-water mark of sessions simultaneously in the decode phase
+    /// (prefill complete) — the resident-sessions capacity figure the
+    /// compressed-KV bench compares across page formats.
+    pub peak_decoding_sessions: AtomicU64,
     // --- per-phase step timing (one histogram per StepPhase) ---
     /// Per-step µs draining the ingress queue ([`StepPhase::Ingress`]).
     pub phase_ingress: Histogram,
@@ -464,7 +479,7 @@ impl Metrics {
         );
         if self.sessions.load(Ordering::Relaxed) > 0 {
             s.push_str(&format!(
-                " sessions={} preemptions={} prefix_hit_rate={:.2} prefix_hit_tokens={} gen_tokens={} steps={} prefill_chunks={} prefill_tokens={} streamed={} stream_stalls={} expired={} pages={}/{} cache_pages={} running={} waiting={} prefilling={} prefill_backlog={} chunk_budget={} reoffers={} midprefill_hits={} decode_step_p95={:.2}ms",
+                " sessions={} preemptions={} prefix_hit_rate={:.2} prefix_hit_tokens={} gen_tokens={} steps={} prefill_chunks={} prefill_tokens={} streamed={} stream_stalls={} expired={} pages={}/{} cache_pages={} running={} waiting={} prefilling={} prefill_backlog={} chunk_budget={} reoffers={} midprefill_hits={} demotions={} compressed_pages={} kv_bytes={} peak_decoding={} decode_step_p95={:.2}ms",
                 self.sessions.load(Ordering::Relaxed),
                 self.preemptions.load(Ordering::Relaxed),
                 self.prefix_hit_rate(),
@@ -486,6 +501,10 @@ impl Metrics {
                 self.autotuned_chunk_tokens.load(Ordering::Relaxed),
                 self.budget_reoffers.load(Ordering::Relaxed),
                 self.midprefill_prefix_hits.load(Ordering::Relaxed),
+                self.demotions.load(Ordering::Relaxed),
+                self.compressed_pages.load(Ordering::Relaxed),
+                self.pool_bytes_in_use.load(Ordering::Relaxed),
+                self.peak_decoding_sessions.load(Ordering::Relaxed),
                 self.decode_step_latency.percentile_us(0.95) as f64 / 1e3,
             ));
         }
@@ -609,6 +628,22 @@ mod tests {
         // 900us lands in the 512..1024 bucket; a lone sample interpolates
         // to the bucket midpoint, 768us
         assert!(s.contains("decode_step_p95=0.77ms"), "{s}");
+    }
+
+    #[test]
+    fn summary_surfaces_compressed_kv_counters() {
+        let m = Metrics::new();
+        m.sessions.fetch_add(1, Ordering::Relaxed);
+        m.demotions.fetch_add(6, Ordering::Relaxed);
+        m.compressed_pages.store(4, Ordering::Relaxed);
+        m.pool_bytes_in_use.store(81_920, Ordering::Relaxed);
+        m.peak_decoding_sessions.fetch_max(3, Ordering::Relaxed);
+        m.peak_decoding_sessions.fetch_max(2, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("demotions=6"), "{s}");
+        assert!(s.contains("compressed_pages=4"), "{s}");
+        assert!(s.contains("kv_bytes=81920"), "{s}");
+        assert!(s.contains("peak_decoding=3"), "peak is a high-water mark: {s}");
     }
 
     #[test]

@@ -27,8 +27,8 @@ use crate::config::SamplingParams;
 use crate::coordinator::autotune::{FrozenClock, StepClock};
 use crate::data::corpus::MlmBatch;
 use crate::engine::{
-    kernel_by_name, pool, BatchedTensor, DecodeScratch, DecodeState, DrawState, Engine, PagePool,
-    PoolExhausted, RadixCache,
+    kernel_by_name, pool, BatchedTensor, DecodeScratch, DecodeState, DrawState, Engine,
+    PageFormat, PagePool, PoolExhausted, RadixCache,
 };
 use crate::mra::Variant;
 use crate::tensor::{kernel, mat::dot, ops, Mat, Rng};
@@ -599,6 +599,35 @@ impl LmSession {
         self.states.iter().map(|st| st.pages_needed_for_append(rows)).sum()
     }
 
+    /// Demote up to `limit` cold pages across every `(layer, head)` stream
+    /// to `fmt` ([`DecodeState::demote_cold`] per stream, oldest pages
+    /// first), returning how many pages changed format — the scheduler's
+    /// pressure-relief step before preempting a session.  Hot tail pages
+    /// and shared (radix-cached / forked) pages are skipped; `fmt == F32`
+    /// is a no-op.
+    pub fn demote_cold(&mut self, fmt: PageFormat, limit: usize) -> usize {
+        let mut demoted = 0usize;
+        for st in self.states.iter_mut() {
+            if demoted >= limit {
+                break;
+            }
+            demoted += st.demote_cold(fmt, limit - demoted);
+        }
+        demoted
+    }
+
+    /// Resident bytes across every stream's pages (format-weighted;
+    /// shared pages counted in each holder, unlike the pool's own
+    /// physical [`PagePool::bytes_in_use`]).
+    pub fn bytes_resident(&self) -> usize {
+        self.states.iter().map(|st| st.bytes_resident()).sum()
+    }
+
+    /// Pages of this session currently in a compressed format.
+    pub fn compressed_pages(&self) -> usize {
+        self.states.iter().map(|st| st.compressed_pages()).sum()
+    }
+
     /// Fork the session: every page of every stream is shared physically
     /// with the parent (`Arc` clones, zero pool pages consumed); a shared
     /// partial tail page copies on the first divergent write.  Decoding a
@@ -804,13 +833,32 @@ impl NativeLm {
             return;
         }
         debug_assert!(session.len >= nb * block, "prompt blocks not prefilled yet");
-        let mut pages = Vec::with_capacity(nb * self.streams());
-        for bi in 0..nb {
+        // radix-sharing format rule (DESIGN.md §15): only f32 pages are
+        // shareable — a cached page's format is part of its identity, and
+        // the cache's contract is bitwise-reference pages.  Publication
+        // stops at the first block where any stream's page was demoted,
+        // preserving the cache's prefix property (newly prefilled prompts
+        // are always all-f32, so this only bites re-publication attempts
+        // after pressure demoted part of a prompt).
+        let mut nb_pub = 0usize;
+        'blocks: for bi in 0..nb {
+            for st in &session.states {
+                if st.pages()[bi].format() != PageFormat::F32 {
+                    break 'blocks;
+                }
+            }
+            nb_pub = bi + 1;
+        }
+        if nb_pub == 0 {
+            return;
+        }
+        let mut pages = Vec::with_capacity(nb_pub * self.streams());
+        for bi in 0..nb_pub {
             for st in &session.states {
                 pages.push(st.pages()[bi].clone());
             }
         }
-        cache.insert(&prompt[..nb * block], &pages);
+        cache.insert(&prompt[..nb_pub * block], &pages);
     }
 
     /// The next chunk size when prefilling `total` prompt tokens with
@@ -1976,6 +2024,38 @@ mod tests {
         }
         let got2: Vec<i32> = (0..6).map(|_| model.session_step(&mut warm).unwrap()).collect();
         assert_eq!(got2, want, "cache-hit decode diverged");
+    }
+
+    #[test]
+    fn demoted_sessions_keep_decoding_and_never_publish_compressed_pages() {
+        let model = NativeLm::new(small_cfg(), 2);
+        let prompt = long_prompt(40); // block 16 -> 2 complete prompt blocks
+        let pool = model.new_page_pool(1024);
+        let mut sess = model.new_session(&prompt, &pool, None).unwrap();
+        for _ in 0..3 {
+            model.session_step(&mut sess).unwrap();
+        }
+        // pressure-demote every cold page across every stream
+        let bytes_before = sess.bytes_resident();
+        let demoted = sess.demote_cold(PageFormat::Bf16, usize::MAX);
+        assert!(demoted > 0, "complete prompt blocks must be demotable");
+        assert_eq!(sess.compressed_pages(), demoted);
+        assert!(sess.bytes_resident() < bytes_before, "demotion must shrink residency");
+        assert_eq!(pool.bytes_in_use(), sess.bytes_resident());
+        // the session keeps decoding through the dequant read path
+        for _ in 0..3 {
+            let tok = model.session_step(&mut sess).unwrap();
+            assert!(tok >= 0 && (tok as usize) < 64);
+        }
+        // the radix-sharing format rule: a demoted prompt never publishes
+        // its compressed blocks (here block 0 is compressed in every
+        // stream, so nothing is publishable)
+        let mut cache = model.new_radix_cache();
+        model.publish_prompt_pages(&mut cache, &prompt, &sess);
+        assert_eq!(cache.pages_held(), 0, "compressed pages must not enter the radix cache");
+        // F32 target stays a no-op
+        assert_eq!(sess.demote_cold(PageFormat::F32, usize::MAX), 0);
+        pool.check_invariants();
     }
 
     /// Satellite proptest: forking a session off a cached shared prefix

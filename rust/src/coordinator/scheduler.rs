@@ -109,7 +109,7 @@ use crate::coordinator::metrics::{Metrics, StepPhase};
 use crate::coordinator::native::{FusedPrefill, LmSession, NativeLm, StepPhases};
 use crate::coordinator::server::{Ingress, Responder, Response};
 use crate::coordinator::trace::{FlightRecorder, PreemptReason, TraceEvent};
-use crate::engine::{PagePool, PoolExhausted, RadixCache};
+use crate::engine::{PageFormat, PagePool, PoolExhausted, RadixCache};
 
 /// A request waiting for admission (fresh, or preempted with its partial
 /// generation kept for replay).
@@ -201,6 +201,11 @@ pub(crate) struct Scheduler {
     /// zero-cost disabled form (every record site is one `Option` branch;
     /// tracing on vs off is behavior-invariant, property-tested).
     trace: Option<Arc<FlightRecorder>>,
+    /// Pressure-demotion target format (`[sessions] page_format` when
+    /// `demote_before_preempt` is on and the format is compressed).
+    /// `None` means demotion is off and pressure goes straight to
+    /// preemption, the pre-compression behavior.
+    demote_fmt: Option<PageFormat>,
 }
 
 /// The scheduler thread body: drains `ingress` until shutdown *and* all
@@ -258,6 +263,7 @@ impl Scheduler {
             clock,
         );
         let fused = scfg.fused_step;
+        let demote_fmt = scfg.demote_target();
         Scheduler {
             lm,
             scfg,
@@ -274,6 +280,7 @@ impl Scheduler {
             fused,
             steps: 0,
             trace,
+            demote_fmt,
         }
     }
 
@@ -636,6 +643,11 @@ impl Scheduler {
                     c.evict_lru(need);
                 }
                 if self.pool.free_pages() < est + self.scfg.free_watermark {
+                    // cache eviction wasn't enough — shrink cold decode-phase
+                    // pages to the compressed format before giving up
+                    self.demote_pressure(est + self.scfg.free_watermark);
+                }
+                if self.pool.free_pages() < est + self.scfg.free_watermark {
                     // the picked request waits; it is never bypassed by a
                     // smaller one (no starvation-by-overtaking)
                     break;
@@ -791,6 +803,48 @@ impl Scheduler {
             .map(|(i, _)| i)
     }
 
+    /// Pressure-relief pass between cache eviction and preemption: demote
+    /// cold (non-tail, exclusively-held) pages of decode-phase sessions to
+    /// the configured compressed format until `pool.free_pages() >= target`
+    /// or nothing cold remains.  Victim order mirrors
+    /// [`Scheduler::preempt_victim`] — lowest priority first, youngest
+    /// admission breaking ties — so the sessions that would be preempted
+    /// anyway lose fidelity first and high-priority residents keep full
+    /// precision longest.  Returns the number of pages demoted (0 when
+    /// `[sessions]` disables demotion, no session is in decode phase, or
+    /// every cold page is already compressed/shared).
+    fn demote_pressure(&mut self, target: usize) -> usize {
+        let Some(fmt) = self.demote_fmt else { return 0 };
+        let mut order: Vec<usize> =
+            (0..self.running.len()).filter(|&i| self.running[i].prefill.is_none()).collect();
+        order.sort_unstable_by_key(|&i| {
+            let r = &self.running[i];
+            (r.req.priority, std::cmp::Reverse(r.admitted_at))
+        });
+        let mut total = 0usize;
+        for i in order {
+            if self.pool.free_pages() >= target {
+                break;
+            }
+            let r = &mut self.running[i];
+            let n = r.session.demote_cold(fmt, usize::MAX);
+            if n > 0 {
+                total += n;
+                let at = self.autotune.now_us();
+                Self::trace_ev(
+                    &self.trace,
+                    self.steps,
+                    at,
+                    TraceEvent::PageDemote { id: r.req.id, pages: n as u32 },
+                );
+            }
+        }
+        if total > 0 {
+            self.metrics.demotions.fetch_add(total as u64, Ordering::Relaxed);
+        }
+        total
+    }
+
     /// Spend the step's autotuned token budget over the prefilling
     /// sessions, oldest admission first, and keep re-offering the
     /// leftover until it is gone or nobody can take more.
@@ -904,6 +958,13 @@ impl Scheduler {
                 if c.evict_lru(short) > 0 {
                     continue;
                 }
+            }
+            // compress cold decode-phase pages before sacrificing a whole
+            // session — preemption becomes the last resort.  Terminates:
+            // each pass either frees pages (progress towards `needed`) or
+            // demotes nothing and falls through to preemption.
+            if self.demote_pressure(needed) > 0 {
+                continue;
             }
             if self.running.len() <= 1 {
                 // a single session always fits its admission estimate; if
@@ -1298,6 +1359,12 @@ impl Scheduler {
     fn publish_gauges(&self) {
         let live_budget = self.autotune.current() as u64;
         self.metrics.autotuned_chunk_tokens.store(live_budget, Ordering::Relaxed);
+        self.metrics
+            .compressed_pages
+            .store(self.pool.compressed_pages_in_use() as u64, Ordering::Relaxed);
+        self.metrics.pool_bytes_in_use.store(self.pool.bytes_in_use() as u64, Ordering::Relaxed);
+        let decoding = self.running.iter().filter(|r| r.prefill.is_none()).count() as u64;
+        self.metrics.peak_decoding_sessions.fetch_max(decoding, Ordering::Relaxed);
         let prefilling = self.running.iter().filter(|r| r.prefill.is_some()).count() as u64;
         let backlog: u64 = self
             .running
@@ -1325,11 +1392,13 @@ impl Scheduler {
     /// * **no poisoned survivors** — a session poisoned by mid-step or
     ///   mid-chunk [`PoolExhausted`] must never outlive the step that
     ///   poisoned it (it is preempted whole and replayed);
-    /// * **page conservation** — the scheduler is the pool's only
-    ///   client, so the distinct physical pages reachable from the
+    /// * **page and byte conservation** — the scheduler is the pool's
+    ///   only client, so the distinct physical pages reachable from the
     ///   running sessions and the radix cache equal `pages_in_use`
-    ///   exactly (no leak, no double-count), and `in_use + free ==
-    ///   total_pages` matches the published gauge;
+    ///   exactly (no leak, no double-count) and their format-weighted
+    ///   bytes equal `bytes_in_use`; `in_use + free == total_pages`
+    ///   holds exactly in the all-f32 state and relaxes to `>=` while
+    ///   compressed pages are live (DESIGN.md §15);
     /// * **queue sanity** — responders are structurally present on every
     ///   queued/running request (non-optional fields — checked here by
     ///   construction); admission stamps are unique and within the
@@ -1359,17 +1428,34 @@ impl Scheduler {
             }
         }
         let mut seen: HashSet<usize> = HashSet::new();
+        let mut reachable_bytes: usize = 0;
         for r in &self.running {
             for st in r.session.states() {
                 for p in st.pages() {
-                    seen.insert(Arc::as_ptr(p) as usize);
+                    if seen.insert(Arc::as_ptr(p) as usize) {
+                        reachable_bytes += p.bytes();
+                    }
                 }
             }
         }
         if let Some(c) = self.cache.as_ref() {
             c.for_each_page(&mut |p| {
-                seen.insert(Arc::as_ptr(p) as usize);
+                if seen.insert(Arc::as_ptr(p) as usize) {
+                    reachable_bytes += p.bytes();
+                }
             });
+        }
+        // byte conservation first: with mixed formats the page count can
+        // match while the per-format byte ledger drifts (e.g. a page
+        // demoted without its byte delta applied) — the finer check must
+        // fire before the coarser one masks it
+        if reachable_bytes != self.pool.bytes_in_use() {
+            return Err(format!(
+                "byte conservation violated: {} byte(s) reachable from sessions \
+                 + cache, but the pool reports {} in use",
+                reachable_bytes,
+                self.pool.bytes_in_use()
+            ));
         }
         if seen.len() != self.pool.pages_in_use() {
             return Err(format!(
@@ -1379,12 +1465,27 @@ impl Scheduler {
                 self.pool.pages_in_use()
             ));
         }
-        if self.pool.pages_in_use() + self.pool.free_pages() != self.scfg.total_pages {
+        // `free_pages` is denominated in f32-page units off the byte
+        // ledger, so with compressed pages live the pool can hold *more*
+        // than `total_pages` worth of slots; equality is only exact in
+        // the all-f32 state
+        if self.pool.compressed_pages_in_use() == 0 {
+            if self.pool.pages_in_use() + self.pool.free_pages() != self.scfg.total_pages {
+                return Err(format!(
+                    "page arithmetic violated: in_use {} + free {} != total_pages {}",
+                    self.pool.pages_in_use(),
+                    self.pool.free_pages(),
+                    self.scfg.total_pages
+                ));
+            }
+        } else if self.pool.pages_in_use() + self.pool.free_pages() < self.scfg.total_pages {
             return Err(format!(
-                "page arithmetic violated: in_use {} + free {} != total_pages {}",
+                "page arithmetic violated: in_use {} + free {} < total_pages {} \
+                 with {} compressed page(s) live",
                 self.pool.pages_in_use(),
                 self.pool.free_pages(),
-                self.scfg.total_pages
+                self.scfg.total_pages,
+                self.pool.compressed_pages_in_use()
             ));
         }
         if self.metrics.pool_pages.load(Ordering::Relaxed) != self.scfg.total_pages as u64 {
@@ -1871,7 +1972,17 @@ mod tests {
         assert!(msg.contains("conservation"), "{msg}");
         drop(hog);
         assert!(sched.verify().is_ok());
-        // (b) duplicate admission stamps break preemption's youngest-first
+        // (b) a page registered in the pool's ledger but reachable from
+        // nowhere drifts the byte ledger — the finer byte-conservation
+        // check must name the violation (the pool's own checker stays
+        // green because its internal accounting is self-consistent)
+        sched.pool.register_phantom_page_for_test();
+        assert!(sched.pool.verify().is_ok(), "pool ledger must stay self-consistent");
+        let msg = sched.verify().unwrap_err();
+        assert!(msg.contains("byte conservation"), "{msg}");
+        sched.pool.unregister_phantom_page_for_test();
+        assert!(sched.verify().is_ok());
+        // (c) duplicate admission stamps break preemption's youngest-first
         // ordering
         let s1 = lm.begin_session(&prompt(0, 8), &sched.pool, None).unwrap();
         let s2 = lm.begin_session(&prompt(1, 8), &sched.pool, None).unwrap();
@@ -1881,6 +1992,90 @@ mod tests {
         sched.running.push(running_entry(1, prompt(1, 8), s2, 1));
         let msg = sched.verify().unwrap_err();
         assert!(msg.contains("stamp"), "{msg}");
+    }
+
+    /// Pressure-driven demotion, end to end.  Three sessions with
+    /// 2-block prompts decode across a third block boundary: at len 48
+    /// every session needs a fresh page per stream at once, against an
+    /// 18-page pool already fully committed.  Under `[sessions]
+    /// page_format = "bf16"` the scheduler compresses cold pages and
+    /// serves all three without preempting; the identical workload under
+    /// pure f32 must preempt.  Every step re-runs `Scheduler::verify`,
+    /// so the byte-conservation and relaxed page-arithmetic invariants
+    /// are exercised with compressed pages live.  (No bitwise output
+    /// check: compressed KV is an approximation — the accuracy contract
+    /// is the decode-level error-budget proptest.)
+    #[test]
+    fn demotion_relieves_pressure_before_preemption() {
+        let run = |page_format: &str| {
+            let scfg = SessionConfig {
+                total_pages: 18,
+                free_watermark: 0,
+                max_running: 8,
+                prefix_cache: false,
+                prefill_chunk_tokens: 256,
+                page_format: page_format.to_string(),
+                ..Default::default()
+            };
+            let lm = Arc::new(NativeLm::new(small_cfg(), 2));
+            let metrics = Arc::new(Metrics::new());
+            let trace = Arc::new(FlightRecorder::new(256));
+            let mut sched = Scheduler::with_trace(
+                lm,
+                scfg,
+                metrics.clone(),
+                Box::new(MonotonicClock::default()),
+                Some(trace.clone()),
+            );
+            let (tx, rx) = sync_channel::<Ingress>(8);
+            // prompt 32 + gen 18 ends at len 50: the 17th append crosses
+            // the len-48 block boundary in lockstep across all sessions
+            let receivers: Vec<_> =
+                (0..3).map(|i| send_req(&tx, i as u64, prompt(i, 32), 18)).collect();
+            tx.send(Ingress::Shutdown).unwrap();
+            let mut steps = 0;
+            while sched.step(&rx) {
+                sched.verify().unwrap_or_else(|e| panic!("after step {steps}: {e}"));
+                steps += 1;
+                assert!(steps < 400, "workload did not drain");
+            }
+            for rrx in receivers {
+                let resp = rrx.recv().unwrap().unwrap_or_else(|e| panic!("served response: {e}"));
+                assert_eq!(resp.predictions.len(), 18, "accepted means served, in full");
+            }
+            (metrics, trace)
+        };
+        let (m_bf16, t_bf16) = run("bf16");
+        assert!(
+            m_bf16.demotions.load(Ordering::Relaxed) >= 6,
+            "pressure must demote cold pages: {}",
+            m_bf16.summary()
+        );
+        assert_eq!(
+            m_bf16.preemptions.load(Ordering::Relaxed),
+            0,
+            "demotion must keep preemption a last resort: {}",
+            m_bf16.summary()
+        );
+        assert_eq!(m_bf16.peak_decoding_sessions.load(Ordering::Relaxed), 3, "all resident");
+        assert!(
+            t_bf16
+                .records()
+                .iter()
+                .any(|r| matches!(r.event, TraceEvent::PageDemote { pages, .. } if pages > 0)),
+            "each demotion pass must leave a PageDemote trace record"
+        );
+        let (m_f32, t_f32) = run("f32");
+        assert_eq!(m_f32.demotions.load(Ordering::Relaxed), 0, "f32 target disables demotion");
+        assert!(
+            m_f32.preemptions.load(Ordering::Relaxed) >= 1,
+            "the same workload must preempt without demotion: {}",
+            m_f32.summary()
+        );
+        assert!(
+            !t_f32.records().iter().any(|r| matches!(r.event, TraceEvent::PageDemote { .. })),
+            "no demotion records under pure f32"
+        );
     }
 
     /// Poisoned-session recovery, end to end: a session poisoned by

@@ -91,6 +91,15 @@ pub enum TraceEvent {
         /// What forced the preemption.
         reason: PreemptReason,
     },
+    /// Cold KV pages of a decode-phase session were demoted to the
+    /// configured compressed format under memory pressure — the reclaim
+    /// the scheduler tries after cache eviction and before preemption.
+    PageDemote {
+        /// Server-assigned request id (the session whose pages shrank).
+        id: u64,
+        /// Pages demoted in this pass.
+        pages: u32,
+    },
     /// Admission found a radix-cached prompt prefix and shared its pages.
     RadixHit {
         /// Server-assigned request id.
@@ -167,6 +176,9 @@ impl TraceRecord {
             }
             TraceEvent::Preempt { id, reason } => {
                 format!(",\"ev\":\"Preempt\",\"id\":{id},\"reason\":\"{}\"", reason.as_str())
+            }
+            TraceEvent::PageDemote { id, pages } => {
+                format!(",\"ev\":\"PageDemote\",\"id\":{id},\"pages\":{pages}")
             }
             TraceEvent::RadixHit { id, cached_tokens } => {
                 format!(",\"ev\":\"RadixHit\",\"id\":{id},\"cached_tokens\":{cached_tokens}")
@@ -360,6 +372,7 @@ mod tests {
             TraceEvent::PrefillChunk { id: 1, tokens: 32, reoffered: true },
             TraceEvent::Decode { id: 1, token: 9 },
             TraceEvent::Preempt { id: 1, reason: PreemptReason::Pages },
+            TraceEvent::PageDemote { id: 1, pages: 4 },
             TraceEvent::RadixHit { id: 2, cached_tokens: 32 },
             TraceEvent::AutotuneResize { old: 256, new: 128 },
             TraceEvent::StreamStall { id: 3 },
@@ -378,6 +391,7 @@ mod tests {
             "\"ev\":\"PrefillChunk\",\"id\":1,\"tokens\":32,\"reoffered\":true",
             "\"ev\":\"Decode\",\"id\":1,\"token\":9",
             "\"ev\":\"Preempt\",\"id\":1,\"reason\":\"pages\"",
+            "\"ev\":\"PageDemote\",\"id\":1,\"pages\":4",
             "\"ev\":\"RadixHit\",\"id\":2,\"cached_tokens\":32",
             "\"ev\":\"AutotuneResize\",\"old\":256,\"new\":128",
             "\"ev\":\"StreamStall\",\"id\":3",

@@ -31,5 +31,5 @@
 pub mod page;
 pub mod radix;
 
-pub use page::{Page, PagePool, PageRef, PoolExhausted};
+pub use page::{Page, PageFormat, PagePool, PageRef, PoolExhausted};
 pub use radix::{CacheStats, RadixCache};

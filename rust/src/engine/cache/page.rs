@@ -1,4 +1,4 @@
-//! Bounded paged arena for decode KV state.
+//! Bounded paged arena for decode KV state, with precision-typed pages.
 //!
 //! One [`Page`] stores everything the per-row attention core
 //! ([`crate::engine::decode`]) reads about one `block`-token span of one
@@ -14,15 +14,35 @@
 //! ([`Page::finalize`]) — after that the page is immutable for life, so it
 //! can be shared freely across sessions (fork, radix prefix cache).
 //!
+//! **Page formats** (DESIGN.md §15): every page is *born* [`PageFormat::F32`]
+//! — the bitwise reference layout, byte-identical to the historical
+//! f32-everywhere arena.  Under memory pressure the scheduler *demotes*
+//! cold pages ([`PagePool::demote`]) to [`PageFormat::Bf16`] (round-to-
+//! nearest-even truncation, 2 bytes/elem) or [`PageFormat::Int8`]
+//! (symmetric per-page scale = maxabs/127, 1 byte/elem; the 4-byte scale
+//! lives in the [`Page`] handle, not the buffer, and is excluded from
+//! byte accounting).  A compressed page keeps the same element layout and
+//! dequantizes section-by-section into a caller scratch on read
+//! ([`Page::kt_deq`] and friends) — the f32 fast path of those reads is a
+//! zero-copy slice, so `F32` stays bitwise *and* cost-identical.
+//! Demotion requires exclusivity (`Arc` refcount 1): a page's format is
+//! part of its sharing identity, so radix-cached and forked pages are
+//! never rewritten under a peer's feet.
+//!
 //! [`PagePool`] is the global bounded arena: it hands out refcounted
-//! [`PageRef`]s up to a fixed capacity and recycles the underlying buffers
-//! when the last reference drops, so the steady-state serving loop
-//! performs no heap allocations for cache growth — a page "allocation" is
-//! a freelist pop ([`PagePool::buffers_created`] is the high-water mark
-//! the allocation-free tests gate on).  When the pool is exhausted,
-//! [`PagePool::try_alloc`] fails with [`PoolExhausted`] and the scheduler
-//! reacts (radix-cache eviction, then session preemption) instead of
-//! growing memory without bound.
+//! [`PageRef`]s up to a fixed **byte** budget (`capacity` f32-sized
+//! pages) and recycles the underlying buffers per format when the last
+//! reference drops, so the steady-state serving loop performs no heap
+//! allocations for cache growth — a page "allocation" is a freelist pop
+//! ([`PagePool::buffers_created`] is the f32 high-water mark the
+//! allocation-free tests gate on).  Compressed pages shrink the resident
+//! footprint, so a mixed-format pool admits more pages than `capacity`
+//! f32 ones — [`PagePool::free_pages`] reports the remaining budget in
+//! conservative f32-page units (appends always create f32 pages).  When
+//! the budget is exhausted, [`PagePool::try_alloc`] fails with
+//! [`PoolExhausted`] and the scheduler reacts (radix-cache eviction, then
+//! demotion, then session preemption) instead of growing memory without
+//! bound.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -42,20 +62,108 @@ impl std::fmt::Display for PoolExhausted {
 
 impl std::error::Error for PoolExhausted {}
 
+/// Storage precision of one page (DESIGN.md §15).  Pages are always
+/// *created* `F32`; the compressed formats exist only as demotion
+/// targets.  `F32` reads are bitwise identical (zero-copy) to the
+/// historical layout; the compressed formats trade a documented
+/// attend-output error budget for 2x / 4x resident-byte savings.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PageFormat {
+    /// 4 bytes/elem — the bitwise reference (and the only writable format).
+    #[default]
+    F32,
+    /// 2 bytes/elem — f32 truncated to its top half, round-to-nearest-even.
+    Bf16,
+    /// 1 byte/elem — symmetric per-page scale (`maxabs / 127`), stored in
+    /// the page handle outside the byte-accounted buffer.
+    Int8,
+}
+
+impl PageFormat {
+    /// Bytes each stored element occupies.
+    pub const fn bytes_per_elem(self) -> usize {
+        match self {
+            PageFormat::F32 => 4,
+            PageFormat::Bf16 => 2,
+            PageFormat::Int8 => 1,
+        }
+    }
+
+    /// Buffer bytes of one page of `page_elems` elements in this format
+    /// (the unit of pool byte accounting; the int8 per-page scale is a
+    /// handle field and deliberately not counted).
+    pub const fn page_bytes(self, page_elems: usize) -> usize {
+        page_elems * self.bytes_per_elem()
+    }
+
+    /// Config-file name (`[sessions] page_format`).
+    pub const fn name(self) -> &'static str {
+        match self {
+            PageFormat::F32 => "f32",
+            PageFormat::Bf16 => "bf16",
+            PageFormat::Int8 => "int8",
+        }
+    }
+
+    /// Parse a config-file name; `None` for unknown spellings.
+    pub fn parse(s: &str) -> Option<PageFormat> {
+        match s {
+            "f32" => Some(PageFormat::F32),
+            "bf16" => Some(PageFormat::Bf16),
+            "int8" => Some(PageFormat::Int8),
+            _ => None,
+        }
+    }
+
+    /// Documented max-abs error budget of one attend output row computed
+    /// from pages demoted to this format, versus the all-f32 oracle, for
+    /// unit-scale (standard normal) inputs.  These are deliberately loose
+    /// upper bounds — validated empirically by the
+    /// `compressed_pages_attend_within_error_budget` proptest and the
+    /// bench_serve error-budget leg, not tight analytical bounds.
+    pub const fn error_budget(self) -> f32 {
+        match self {
+            PageFormat::F32 => 0.0,
+            PageFormat::Bf16 => 1e-1,
+            PageFormat::Int8 => 4e-1,
+        }
+    }
+}
+
+impl std::fmt::Display for PageFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 struct PoolShared {
     block: usize,
     d: usize,
     page_elems: usize,
-    /// Max live (physical) pages; `usize::MAX` = unbounded.
+    /// Max live f32-equivalent pages; `usize::MAX` = unbounded.
     capacity: usize,
-    /// Physical pages currently alive (each counted once however many
-    /// sessions/cache entries share it).
+    /// Byte budget: `capacity * 4 * page_elems` (`usize::MAX` = unbounded).
+    capacity_bytes: usize,
+    /// Physical pages currently alive, any format (each counted once
+    /// however many sessions/cache entries share it).
     live: AtomicUsize,
-    /// Buffers ever created — the allocation high-water mark; stops
-    /// growing once the freelist covers the working set.
+    /// Resident buffer bytes across live pages of every format.
+    live_bytes: AtomicUsize,
+    /// Live pages per format (byte conservation: `live_bytes` must equal
+    /// the format-weighted sum of these).
+    live_f32: AtomicUsize,
+    live_b16: AtomicUsize,
+    live_i8: AtomicUsize,
+    /// f32 buffers ever created — the allocation high-water mark the
+    /// steady-state gates track; stops growing once the freelist covers
+    /// the working set.
     created: AtomicUsize,
-    /// Retired page buffers awaiting reuse.
+    /// Compressed (bf16 + int8) buffers ever created.
+    created_compressed: AtomicUsize,
+    /// Retired page buffers awaiting reuse, one freelist per format.
     recycled: Mutex<Vec<Box<[f32]>>>,
+    recycled_b16: Mutex<Vec<Box<[u16]>>>,
+    recycled_i8: Mutex<Vec<Box<[i8]>>>,
 }
 
 /// Shared handle to the bounded page arena (cheap to clone).
@@ -76,6 +184,7 @@ impl std::fmt::Debug for PagePool {
             .field("d", &self.shared.d)
             .field("capacity", &self.shared.capacity)
             .field("in_use", &self.pages_in_use())
+            .field("bytes_in_use", &self.bytes_in_use())
             .finish()
     }
 }
@@ -84,17 +193,32 @@ impl std::fmt::Debug for PagePool {
 pub type PageRef = Arc<Page>;
 
 /// Recover a freelist guard even when a peer thread panicked while
-/// holding it.  The freelist is a `Vec<Box<[f32]>>` push/pop — every
+/// holding it.  Each freelist is a `Vec<Box<[T]>>` push/pop — every
 /// intermediate state is valid — so poisoning carries no information
 /// here, and propagating it from [`Page::drop`] would abort the process
 /// (panic-in-drop during unwind).
-fn recycled_lock(shared: &PoolShared) -> std::sync::MutexGuard<'_, Vec<Box<[f32]>>> {
-    shared.recycled.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+fn freelist_lock<T>(m: &Mutex<Vec<Box<[T]>>>) -> std::sync::MutexGuard<'_, Vec<Box<[T]>>> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Reserve `bytes` of the pool's byte budget, failing (and rolling the
+/// reservation back) when a bounded pool would overshoot.  Reserving
+/// before touching a freelist is what keeps concurrent allocators from
+/// collectively exceeding the budget.
+fn reserve_page_bytes(shared: &PoolShared, bytes: usize) -> Result<(), PoolExhausted> {
+    let prev = shared.live_bytes.fetch_add(bytes, Ordering::Relaxed);
+    if shared.capacity_bytes != usize::MAX && prev + bytes > shared.capacity_bytes {
+        shared.live_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        return Err(PoolExhausted);
+    }
+    Ok(())
 }
 
 impl PagePool {
-    /// Pool of at most `capacity` live pages sized for `(block, d)`
-    /// streams.  Buffers are created lazily and recycled on free.
+    /// Pool of at most `capacity` live f32-sized pages (a byte budget of
+    /// `capacity * 4 * (3*block*d + 2*d)`) for `(block, d)` streams.
+    /// Buffers are created lazily and recycled on free; demoted pages
+    /// occupy proportionally fewer bytes of the same budget.
     ///
     /// # Panics
     ///
@@ -104,15 +228,29 @@ impl PagePool {
     pub fn new(capacity: usize, block: usize, d: usize) -> Self {
         assert!(capacity > 0, "page pool capacity must be positive");
         assert!(block > 0 && d > 0, "page geometry must be positive");
+        let page_elems = 3 * block * d + 2 * d;
+        let capacity_bytes = if capacity == usize::MAX {
+            usize::MAX
+        } else {
+            capacity.saturating_mul(PageFormat::F32.page_bytes(page_elems))
+        };
         PagePool {
             shared: Arc::new(PoolShared {
                 block,
                 d,
-                page_elems: 3 * block * d + 2 * d,
+                page_elems,
                 capacity,
+                capacity_bytes,
                 live: AtomicUsize::new(0),
+                live_bytes: AtomicUsize::new(0),
+                live_f32: AtomicUsize::new(0),
+                live_b16: AtomicUsize::new(0),
+                live_i8: AtomicUsize::new(0),
                 created: AtomicUsize::new(0),
+                created_compressed: AtomicUsize::new(0),
                 recycled: Mutex::new(Vec::new()),
+                recycled_b16: Mutex::new(Vec::new()),
+                recycled_i8: Mutex::new(Vec::new()),
             }),
         }
     }
@@ -133,52 +271,80 @@ impl PagePool {
         self.shared.d
     }
 
-    /// Floats per page (`3 * block * d + 2 * d`).
+    /// Elements per page (`3 * block * d + 2 * d`), format-independent.
     pub fn page_elems(&self) -> usize {
         self.shared.page_elems
     }
 
+    /// Capacity in f32-equivalent pages (the historical unit; the byte
+    /// budget is `capacity_bytes`).
     pub fn capacity(&self) -> usize {
         self.shared.capacity
     }
 
-    /// Physical pages currently alive.
+    /// The pool's byte budget (`usize::MAX` = unbounded).
+    pub fn capacity_bytes(&self) -> usize {
+        self.shared.capacity_bytes
+    }
+
+    /// Physical pages currently alive, in any format.
     pub fn pages_in_use(&self) -> usize {
         self.shared.live.load(Ordering::Relaxed)
     }
 
-    /// Pages that can still be allocated before [`PoolExhausted`].
-    pub fn free_pages(&self) -> usize {
-        self.shared.capacity.saturating_sub(self.pages_in_use())
+    /// Resident buffer bytes across live pages of every format.
+    pub fn bytes_in_use(&self) -> usize {
+        self.shared.live_bytes.load(Ordering::Relaxed)
     }
 
-    /// Buffers ever created (the heap-allocation high-water mark; steady
-    /// state recycles instead of creating).
+    /// Live pages currently in a compressed (bf16/int8) format.
+    pub fn compressed_pages_in_use(&self) -> usize {
+        self.shared.live_b16.load(Ordering::Relaxed)
+            + self.shared.live_i8.load(Ordering::Relaxed)
+    }
+
+    /// Full (f32) pages that can still be allocated before
+    /// [`PoolExhausted`] — the remaining byte budget in conservative
+    /// f32-page units (appends always create f32 pages, so this is the
+    /// unit the scheduler's reservation arithmetic needs).
+    pub fn free_pages(&self) -> usize {
+        self.shared.capacity_bytes.saturating_sub(self.bytes_in_use())
+            / PageFormat::F32.page_bytes(self.shared.page_elems)
+    }
+
+    /// f32 buffers ever created (the heap-allocation high-water mark;
+    /// steady state recycles instead of creating).
     pub fn buffers_created(&self) -> usize {
         self.shared.created.load(Ordering::Relaxed)
     }
 
+    /// Compressed (bf16 + int8) buffers ever created by demotion.
+    pub fn compressed_buffers_created(&self) -> usize {
+        self.shared.created_compressed.load(Ordering::Relaxed)
+    }
+
     fn grab_buffer(&self) -> Result<Box<[f32]>, PoolExhausted> {
-        // reserve the live slot first so concurrent allocators cannot
-        // overshoot the capacity
-        let prev = self.shared.live.fetch_add(1, Ordering::Relaxed);
-        if prev >= self.shared.capacity {
-            self.shared.live.fetch_sub(1, Ordering::Relaxed);
-            return Err(PoolExhausted);
-        }
-        let reused = recycled_lock(&self.shared).pop();
+        // reserve the byte budget first so concurrent allocators cannot
+        // collectively overshoot the capacity
+        reserve_page_bytes(
+            &self.shared,
+            PageFormat::F32.page_bytes(self.shared.page_elems),
+        )?;
+        self.shared.live.fetch_add(1, Ordering::Relaxed);
+        self.shared.live_f32.fetch_add(1, Ordering::Relaxed);
+        let reused = freelist_lock(&self.shared.recycled).pop();
         Ok(reused.unwrap_or_else(|| {
             self.shared.created.fetch_add(1, Ordering::Relaxed);
             vec![0.0f32; self.shared.page_elems].into_boxed_slice()
         }))
     }
 
-    /// Allocate a zeroed page, failing when the pool is at capacity.
+    /// Allocate a zeroed f32 page, failing when the pool is out of bytes.
     pub fn try_alloc(&self) -> Result<PageRef, PoolExhausted> {
         let mut data = self.grab_buffer()?;
         data.fill(0.0);
         Ok(Arc::new(Page {
-            data,
+            bits: PageBits::F32(data),
             block: self.shared.block,
             d: self.shared.d,
             pool: self.shared.clone(),
@@ -187,15 +353,95 @@ impl PagePool {
 
     /// Allocate a page holding a copy of `src`'s contents — the
     /// copy-on-write step for a shared partial tail page.
+    ///
+    /// # Panics
+    ///
+    /// Panics when `src` is not an f32 page: only partial tails are ever
+    /// copied-on-write, and partial tails are always f32 (demotion skips
+    /// the tail block by construction).
     pub fn alloc_copy(&self, src: &Page) -> Result<PageRef, PoolExhausted> {
         let mut data = self.grab_buffer()?;
-        data.copy_from_slice(&src.data);
+        data.copy_from_slice(src.f32_data());
         Ok(Arc::new(Page {
-            data,
+            bits: PageBits::F32(data),
             block: self.shared.block,
             d: self.shared.d,
             pool: self.shared.clone(),
         }))
+    }
+
+    /// Take a compressed buffer for a demotion, bypassing the byte-budget
+    /// gate: demotion is net-freeing (the compressed page replaces a
+    /// strictly larger f32 one that drops the moment the swap completes),
+    /// so the transient overshoot is at most one compressed page per
+    /// in-flight demotion and can never be what pushes the pool over.
+    fn grab_b16_buffer(&self) -> Box<[u16]> {
+        self.shared
+            .live_bytes
+            .fetch_add(PageFormat::Bf16.page_bytes(self.shared.page_elems), Ordering::Relaxed);
+        self.shared.live.fetch_add(1, Ordering::Relaxed);
+        self.shared.live_b16.fetch_add(1, Ordering::Relaxed);
+        freelist_lock(&self.shared.recycled_b16).pop().unwrap_or_else(|| {
+            self.shared.created_compressed.fetch_add(1, Ordering::Relaxed);
+            vec![0u16; self.shared.page_elems].into_boxed_slice()
+        })
+    }
+
+    fn grab_i8_buffer(&self) -> Box<[i8]> {
+        self.shared
+            .live_bytes
+            .fetch_add(PageFormat::Int8.page_bytes(self.shared.page_elems), Ordering::Relaxed);
+        self.shared.live.fetch_add(1, Ordering::Relaxed);
+        self.shared.live_i8.fetch_add(1, Ordering::Relaxed);
+        freelist_lock(&self.shared.recycled_i8).pop().unwrap_or_else(|| {
+            self.shared.created_compressed.fetch_add(1, Ordering::Relaxed);
+            vec![0i8; self.shared.page_elems].into_boxed_slice()
+        })
+    }
+
+    /// Demote the f32 page behind `page` to `fmt`, swapping the handle
+    /// for a freshly quantized compressed twin and returning its f32
+    /// bytes to the budget.  Returns `false` (and does nothing) when the
+    /// demotion is not applicable:
+    ///
+    /// * `fmt` is `F32` (nothing to do — the configured no-compression
+    ///   mode), or
+    /// * the page is already compressed, or
+    /// * the handle is shared (`Arc` refcount > 1): a page's format is
+    ///   part of its sharing identity — radix-cached and forked pages
+    ///   must never change representation under a peer's feet.
+    ///
+    /// The swap preserves the element layout; only precision changes.
+    /// Byte accounting transiently holds both pages (see
+    /// [`PagePool::grab_b16_buffer`]) and nets out `3/4` (bf16) or `1/4`
+    /// (int8) of an f32 page the moment the old handle drops here.
+    pub fn demote(&self, page: &mut PageRef, fmt: PageFormat) -> bool {
+        if fmt == PageFormat::F32
+            || page.format() != PageFormat::F32
+            || Arc::strong_count(page) != 1
+        {
+            return false;
+        }
+        let (block, d) = (page.block, page.d);
+        let bits = {
+            let src = page.f32_data();
+            match fmt {
+                PageFormat::Bf16 => {
+                    let mut data = self.grab_b16_buffer();
+                    kernel::quant_bf16(src, &mut data);
+                    PageBits::Bf16(data)
+                }
+                PageFormat::Int8 => {
+                    let mut data = self.grab_i8_buffer();
+                    let scale = kernel::int8_scale(src);
+                    kernel::quant_i8(src, scale, &mut data);
+                    PageBits::Int8 { data, scale }
+                }
+                PageFormat::F32 => return false,
+            }
+        };
+        *page = Arc::new(Page { bits, block, d, pool: self.shared.clone() });
+        true
     }
 
     /// Structural self-check of the arena's accounting, for the
@@ -203,55 +449,129 @@ impl PagePool {
     /// description of the first violated invariant:
     ///
     /// * **buffer conservation** — every buffer ever created is either
-    ///   inside a live page or parked on the freelist:
-    ///   `created == live + recycled`;
-    /// * **bound** — a bounded pool never has more live pages than its
-    ///   capacity, and `in_use + free == capacity`;
+    ///   inside a live page or parked on its format's freelist:
+    ///   `created == live_f32 + recycled_f32` and `created_compressed ==
+    ///   live_bf16 + live_int8 + recycled_bf16 + recycled_int8`;
+    /// * **page-count conservation** — the per-format live counts sum to
+    ///   the total: `live == live_f32 + live_bf16 + live_int8`;
+    /// * **byte conservation** — resident bytes equal the format-weighted
+    ///   page counts: `live_bytes == 4*pe*live_f32 + 2*pe*live_bf16 +
+    ///   pe*live_int8` (a mixed-format pool must not leak fractional
+    ///   capacity);
+    /// * **bound** — a bounded pool never holds more resident bytes than
+    ///   its budget, and `bytes_in_use + free_pages * 4*pe <=
+    ///   capacity_bytes` stays consistent;
     /// * **freelist hygiene** — recycled buffers all have the pool's
     ///   exact page geometry (a foreign or truncated buffer would
     ///   corrupt the next page allocated from it).
     ///
-    /// Only meaningful at a quiescent point (no concurrent
-    /// alloc/drop in flight): `grab_buffer` reserves the live slot
-    /// before touching the freelist, so mid-allocation snapshots can
-    /// transiently observe `created < live + recycled`.
+    /// Only meaningful at a quiescent point (no concurrent alloc/drop or
+    /// demotion in flight): `grab_buffer` reserves bytes before touching
+    /// the freelist and a demotion transiently holds both the old and new
+    /// page, so mid-operation snapshots can observe transient skew.
     pub fn verify(&self) -> Result<(), String> {
+        let pe = self.shared.page_elems;
         let live = self.shared.live.load(Ordering::SeqCst);
+        let live_bytes = self.shared.live_bytes.load(Ordering::SeqCst);
+        let live_f32 = self.shared.live_f32.load(Ordering::SeqCst);
+        let live_b16 = self.shared.live_b16.load(Ordering::SeqCst);
+        let live_i8 = self.shared.live_i8.load(Ordering::SeqCst);
         let created = self.shared.created.load(Ordering::SeqCst);
-        let (recycled, bad_geometry) = {
-            let guard = recycled_lock(&self.shared);
-            let bad = guard.iter().filter(|b| b.len() != self.shared.page_elems).count();
-            (guard.len(), bad)
+        let created_compressed = self.shared.created_compressed.load(Ordering::SeqCst);
+        let count_freelist = |len: usize, bad: usize, what: &str| -> Result<usize, String> {
+            if bad != 0 {
+                Err(format!(
+                    "{what} freelist holds {bad} buffer(s) with the wrong geometry \
+                     (expected {pe} elements each)"
+                ))
+            } else {
+                Ok(len)
+            }
         };
-        if bad_geometry != 0 {
+        let rec_f32 = {
+            let g = freelist_lock(&self.shared.recycled);
+            count_freelist(g.len(), g.iter().filter(|b| b.len() != pe).count(), "f32")?
+        };
+        let rec_b16 = {
+            let g = freelist_lock(&self.shared.recycled_b16);
+            count_freelist(g.len(), g.iter().filter(|b| b.len() != pe).count(), "bf16")?
+        };
+        let rec_i8 = {
+            let g = freelist_lock(&self.shared.recycled_i8);
+            count_freelist(g.len(), g.iter().filter(|b| b.len() != pe).count(), "int8")?
+        };
+        if created != live_f32 + rec_f32 {
             return Err(format!(
-                "freelist holds {bad_geometry} buffer(s) with the wrong geometry \
-                 (expected {} floats each)",
-                self.shared.page_elems
+                "f32 buffer conservation violated: created {created} != live {live_f32} + \
+                 recycled {rec_f32}"
             ));
         }
-        if created != live + recycled {
+        if created_compressed != live_b16 + live_i8 + rec_b16 + rec_i8 {
             return Err(format!(
-                "buffer conservation violated: created {created} != live {live} + \
-                 recycled {recycled}"
+                "compressed buffer conservation violated: created {created_compressed} != \
+                 live {} + recycled {}",
+                live_b16 + live_i8,
+                rec_b16 + rec_i8
             ));
         }
-        if self.shared.capacity != usize::MAX {
-            if live > self.shared.capacity {
+        if live != live_f32 + live_b16 + live_i8 {
+            return Err(format!(
+                "page-count conservation violated: live {live} != f32 {live_f32} + \
+                 bf16 {live_b16} + int8 {live_i8}"
+            ));
+        }
+        let want_bytes = PageFormat::F32.page_bytes(pe) * live_f32
+            + PageFormat::Bf16.page_bytes(pe) * live_b16
+            + PageFormat::Int8.page_bytes(pe) * live_i8;
+        if live_bytes != want_bytes {
+            return Err(format!(
+                "byte conservation violated: live_bytes {live_bytes} != format-weighted \
+                 {want_bytes} (f32 {live_f32}, bf16 {live_b16}, int8 {live_i8} pages \
+                 of {pe} elements)"
+            ));
+        }
+        if self.shared.capacity_bytes != usize::MAX {
+            if live_bytes > self.shared.capacity_bytes {
                 return Err(format!(
-                    "live pages {live} exceed capacity {}",
-                    self.shared.capacity
+                    "resident bytes {live_bytes} exceed the budget {}",
+                    self.shared.capacity_bytes
                 ));
             }
             let free = self.free_pages();
-            if live + free != self.shared.capacity {
+            if live_bytes + free * PageFormat::F32.page_bytes(pe) > self.shared.capacity_bytes {
                 return Err(format!(
-                    "page accounting violated: in_use {live} + free {free} != capacity {}",
-                    self.shared.capacity
+                    "byte accounting violated: in_use {live_bytes} + free {free} f32 pages \
+                     overshoot the budget {}",
+                    self.shared.capacity_bytes
                 ));
             }
         }
         Ok(())
+    }
+
+    /// Test hook: register the accounting of a phantom f32 page no
+    /// handle reaches, keeping the pool's *own* checkers self-consistent
+    /// (live, per-format, byte and buffer counts all move together).
+    /// Lets checkers layered above the pool (`Scheduler::verify`) prove
+    /// they catch reachable-set vs pool-accounting drift the pool itself
+    /// cannot see.
+    #[cfg(test)]
+    pub(crate) fn register_phantom_page_for_test(&self) {
+        let pe = self.shared.page_elems;
+        self.shared.live.fetch_add(1, Ordering::Relaxed);
+        self.shared.live_f32.fetch_add(1, Ordering::Relaxed);
+        self.shared.live_bytes.fetch_add(PageFormat::F32.page_bytes(pe), Ordering::Relaxed);
+        self.shared.created.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Undo [`PagePool::register_phantom_page_for_test`].
+    #[cfg(test)]
+    pub(crate) fn unregister_phantom_page_for_test(&self) {
+        let pe = self.shared.page_elems;
+        self.shared.live.fetch_sub(1, Ordering::Relaxed);
+        self.shared.live_f32.fetch_sub(1, Ordering::Relaxed);
+        self.shared.live_bytes.fetch_sub(PageFormat::F32.page_bytes(pe), Ordering::Relaxed);
+        self.shared.created.fetch_sub(1, Ordering::Relaxed);
     }
 
     /// Assert [`PagePool::verify`] under `debug_assertions` or the
@@ -271,11 +591,23 @@ impl PagePool {
     }
 }
 
+/// Precision-typed page storage.  The element *layout* is identical
+/// across variants (see the module docs); only the per-element encoding
+/// differs.  The int8 scale lives here — one scale for the whole page —
+/// so the buffer stays a dense byte array the freelists can recycle.
+enum PageBits {
+    F32(Box<[f32]>),
+    Bf16(Box<[u16]>),
+    Int8 { data: Box<[i8]>, scale: f32 },
+}
+
 /// One block-aligned span of one `(layer, head)` KV stream.  See the
-/// module docs for the layout; all accessors are zero-copy slices into
-/// the page buffer.
+/// module docs for the layout.  The raw accessors ([`Page::k_row`] and
+/// friends) are zero-copy slices valid only on f32 pages; the `_deq`
+/// twins are format-agnostic and fall back to dequantizing into a caller
+/// scratch.
 pub struct Page {
-    data: Box<[f32]>,
+    bits: PageBits,
     block: usize,
     d: usize,
     pool: Arc<PoolShared>,
@@ -287,77 +619,230 @@ impl Page {
         self.block * self.d
     }
 
+    /// Storage precision of this page.
+    #[inline]
+    pub fn format(&self) -> PageFormat {
+        match self.bits {
+            PageBits::F32(_) => PageFormat::F32,
+            PageBits::Bf16(_) => PageFormat::Bf16,
+            PageBits::Int8 { .. } => PageFormat::Int8,
+        }
+    }
+
+    /// Resident buffer bytes of this page (its contribution to
+    /// [`PagePool::bytes_in_use`]).
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        self.format().page_bytes(self.pool.page_elems)
+    }
+
+    /// The int8 per-page scale (`None` unless the page is `Int8`).
+    #[inline]
+    pub fn int8_scale(&self) -> Option<f32> {
+        match self.bits {
+            PageBits::Int8 { scale, .. } => Some(scale),
+            _ => None,
+        }
+    }
+
+    /// The raw f32 buffer; raw accessors and the write path go through
+    /// here so a compressed page can never be silently misread as f32.
+    #[inline]
+    fn f32_data(&self) -> &[f32] {
+        match &self.bits {
+            PageBits::F32(data) => data,
+            _ => panic!(
+                "raw f32 accessor on a {} page — use the *_deq reads",
+                self.format()
+            ),
+        }
+    }
+
+    #[inline]
+    fn f32_data_mut(&mut self) -> &mut [f32] {
+        match &mut self.bits {
+            PageBits::F32(data) => data,
+            PageBits::Bf16(_) | PageBits::Int8 { .. } => panic!(
+                "write to a compressed page — only f32 pages are writable"
+            ),
+        }
+    }
+
+    /// Read `len` elements at `off`, format-agnostically: f32 pages
+    /// return the zero-copy slice (bitwise identical to the historical
+    /// path), compressed pages dequantize into `buf` (grown on first
+    /// use, then reused — allocation-free once warm).
+    #[inline]
+    fn section_deq<'a>(&'a self, off: usize, len: usize, buf: &'a mut Vec<f32>) -> &'a [f32] {
+        match &self.bits {
+            PageBits::F32(data) => &data[off..off + len],
+            PageBits::Bf16(data) => {
+                if buf.len() < len {
+                    buf.resize(len, 0.0);
+                }
+                kernel::dequant_bf16(&data[off..off + len], &mut buf[..len]);
+                &buf[..len]
+            }
+            PageBits::Int8 { data, scale } => {
+                if buf.len() < len {
+                    buf.resize(len, 0.0);
+                }
+                kernel::dequant_i8(&data[off..off + len], *scale, &mut buf[..len]);
+                &buf[..len]
+            }
+        }
+    }
+
     /// Raw key row `i` of this block (`i < block`).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a compressed page (as do all raw accessors below) —
+    /// use the `_deq` reads on format-agnostic paths.
     #[inline]
     pub fn k_row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.block);
-        &self.data[i * self.d..(i + 1) * self.d]
+        &self.f32_data()[i * self.d..(i + 1) * self.d]
     }
 
     /// First `rows` key rows, row-major (the partial-tail view).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a compressed page.
     #[inline]
     pub fn k_rows(&self, rows: usize) -> &[f32] {
         debug_assert!(rows <= self.block);
-        &self.data[..rows * self.d]
+        &self.f32_data()[..rows * self.d]
     }
 
     /// First `rows` value rows, row-major (the partial-tail view).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a compressed page.
     #[inline]
     pub fn v_rows(&self, rows: usize) -> &[f32] {
         debug_assert!(rows <= self.block);
         let bd = self.bd();
-        &self.data[bd..bd + rows * self.d]
+        &self.f32_data()[bd..bd + rows * self.d]
     }
 
     /// All `block` value rows (complete-block view).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a compressed page.
     #[inline]
     pub fn v_block(&self) -> &[f32] {
         let bd = self.bd();
-        &self.data[bd..2 * bd]
+        &self.f32_data()[bd..2 * bd]
     }
 
     /// Packed `(d, block)` K^T panel (valid once the block completed).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a compressed page.
     #[inline]
     pub fn panel(&self) -> &[f32] {
         let bd = self.bd();
-        &self.data[2 * bd..3 * bd]
+        &self.f32_data()[2 * bd..3 * bd]
     }
 
     /// Pooled (mean) key row (valid once the block completed).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a compressed page.
     #[inline]
     pub fn kt(&self) -> &[f32] {
         let bd = self.bd();
-        &self.data[3 * bd..3 * bd + self.d]
+        &self.f32_data()[3 * bd..3 * bd + self.d]
     }
 
     /// Pooled (mean) value row (valid once the block completed).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a compressed page.
     #[inline]
     pub fn vt(&self) -> &[f32] {
         let bd = self.bd();
-        &self.data[3 * bd + self.d..3 * bd + 2 * self.d]
+        &self.f32_data()[3 * bd + self.d..3 * bd + 2 * self.d]
+    }
+
+    /// Format-agnostic [`Page::k_rows`]: zero-copy on f32 pages,
+    /// dequantized into `buf` otherwise.
+    #[inline]
+    pub fn k_rows_deq<'a>(&'a self, rows: usize, buf: &'a mut Vec<f32>) -> &'a [f32] {
+        debug_assert!(rows <= self.block);
+        self.section_deq(0, rows * self.d, buf)
+    }
+
+    /// Format-agnostic [`Page::v_rows`].
+    #[inline]
+    pub fn v_rows_deq<'a>(&'a self, rows: usize, buf: &'a mut Vec<f32>) -> &'a [f32] {
+        debug_assert!(rows <= self.block);
+        self.section_deq(self.bd(), rows * self.d, buf)
+    }
+
+    /// Format-agnostic [`Page::v_block`].
+    #[inline]
+    pub fn v_block_deq<'a>(&'a self, buf: &'a mut Vec<f32>) -> &'a [f32] {
+        self.section_deq(self.bd(), self.bd(), buf)
+    }
+
+    /// Format-agnostic [`Page::panel`].
+    #[inline]
+    pub fn panel_deq<'a>(&'a self, buf: &'a mut Vec<f32>) -> &'a [f32] {
+        self.section_deq(2 * self.bd(), self.bd(), buf)
+    }
+
+    /// Format-agnostic [`Page::kt`].
+    #[inline]
+    pub fn kt_deq<'a>(&'a self, buf: &'a mut Vec<f32>) -> &'a [f32] {
+        self.section_deq(3 * self.bd(), self.d, buf)
+    }
+
+    /// Format-agnostic [`Page::vt`].
+    #[inline]
+    pub fn vt_deq<'a>(&'a self, buf: &'a mut Vec<f32>) -> &'a [f32] {
+        self.section_deq(3 * self.bd() + self.d, self.d, buf)
     }
 
     /// Write the key/value rows of position `i` within the block.  Only
     /// ever called through a unique (copy-on-write) handle.
+    ///
+    /// # Panics
+    ///
+    /// Panics on a compressed page — only f32 pages are writable
+    /// (demotion never touches a page that can still be appended to).
     pub fn write_kv_row(&mut self, i: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert!(i < self.block);
         debug_assert_eq!(k_row.len(), self.d);
         debug_assert_eq!(v_row.len(), self.d);
         let (d, bd) = (self.d, self.bd());
-        self.data[i * d..(i + 1) * d].copy_from_slice(k_row);
-        self.data[bd + i * d..bd + (i + 1) * d].copy_from_slice(v_row);
+        let data = self.f32_data_mut();
+        data[i * d..(i + 1) * d].copy_from_slice(k_row);
+        data[bd + i * d..bd + (i + 1) * d].copy_from_slice(v_row);
     }
 
     /// Seal a completed block: write the pooled rows (`sum * inv`, the
     /// same float sequence as the historical `DecodeState` finalization)
     /// and pack the K^T panel from the page's own key rows (a pure
-    /// permutation).  After this the page is immutable.
+    /// permutation).  After this the page is immutable (until a possible
+    /// demotion, which requires exclusivity).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a compressed page.
     pub fn finalize(&mut self, ksum: &[f32], vsum: &[f32], inv: f32) {
         debug_assert_eq!(ksum.len(), self.d);
         debug_assert_eq!(vsum.len(), self.d);
         let (d, block) = (self.d, self.block);
         let bd = block * d;
-        let (rows, derived) = self.data.split_at_mut(2 * bd);
+        let (rows, derived) = self.f32_data_mut().split_at_mut(2 * bd);
         for (o, &s) in derived[bd..bd + d].iter_mut().zip(ksum) {
             *o = s * inv;
         }
@@ -370,18 +855,38 @@ impl Page {
 
 impl Drop for Page {
     fn drop(&mut self) {
-        let buf = std::mem::take(&mut self.data);
-        // recycled_lock (not .unwrap()): panicking here while another
+        let pe = self.pool.page_elems;
+        // freelist_lock (not .unwrap()): panicking here while another
         // thread unwinds with the freelist held would turn that panic
         // into a process abort
-        recycled_lock(&self.pool).push(buf);
+        match std::mem::replace(&mut self.bits, PageBits::F32(Box::default())) {
+            PageBits::F32(buf) => {
+                freelist_lock(&self.pool.recycled).push(buf);
+                self.pool.live_f32.fetch_sub(1, Ordering::Relaxed);
+                self.pool.live_bytes.fetch_sub(PageFormat::F32.page_bytes(pe), Ordering::Relaxed);
+            }
+            PageBits::Bf16(buf) => {
+                freelist_lock(&self.pool.recycled_b16).push(buf);
+                self.pool.live_b16.fetch_sub(1, Ordering::Relaxed);
+                self.pool.live_bytes.fetch_sub(PageFormat::Bf16.page_bytes(pe), Ordering::Relaxed);
+            }
+            PageBits::Int8 { data, .. } => {
+                freelist_lock(&self.pool.recycled_i8).push(data);
+                self.pool.live_i8.fetch_sub(1, Ordering::Relaxed);
+                self.pool.live_bytes.fetch_sub(PageFormat::Int8.page_bytes(pe), Ordering::Relaxed);
+            }
+        }
         self.pool.live.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
 impl std::fmt::Debug for Page {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Page").field("block", &self.block).field("d", &self.d).finish()
+        f.debug_struct("Page")
+            .field("block", &self.block)
+            .field("d", &self.d)
+            .field("format", &self.format())
+            .finish()
     }
 }
 
@@ -406,6 +911,7 @@ mod tests {
         assert_eq!(pool.buffers_created(), created, "steady state re-created a buffer");
         drop((b, c));
         assert_eq!(pool.pages_in_use(), 0);
+        assert_eq!(pool.bytes_in_use(), 0);
     }
 
     #[test]
@@ -474,6 +980,137 @@ mod tests {
     }
 
     #[test]
+    fn page_format_parse_name_roundtrip_and_sizes() {
+        for fmt in [PageFormat::F32, PageFormat::Bf16, PageFormat::Int8] {
+            assert_eq!(PageFormat::parse(fmt.name()), Some(fmt));
+        }
+        assert_eq!(PageFormat::parse("fp8"), None);
+        assert_eq!(PageFormat::F32.page_bytes(10), 40);
+        assert_eq!(PageFormat::Bf16.page_bytes(10), 20);
+        assert_eq!(PageFormat::Int8.page_bytes(10), 10);
+        assert_eq!(PageFormat::default(), PageFormat::F32);
+        assert_eq!(PageFormat::F32.error_budget(), 0.0);
+        assert!(PageFormat::Bf16.error_budget() < PageFormat::Int8.error_budget());
+    }
+
+    /// Build one finalized page of pseudo-random contents.
+    fn filled_page(pool: &PagePool) -> PageRef {
+        let (b, d) = (pool.block(), pool.d());
+        let mut rng = crate::tensor::Rng::new(77);
+        let mut page = pool.try_alloc().unwrap();
+        let p = Arc::get_mut(&mut page).unwrap();
+        let mut ksum = vec![0.0f32; d];
+        let mut vsum = vec![0.0f32; d];
+        for i in 0..b {
+            let k: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            p.write_kv_row(i, &k, &v);
+            for (s, &x) in ksum.iter_mut().zip(&k) {
+                *s += x;
+            }
+            for (s, &x) in vsum.iter_mut().zip(&v) {
+                *s += x;
+            }
+        }
+        p.finalize(&ksum, &vsum, 1.0 / b as f32);
+        page
+    }
+
+    #[test]
+    fn deq_reads_on_f32_pages_are_zero_copy_bitwise() {
+        let pool = PagePool::unbounded(4, 8);
+        let page = filled_page(&pool);
+        let mut buf = Vec::new();
+        assert_eq!(page.kt_deq(&mut buf), page.kt());
+        assert_eq!(page.vt_deq(&mut buf), page.vt());
+        assert_eq!(page.panel_deq(&mut buf), page.panel());
+        assert_eq!(page.v_block_deq(&mut buf), page.v_block());
+        assert_eq!(page.k_rows_deq(3, &mut buf), page.k_rows(3));
+        assert_eq!(page.v_rows_deq(2, &mut buf), page.v_rows(2));
+        assert!(buf.is_empty(), "f32 reads must not touch the dequant scratch");
+    }
+
+    #[test]
+    fn demote_quantizes_within_format_budget_and_frees_bytes() {
+        let (b, d) = (4usize, 8usize);
+        let pe = 3 * b * d + 2 * d;
+        let pool = PagePool::new(8, b, d);
+        for fmt in [PageFormat::Bf16, PageFormat::Int8] {
+            let mut page = filled_page(&pool);
+            let want: Vec<f32> = page.panel().to_vec();
+            let want_kt: Vec<f32> = page.kt().to_vec();
+            let bytes_before = pool.bytes_in_use();
+            assert!(pool.demote(&mut page, fmt), "{fmt}");
+            assert_eq!(page.format(), fmt);
+            assert_eq!(page.bytes(), fmt.page_bytes(pe));
+            assert_eq!(
+                pool.bytes_in_use(),
+                bytes_before - PageFormat::F32.page_bytes(pe) + fmt.page_bytes(pe),
+                "{fmt} demotion must net-free bytes"
+            );
+            // element-wise quantization error stays within the step size
+            let mut buf = Vec::new();
+            let tol = match fmt {
+                PageFormat::Bf16 => 1.0 / 128.0, // relative 2^-8 on |x| <~ 4
+                _ => page.int8_scale().unwrap() * 0.5 + 1e-6,
+            };
+            for (&q, &w) in page.panel_deq(&mut buf).iter().zip(&want) {
+                assert!((q - w).abs() <= tol.max(w.abs() / 128.0), "{fmt}: {q} vs {w}");
+            }
+            for (&q, &w) in page.kt_deq(&mut buf).iter().zip(&want_kt) {
+                assert!((q - w).abs() <= tol.max(w.abs() / 128.0), "{fmt}: {q} vs {w}");
+            }
+            pool.check_invariants();
+            drop(page);
+            pool.check_invariants();
+        }
+        // compressed buffers recycle per format
+        let created = pool.compressed_buffers_created();
+        let mut again = filled_page(&pool);
+        assert!(pool.demote(&mut again, PageFormat::Bf16));
+        assert_eq!(pool.compressed_buffers_created(), created, "bf16 freelist must recycle");
+    }
+
+    #[test]
+    fn demote_refuses_shared_compressed_and_f32_targets() {
+        let pool = PagePool::new(4, 2, 4);
+        let mut page = filled_page(&pool);
+        // F32 target is the no-compression mode: a no-op
+        assert!(!pool.demote(&mut page, PageFormat::F32));
+        assert_eq!(page.format(), PageFormat::F32);
+        // shared handles keep their format (sharing identity)
+        let peer = page.clone();
+        assert!(!pool.demote(&mut page, PageFormat::Bf16));
+        assert_eq!(page.format(), PageFormat::F32);
+        drop(peer);
+        assert!(pool.demote(&mut page, PageFormat::Bf16));
+        // already-compressed pages are not re-quantized
+        assert!(!pool.demote(&mut page, PageFormat::Int8));
+        assert_eq!(page.format(), PageFormat::Bf16);
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn compressed_bytes_admit_more_pages_than_f32_capacity() {
+        // a 2-f32-page budget holds 1 f32 + 2 bf16 + 1 int8 pages
+        // (4 + 2 + 2 + 1 = 9 quarter-pages of 8 x 4 = 2 full pages)
+        let (b, d) = (2usize, 4usize);
+        let pool = PagePool::new(2, b, d);
+        let keep = pool.try_alloc().unwrap();
+        let mut b16a = filled_page(&pool);
+        assert!(pool.demote(&mut b16a, PageFormat::Bf16));
+        let mut b16b = filled_page(&pool);
+        assert!(pool.demote(&mut b16b, PageFormat::Bf16));
+        // 1 f32 + 2 bf16 = 2 full pages' bytes: no f32 page fits...
+        assert_eq!(pool.free_pages(), 0);
+        assert_eq!(pool.try_alloc().unwrap_err(), PoolExhausted);
+        assert_eq!(pool.pages_in_use(), 3, "3 pages resident in a 2-page budget");
+        pool.check_invariants();
+        drop((keep, b16a, b16b));
+        assert_eq!(pool.bytes_in_use(), 0);
+    }
+
+    #[test]
     fn invariants_hold_across_alloc_share_drop_lifecycle() {
         let pool = PagePool::new(3, 4, 8);
         pool.check_invariants();
@@ -509,8 +1146,23 @@ mod tests {
         assert!(msg.contains("conservation"), "{msg}");
         pool.shared.live.fetch_sub(1, Ordering::SeqCst);
         assert!(pool.verify().is_ok());
+        // leaked bytes: the format mix no longer explains the residency
+        pool.shared.live_bytes.fetch_add(3, Ordering::SeqCst);
+        let msg = pool.verify().unwrap_err();
+        assert!(msg.contains("byte conservation"), "{msg}");
+        pool.shared.live_bytes.fetch_sub(3, Ordering::SeqCst);
+        assert!(pool.verify().is_ok());
+        // a format-count drift (a demotion that lost its bookkeeping):
+        // bytes AND counts both move, so byte conservation catches it
+        pool.shared.live_f32.fetch_sub(1, Ordering::SeqCst);
+        pool.shared.live_b16.fetch_add(1, Ordering::SeqCst);
+        let msg = pool.verify().unwrap_err();
+        assert!(msg.contains("conservation"), "{msg}");
+        pool.shared.live_f32.fetch_add(1, Ordering::SeqCst);
+        pool.shared.live_b16.fetch_sub(1, Ordering::SeqCst);
+        assert!(pool.verify().is_ok());
         // a foreign buffer smuggled onto the freelist
-        recycled_lock(&pool.shared).push(vec![0.0f32; 1].into_boxed_slice());
+        freelist_lock(&pool.shared.recycled).push(vec![0.0f32; 1].into_boxed_slice());
         let msg = pool.verify().unwrap_err();
         assert!(msg.contains("geometry"), "{msg}");
     }

@@ -43,7 +43,7 @@
 
 use std::sync::Arc;
 
-use crate::engine::cache::{Page, PagePool, PageRef, PoolExhausted};
+use crate::engine::cache::{Page, PageFormat, PagePool, PageRef, PoolExhausted};
 use crate::mra::Variant;
 use crate::tensor::{kernel, ops, topk};
 
@@ -66,6 +66,12 @@ pub struct DecodeScratch {
     is_refined: Vec<bool>,
     /// One block-wide score row (`<= block`).
     scores: Vec<f32>,
+    /// Dequantization landing zone for compressed pages (`<= block * d`,
+    /// one section at a time).  Stays empty — zero capacity, zero cost —
+    /// while every page is f32, which keeps the default path's scratch
+    /// footprint and float sequence bitwise identical to the historical
+    /// f32-only layout.
+    deq: Vec<f32>,
 }
 
 /// Per-block view the row-attention core reads: pooled rows, packed K^T
@@ -74,19 +80,25 @@ pub struct DecodeScratch {
 /// paged state and by the flat-slice recompute path — both feed the same
 /// float sequence through [`attend_row_core`], which is what keeps the
 /// paged layout bitwise identical to the historical contiguous one.
+/// Methods take `&mut self` because the paged source may have to
+/// dequantize a compressed page's section into its scratch buffer: each
+/// returned slice is only valid until the next call, and the core
+/// consumes every section before requesting the next one.  On all-f32
+/// sources the slices are zero-copy and the `&mut` is vacuous — the f32
+/// float sequence is untouched by this seam.
 trait BlockSource {
     /// Pooled (mean) key row of complete block `y`.
-    fn kt(&self, y: usize) -> &[f32];
+    fn kt(&mut self, y: usize) -> &[f32];
     /// Pooled (mean) value row of complete block `y`.
-    fn vt(&self, y: usize) -> &[f32];
+    fn vt(&mut self, y: usize) -> &[f32];
     /// Packed `(d, block)` K^T panel of complete block `y`.
-    fn panel(&self, y: usize) -> &[f32];
+    fn panel(&mut self, y: usize) -> &[f32];
     /// Raw value rows of complete block `y` (`block * d`).
-    fn v_block(&self, y: usize) -> &[f32];
+    fn v_block(&mut self, y: usize) -> &[f32];
     /// Raw key rows of the current block (`w * d`).
-    fn tail_k(&self) -> &[f32];
+    fn tail_k(&mut self) -> &[f32];
     /// Raw value rows of the current block (`w * d`).
-    fn tail_v(&self) -> &[f32];
+    fn tail_v(&mut self) -> &[f32];
 }
 
 /// [`BlockSource`] over the paged state: block `y` is page `y`.  The
@@ -96,37 +108,43 @@ trait BlockSource {
 /// Finalization only writes the panel/pooled rows, never the raw K/V
 /// rows, so reading a finalized page's first `w` raw rows is bitwise
 /// identical to reading them while the block was still partial.
+/// Pages may be in any [`PageFormat`]: every read goes through the
+/// format-agnostic `_deq` accessors, which are zero-copy (bitwise
+/// identical to the historical raw reads) on f32 pages and dequantize
+/// into `deq` — the caller's [`DecodeScratch::deq`] — on compressed ones.
 struct PagedBlocks<'a> {
     pages: &'a [PageRef],
     /// Block index of the attending position (`pos / block`).
     x: usize,
     /// Rows of block `x` visible to the attending position.
     w: usize,
+    /// Dequantization landing zone (reused section by section).
+    deq: &'a mut Vec<f32>,
 }
 
 impl BlockSource for PagedBlocks<'_> {
-    fn kt(&self, y: usize) -> &[f32] {
-        self.pages[y].kt()
+    fn kt(&mut self, y: usize) -> &[f32] {
+        self.pages[y].kt_deq(self.deq)
     }
 
-    fn vt(&self, y: usize) -> &[f32] {
-        self.pages[y].vt()
+    fn vt(&mut self, y: usize) -> &[f32] {
+        self.pages[y].vt_deq(self.deq)
     }
 
-    fn panel(&self, y: usize) -> &[f32] {
-        self.pages[y].panel()
+    fn panel(&mut self, y: usize) -> &[f32] {
+        self.pages[y].panel_deq(self.deq)
     }
 
-    fn v_block(&self, y: usize) -> &[f32] {
-        self.pages[y].v_block()
+    fn v_block(&mut self, y: usize) -> &[f32] {
+        self.pages[y].v_block_deq(self.deq)
     }
 
-    fn tail_k(&self) -> &[f32] {
-        self.pages[self.x].k_rows(self.w)
+    fn tail_k(&mut self) -> &[f32] {
+        self.pages[self.x].k_rows_deq(self.w, self.deq)
     }
 
-    fn tail_v(&self) -> &[f32] {
-        self.pages[self.x].v_rows(self.w)
+    fn tail_v(&mut self) -> &[f32] {
+        self.pages[self.x].v_rows_deq(self.w, self.deq)
     }
 }
 
@@ -144,27 +162,27 @@ struct SliceBlocks<'a> {
 }
 
 impl BlockSource for SliceBlocks<'_> {
-    fn kt(&self, y: usize) -> &[f32] {
+    fn kt(&mut self, y: usize) -> &[f32] {
         &self.kt[y * self.d..(y + 1) * self.d]
     }
 
-    fn vt(&self, y: usize) -> &[f32] {
+    fn vt(&mut self, y: usize) -> &[f32] {
         &self.vt[y * self.d..(y + 1) * self.d]
     }
 
-    fn panel(&self, y: usize) -> &[f32] {
+    fn panel(&mut self, y: usize) -> &[f32] {
         &self.panels[y * self.b * self.d..(y + 1) * self.b * self.d]
     }
 
-    fn v_block(&self, y: usize) -> &[f32] {
+    fn v_block(&mut self, y: usize) -> &[f32] {
         &self.v_prefix[y * self.b * self.d..(y + 1) * self.b * self.d]
     }
 
-    fn tail_k(&self) -> &[f32] {
+    fn tail_k(&mut self) -> &[f32] {
         self.tail_k
     }
 
-    fn tail_v(&self) -> &[f32] {
+    fn tail_v(&mut self) -> &[f32] {
         self.tail_v
     }
 }
@@ -303,6 +321,53 @@ impl DecodeState {
             }
         }
         need
+    }
+
+    /// Demote up to `limit` cold pages of this stream to `fmt`, oldest
+    /// first, returning how many pages actually changed format — the
+    /// scheduler's pressure-relief step before preempting a session
+    /// (DESIGN.md §15).
+    ///
+    /// "Cold" excludes the *hot tail*: the last started block, whose page
+    /// is still being written (partial) or is about to be re-read at full
+    /// precision by the very next `attend_last`.  Shared pages (radix
+    /// cache, forks) are skipped inside [`PagePool::demote`] — a page's
+    /// format is part of its sharing identity.  `fmt == F32` (the
+    /// no-compression config) and `limit == 0` are no-ops.
+    ///
+    /// Demotion changes attend outputs within the format's documented
+    /// [`PageFormat::error_budget`]; it never changes stream *consistency*
+    /// — appends only touch the (never-demoted) tail, and replayed
+    /// sampling is teacher-forced ([`DrawState`]), so a demoted session
+    /// continues structurally exactly as before.
+    pub fn demote_cold(&mut self, fmt: PageFormat, limit: usize) -> usize {
+        if fmt == PageFormat::F32 || limit == 0 {
+            return 0;
+        }
+        let hot = self.len.div_ceil(self.block).saturating_sub(1);
+        let mut demoted = 0usize;
+        for page in self.pages[..hot].iter_mut() {
+            if demoted == limit {
+                break;
+            }
+            if self.pool.demote(page, fmt) {
+                demoted += 1;
+            }
+        }
+        demoted
+    }
+
+    /// Resident bytes of this stream's pages (format-weighted; shared
+    /// pages are counted here in full, as in every stream that holds a
+    /// handle — the pool's own [`PagePool::bytes_in_use`] counts each
+    /// physical page once).
+    pub fn bytes_resident(&self) -> usize {
+        self.pages.iter().map(|p| p.bytes()).sum()
+    }
+
+    /// Pages of this stream currently in a compressed format.
+    pub fn compressed_pages(&self) -> usize {
+        self.pages.iter().filter(|p| p.format() != PageFormat::F32).count()
     }
 
     /// Append one key/value row to the cache, maintaining the pooled
@@ -456,6 +521,7 @@ impl DecodeState {
             + self.scratch.refined.capacity()
             + self.scratch.is_refined.capacity()
             + self.scratch.scores.capacity()
+            + self.scratch.deq.capacity()
     }
 }
 
@@ -479,8 +545,13 @@ fn attend_row_paged(
     let len = pos + 1;
     let x = pos / block;
     let w = len - x * block;
-    let src = PagedBlocks { pages, x, w };
-    attend_row_core(q_row, &src, len, block, budget, variant, scratch, out);
+    // lend the scratch's dequant buffer to the block source while the
+    // rest of the scratch feeds the core (allocation-free: take/put-back
+    // moves the Vec, preserving its capacity)
+    let mut deq = std::mem::take(&mut scratch.deq);
+    let mut src = PagedBlocks { pages, x, w, deq: &mut deq };
+    attend_row_core(q_row, &mut src, len, block, budget, variant, scratch, out);
+    scratch.deq = deq;
 }
 
 /// Shared row-attention core: the position `len - 1` attends the cached
@@ -496,7 +567,7 @@ fn attend_row_paged(
 #[allow(clippy::too_many_arguments)]
 fn attend_row_core<S: BlockSource>(
     q_row: &[f32],
-    src: &S,
+    src: &mut S,
     len: usize,
     block: usize,
     budget: usize,
@@ -595,7 +666,7 @@ pub fn causal_row_attention(
     for (y, panel) in kt_panels.chunks_exact_mut(block * d).enumerate() {
         kernel::pack_transpose(&k_prefix[y * block * d..(y + 1) * block * d], block, d, panel);
     }
-    let src = SliceBlocks {
+    let mut src = SliceBlocks {
         d,
         b: block,
         kt: &kt.data,
@@ -608,7 +679,7 @@ pub fn causal_row_attention(
     let mut out = vec![0.0f32; d];
     attend_row_core(
         q_row,
-        &src,
+        &mut src,
         len,
         block,
         budget,
@@ -969,6 +1040,128 @@ mod tests {
                 assert_eq!(out, want[pos], "{variant:?} replayed pos {pos}");
             }
         }
+    }
+
+    #[test]
+    fn compressed_pages_attend_within_error_budget() {
+        // three twin streams fed identical rows: `oracle` stays all-f32,
+        // `plain` is "demoted" to F32 (the configured no-compression mode
+        // — must be a bitwise no-op), `demoted` compresses cold pages
+        // mid-stream and must stay within the format's documented budget
+        for_all_seeds(8, |seed, rng| {
+            let (d, b) = (8usize, 8usize);
+            let budget = 2usize;
+            let fmt = if seed % 2 == 0 { PageFormat::Bf16 } else { PageFormat::Int8 };
+            let n = 2 * b + 1 + rng.below(4 * b);
+            let q = rows(n, d, rng);
+            let k = rows(n, d, rng);
+            let v = rows(n, d, rng);
+            let oracle_pool = PagePool::unbounded(b, d);
+            let plain_pool = PagePool::unbounded(b, d);
+            let demoted_pool = PagePool::unbounded(b, d);
+            let mut oracle = DecodeState::with_pool(&oracle_pool, budget, Variant::Full);
+            let mut plain = DecodeState::with_pool(&plain_pool, budget, Variant::Full);
+            let mut demoted = DecodeState::with_pool(&demoted_pool, budget, Variant::Full);
+            let mut out_o = vec![0.0f32; d];
+            let mut out_p = vec![0.0f32; d];
+            let mut out_c = vec![0.0f32; d];
+            for t in 0..n {
+                let (kr, vr) = (&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+                oracle.append(kr, vr);
+                plain.append(kr, vr);
+                demoted.append(kr, vr);
+                // mid-stream pressure every few steps
+                if t % 5 == 4 {
+                    demoted.demote_cold(fmt, 1);
+                }
+                if plain.demote_cold(PageFormat::F32, usize::MAX) != 0 {
+                    return Err("F32 demotion must be a no-op".to_string());
+                }
+                let qrow = &q[t * d..(t + 1) * d];
+                oracle.attend_last_into(qrow, &mut out_o);
+                plain.attend_last_into(qrow, &mut out_p);
+                demoted.attend_last_into(qrow, &mut out_c);
+                // (a) F32 mode bitwise identical
+                if out_p != out_o {
+                    return Err(format!("step {t}: F32 page mode diverged bitwise"));
+                }
+                // quantized pooled scores can flip the refined-set choice
+                // when two blocks are nearly tied; that flip is an
+                // approximation-level change, not a quantization error, so
+                // the budget is only asserted away from ties (the pooled-
+                // score perturbation is < 0.02 for both formats here)
+                let x = t / b;
+                let tied = x > budget && {
+                    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+                    let mut s: Vec<f32> = (0..x)
+                        .map(|y| kernel::dot(qrow, oracle.pages()[y].kt()) * inv_sqrt_d)
+                        .collect();
+                    s.sort_by(|a2, b2| b2.partial_cmp(a2).unwrap());
+                    (s[budget - 1] - s[budget]).abs() < 0.05
+                };
+                if !tied {
+                    // (b) compressed outputs within the documented budget
+                    for (j, (&a2, &b2)) in out_o.iter().zip(&out_c).enumerate() {
+                        if (a2 - b2).abs() > fmt.error_budget() {
+                            return Err(format!(
+                                "step {t} dim {j}: |{a2} - {b2}| > {} ({fmt})",
+                                fmt.error_budget()
+                            ));
+                        }
+                    }
+                }
+            }
+            // (c) pool occupancy in bytes matches the stream's format mix
+            if demoted.compressed_pages() == 0 {
+                return Err("no page was ever demoted".to_string());
+            }
+            if demoted_pool.bytes_in_use() != demoted.bytes_resident() {
+                return Err(format!(
+                    "pool bytes {} != format-weighted resident bytes {}",
+                    demoted_pool.bytes_in_use(),
+                    demoted.bytes_resident()
+                ));
+            }
+            if demoted_pool.bytes_in_use() >= oracle_pool.bytes_in_use() {
+                return Err("compressed stream must be smaller than its f32 twin".to_string());
+            }
+            demoted_pool.verify().map_err(|e| format!("pool verify: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn demote_cold_skips_hot_tail_and_shared_pages() {
+        let (d, b) = (8usize, 4usize);
+        let pool = PagePool::new(64, b, d);
+        let mut rng = Rng::new(51);
+        let n = 3 * b + 2; // 3 complete blocks + partial tail
+        let k = rows(n, d, &mut rng);
+        let v = rows(n, d, &mut rng);
+        let mut st = DecodeState::with_pool(&pool, 2, Variant::Full);
+        for t in 0..n {
+            st.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+        }
+        // share the first page (a radix-cache hit would do this)
+        let cached = st.pages()[0].clone();
+        // limit binds: only one page demoted per call
+        assert_eq!(st.demote_cold(PageFormat::Bf16, 1), 1);
+        // the shared page 0 was skipped — page 1 got demoted instead
+        assert_eq!(st.pages()[0].format(), PageFormat::F32);
+        assert_eq!(st.pages()[1].format(), PageFormat::Bf16);
+        // drain: page 2 is cold, page 3 is the hot (partial) tail
+        assert_eq!(st.demote_cold(PageFormat::Bf16, usize::MAX), 1);
+        assert_eq!(st.pages()[2].format(), PageFormat::Bf16);
+        assert_eq!(st.pages()[3].format(), PageFormat::F32, "hot tail never demotes");
+        assert_eq!(st.compressed_pages(), 2);
+        // appending across the demoted prefix still works (tail is f32)
+        for t in 0..b {
+            st.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+        }
+        let out = st.attend_last(&k[..d]);
+        assert_eq!(out.len(), d);
+        drop(cached);
+        pool.check_invariants();
     }
 
     #[test]

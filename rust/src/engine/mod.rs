@@ -43,7 +43,7 @@ mod pool_loom;
 mod pool_model;
 pub mod tensor4;
 
-pub use cache::{CacheStats, Page, PagePool, PageRef, PoolExhausted, RadixCache};
+pub use cache::{CacheStats, Page, PageFormat, PagePool, PageRef, PoolExhausted, RadixCache};
 pub use decode::{causal_row_attention, causal_row_oracle, DecodeScratch, DecodeState, DrawState};
 pub use kernels::{
     kernel_by_name, ApproxShim, AttnKernel, CausalExactKernel, ExactKernel, HeadPlan,

@@ -87,6 +87,82 @@ pub fn scale(out: &mut [f32], alpha: f32) {
     }
 }
 
+/// Round-to-nearest-even `f32 -> bf16` conversion: keep the top 16 bits
+/// of the IEEE-754 pattern after rounding the dropped mantissa half up
+/// on ties-to-even.  bf16 shares f32's exponent range, so no value ever
+/// over/underflows — only 16 mantissa bits are lost.
+#[inline(always)]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Exact `bf16 -> f32` widening (the stored pattern *is* the high half
+/// of an f32 — decode is a shift, bitwise lossless).
+#[inline(always)]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Quantize a slice to bf16 elementwise (the page-demotion encode path).
+pub fn quant_bf16(src: &[f32], out: &mut [u16]) {
+    debug_assert_eq!(src.len(), out.len(), "quant_bf16 shape");
+    for (o, &x) in out.iter_mut().zip(src) {
+        *o = f32_to_bf16(x);
+    }
+}
+
+/// Dequantize a bf16 slice back to f32 (the compressed-page attend read;
+/// registered in the xtask hot-path-alloc manifest — the zip loop
+/// auto-vectorizes and never allocates).
+pub fn dequant_bf16(src: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len(), "dequant_bf16 shape");
+    for (o, &h) in out.iter_mut().zip(src) {
+        *o = bf16_to_f32(h);
+    }
+}
+
+/// Symmetric int8 scale of a slice: `maxabs / 127` (0.0 for an all-zero
+/// slice — the matching [`quant_i8`]/[`dequant_i8`] then store/read
+/// exact zeros).  NaN elements are ignored by the max, matching the
+/// comparison semantics of the kernels above.
+pub fn int8_scale(src: &[f32]) -> f32 {
+    let mut maxabs = 0.0f32;
+    for &x in src {
+        let a = x.abs();
+        if a > maxabs {
+            maxabs = a;
+        }
+    }
+    maxabs / 127.0
+}
+
+/// Quantize a slice to symmetric int8 under `scale` (round-to-nearest,
+/// clamped to `[-127, 127]`).  `scale == 0.0` writes all zeros.
+pub fn quant_i8(src: &[f32], scale: f32, out: &mut [i8]) {
+    debug_assert_eq!(src.len(), out.len(), "quant_i8 shape");
+    if scale == 0.0 {
+        for o in out.iter_mut() {
+            *o = 0;
+        }
+        return;
+    }
+    let inv = 1.0 / scale;
+    for (o, &x) in out.iter_mut().zip(src) {
+        *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
+/// Dequantize a symmetric int8 slice under `scale` (the compressed-page
+/// attend read; registered in the xtask hot-path-alloc manifest).
+pub fn dequant_i8(src: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len(), "dequant_i8 shape");
+    for (o, &q) in out.iter_mut().zip(src) {
+        *o = q as f32 * scale;
+    }
+}
+
 /// Pack `rows` consecutive `d`-wide rows of `src` into a transposed
 /// `(d, rows)` panel: `panel[l * rows + r] = src[r * d + l]`.  A pure
 /// permutation (bitwise-exact), built once per key block and reused by
@@ -344,6 +420,54 @@ mod tests {
         assert_eq!(m[0], f32::NEG_INFINITY);
         assert_eq!(den[0], 0.0);
         assert!(out.iter().all(|&x| x == 0.0), "no NaN leakage: {out:?}");
+    }
+
+    #[test]
+    fn bf16_roundtrip_is_exact_for_representable_values_and_close_otherwise() {
+        // values with <= 7 mantissa bits survive bitwise
+        for x in [0.0f32, -0.0, 1.0, -1.5, 0.25, 96.0, -1024.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)).to_bits(), x.to_bits(), "{x}");
+        }
+        // everything else stays within half a bf16 ulp (relative 2^-8)
+        let mut rng = Rng::new(9);
+        let src = randv(512, &mut rng);
+        let mut q = vec![0u16; src.len()];
+        let mut back = vec![0.0f32; src.len()];
+        quant_bf16(&src, &mut q);
+        dequant_bf16(&q, &mut back);
+        for (&x, &y) in src.iter().zip(&back) {
+            assert!((x - y).abs() <= x.abs() * (1.0 / 256.0) + 1e-30, "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_error_is_bounded_by_half_a_step() {
+        let mut rng = Rng::new(10);
+        let src = randv(512, &mut rng);
+        let scale = int8_scale(&src);
+        assert!(scale > 0.0);
+        let mut q = vec![0i8; src.len()];
+        let mut back = vec![0.0f32; src.len()];
+        quant_i8(&src, scale, &mut q);
+        dequant_i8(&q, scale, &mut back);
+        for (&x, &y) in src.iter().zip(&back) {
+            assert!((x - y).abs() <= 0.5 * scale + 1e-6, "{x} -> {y} (scale {scale})");
+        }
+        // the extreme element maps to +-127 exactly
+        let maxabs = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!((maxabs - 127.0 * scale).abs() < 1e-6);
+    }
+
+    #[test]
+    fn int8_zero_slice_has_zero_scale_and_exact_roundtrip() {
+        let src = vec![0.0f32; 16];
+        assert_eq!(int8_scale(&src), 0.0);
+        let mut q = vec![7i8; 16];
+        quant_i8(&src, 0.0, &mut q);
+        assert!(q.iter().all(|&b| b == 0));
+        let mut back = vec![9.0f32; 16];
+        dequant_i8(&q, 0.0, &mut back);
+        assert!(back.iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -55,8 +55,21 @@ const HOT_PATH_MANIFEST: &[(&str, &[&str])] = &[
     ),
     (
         "src/tensor/kernel.rs",
-        &["softmax_accum_panel", "score_panel", "dot", "axpy", "scale", "pack_transpose"],
+        &[
+            "softmax_accum_panel",
+            "score_panel",
+            "dot",
+            "axpy",
+            "scale",
+            "pack_transpose",
+            "dequant_bf16",
+            "dequant_i8",
+        ],
     ),
+    // the shared format-agnostic page read: every compressed-page attend
+    // dequantizes through this body (the `*_deq` accessors are thin
+    // offset wrappers around it)
+    ("src/engine/cache/page.rs", &["section_deq"]),
     ("src/engine/pool.rs", &["run_with"]),
     (
         "src/coordinator/native.rs",
@@ -635,6 +648,41 @@ fn fused_prefill_project_append() -> bool { true }
         assert_eq!(rules_of(&v), vec![("hot-path-alloc", 1), ("hot-path-alloc", 2)], "{v:?}");
         assert!(v[0].msg.contains("fused_prefill_attend"), "{}", v[0].msg);
         assert!(v[1].msg.contains("fused_decode_task"), "{}", v[1].msg);
+    }
+
+    #[test]
+    fn dequant_and_page_read_bodies_are_manifest_covered() {
+        // the compressed-KV read path is a registered hot path at both
+        // layers: the kernel dequant loops and the page-level
+        // `section_deq` dispatch.  A seeded allocation in either is
+        // flagged, and a kernel.rs without the dequant fns fails the
+        // manifest (so the compressed-page attend cannot silently lose
+        // its allocation-free claim)
+        let fixture = "\
+fn section_deq(&self, off: usize, len: usize, buf: &mut Vec<f32>) -> &[f32] {
+    let tmp: Vec<f32> = self.bits.to_vec();
+    &buf[..len]
+}
+";
+        let v = check_source("src/engine/cache/page.rs", fixture);
+        assert_eq!(rules_of(&v), vec![("hot-path-alloc", 2)], "{v:?}");
+        assert!(v[0].msg.contains("section_deq"), "{}", v[0].msg);
+
+        let fixture = "\
+pub fn softmax_accum_panel() {}
+pub fn score_panel() {}
+pub fn dot() {}
+pub fn axpy() {}
+pub fn scale() {}
+pub fn pack_transpose() {}
+pub fn dequant_bf16(src: &[u16], out: &mut [f32]) {
+    let copy = src.to_vec();
+}
+";
+        let v = check_source("src/tensor/kernel.rs", fixture);
+        assert_eq!(rules_of(&v), vec![("hot-path-alloc", 1), ("hot-path-alloc", 8)], "{v:?}");
+        assert!(v[0].msg.contains("dequant_i8"), "{}", v[0].msg);
+        assert!(v[1].msg.contains("dequant_bf16"), "{}", v[1].msg);
     }
 
     #[test]

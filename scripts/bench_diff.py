@@ -45,6 +45,7 @@ TRACKED = (
     "fused_serve_speedup_vs_phased",
     "fused_decode_p95_gain_vs_phased",
     "autotune_converged",
+    "resident_sessions_gain_vs_f32",
 )
 # lower-is-better metrics (overheads): the gate fails when current
 # exceeds baseline * (1 + max_regression)
@@ -61,6 +62,8 @@ METRIC_FIELDS = set(TRACKED) | set(TRACKED_LOWER) | {
     "itl_p50_ms",
     "itl_p95_ms",
     "settled_budget_tokens",
+    "resident_sessions",
+    "worst_rel_logit_err",
 }
 
 

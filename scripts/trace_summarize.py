@@ -19,7 +19,8 @@ Output, stdlib-only:
   attributed time, and reports what fraction of the measured step time
   the phases account for (the rest is scheduler glue);
 * per-request timelines — admission, radix hits, prefill chunks,
-  preemptions + readmissions, decode/stall counts, finish latency; one
+  preemptions + readmissions, page demotions, decode/stall counts,
+  finish latency; one
   line per request, or the full event-by-event timeline with
   `--request ID`.
 
@@ -129,6 +130,10 @@ def one_line(rid, evs):
     if preempts:
         reasons = ",".join(sorted({p.get("reason", "?") for p in preempts}))
         parts.append(f"{len(preempts)} preempt ({reasons}), {readmits} readmit")
+    demotes = [e for e in evs if e["ev"] == "PageDemote"]
+    if demotes:
+        pages = sum(d.get("pages", 0) for d in demotes)
+        parts.append(f"{len(demotes)} demote passes ({pages} pages compressed)")
     if decodes:
         parts.append(f"{decodes} decodes")
     if stalls:
